@@ -1,0 +1,69 @@
+//! Benchmark: partitioning-algorithm running time (Fig. 9 / Table I).
+//!
+//! `cargo bench --bench algo_runtime [-- filter] [--quick]`
+
+use fastsplit::models::{BLOCK_NETS, FULL_MODELS};
+use fastsplit::partition::baselines::{brute_force_partition, regression_partition};
+use fastsplit::partition::{blockwise_partition, general_partition, Link, Problem};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use fastsplit::util::bench::Bencher;
+
+fn costs(model: &str) -> CostGraph {
+    let m = fastsplit::models::by_name(model).unwrap();
+    CostGraph::build(
+        &m,
+        &DeviceProfile::jetson_tx2(),
+        &DeviceProfile::rtx_a6000(),
+        &TrainCfg::default(),
+    )
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    // Fig. 9(a): block networks, all methods including brute force.
+    for model in BLOCK_NETS {
+        let c = costs(model);
+        let p = Problem::new(&c, Link::symmetric(1e6));
+        b.bench(&format!("fig9a/{model}/brute-force"), || {
+            brute_force_partition(&p)
+        });
+        b.bench(&format!("fig9a/{model}/general"), || general_partition(&p));
+        b.bench(&format!("fig9a/{model}/block-wise"), || {
+            blockwise_partition(&p)
+        });
+        b.bench(&format!("fig9a/{model}/regression"), || {
+            regression_partition(&p)
+        });
+    }
+    // Fig. 9(b) / Table I: full models.
+    for model in FULL_MODELS {
+        let c = costs(model);
+        let p = Problem::new(&c, Link::symmetric(1e6));
+        b.bench(&format!("fig9b/{model}/general"), || general_partition(&p));
+        b.bench(&format!("fig9b/{model}/block-wise"), || {
+            blockwise_partition(&p)
+        });
+        b.bench(&format!("fig9b/{model}/regression"), || {
+            regression_partition(&p)
+        });
+    }
+    // GPT-2 (Fig. 14 decision cost).
+    {
+        let c = costs("gpt2");
+        let p = Problem::new(&c, Link::symmetric(1e7));
+        b.bench("gpt2/general", || general_partition(&p));
+        b.bench("gpt2/block-wise", || blockwise_partition(&p));
+    }
+    // Amortized planner (the coordinator's actual per-epoch hot path):
+    // structure once, re-solve per link state.
+    for model in ["googlenet", "densenet121", "gpt2"] {
+        let c = costs(model);
+        let planner = fastsplit::partition::blockwise::Planner::new(&c);
+        let mut rate = 1e5;
+        b.bench(&format!("planner/{model}/repartition"), || {
+            rate = if rate > 1e8 { 1e5 } else { rate * 1.37 };
+            planner.partition(Link::symmetric(rate))
+        });
+    }
+    b.finish();
+}

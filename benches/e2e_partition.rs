@@ -1,0 +1,52 @@
+//! Benchmark: end-to-end per-epoch coordination cost — link sampling +
+//! partition decision + delay accounting (everything except the model
+//! execution itself), i.e. the L3 hot path the coordinator runs every
+//! epoch. Also benches the simulator's epoch loop for each method.
+//!
+//! `cargo bench --bench e2e_partition [-- filter] [--quick]`
+
+use fastsplit::net::{EdgeNetwork, NetConfig};
+use fastsplit::partition::{blockwise_partition, Problem};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use fastsplit::sim::{DelayBreakdown, SimConfig, Trainer};
+use fastsplit::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    // Full per-epoch decision pipeline on the heaviest model.
+    for model in ["googlenet", "densenet121", "gpt2"] {
+        let m = fastsplit::models::by_name(model).unwrap();
+        let costs = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        let mut net = EdgeNetwork::new(NetConfig::default());
+        let mut t = 0.0;
+        b.bench(&format!("epoch-decision/{model}"), || {
+            t += 1.0;
+            let dev = net.select_device(t);
+            let link = net.sample_link(dev, t).to_link();
+            let p = Problem::new(&costs, link);
+            let part = blockwise_partition(&p);
+            let bd = DelayBreakdown::of(&p, &part.device_set);
+            (part.delay, bd.total())
+        });
+    }
+
+    // Simulator epoch throughput per method (30-epoch chunks).
+    for method in ["proposed", "oss", "regression"] {
+        b.bench(&format!("sim-epochs30/{method}"), || {
+            let mut trainer = Trainer::new(SimConfig {
+                model: "googlenet".into(),
+                method: method.to_string(),
+                seed: 5,
+                ..SimConfig::default()
+            });
+            trainer.run_epochs(30).total_delay
+        });
+    }
+    b.finish();
+}

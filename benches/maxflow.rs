@@ -1,0 +1,79 @@
+//! Benchmark: max-flow solvers on partition networks of increasing size
+//! (ablation ablB) plus scaling on synthetic layered graphs.
+//!
+//! `cargo bench --bench maxflow [-- filter] [--quick]`
+
+use fastsplit::maxflow::{dinic, push_relabel, FlowNetwork};
+use fastsplit::util::bench::Bencher;
+use fastsplit::util::rng::Rng;
+
+/// Layered random DAG flow network: `layers` x `width` grid with forward
+/// edges, source feeding layer 0, sink fed by the last layer.
+fn layered_network(layers: usize, width: usize, seed: u64) -> (FlowNetwork, usize, usize) {
+    let mut rng = Rng::new(seed);
+    let n = layers * width + 2;
+    let s = n - 2;
+    let t = n - 1;
+    let mut net = FlowNetwork::new(n);
+    for w in 0..width {
+        net.add_edge(s, w, rng.range(1.0, 100.0));
+        net.add_edge((layers - 1) * width + w, t, rng.range(1.0, 100.0));
+    }
+    for l in 0..layers - 1 {
+        for a in 0..width {
+            for b in 0..width {
+                if rng.chance(0.5) {
+                    net.add_edge(l * width + a, (l + 1) * width + b, rng.range(1.0, 100.0));
+                }
+            }
+        }
+    }
+    (net, s, t)
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    for (layers, width) in [(8usize, 4usize), (32, 8), (64, 16), (128, 16)] {
+        let id = format!("layered/{layers}x{width}");
+        let (proto, s, t) = layered_network(layers, width, 99);
+        let mut net = proto.clone();
+        b.bench(&format!("{id}/dinic"), || {
+            net.reset();
+            dinic(&mut net, s, t).value
+        });
+        let mut net2 = proto.clone();
+        b.bench(&format!("{id}/push-relabel"), || {
+            net2.reset();
+            push_relabel(&mut net2, s, t).value
+        });
+    }
+    // The real partition network of the deepest zoo model.
+    {
+        let m = fastsplit::models::by_name("densenet121").unwrap();
+        let c = fastsplit::profiles::CostGraph::build(
+            &m,
+            &fastsplit::profiles::DeviceProfile::jetson_tx2(),
+            &fastsplit::profiles::DeviceProfile::rtx_a6000(),
+            &fastsplit::profiles::TrainCfg::default(),
+        );
+        let n = c.len();
+        let mut net = FlowNetwork::new(n + 2);
+        for v in 0..n {
+            net.add_edge(n, v, c.n_loc * c.xi_s[v]);
+            net.add_edge(v, n + 1, c.n_loc * c.xi_d[v] + c.param_bytes[v] * 2e-6);
+        }
+        for e in c.dag.edges() {
+            net.add_edge(e.from, e.to, c.n_loc * c.act_bytes[e.from] * 2e-6);
+        }
+        b.bench("densenet121/dinic", || {
+            net.reset();
+            dinic(&mut net, n, n + 1).value
+        });
+        let mut net2 = net.clone();
+        b.bench("densenet121/push-relabel", || {
+            net2.reset();
+            push_relabel(&mut net2, n, n + 1).value
+        });
+    }
+    b.finish();
+}

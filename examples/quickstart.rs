@@ -1,0 +1,57 @@
+//! Quickstart: partition a model for split learning in ~20 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use fastsplit::models;
+use fastsplit::partition::{blockwise_partition, general_partition, Link, Problem};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use fastsplit::sim::DelayBreakdown;
+use fastsplit::util::fmt_secs;
+
+fn main() {
+    // 1. Pick a model from the zoo (or build your own layer graph).
+    let model = models::by_name("resnet18").unwrap();
+    println!(
+        "model: {} ({} layers, {:.1} GFLOPs)",
+        model.name(),
+        model.len(),
+        model.total_flops() as f64 / 1e9
+    );
+
+    // 2. Derive per-layer costs for a device/server pair and batch config.
+    let costs = CostGraph::build(
+        &model,
+        &DeviceProfile::jetson_tx2(),
+        &DeviceProfile::rtx_a6000(),
+        &TrainCfg {
+            batch: 32,
+            n_loc: 10,
+            bwd_ratio: 2.0,
+        },
+    );
+
+    // 3. Describe the wireless link (bytes/s) and solve.
+    let link = Link {
+        up_bps: 25e6 / 8.0,   // 25 Mbit/s uplink
+        down_bps: 120e6 / 8.0, // 120 Mbit/s downlink
+    };
+    let problem = Problem::new(&costs, link);
+
+    let general = general_partition(&problem);
+    let blockwise = blockwise_partition(&problem);
+    println!("general    : {}", general.describe());
+    println!("block-wise : {}", blockwise.describe());
+    assert!((general.delay - blockwise.delay).abs() < 1e-9 * general.delay.max(1.0));
+
+    // 4. Inspect where the time goes (Eq. (7) decomposition).
+    let b = DelayBreakdown::of(&problem, &blockwise.device_set);
+    println!(
+        "breakdown: device {} | server {} | activations {} | model transfer {}",
+        fmt_secs(b.device_compute),
+        fmt_secs(b.server_compute),
+        fmt_secs(b.activation_transfer),
+        fmt_secs(b.model_transfer)
+    );
+}

@@ -1,0 +1,114 @@
+"""AOT compiler: lower every split artifact of model.py to HLO **text** and
+write artifacts/manifest.json describing shapes for the rust runtime.
+
+HLO text (never `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation (tupled results) -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(params):
+    return [spec(p.shape) for p in params]
+
+
+def shapes_json(specs):
+    return [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs]
+
+
+def build_artifacts(out_dir: str, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    params = model.init_params(0)
+    x_spec = spec((model.BATCH, model.IMG, model.IMG, model.CHANNELS))
+    labels_spec = spec((model.BATCH,), jnp.int32)
+    lr_spec = spec(())
+
+    manifest = {
+        "batch": model.BATCH,
+        "img": model.IMG,
+        "channels": model.CHANNELS,
+        "num_classes": model.NUM_CLASSES,
+        "stages": model.STAGES,
+        "cuts": list(model.CUTS),
+        "param_shapes": [list(s) for s in model.PARAM_SHAPES],
+        "artifacts": {},
+    }
+
+    def emit(name, fn, in_specs):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": shapes_json(in_specs),
+        }
+        if verbose:
+            print(f"  wrote {path} ({len(text)} chars)")
+
+    for cut in model.CUTS:
+        dev = model.dev_params_of(params, cut)
+        srv = model.srv_params_of(params, cut)
+        smash = spec(model.smashed_shape(cut))
+        emit(f"dev_fwd_cut{cut}", model.dev_fwd(cut), [x_spec, *param_specs(dev)])
+        emit(
+            f"srv_step_cut{cut}",
+            model.srv_step(cut),
+            [smash, labels_spec, lr_spec, *param_specs(srv)],
+        )
+        emit(
+            f"dev_bwd_cut{cut}",
+            model.dev_bwd(cut),
+            [x_spec, smash, lr_spec, *param_specs(dev)],
+        )
+
+    emit("full_step", model.full_step(), [x_spec, labels_spec, lr_spec, *param_specs(params)])
+    emit("predict", model.predict(), [x_spec, *param_specs(params)])
+
+    # Initial parameter values ship as JSON so the rust side needs no numpy.
+    init = [p.tolist() for p in model.init_params(0)]
+    with open(os.path.join(out_dir, "init_params.json"), "w") as f:
+        json.dump(init, f)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"  wrote {out_dir}/manifest.json + init_params.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build_artifacts(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""L1: Pallas tiled matmul — the compute hot-spot of every dense layer and
+(via im2col) every convolution in the L2 split model.
+
+TPU adaptation of the paper's GPU kernels (DESIGN.md §Hardware-Adaptation):
+the HBM<->VMEM schedule is expressed with a (M/bm, N/bn, K/bk) grid and
+BlockSpecs; the MXU sees bm x bk @ bk x bn tiles with an accumulator kept in
+the output ref across the K grid dimension (standard Pallas matmul idiom in
+place of CUDA threadblock tiling).
+
+Must run with interpret=True: real TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute. Gradients are provided via custom_vjp
+whose backward pass is also expressed as Pallas matmuls, so the entire
+fwd+bwd graph lowers through this kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM-friendly tile sizes. Three f32 tiles of 128x128 occupy
+# 3 * 64 KiB = 192 KiB, far below the ~16 MiB VMEM budget; see
+# DESIGN.md §Perf for the roofline estimate.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; accumulates over the K grid dimension."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def _matmul_padded(x, y, bm, bn, bk):
+    """Pallas matmul over inputs already padded to block multiples."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _matmul_impl(x, y, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """Pad-to-block wrapper so arbitrary shapes hit the tiled kernel."""
+    m, k = x.shape
+    _, n = y.shape
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    return _matmul_padded(xp, yp, bm, bn, bk)[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """`x @ y` computed by the Pallas kernel, differentiable.
+
+    The VJP is expressed with the same kernel:
+    dx = g @ y^T, dy = x^T @ g.
+    """
+    return _matmul_impl(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_impl(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    dx = _matmul_impl(g, y.T)
+    dy = _matmul_impl(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_jit(x, y, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """Jitted non-differentiable entry point (micro-bench / tests)."""
+    return _matmul_impl(x, y, bm, bn, bk)

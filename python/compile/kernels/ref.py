@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels and the model building blocks.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernel (and the im2col convolution built
+on it) match these references to float32 tolerance.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, y):
+    """Reference for kernels.matmul: plain jnp.dot in f32."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def conv2d_ref(x_nhwc, w_hwio, stride: int):
+    """Reference NHWC conv via lax.conv_general_dilated with the model's
+    symmetric k//2 padding (XLA's "SAME" pads asymmetrically for strided
+    even-size inputs; the model defines symmetric padding instead)."""
+    kh, kw = w_hwio.shape[0], w_hwio.shape[1]
+    return lax.conv_general_dilated(
+        x_nhwc.astype(jnp.float32),
+        w_hwio.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((kh // 2, kh // 2), (kw // 2, kw // 2)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def dense_ref(x, w, b):
+    """Reference dense layer."""
+    return matmul_ref(x, w) + b
+
+
+def softmax_xent_ref(logits, labels_onehot):
+    """Reference mean softmax cross-entropy."""
+    logz = jnp.log(jnp.sum(jnp.exp(logits - logits.max(axis=-1, keepdims=True)), axis=-1))
+    logp = logits - logits.max(axis=-1, keepdims=True) - logz[..., None]
+    return -jnp.mean(jnp.sum(labels_onehot * logp, axis=-1))

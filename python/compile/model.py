@@ -1,0 +1,229 @@
+"""L2: the split-trainable JAX model.
+
+A compact CNN classifier over 16x16x3 synthetic images with **four stages**
+and three legal cut points between them, mirroring the paper's device/server
+split (Sec. III-A):
+
+    stage 0: conv3x3(16) stride 1 + relu          -> (B,16,16,16)
+    stage 1: conv3x3(32) stride 2 + relu          -> (B, 8, 8,32)
+    stage 2: flatten + dense(64) + relu           -> (B,64)
+    stage 3: dense(10) logits + softmax xent loss
+
+Every conv is im2col + the L1 Pallas matmul kernel, so the whole fwd/bwd
+graph lowers through the kernel. For each cut k in {1,2,3} the AOT compiler
+(aot.py) exports three functions, which is exactly what the rust runtime
+executes per local iteration:
+
+    dev_fwd_k  (x, dev_params)                    -> smashed
+    srv_step_k (smashed, labels, srv_params, lr)  -> loss, d_smashed, new_srv_params
+    dev_bwd_k  (x, dev_params, d_smashed, lr)     -> new_dev_params
+
+plus `full_step` (the central baseline: everything on the server) and
+`predict` for evaluation. SGD is applied inside the step functions so the
+rust hot path never touches Python.
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+
+# Fixed compile-time geometry (PJRT executables are shape-specialized).
+BATCH = 32
+IMG = 16
+CHANNELS = 3
+NUM_CLASSES = 10
+STAGES = 4
+CUTS = (1, 2, 3)  # legal cut points: device runs stages [0, k)
+
+
+def im2col(x, kh: int, kw: int, stride: int):
+    """NHWC -> (B*OH*OW, KH*KW*C) patch matrix with SAME padding.
+
+    Static Python loops over the (small) kernel window produce slice ops
+    only, which the PJRT CPU backend of xla_extension 0.5.1 handles.
+    """
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    oh = (h + 2 * ph - kh) // stride + 1
+    ow = (w + 2 * pw - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = xp[:, i : i + (oh - 1) * stride + 1 : stride,
+                       j : j + (ow - 1) * stride + 1 : stride, :]
+            cols.append(patch)
+    stacked = jnp.concatenate(cols, axis=-1)  # (B, OH, OW, KH*KW*C)
+    return stacked.reshape(b * oh * ow, kh * kw * c), (b, oh, ow)
+
+
+def conv2d(x, w, b, stride: int):
+    """SAME conv as im2col + Pallas matmul. w: (KH,KW,C,O), b: (O,)."""
+    kh, kw, c, o = w.shape
+    cols, (bsz, oh, ow) = im2col(x, kh, kw, stride)
+    out = matmul(cols, w.reshape(kh * kw * c, o)) + b
+    return out.reshape(bsz, oh, ow, o)
+
+
+def dense(x, w, b):
+    """Dense layer on the Pallas matmul."""
+    return matmul(x, w) + b
+
+
+# --------------------------------------------------------------------------
+# Parameters. Flat list of arrays; stage s owns params[PARAM_SLICES[s]].
+# --------------------------------------------------------------------------
+
+PARAM_SHAPES: List[Tuple[int, ...]] = [
+    (3, 3, CHANNELS, 16), (16,),        # stage 0 conv
+    (3, 3, 16, 32), (32,),              # stage 1 conv
+    (8 * 8 * 32, 64), (64,),            # stage 2 dense
+    (64, NUM_CLASSES), (NUM_CLASSES,),  # stage 3 dense
+]
+PARAM_SLICES = [slice(0, 2), slice(2, 4), slice(4, 6), slice(6, 8)]
+
+
+def init_params(seed: int = 0):
+    """He-style init, deterministic in `seed`."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for shape in PARAM_SHAPES:
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            scale = jnp.sqrt(2.0 / fan_in)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def stage_apply(s: int, x, stage_params):
+    """Run stage `s` on activation `x`."""
+    if s == 0:
+        w, b = stage_params
+        return jax.nn.relu(conv2d(x, w, b, stride=1))
+    if s == 1:
+        w, b = stage_params
+        return jax.nn.relu(conv2d(x, w, b, stride=2))
+    if s == 2:
+        w, b = stage_params
+        flat = x.reshape(x.shape[0], -1)
+        return jax.nn.relu(dense(flat, w, b))
+    if s == 3:
+        w, b = stage_params
+        return dense(x, w, b)  # logits
+    raise ValueError(f"no stage {s}")
+
+
+def smashed_shape(cut: int) -> Tuple[int, ...]:
+    """Activation shape crossing the wire for a given cut."""
+    return {
+        1: (BATCH, IMG, IMG, 16),
+        2: (BATCH, IMG // 2, IMG // 2, 32),
+        3: (BATCH, 64),
+    }[cut]
+
+
+def forward_range(x, params, start: int, stop: int):
+    """Apply stages [start, stop)."""
+    for s in range(start, stop):
+        x = stage_apply(s, x, params[PARAM_SLICES[s]])
+    return x
+
+
+def loss_from_logits(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    onehot = (labels[:, None] == jnp.arange(NUM_CLASSES)[None, :]).astype(jnp.float32)
+    shifted = logits - jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    return -jnp.mean(jnp.sum(onehot * (shifted - logz), axis=-1))
+
+
+# --------------------------------------------------------------------------
+# The three split functions per cut + the central step.
+# --------------------------------------------------------------------------
+
+def dev_params_of(params, cut: int):
+    return params[: 2 * cut]
+
+
+def srv_params_of(params, cut: int):
+    return params[2 * cut :]
+
+
+def dev_fwd(cut: int):
+    """(x, *dev_params) -> smashed activation."""
+
+    def f(x, *dev_params):
+        return (forward_range(x, list(dev_params), 0, cut),)
+
+    return f
+
+
+def srv_step(cut: int):
+    """(smashed, labels, lr, *srv_params) -> (loss, d_smashed, *new_srv)."""
+
+    def f(smashed, labels, lr, *srv_params):
+        def server_loss(smashed_in, srv):
+            # Reconstruct a full param list view for forward_range.
+            full = [None] * (2 * cut) + list(srv)
+            logits = forward_range(smashed_in, full, cut, STAGES)
+            return loss_from_logits(logits, labels)
+
+        (loss, (d_smashed, d_srv)) = jax.value_and_grad(
+            server_loss, argnums=(0, 1)
+        )(smashed, list(srv_params))
+        new_srv = [p - lr * g for p, g in zip(srv_params, d_srv)]
+        return (loss, d_smashed, *new_srv)
+
+    return f
+
+
+def dev_bwd(cut: int):
+    """(x, d_smashed, lr, *dev_params) -> (*new_dev_params,).
+
+    Recomputes the device forward (standard SL: the device kept its
+    activations; re-running the forward inside one fused artifact is the
+    AOT-friendly equivalent) and applies the chain rule with the gradient
+    received from the server.
+    """
+
+    def f(x, d_smashed, lr, *dev_params):
+        def device_fwd(dev):
+            return forward_range(x, list(dev), 0, cut)
+
+        _, vjp = jax.vjp(device_fwd, list(dev_params))
+        (d_dev,) = vjp(d_smashed)
+        return tuple(p - lr * g for p, g in zip(dev_params, d_dev))
+
+    return f
+
+
+def full_step():
+    """Central baseline: (x, labels, lr, *params) -> (loss, *new_params)."""
+
+    def f(x, labels, lr, *params):
+        def total_loss(ps):
+            logits = forward_range(x, list(ps), 0, STAGES)
+            return loss_from_logits(logits, labels)
+
+        loss, grads = jax.value_and_grad(total_loss)(list(params))
+        new = [p - lr * g for p, g in zip(params, grads)]
+        return (loss, *new)
+
+    return f
+
+
+def predict():
+    """(x, *params) -> logits (for accuracy evaluation)."""
+
+    def f(x, *params):
+        return (forward_range(x, list(params), 0, STAGES),)
+
+    return f

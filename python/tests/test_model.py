@@ -1,0 +1,117 @@
+"""L2 correctness: conv-as-im2col vs lax.conv, stage shapes, loss
+sanity, and the split-consistency invariant — running (dev_fwd, srv_step,
+dev_bwd) at any cut must produce exactly the same loss and updated
+parameters as the monolithic full_step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.uniform(-1, 1, size=shape).astype(np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([4, 6, 8]),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 6),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_matches_lax(b, hw, cin, cout, stride, seed):
+    x = rand((b, hw, hw, cin), seed)
+    w = rand((3, 3, cin, cout), seed + 1)
+    bias = rand((cout,), seed + 2)
+    got = model.conv2d(x, w, bias, stride)
+    want = ref.conv2d_ref(x, w, stride) + bias
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_stage_shapes():
+    params = model.init_params(0)
+    x = rand((model.BATCH, model.IMG, model.IMG, model.CHANNELS), 0)
+    for cut in model.CUTS:
+        smashed = model.forward_range(x, params, 0, cut)
+        assert smashed.shape == model.smashed_shape(cut), f"cut={cut}"
+    logits = model.forward_range(x, params, 0, model.STAGES)
+    assert logits.shape == (model.BATCH, model.NUM_CLASSES)
+
+
+def test_loss_sanity():
+    logits = jnp.zeros((8, model.NUM_CLASSES))
+    labels = jnp.arange(8, dtype=jnp.int32) % model.NUM_CLASSES
+    loss = model.loss_from_logits(logits, labels)
+    np.testing.assert_allclose(float(loss), np.log(model.NUM_CLASSES), rtol=1e-6)
+
+
+def test_loss_matches_reference_oracle():
+    logits = rand((16, model.NUM_CLASSES), 5)
+    labels = jnp.asarray(np.random.RandomState(6).randint(0, 10, size=16), jnp.int32)
+    onehot = jax.nn.one_hot(labels, model.NUM_CLASSES)
+    np.testing.assert_allclose(
+        float(model.loss_from_logits(logits, labels)),
+        float(ref.softmax_xent_ref(logits, onehot)),
+        rtol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("cut", model.CUTS)
+def test_split_equals_full_step(cut):
+    """The paper's SL invariant: splitting must not change the math."""
+    params = model.init_params(3)
+    x = rand((model.BATCH, model.IMG, model.IMG, model.CHANNELS), 7)
+    labels = jnp.asarray(
+        np.random.RandomState(8).randint(0, model.NUM_CLASSES, size=model.BATCH),
+        jnp.int32,
+    )
+    lr = jnp.float32(0.05)
+
+    # Monolithic step.
+    full_out = model.full_step()(x, labels, lr, *params)
+    loss_full, new_full = full_out[0], list(full_out[1:])
+
+    # Split step.
+    dev = model.dev_params_of(params, cut)
+    srv = model.srv_params_of(params, cut)
+    (smashed,) = model.dev_fwd(cut)(x, *dev)
+    srv_out = model.srv_step(cut)(smashed, labels, lr, *srv)
+    loss_split, d_smashed, new_srv = srv_out[0], srv_out[1], list(srv_out[2:])
+    new_dev = list(model.dev_bwd(cut)(x, d_smashed, lr, *dev))
+
+    np.testing.assert_allclose(float(loss_split), float(loss_full), rtol=1e-5)
+    recombined = new_dev + new_srv
+    assert len(recombined) == len(new_full)
+    for i, (a, b) in enumerate(zip(recombined, new_full)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5, err_msg=f"param {i}"
+        )
+
+
+def test_training_reduces_loss():
+    """A few full steps on a learnable synthetic task reduce the loss."""
+    params = model.init_params(1)
+    rng = np.random.RandomState(0)
+    proj = rng.randn(model.IMG * model.IMG * model.CHANNELS, model.NUM_CLASSES)
+    x = rng.uniform(-1, 1, size=(model.BATCH, model.IMG, model.IMG, model.CHANNELS))
+    y = np.argmax(x.reshape(model.BATCH, -1) @ proj, axis=1).astype(np.int32)
+    x, y = jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+    step = jax.jit(model.full_step())
+    lr = jnp.float32(0.1)
+    first = None
+    loss = None
+    for _ in range(15):
+        out = step(x, y, lr, *params)
+        loss, params = float(out[0]), list(out[1:])
+        first = first if first is not None else loss
+    assert loss < first * 0.8, f"loss {first} -> {loss}"

@@ -1,0 +1,160 @@
+//! The leader event loop: per-epoch link collection → ms-scale partition
+//! decision → real split-training iterations via PJRT → Eq. (7) delay
+//! accounting in simulated time.
+
+use super::costmodel::{device_set_to_cut, stage_cost_graph};
+use crate::net::{EdgeNetwork, NetConfig};
+use crate::partition::{blockwise_partition, Problem};
+use crate::profiles::{DeviceProfile, TrainCfg};
+use crate::runtime::data::Synthetic;
+use crate::runtime::SplitTrainer;
+use crate::sim::DelayBreakdown;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: String,
+    pub net: NetConfig,
+    pub train: TrainCfg,
+    pub lr: f32,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifacts_dir: crate::runtime::DEFAULT_ARTIFACTS_DIR.to_string(),
+            net: NetConfig {
+                num_devices: 4,
+                ..NetConfig::default()
+            },
+            train: TrainCfg {
+                batch: 32,
+                n_loc: 4,
+                bwd_ratio: 2.0,
+            },
+            lr: 0.05,
+            epochs: 10,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-epoch report combining real numerics with simulated delay.
+#[derive(Clone, Debug)]
+pub struct EpochReport {
+    pub epoch: usize,
+    pub device: usize,
+    pub device_tier: &'static str,
+    /// Chosen artifact cut (0 = central, 4 = device-only).
+    pub cut: usize,
+    /// Mean training loss over the epoch's local iterations (real numerics).
+    pub mean_loss: f64,
+    /// Held-out batch accuracy after the epoch (real numerics).
+    pub accuracy: f64,
+    /// Eq. (7) simulated epoch delay.
+    pub sim_delay: f64,
+    pub breakdown: DelayBreakdown,
+    /// Wall-clock of the partition decision (the paper's Table I metric).
+    pub decision_time: f64,
+    /// Real bytes that crossed the simulated wire this epoch.
+    pub wire_bytes: u64,
+    /// Real wall-clock of the epoch's PJRT execution.
+    pub wall_time: f64,
+}
+
+/// The leader: owns the runtime, the network simulator, and the fleet.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    trainer: SplitTrainer,
+    net: EdgeNetwork,
+    fleet: Vec<DeviceProfile>,
+    data: Synthetic,
+    eval_batch: crate::runtime::data::Batch,
+    sim_time: f64,
+    epoch: usize,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let trainer = SplitTrainer::new(&cfg.artifacts_dir)?;
+        let m = trainer.manifest();
+        let mut data = Synthetic::new(m.img, m.channels, m.num_classes, m.batch, cfg.seed);
+        let eval_batch = data.next_batch();
+        let fleet = DeviceProfile::fleet_of(cfg.net.num_devices);
+        let net = EdgeNetwork::new(cfg.net.clone());
+        Ok(Coordinator {
+            cfg,
+            trainer,
+            net,
+            fleet,
+            data,
+            eval_batch,
+            sim_time: 0.0,
+            epoch: 0,
+        })
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.sim_time
+    }
+
+    /// Run one epoch of the Sec. III-A loop.
+    pub fn run_epoch(&mut self) -> Result<EpochReport> {
+        let epoch = self.epoch;
+        self.epoch += 1;
+
+        // 1. Collect network + device information.
+        let device = self.net.select_device(self.sim_time);
+        let link = self.net.sample_link(device, self.sim_time).to_link();
+        let profile = self.fleet[device].clone();
+        let server = DeviceProfile::rtx_a6000();
+
+        // 2. Decide the partition with the paper's block-wise algorithm.
+        let costs = stage_cost_graph(self.trainer.manifest(), &profile, &server, &self.cfg.train);
+        let problem = Problem::new(&costs, link);
+        let t0 = Instant::now();
+        let partition = blockwise_partition(&problem);
+        let decision_time = t0.elapsed().as_secs_f64();
+        let cut = device_set_to_cut(&partition.device_set);
+        let breakdown = DelayBreakdown::of(&problem, &partition.device_set);
+
+        // 3. Execute N_loc real local iterations at the chosen cut.
+        let wall0 = Instant::now();
+        let mut loss_sum = 0.0;
+        let mut wire_bytes = 0u64;
+        for _ in 0..self.cfg.train.n_loc {
+            let batch = self.data.next_batch();
+            let out = self.trainer.step(cut, &batch, self.cfg.lr)?;
+            loss_sum += out.loss as f64;
+            wire_bytes += out.wire_bytes;
+        }
+        let accuracy = self.trainer.accuracy(&self.eval_batch)?;
+        let wall_time = wall0.elapsed().as_secs_f64();
+
+        // 4. Advance simulated time by the Eq. (7) epoch delay.
+        self.sim_time += partition.delay + decision_time;
+
+        Ok(EpochReport {
+            epoch,
+            device,
+            device_tier: profile.name,
+            cut,
+            mean_loss: loss_sum / self.cfg.train.n_loc as f64,
+            accuracy,
+            sim_delay: partition.delay,
+            breakdown,
+            decision_time,
+            wire_bytes,
+            wall_time,
+        })
+    }
+
+    /// Run the configured number of epochs, returning all reports.
+    pub fn run(&mut self) -> Result<Vec<EpochReport>> {
+        (0..self.cfg.epochs).map(|_| self.run_epoch()).collect()
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 leader coordinator: the paper's training process (Sec. III-A) with
+//! *real* numerics.
+//!
+//! Per epoch the leader collects the selected device's link state from the
+//! network simulator, runs the block-wise partitioning algorithm on the L2
+//! model's cost graph (millisecond decision, as in Table I), maps the
+//! optimal cut onto the compiled artifacts, and drives `N_loc` real
+//! split-training iterations through PJRT on a worker thread while
+//! accounting simulated wall-clock per Eq. (7).
+
+pub mod costmodel;
+pub mod leader;
+
+pub use leader::{Coordinator, CoordinatorConfig, EpochReport};

@@ -1,0 +1,79 @@
+//! Shared helpers for the experiment harnesses.
+
+use crate::models;
+use crate::partition::{Link, Problem};
+use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Build the cost graph for a zoo model on a given device tier.
+pub fn cost_graph(model: &str, device: &DeviceProfile) -> CostGraph {
+    let m = models::by_name(model).unwrap_or_else(|| panic!("unknown model {model}"));
+    CostGraph::build(&m, device, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+}
+
+/// A randomized evaluation context (device tier + link rates), as the
+/// paper's 1000-run averages randomize device and channel conditions.
+pub fn random_context(rng: &mut Rng) -> (DeviceProfile, Link) {
+    let tiers = [
+        DeviceProfile::jetson_tx1(),
+        DeviceProfile::jetson_tx2(),
+        DeviceProfile::jetson_orin_nano(),
+        DeviceProfile::jetson_agx_orin(),
+    ];
+    let device = tiers[rng.index(4)].clone();
+    // Log-uniform rates across the CQI-reachable range (bytes/s).
+    let log_lo = 4.0; // 10 kB/s
+    let log_hi = 8.5; // ~300 MB/s
+    let up = 10f64.powf(rng.range(log_lo, log_hi));
+    let down = up * rng.range(1.0, 8.0);
+    (device, Link { up_bps: up, down_bps: down })
+}
+
+/// Median wall-clock seconds of `f` over `reps` runs (dropping the first,
+/// which may include lazy allocations).
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f();
+    let mut samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Problem wrapper for one-off evaluations.
+pub fn problem<'a>(costs: &'a CostGraph, link: Link) -> Problem<'a> {
+    Problem::new(costs, link)
+}
+
+/// Format a ratio like the paper's "(1.33x)" annotations.
+pub fn ratio(x: f64, base: f64) -> String {
+    format!("{:.2}x", x / base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_context_in_range() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let (_, link) = random_context(&mut rng);
+            assert!(link.up_bps >= 1e4 && link.up_bps <= 10f64.powf(8.5));
+            assert!(link.down_bps >= link.up_bps);
+        }
+    }
+
+    #[test]
+    fn time_median_positive() {
+        let t = time_median(5, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig. 11: training delay per epoch under large-scale path loss, for both
+//! bands (sub-6 GHz / mmWave) and all three channel conditions, comparing
+//! the proposed solution with OSS / device-only / regression.
+
+use crate::net::{Band, ChannelCondition, NetConfig};
+use crate::sim::{SimConfig, Trainer};
+use crate::util::table::Table;
+
+const METHODS: &[&str] = &["proposed", "oss", "device-only", "regression"];
+
+pub fn run(epochs: usize) -> String {
+    let mut out = String::new();
+    for band in [Band::n1(), Band::n257()] {
+        let mut t = Table::new(&["condition", "proposed", "oss", "device-only", "regression", "best-gain"]);
+        for cond in ChannelCondition::all() {
+            let mut means = Vec::new();
+            for method in METHODS {
+                let cfg = SimConfig {
+                    model: "googlenet".into(),
+                    net: NetConfig {
+                        band,
+                        condition: cond,
+                        rayleigh: false,
+                        ..NetConfig::default()
+                    },
+                    method: method.to_string(),
+                    seed: 11,
+                    ..SimConfig::default()
+                };
+                let mut trainer = Trainer::new(cfg);
+                means.push(trainer.run_epochs(epochs).mean_epoch_delay);
+            }
+            let proposed = means[0];
+            let best_baseline = means[1..].iter().cloned().fold(f64::INFINITY, f64::min);
+            let gain = 100.0 * (1.0 - proposed / best_baseline);
+            t.row(&[
+                cond.name().to_string(),
+                format!("{:.1}", means[0]),
+                format!("{:.1}", means[1]),
+                format!("{:.1}", means[2]),
+                format!("{:.1}", means[3]),
+                format!("{gain:.1}%"),
+            ]);
+        }
+        out.push_str(&format!(
+            "Fig 11 [{}]: mean training delay per epoch (s), GoogLeNet, {} epochs\n{}\n",
+            band.name,
+            epochs,
+            t.render()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn proposed_wins_somewhere() {
+        let out = super::run(8);
+        assert!(out.contains("n257"));
+        assert!(out.contains("normal"));
+    }
+}

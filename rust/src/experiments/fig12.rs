@@ -1,0 +1,66 @@
+//! Fig. 12: per-epoch training-delay traces in the mmWave network under a
+//! Rayleigh fading channel — the proposed solution stays stable while the
+//! static OSS cut swings with the channel.
+
+use crate::net::{Band, ChannelCondition, NetConfig};
+use crate::sim::{SimConfig, Trainer};
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+pub fn run(epochs: usize) -> String {
+    let mut t = Table::new(&["method", "mean (s)", "std (s)", "p95 (s)", "max (s)", "cv"]);
+    let mut trace = String::new();
+    for method in ["proposed", "oss", "device-only", "regression"] {
+        let cfg = SimConfig {
+            model: "googlenet".into(),
+            net: NetConfig {
+                band: Band::n257(),
+                condition: ChannelCondition::Normal,
+                rayleigh: true,
+                ..NetConfig::default()
+            },
+            method: method.to_string(),
+            seed: 23,
+            ..SimConfig::default()
+        };
+        let mut trainer = Trainer::new(cfg);
+        let res = trainer.run_epochs(epochs);
+        let delays: Vec<f64> = res.records.iter().map(|r| r.delay).collect();
+        let s = Summary::of(&delays);
+        t.row(&[
+            method.to_string(),
+            format!("{:.1}", s.mean),
+            format!("{:.1}", s.std_dev),
+            format!("{:.1}", s.p95),
+            format!("{:.1}", s.max),
+            format!("{:.2}", s.std_dev / s.mean),
+        ]);
+        if method == "proposed" || method == "oss" {
+            let head: Vec<String> = delays.iter().take(12).map(|d| format!("{d:.0}")).collect();
+            trace.push_str(&format!("  {method:<10} first epochs: {}\n", head.join(" ")));
+        }
+    }
+    format!(
+        "Fig 12: per-epoch delay under Rayleigh fading, mmWave, {epochs} epochs\n{}\ntraces:\n{trace}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn proposed_has_lower_variability_than_oss() {
+        let out = super::run(40);
+        // Extract cv column for proposed and oss.
+        let cv = |method: &str| -> f64 {
+            out.lines()
+                .find(|l| l.starts_with(method))
+                .and_then(|l| l.split_whitespace().last())
+                .and_then(|v| v.parse().ok())
+                .unwrap()
+        };
+        // Coefficient of variation: proposed adapts, oss doesn't. Allow
+        // some slack for the stochastic channel.
+        assert!(cv("proposed") <= cv("oss") * 1.5, "{out}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig. 13: overall training delay to reach the accuracy threshold when
+//! training GoogLeNet on CIFAR-10, IID vs non-IID, against four baselines
+//! (central runs everything on the server).
+
+use crate::net::{Band, ChannelCondition, NetConfig};
+use crate::sim::{Dataset, SimConfig, Trainer};
+use crate::util::table::Table;
+
+const METHODS: &[&str] = &["proposed", "oss", "device-only", "regression", "central"];
+
+pub fn run(runs: usize) -> String {
+    let mut out = String::new();
+    for iid in [true, false] {
+        let mut t = Table::new(&["method", "delay (min)", "epochs", "vs proposed"]);
+        let mut proposed_delay = 0.0;
+        for method in METHODS {
+            let mut total = 0.0;
+            let mut epochs_sum = 0usize;
+            for run in 0..runs {
+                let cfg = SimConfig {
+                    model: "googlenet".into(),
+                    net: NetConfig {
+                        band: Band::n257(),
+                        condition: ChannelCondition::Normal,
+                        ..NetConfig::default()
+                    },
+                    method: method.to_string(),
+                    seed: 31 + run as u64,
+                    ..SimConfig::default()
+                };
+                let mut trainer = Trainer::new(cfg);
+                let (res, epochs) = trainer.run_to_accuracy(Dataset::Cifar10, iid, 5000);
+                total += res.total_delay;
+                epochs_sum += epochs;
+            }
+            let mean_min = total / runs as f64 / 60.0;
+            if *method == "proposed" {
+                proposed_delay = mean_min;
+            }
+            t.row(&[
+                method.to_string(),
+                format!("{mean_min:.1}"),
+                format!("{}", epochs_sum / runs),
+                format!("{:.2}x", mean_min / proposed_delay.max(1e-9)),
+            ]);
+        }
+        out.push_str(&format!(
+            "Fig 13 [{}]: GoogLeNet on CIFAR-10 to {:.0}% accuracy ({} runs)\n{}\n",
+            if iid { "IID" } else { "non-IID" },
+            Dataset::Cifar10.threshold(iid) * 100.0,
+            runs,
+            t.render()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn proposed_is_fastest_among_privacy_preserving_methods() {
+        let out = super::run(1);
+        // "vs proposed" must be >= 1.00x for all SL baselines; `central`
+        // (raw data shipped to the server) may undercut it.
+        for line in out.lines() {
+            if line.starts_with("central") {
+                continue;
+            }
+            if let Some(r) = line.split_whitespace().last() {
+                if r.ends_with('x') {
+                    let v: f64 = r.trim_end_matches('x').parse().unwrap();
+                    assert!(v >= 0.99, "{line}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Fig. 14: GPT-2 on the CARER dataset (non-IID) over the mmWave network —
+//! the paper's LLM extension (Sec. VI-E), partitioned block-wise with the
+//! embedding / transformer blocks / head treated as blocks.
+
+use crate::net::{Band, ChannelCondition, NetConfig};
+use crate::sim::{Dataset, SimConfig, Trainer};
+use crate::util::table::Table;
+
+const METHODS: &[&str] = &["proposed", "oss", "regression", "device-only"];
+
+pub fn run(runs: usize) -> String {
+    let mut t = Table::new(&["method", "delay (min)", "reduction vs method"]);
+    let mut delays = Vec::new();
+    for method in METHODS {
+        let mut total = 0.0;
+        for run in 0..runs {
+            let cfg = SimConfig {
+                model: "gpt2".into(),
+                net: NetConfig {
+                    band: Band::n257(),
+                    condition: ChannelCondition::Normal,
+                    ..NetConfig::default()
+                },
+                method: method.to_string(),
+                seed: 51 + run as u64,
+                ..SimConfig::default()
+            };
+            let mut trainer = Trainer::new(cfg);
+            let (res, _) = trainer.run_to_accuracy(Dataset::Carer, false, 5000);
+            total += res.total_delay;
+        }
+        delays.push(total / runs as f64 / 60.0);
+    }
+    let proposed = delays[0];
+    for (method, d) in METHODS.iter().zip(&delays) {
+        let red = 100.0 * (1.0 - proposed / d);
+        t.row(&[
+            method.to_string(),
+            format!("{d:.0}"),
+            if *method == "proposed" {
+                "-".into()
+            } else {
+                format!("{red:.1}%")
+            },
+        ]);
+    }
+    format!(
+        "Fig 14: GPT-2 on CARER (non-IID, mmWave normal, {runs} runs)\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::models;
+    use crate::partition::blockwise::blockwise_partition_instrumented;
+    use crate::partition::{Link, Problem};
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+
+    #[test]
+    fn gpt2_blocks_abstract_cleanly() {
+        // The Sec. VI-E claim: GPT-2's transformer blocks behave as blocks.
+        let m = models::by_name("gpt2").unwrap();
+        let c = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_agx_orin(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        let p = Problem::new(&c, Link::symmetric(1e7));
+        let run = blockwise_partition_instrumented(&p);
+        assert!(run.blocks_abstracted >= 12, "{}", run.blocks_abstracted);
+        assert!(run.flow_vertices < c.len());
+    }
+}

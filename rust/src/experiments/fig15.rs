@@ -1,0 +1,61 @@
+//! Fig. 15: robustness to network size — training delay with 10 and 40
+//! devices (GoogLeNet, non-IID CIFAR-10, mmWave).
+
+use crate::net::{Band, ChannelCondition, NetConfig};
+use crate::sim::{Dataset, SimConfig, Trainer};
+use crate::util::table::Table;
+
+const METHODS: &[&str] = &["proposed", "oss", "device-only", "regression"];
+
+pub fn run(epochs: usize) -> String {
+    let mut out = String::new();
+    for devices in [10usize, 40] {
+        let mut t = Table::new(&["method", "delay/epoch (s)", "total (min)", "vs proposed"]);
+        let mut proposed = 0.0;
+        for method in METHODS {
+            let cfg = SimConfig {
+                model: "googlenet".into(),
+                net: NetConfig {
+                    band: Band::n257(),
+                    condition: ChannelCondition::Normal,
+                    num_devices: devices,
+                    ..NetConfig::default()
+                },
+                method: method.to_string(),
+                seed: 61,
+                ..SimConfig::default()
+            };
+            let mut trainer = Trainer::new(cfg);
+            // Epoch count follows the non-IID CIFAR-10 curve; delays are
+            // what varies with the method.
+            let _ = Dataset::Cifar10;
+            let res = trainer.run_epochs(epochs);
+            if *method == "proposed" {
+                proposed = res.mean_epoch_delay;
+            }
+            t.row(&[
+                method.to_string(),
+                format!("{:.1}", res.mean_epoch_delay),
+                format!("{:.1}", res.total_delay / 60.0),
+                format!("{:.2}x", res.mean_epoch_delay / proposed.max(1e-9)),
+            ]);
+        }
+        out.push_str(&format!(
+            "Fig 15 [{} devices]: GoogLeNet non-IID CIFAR-10, mmWave ({} epochs)\n{}\n",
+            devices,
+            epochs,
+            t.render()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn covers_both_fleet_sizes() {
+        let out = super::run(6);
+        assert!(out.contains("[10 devices]"));
+        assert!(out.contains("[40 devices]"));
+    }
+}

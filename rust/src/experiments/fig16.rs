@@ -1,0 +1,76 @@
+//! Fig. 16: delay decomposition — device compute / server compute /
+//! transmission for two joint iterations of GoogLeNet over mmWave at
+//! batch 32, per method.
+
+use crate::net::{Band, ChannelCondition, NetConfig};
+use crate::partition::baselines::partition_by_method;
+use crate::partition::Problem;
+use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use crate::sim::DelayBreakdown;
+use crate::util::table::Table;
+
+pub fn run() -> String {
+    // Two iterations (n_loc = 2), batch 32, as the paper specifies.
+    let cfg = TrainCfg {
+        batch: 32,
+        n_loc: 2,
+        bwd_ratio: 2.0,
+    };
+    let model = crate::models::by_name("googlenet").unwrap();
+    let costs = CostGraph::build(
+        &model,
+        &DeviceProfile::jetson_tx2(),
+        &DeviceProfile::rtx_a6000(),
+        &cfg,
+    );
+    let mut net = crate::net::EdgeNetwork::new(NetConfig {
+        band: Band::n257(),
+        condition: ChannelCondition::Normal,
+        ..NetConfig::default()
+    });
+    let link = net.nominal_link(512);
+
+    let mut t = Table::new(&[
+        "method",
+        "device-compute (s)",
+        "server-compute (s)",
+        "transmission (s)",
+        "total (s)",
+    ]);
+    for method in ["proposed", "oss", "regression", "device-only", "central"] {
+        let p = Problem::new(&costs, link);
+        let part = partition_by_method(method, &p, link);
+        let b = DelayBreakdown::of(&p, &part.device_set);
+        t.row(&[
+            method.to_string(),
+            format!("{:.2}", b.device_compute),
+            format!("{:.2}", b.server_compute),
+            format!("{:.2}", b.transmission()),
+            format!("{:.2}", b.total()),
+        ]);
+    }
+    format!(
+        "Fig 16: delay decomposition, GoogLeNet mmWave, batch 32, 2 iterations\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn device_only_has_zero_server_compute() {
+        let out = super::run();
+        let line = out.lines().find(|l| l.starts_with("device-only")).unwrap();
+        let cells: Vec<&str> = line.split_whitespace().collect();
+        assert_eq!(cells[2], "0.00", "{line}");
+    }
+
+    #[test]
+    fn central_has_zero_transmission() {
+        let out = super::run();
+        let line = out.lines().find(|l| l.starts_with("central")).unwrap();
+        let cells: Vec<&str> = line.split_whitespace().collect();
+        assert_eq!(cells[1], "0.00", "{line}");
+        assert_eq!(cells[3], "0.00", "{line}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Fig. 7: (a) computational complexity and (b) probability of the optimal
+//! cut, on the three single-block networks of Fig. 6.
+
+use super::common::{cost_graph, random_context};
+use crate::models::BLOCK_NETS;
+use crate::partition::baselines::{
+    brute_force_complexity, brute_force_partition, regression_partition,
+};
+use crate::partition::blockwise::blockwise_partition_instrumented;
+use crate::partition::general::general_partition_instrumented;
+use crate::partition::Problem;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// Fig. 7(a): theoretical operation counts per algorithm and block net.
+pub fn run_complexity() -> String {
+    let mut t = Table::new(&[
+        "network",
+        "brute-force",
+        "general",
+        "block-wise",
+        "bf/gen",
+        "gen/bw",
+    ]);
+    for net in BLOCK_NETS {
+        let costs = cost_graph(net, &crate::profiles::DeviceProfile::jetson_tx2());
+        let p = Problem::new(&costs, crate::partition::Link::symmetric(1e6));
+        let bf = brute_force_complexity(&p);
+        let gen = general_partition_instrumented(&p).complexity;
+        let bw = blockwise_partition_instrumented(&p).complexity;
+        t.row(&[
+            net.to_string(),
+            format!("{bf:.2e}"),
+            format!("{gen:.2e}"),
+            format!("{bw:.2e}"),
+            format!("{:.1}x", bf / gen),
+            format!("{:.1}x", gen / bw),
+        ]);
+    }
+    format!("Fig 7(a): computational complexity (operation counts)\n{}", t.render())
+}
+
+/// Fig. 7(b): probability that each method returns the brute-force optimum
+/// over `runs` randomized device/link contexts.
+pub fn run_optimality(runs: usize) -> String {
+    let mut t = Table::new(&["network", "general", "block-wise", "regression"]);
+    let mut rng = Rng::new(0x716);
+    for net in BLOCK_NETS {
+        let mut hits = [0usize; 3];
+        for _ in 0..runs {
+            let (device, link) = random_context(&mut rng);
+            let costs = cost_graph(net, &device);
+            let p = Problem::new(&costs, link);
+            let best = brute_force_partition(&p);
+            let tol = 1e-9 * (1.0 + best.delay);
+            let gen = general_partition_instrumented(&p).partition;
+            let bw = blockwise_partition_instrumented(&p).partition;
+            let reg = regression_partition(&p);
+            if (gen.delay - best.delay).abs() <= tol {
+                hits[0] += 1;
+            }
+            if (bw.delay - best.delay).abs() <= tol {
+                hits[1] += 1;
+            }
+            if (reg.delay - best.delay).abs() <= tol {
+                hits[2] += 1;
+            }
+        }
+        let pct = |h: usize| format!("{:.1}%", 100.0 * h as f64 / runs as f64);
+        t.row(&[net.to_string(), pct(hits[0]), pct(hits[1]), pct(hits[2])]);
+    }
+    format!(
+        "Fig 7(b): probability of the optimal cut over {runs} randomized runs\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn complexity_table_has_ratios() {
+        let out = super::run_complexity();
+        assert!(out.contains("block-residual"));
+        assert!(out.contains('x'));
+    }
+
+    #[test]
+    fn proposed_methods_always_optimal() {
+        let out = super::run_optimality(40);
+        // general & block-wise columns must be 100%.
+        for line in out.lines().skip(3) {
+            if line.starts_with("block-") {
+                let cells: Vec<&str> = line.split_whitespace().collect();
+                assert_eq!(cells[1], "100.0%", "{line}");
+                assert_eq!(cells[2], "100.0%", "{line}");
+            }
+        }
+    }
+}

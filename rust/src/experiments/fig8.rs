@@ -1,0 +1,55 @@
+//! Fig. 8: computational complexity on the four full AI models.
+
+use super::common::cost_graph;
+use crate::models::FULL_MODELS;
+use crate::partition::baselines::brute_force_complexity;
+use crate::partition::blockwise::blockwise_partition_instrumented;
+use crate::partition::general::general_partition_instrumented;
+use crate::partition::{Link, Problem};
+use crate::util::table::Table;
+
+pub fn run() -> String {
+    let mut t = Table::new(&[
+        "model",
+        "layers",
+        "brute-force",
+        "general",
+        "block-wise",
+        "bf/gen",
+        "gen/bw",
+    ]);
+    for model in FULL_MODELS {
+        let costs = cost_graph(model, &crate::profiles::DeviceProfile::jetson_tx2());
+        let p = Problem::new(&costs, Link::symmetric(1e6));
+        let bf = brute_force_complexity(&p);
+        let gen = general_partition_instrumented(&p);
+        let bw = blockwise_partition_instrumented(&p);
+        t.row(&[
+            model.to_string(),
+            costs.len().to_string(),
+            format!("{bf:.2e}"),
+            format!("{:.2e}", gen.complexity),
+            format!("{:.2e}", bw.complexity),
+            format!("{:.1e}", bf / gen.complexity),
+            format!("{:.1}x", gen.complexity / bw.complexity),
+        ]);
+    }
+    format!("Fig 8: computational complexity, full AI models\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn blockwise_always_cheaper_than_general() {
+        let out = super::run();
+        assert!(out.contains("densenet121"));
+        // Every gen/bw ratio > 1 (last column ends with 'x').
+        for line in out.lines().skip(3) {
+            let cells: Vec<&str> = line.split_whitespace().collect();
+            if cells.len() == 7 {
+                let r: f64 = cells[6].trim_end_matches('x').parse().unwrap();
+                assert!(r >= 1.0, "{line}");
+            }
+        }
+    }
+}

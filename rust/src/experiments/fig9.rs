@@ -1,0 +1,90 @@
+//! Fig. 9: measured running time of the partitioning algorithms —
+//! (a) single-block networks (including brute force), (b) full models.
+
+use super::common::{cost_graph, time_median};
+use crate::models::{BLOCK_NETS, FULL_MODELS};
+use crate::partition::baselines::{brute_force_partition, regression_partition};
+use crate::partition::{blockwise_partition, general_partition, Link, Problem};
+use crate::util::fmt_secs;
+use crate::util::table::Table;
+
+/// Fig. 9(a): block networks, all four methods.
+pub fn run_blocknets(reps: usize) -> String {
+    let mut t = Table::new(&[
+        "network",
+        "brute-force",
+        "general",
+        "block-wise",
+        "regression",
+        "bf/gen",
+        "gen/bw",
+    ]);
+    for net in BLOCK_NETS {
+        let costs = cost_graph(net, &crate::profiles::DeviceProfile::jetson_tx2());
+        let link = Link::symmetric(1e6);
+        let p = Problem::new(&costs, link);
+        let bf = time_median(reps.min(30), || {
+            std::hint::black_box(brute_force_partition(&p));
+        });
+        let gen = time_median(reps, || {
+            std::hint::black_box(general_partition(&p));
+        });
+        let bw = time_median(reps, || {
+            std::hint::black_box(blockwise_partition(&p));
+        });
+        let reg = time_median(reps, || {
+            std::hint::black_box(regression_partition(&p));
+        });
+        t.row(&[
+            net.to_string(),
+            fmt_secs(bf),
+            fmt_secs(gen),
+            fmt_secs(bw),
+            fmt_secs(reg),
+            format!("{:.1}x", bf / gen),
+            format!("{:.1}x", gen / bw),
+        ]);
+    }
+    format!("Fig 9(a): running time, block networks ({reps} reps median)\n{}", t.render())
+}
+
+/// Fig. 9(b): full models, proposed algorithms + regression.
+pub fn run_full_models(reps: usize) -> String {
+    let mut t = Table::new(&[
+        "model",
+        "general",
+        "block-wise",
+        "regression",
+        "gen/bw",
+    ]);
+    for model in FULL_MODELS {
+        let costs = cost_graph(model, &crate::profiles::DeviceProfile::jetson_tx2());
+        let p = Problem::new(&costs, Link::symmetric(1e6));
+        let gen = time_median(reps, || {
+            std::hint::black_box(general_partition(&p));
+        });
+        let bw = time_median(reps, || {
+            std::hint::black_box(blockwise_partition(&p));
+        });
+        let reg = time_median(reps, || {
+            std::hint::black_box(regression_partition(&p));
+        });
+        t.row(&[
+            model.to_string(),
+            fmt_secs(gen),
+            fmt_secs(bw),
+            fmt_secs(reg),
+            format!("{:.1}x", gen / bw),
+        ]);
+    }
+    format!("Fig 9(b): running time, full AI models ({reps} reps median)\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn blocknet_timing_runs() {
+        let out = super::run_blocknets(3);
+        assert!(out.contains("block-inception"));
+    }
+}

@@ -1,0 +1,49 @@
+//! Experiment harnesses regenerating every table and figure of the paper's
+//! evaluation (Sec. VII). Each harness prints the same rows/series the
+//! paper reports; EXPERIMENTS.md records paper-vs-measured.
+//!
+//! Run via `fastsplit experiment --id <id>` (`--quick` shrinks repetition
+//! counts for smoke runs). `--id all` runs everything.
+
+pub mod common;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod table2;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod ablations;
+
+/// All experiment ids in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "fig7a", "fig7b", "fig8", "fig9a", "fig9b", "tab1", "fig11", "fig12", "fig13", "tab2",
+    "fig14", "fig15", "fig16", "ablA", "ablB",
+];
+
+/// Run one experiment by id, returning its printable report.
+pub fn run(id: &str, quick: bool) -> Option<String> {
+    let out = match id {
+        "fig7a" => fig7::run_complexity(),
+        "fig7b" => fig7::run_optimality(if quick { 100 } else { 1000 }),
+        "fig8" => fig8::run(),
+        "fig9a" => fig9::run_blocknets(if quick { 50 } else { 1000 }),
+        "fig9b" => fig9::run_full_models(if quick { 20 } else { 1000 }),
+        "tab1" => table1::run(if quick { 20 } else { 200 }),
+        "fig11" => fig11::run(if quick { 20 } else { 300 }),
+        "fig12" => fig12::run(if quick { 30 } else { 120 }),
+        "fig13" => fig13::run(if quick { 1 } else { 3 }),
+        "tab2" => table2::run(if quick { 1 } else { 3 }),
+        "fig14" => fig14::run(if quick { 1 } else { 3 }),
+        "fig15" => fig15::run(if quick { 20 } else { 100 }),
+        "fig16" => fig16::run(),
+        "ablA" => ablations::run_closure(if quick { 100 } else { 1000 }),
+        "ablB" => ablations::run_solvers(),
+        _ => return None,
+    };
+    Some(out)
+}

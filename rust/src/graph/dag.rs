@@ -1,0 +1,263 @@
+//! Adjacency-list directed graph with weighted edges.
+
+/// Vertex handle (index into the graph's vertex table).
+pub type NodeId = usize;
+/// Edge handle (index into the graph's edge table).
+pub type EdgeId = usize;
+
+/// A directed edge with an f64 weight (delay in seconds for partition DAGs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub weight: f64,
+}
+
+/// Directed graph stored as vertex-indexed out/in adjacency lists.
+///
+/// Invariants: vertices are labelled; parallel edges are allowed (the
+/// partition builder merges them where the paper requires); weights are
+/// finite unless explicitly `f64::INFINITY` (closure-enforcing edges).
+#[derive(Clone, Debug, Default)]
+pub struct Dag {
+    labels: Vec<String>,
+    edges: Vec<Edge>,
+    out_adj: Vec<Vec<EdgeId>>,
+    in_adj: Vec<Vec<EdgeId>>,
+}
+
+impl Dag {
+    pub fn new() -> Dag {
+        Dag::default()
+    }
+
+    /// Add a labelled vertex, returning its id.
+    pub fn add_node<S: Into<String>>(&mut self, label: S) -> NodeId {
+        let id = self.labels.len();
+        self.labels.push(label.into());
+        self.out_adj.push(Vec::new());
+        self.in_adj.push(Vec::new());
+        id
+    }
+
+    /// Add a directed edge, returning its id.
+    pub fn add_edge(&mut self, from: NodeId, to: NodeId, weight: f64) -> EdgeId {
+        assert!(from < self.len() && to < self.len(), "edge endpoints must exist");
+        assert!(from != to, "self-loops are not allowed");
+        let id = self.edges.len();
+        self.edges.push(Edge { from, to, weight });
+        self.out_adj[from].push(id);
+        self.in_adj[to].push(id);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn label(&self, v: NodeId) -> &str {
+        &self.labels[v]
+    }
+
+    pub fn edge(&self, e: EdgeId) -> Edge {
+        self.edges[e]
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    pub fn set_weight(&mut self, e: EdgeId, weight: f64) {
+        self.edges[e].weight = weight;
+    }
+
+    /// Outgoing edge ids of `v`.
+    pub fn out_edges(&self, v: NodeId) -> &[EdgeId] {
+        &self.out_adj[v]
+    }
+
+    /// Incoming edge ids of `v`.
+    pub fn in_edges(&self, v: NodeId) -> &[EdgeId] {
+        &self.in_adj[v]
+    }
+
+    /// Child vertex ids of `v` (may contain duplicates if parallel edges).
+    pub fn children(&self, v: NodeId) -> Vec<NodeId> {
+        self.out_adj[v].iter().map(|&e| self.edges[e].to).collect()
+    }
+
+    /// Parent vertex ids of `v`.
+    pub fn parents(&self, v: NodeId) -> Vec<NodeId> {
+        self.in_adj[v].iter().map(|&e| self.edges[e].from).collect()
+    }
+
+    pub fn out_degree(&self, v: NodeId) -> usize {
+        self.out_adj[v].len()
+    }
+
+    pub fn in_degree(&self, v: NodeId) -> usize {
+        self.in_adj[v].len()
+    }
+
+    /// Kahn topological sort. Returns `None` if the graph has a cycle.
+    pub fn topo_order(&self) -> Option<Vec<NodeId>> {
+        let mut indeg: Vec<usize> = (0..self.len()).map(|v| self.in_degree(v)).collect();
+        let mut queue: Vec<NodeId> = (0..self.len()).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(self.len());
+        let mut head = 0;
+        while head < queue.len() {
+            let v = queue[head];
+            head += 1;
+            order.push(v);
+            for &e in &self.out_adj[v] {
+                let to = self.edges[e].to;
+                indeg[to] -= 1;
+                if indeg[to] == 0 {
+                    queue.push(to);
+                }
+            }
+        }
+        if order.len() == self.len() {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    /// True if the directed graph has no cycle.
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// Vertices reachable from `start` (including it) following out-edges.
+    pub fn descendants(&self, start: NodeId) -> Vec<bool> {
+        self.reach(start, false)
+    }
+
+    /// Vertices that can reach `start` (including it) following in-edges.
+    pub fn ancestors(&self, start: NodeId) -> Vec<bool> {
+        self.reach(start, true)
+    }
+
+    fn reach(&self, start: NodeId, reverse: bool) -> Vec<bool> {
+        let mut seen = vec![false; self.len()];
+        let mut stack = vec![start];
+        seen[start] = true;
+        while let Some(v) = stack.pop() {
+            let adj = if reverse { &self.in_adj[v] } else { &self.out_adj[v] };
+            for &e in adj {
+                let next = if reverse { self.edges[e].from } else { self.edges[e].to };
+                if !seen[next] {
+                    seen[next] = true;
+                    stack.push(next);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Graphviz DOT rendering (edge weights become labels).
+    pub fn to_dot(&self) -> String {
+        let mut s = String::from("digraph G {\n  rankdir=LR;\n");
+        for (v, label) in self.labels.iter().enumerate() {
+            s.push_str(&format!("  n{v} [label=\"{label}\"];\n"));
+        }
+        for e in &self.edges {
+            s.push_str(&format!(
+                "  n{} -> n{} [label=\"{:.3}\"];\n",
+                e.from, e.to, e.weight
+            ));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Dag {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3
+        let mut g = Dag::new();
+        for i in 0..4 {
+            g.add_node(format!("v{i}"));
+        }
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(0, 2, 2.0);
+        g.add_edge(1, 3, 3.0);
+        g.add_edge(2, 3, 4.0);
+        g
+    }
+
+    #[test]
+    fn adjacency_consistency() {
+        let g = diamond();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.children(0), vec![1, 2]);
+        assert_eq!(g.parents(3), vec![1, 2]);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.in_degree(3), 2);
+        assert_eq!(g.edge(g.out_edges(0)[1]).weight, 2.0);
+    }
+
+    #[test]
+    fn topo_order_valid() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.len()];
+            for (i, &v) in order.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        for e in g.edges() {
+            assert!(pos[e.from] < pos[e.to]);
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Dag::new();
+        let a = g.add_node("a");
+        let b = g.add_node("b");
+        g.add_edge(a, b, 1.0);
+        g.add_edge(b, a, 1.0);
+        assert!(!g.is_acyclic());
+        assert!(g.topo_order().is_none());
+    }
+
+    #[test]
+    fn reachability() {
+        let g = diamond();
+        let d = g.descendants(1);
+        assert_eq!(d, vec![false, true, false, true]);
+        let a = g.ancestors(3);
+        assert_eq!(a, vec![true, true, true, true]);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loops")]
+    fn rejects_self_loop() {
+        let mut g = Dag::new();
+        let a = g.add_node("a");
+        g.add_edge(a, a, 1.0);
+    }
+
+    #[test]
+    fn dot_export_mentions_all_edges() {
+        let g = diamond();
+        let dot = g.to_dot();
+        assert_eq!(dot.matches("->").count(), 4);
+    }
+}

@@ -1,0 +1,169 @@
+//! Lower-set (order-ideal) enumeration over a DAG.
+//!
+//! A feasible split-learning cut assigns a *lower set* of the layer DAG to
+//! the device (problem (12)'s precedence constraint: no device layer may
+//! depend on a server layer). The brute-force baseline enumerates exactly
+//! these sets, which is the paper's `O(2^|V| (|V|+|E|))` method.
+
+use super::dag::{Dag, NodeId};
+
+/// Enumerate all lower sets of `g`, invoking `f` with a membership mask for
+/// each (the empty set and the full set included). Order of enumeration is
+/// deterministic. Uses DFS over topological prefixes with pruning: a vertex
+/// may be added only once all its parents are in the set.
+pub fn enumerate_lower_sets<F: FnMut(&[bool])>(g: &Dag, mut f: F) {
+    let order = g.topo_order().expect("lower sets require an acyclic graph");
+    let n = g.len();
+    let mut in_set = vec![false; n];
+    // missing_parents[v] = number of parents of v not yet in the set.
+    let mut missing: Vec<usize> = (0..n).map(|v| g.in_degree(v)).collect();
+
+    // Recursive enumeration over the topological order: at position i we
+    // decide membership for order[i]; including it requires missing == 0;
+    // excluding it forbids including any of its descendants, which is
+    // enforced lazily via the missing-parent counters (a descendant can't
+    // reach missing==0 if an ancestor is excluded... except through other
+    // parents — so we must also mark exclusion explicitly).
+    fn rec<F: FnMut(&[bool])>(
+        g: &Dag,
+        order: &[NodeId],
+        i: usize,
+        in_set: &mut Vec<bool>,
+        missing: &mut Vec<usize>,
+        f: &mut F,
+    ) {
+        if i == order.len() {
+            f(in_set);
+            return;
+        }
+        let v = order[i];
+        // Branch 1: exclude v. All descendants with v as a parent keep
+        // missing > 0 through the counter (we never decrement).
+        rec(g, order, i + 1, in_set, missing, f);
+        // Branch 2: include v, if permitted.
+        if missing[v] == 0 {
+            in_set[v] = true;
+            for &e in g.out_edges(v) {
+                missing[g.edge(e).to] -= 1;
+            }
+            rec(g, order, i + 1, in_set, missing, f);
+            for &e in g.out_edges(v) {
+                missing[g.edge(e).to] += 1;
+            }
+            in_set[v] = false;
+        }
+    }
+
+    rec(g, &order, 0, &mut in_set, &mut missing, &mut f);
+}
+
+/// Count lower sets without materializing them.
+pub fn count_lower_sets(g: &Dag) -> u64 {
+    let mut count = 0u64;
+    enumerate_lower_sets(g, |_| count += 1);
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_all, random_layer_dag};
+
+    fn chain(n: usize) -> Dag {
+        let mut g = Dag::new();
+        for i in 0..n {
+            g.add_node(format!("v{i}"));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i, 1.0);
+        }
+        g
+    }
+
+    #[test]
+    fn chain_has_n_plus_one_lower_sets() {
+        // Lower sets of a chain are prefixes: n+1 of them.
+        for n in 1..8 {
+            assert_eq!(count_lower_sets(&chain(n)), (n + 1) as u64);
+        }
+    }
+
+    #[test]
+    fn antichain_has_all_subsets() {
+        let mut g = Dag::new();
+        for i in 0..5 {
+            g.add_node(format!("v{i}"));
+        }
+        assert_eq!(count_lower_sets(&g), 32);
+    }
+
+    #[test]
+    fn diamond_count() {
+        // 0 -> {1,2} -> 3: lower sets are {}, {0}, {0,1}, {0,2}, {0,1,2},
+        // {0,1,2,3} = 6.
+        let mut g = Dag::new();
+        for i in 0..4 {
+            g.add_node(format!("v{i}"));
+        }
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(0, 2, 1.0);
+        g.add_edge(1, 3, 1.0);
+        g.add_edge(2, 3, 1.0);
+        assert_eq!(count_lower_sets(&g), 6);
+    }
+
+    #[test]
+    fn every_enumerated_set_is_a_lower_set() {
+        for_all("lower-set-validity", 40, |rng| {
+            let n = 2 + rng.index(9);
+            let edges = random_layer_dag(rng, n, 0.25);
+            let mut g = Dag::new();
+            for i in 0..n {
+                g.add_node(format!("v{i}"));
+            }
+            for (u, v) in edges {
+                g.add_edge(u, v, 1.0);
+            }
+            let mut seen = std::collections::HashSet::new();
+            enumerate_lower_sets(&g, |mask| {
+                // Validity: every parent of a member is a member.
+                for v in 0..n {
+                    if mask[v] {
+                        for p in g.parents(v) {
+                            assert!(mask[p], "vertex {v} in set but parent {p} missing");
+                        }
+                    }
+                }
+                // Uniqueness.
+                let key: Vec<bool> = mask.to_vec();
+                assert!(seen.insert(key), "duplicate lower set");
+            });
+        });
+    }
+
+    #[test]
+    fn enumeration_matches_naive_subset_filter() {
+        for_all("lower-set-completeness", 24, |rng| {
+            let n = 2 + rng.index(7); // keep 2^n small
+            let edges = random_layer_dag(rng, n, 0.3);
+            let mut g = Dag::new();
+            for i in 0..n {
+                g.add_node(format!("v{i}"));
+            }
+            for (u, v) in &edges {
+                g.add_edge(*u, *v, 1.0);
+            }
+            // Naive: filter all 2^n subsets.
+            let mut naive = 0u64;
+            for mask in 0u32..(1 << n) {
+                let ok = edges
+                    .iter()
+                    .all(|&(u, v)| (mask >> v) & 1 == 0 || (mask >> u) & 1 == 1);
+                if ok {
+                    naive += 1;
+                }
+            }
+            assert_eq!(count_lower_sets(&g), naive);
+        });
+    }
+}

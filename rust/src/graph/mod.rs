@@ -1,0 +1,12 @@
+//! Generic directed-graph substrate used by the partitioning algorithms.
+//!
+//! [`Dag`] is an adjacency-list DAG with O(1) edge-weight access, topological
+//! sorting, ancestor/descendant closures, and lower-set (order-ideal)
+//! enumeration — the machinery the paper's Alg. 1-4 and the brute-force
+//! baseline (problem (12)) are built on.
+
+pub mod dag;
+pub mod lower_sets;
+
+pub use dag::{Dag, EdgeId, NodeId};
+pub use lower_sets::{count_lower_sets, enumerate_lower_sets};

@@ -1,0 +1,33 @@
+//! # fastsplit
+//!
+//! Production-grade reproduction of *"Fast AI Model Partition for Split
+//! Learning over Edge Networks"* (Li, Wu, Wu, Shen, 2025).
+//!
+//! The crate implements the paper's full system as a three-layer stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: representing an
+//!   arbitrary AI model as a DAG with delay-encoding edge weights
+//!   ([`partition`]), solving the optimal split-learning cut as a minimum
+//!   s-t cut via maximum flow ([`maxflow`]), the low-complexity block-wise
+//!   variant ([`partition::blockwise`]), an edge-network simulator
+//!   ([`net`]), the SL training-delay simulator ([`sim`]), and a leader
+//!   coordinator that re-partitions per epoch and drives real split
+//!   training through PJRT ([`coordinator`], [`runtime`]).
+//! * **L2 (python/compile/model.py)** — a split-trainable JAX model lowered
+//!   once to HLO text artifacts per cut point.
+//! * **L1 (python/compile/kernels/)** — Pallas matmul kernel used by L2.
+//!
+//! See `DESIGN.md` for the experiment index mapping every paper figure and
+//! table to a harness in [`experiments`].
+
+pub mod util;
+pub mod graph;
+pub mod maxflow;
+pub mod models;
+pub mod profiles;
+pub mod partition;
+pub mod net;
+pub mod sim;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;

@@ -1,0 +1,245 @@
+//! `fastsplit` — CLI for the split-learning partitioning framework.
+//!
+//! Subcommands:
+//!   info       <--model NAME>            per-layer model inventory
+//!   partition  <--model --up --down ...> one partition decision
+//!   simulate   <--model --method ...>    SL delay simulation over epochs
+//!   experiment <--id fig7a|...|all>      regenerate a paper table/figure
+//!   train      <--epochs ...>            real split training via PJRT
+//!   models                               list zoo models
+
+use fastsplit::coordinator::{Coordinator, CoordinatorConfig};
+use fastsplit::models;
+use fastsplit::net::{Band, ChannelCondition, NetConfig};
+use fastsplit::partition::baselines::partition_by_method;
+use fastsplit::partition::{Link, Problem};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use fastsplit::sim::{SimConfig, Trainer};
+use fastsplit::util::cli::Args;
+use fastsplit::util::{fmt_bytes, fmt_secs};
+
+const USAGE: &str = "\
+fastsplit — fast AI model partitioning for split learning (paper reproduction)
+
+USAGE:
+  fastsplit models
+  fastsplit info --model resnet18
+  fastsplit partition --model googlenet --method proposed --up-mbps 20 --down-mbps 80 \\
+                      --device jetson-tx2 [--n-loc 10] [--batch 32]
+  fastsplit simulate --model googlenet --method proposed --band mmwave \\
+                      --condition normal [--epochs 50] [--devices 20] [--rayleigh] [--seed 7]
+  fastsplit experiment --id fig7a|fig7b|fig8|fig9a|fig9b|tab1|fig11|fig12|fig13|tab2|fig14|fig15|fig16|ablA|ablB|all [--quick]
+  fastsplit train [--epochs 10] [--n-loc 4] [--lr 0.05] [--artifacts artifacts] [--devices 4]
+";
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv, &["quick", "rayleigh", "verbose"]);
+    let result = match cmd.as_str() {
+        "models" => cmd_models(),
+        "info" => cmd_info(&args),
+        "partition" => cmd_partition(&args),
+        "simulate" => cmd_simulate(&args),
+        "experiment" => cmd_experiment(&args),
+        "train" => cmd_train(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_models() -> anyhow::Result<()> {
+    println!("available models:");
+    for name in models::MODEL_NAMES {
+        let m = models::by_name(name).unwrap();
+        println!(
+            "  {name:<16} {:>4} layers  {:>8.2} GFLOPs  {:>7.1}M params  mean act {}",
+            m.len(),
+            m.total_flops() as f64 / 1e9,
+            m.total_params() as f64 / 1e6,
+            fmt_bytes(m.mean_act_bytes()),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("model", "resnet18");
+    let m = models::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+    println!("{}", m.describe());
+    println!(
+        "total: {} layers, {:.2} GFLOPs, {:.1}M params, linear={}, declared blocks={}",
+        m.len(),
+        m.total_flops() as f64 / 1e9,
+        m.total_params() as f64 / 1e6,
+        m.is_linear(),
+        m.declared_blocks().len(),
+    );
+    Ok(())
+}
+
+fn device_by_name(name: &str) -> anyhow::Result<DeviceProfile> {
+    Ok(match name {
+        "jetson-tx1" => DeviceProfile::jetson_tx1(),
+        "jetson-tx2" => DeviceProfile::jetson_tx2(),
+        "jetson-orin-nano" => DeviceProfile::jetson_orin_nano(),
+        "jetson-agx-orin" => DeviceProfile::jetson_agx_orin(),
+        "rtx-a6000" => DeviceProfile::rtx_a6000(),
+        other => anyhow::bail!("unknown device '{other}'"),
+    })
+}
+
+fn cmd_partition(args: &Args) -> anyhow::Result<()> {
+    let model_name = args.get_or("model", "googlenet");
+    let model = models::by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
+    let device = device_by_name(args.get_or("device", "jetson-tx2"))?;
+    let cfg = TrainCfg {
+        batch: args.get_usize("batch", 32),
+        n_loc: args.get_usize("n-loc", 10) as u32,
+        bwd_ratio: 2.0,
+    };
+    let costs = CostGraph::build(&model, &device, &DeviceProfile::rtx_a6000(), &cfg);
+    let link = Link {
+        up_bps: args.get_f64("up-mbps", 20.0) * 1e6 / 8.0,
+        down_bps: args.get_f64("down-mbps", 80.0) * 1e6 / 8.0,
+    };
+    let p = Problem::new(&costs, link);
+    let method = args.get_or("method", "proposed");
+    let t0 = std::time::Instant::now();
+    let part = partition_by_method(method, &p, link);
+    let took = t0.elapsed().as_secs_f64();
+    println!(
+        "model={model_name} method={method} device={} decision={}",
+        device.name,
+        fmt_secs(took)
+    );
+    println!("  {}", part.describe());
+    let b = fastsplit::sim::DelayBreakdown::of(&p, &part.device_set);
+    println!(
+        "  breakdown: device {} | server {} | activations {} | model-xfer {}",
+        fmt_secs(b.device_compute),
+        fmt_secs(b.server_compute),
+        fmt_secs(b.activation_transfer),
+        fmt_secs(b.model_transfer),
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let band = Band::by_name(args.get_or("band", "mmwave"))
+        .ok_or_else(|| anyhow::anyhow!("unknown band"))?;
+    let condition = match args.get_or("condition", "normal") {
+        "good" => ChannelCondition::Good,
+        "normal" => ChannelCondition::Normal,
+        "poor" => ChannelCondition::Poor,
+        other => anyhow::bail!("unknown condition '{other}'"),
+    };
+    let cfg = SimConfig {
+        model: args.get_or("model", "googlenet").to_string(),
+        net: NetConfig {
+            band,
+            condition,
+            rayleigh: args.flag("rayleigh"),
+            num_devices: args.get_usize("devices", 20),
+            ..NetConfig::default()
+        },
+        method: args.get_or("method", "proposed").to_string(),
+        seed: args.get_u64("seed", 7),
+        ..SimConfig::default()
+    };
+    let epochs = args.get_usize("epochs", 50);
+    let mut trainer = Trainer::new(cfg);
+    let res = trainer.run_epochs(epochs);
+    println!(
+        "{} epochs: total {} | mean/epoch {} | mean decision {}",
+        epochs,
+        fmt_secs(res.total_delay),
+        fmt_secs(res.mean_epoch_delay),
+        fmt_secs(res.mean_decision_time),
+    );
+    if args.flag("verbose") {
+        for r in &res.records {
+            println!(
+                "  epoch {:>4} dev {:>2} ({:<16}) cut-layers {:>3} delay {}",
+                r.epoch,
+                r.device,
+                r.device_tier,
+                r.device_layers,
+                fmt_secs(r.delay)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let id = args.get_or("id", "all");
+    let quick = args.flag("quick");
+    let ids: Vec<&str> = if id == "all" {
+        fastsplit::experiments::ALL_IDS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let out = fastsplit::experiments::run(id, quick)
+            .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}'"))?;
+        println!("=== {id} ===\n{out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = CoordinatorConfig {
+        artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+        net: NetConfig {
+            num_devices: args.get_usize("devices", 4),
+            ..NetConfig::default()
+        },
+        train: TrainCfg {
+            batch: 32,
+            n_loc: args.get_usize("n-loc", 4) as u32,
+            bwd_ratio: 2.0,
+        },
+        lr: args.get_f64("lr", 0.05) as f32,
+        epochs: args.get_usize("epochs", 10),
+        seed: args.get_u64("seed", 7),
+    };
+    let mut coord = Coordinator::new(cfg.clone())?;
+    println!(
+        "split training: {} epochs x {} local iterations (real numerics via PJRT)",
+        cfg.epochs, cfg.train.n_loc
+    );
+    for _ in 0..cfg.epochs {
+        let r = coord.run_epoch()?;
+        println!(
+            "epoch {:>3} dev {:>2} ({:<16}) cut {} loss {:.4} acc {:>5.1}% sim-delay {} wire {} decision {} wall {}",
+            r.epoch,
+            r.device,
+            r.device_tier,
+            r.cut,
+            r.mean_loss,
+            r.accuracy * 100.0,
+            fmt_secs(r.sim_delay),
+            fmt_bytes(r.wire_bytes as f64),
+            fmt_secs(r.decision_time),
+            fmt_secs(r.wall_time),
+        );
+    }
+    println!("total simulated time: {}", fmt_secs(coord.sim_time()));
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! Dinic's maximum-flow algorithm — the paper's solver choice (Sec. V-A).
+//!
+//! Level graph by BFS, blocking flow by DFS with current-arc pointers.
+//! `O(V^2 E)` in general; much faster on the shallow, sparse partition DAGs
+//! produced by Alg. 1/2 (the paper reports millisecond runtimes, Table I).
+
+use super::network::{FlowNetwork, MinCut, EPS};
+
+/// Reusable scratch buffers so repeated solves don't reallocate — the
+/// coordinator re-partitions every epoch (Sec. III-A) on the hot path.
+#[derive(Default)]
+pub struct DinicScratch {
+    level: Vec<i32>,
+    iter: Vec<usize>,
+    queue: Vec<usize>,
+}
+
+/// Run Dinic's algorithm; returns the max-flow value and the min-cut side.
+pub fn dinic(net: &mut FlowNetwork, s: usize, t: usize) -> MinCut {
+    let mut scratch = DinicScratch::default();
+    dinic_with(net, s, t, &mut scratch)
+}
+
+/// Dinic with caller-provided scratch buffers (hot-path variant).
+pub fn dinic_with(
+    net: &mut FlowNetwork,
+    s: usize,
+    t: usize,
+    scratch: &mut DinicScratch,
+) -> MinCut {
+    assert!(s != t, "source and sink must differ");
+    let n = net.len();
+    scratch.level.resize(n, -1);
+    scratch.iter.resize(n, 0);
+    let mut value = 0.0f64;
+
+    loop {
+        // BFS: build level graph.
+        let level = &mut scratch.level;
+        for l in level.iter_mut() {
+            *l = -1;
+        }
+        level[s] = 0;
+        scratch.queue.clear();
+        scratch.queue.push(s);
+        let mut head = 0;
+        while head < scratch.queue.len() {
+            let v = scratch.queue[head];
+            head += 1;
+            for &arc in net.arcs(v) {
+                let arc = arc as usize;
+                let to = net.arc_to(arc);
+                if level[to] < 0 && net.arc_cap(arc) > EPS {
+                    level[to] = level[v] + 1;
+                    scratch.queue.push(to);
+                }
+            }
+        }
+        if level[t] < 0 {
+            break; // no augmenting path remains
+        }
+
+        // DFS blocking flow with current-arc optimization.
+        for it in scratch.iter.iter_mut() {
+            *it = 0;
+        }
+        loop {
+            let pushed = dfs(net, s, t, f64::INFINITY, &mut scratch.iter, &scratch.level);
+            if pushed <= EPS {
+                break;
+            }
+            value += pushed;
+        }
+    }
+
+    let source_side = net.residual_source_side(s);
+    debug_assert!(!source_side[t], "sink on source side after max-flow");
+    MinCut { value, source_side }
+}
+
+fn dfs(
+    net: &mut FlowNetwork,
+    v: usize,
+    t: usize,
+    limit: f64,
+    iter: &mut [usize],
+    level: &[i32],
+) -> f64 {
+    if v == t {
+        return limit;
+    }
+    while iter[v] < net.arcs(v).len() {
+        let arc = net.arcs(v)[iter[v]] as usize;
+        let to = net.arc_to(arc);
+        let cap = net.arc_cap(arc);
+        if cap > EPS && level[to] == level[v] + 1 {
+            let pushed = dfs(net, to, t, limit.min(cap), iter, level);
+            if pushed > EPS {
+                net.push_on(arc, pushed);
+                return pushed;
+            }
+        }
+        iter[v] += 1;
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_edge() {
+        let mut net = FlowNetwork::new(2);
+        net.add_edge(0, 1, 4.5);
+        let cut = dinic(&mut net, 0, 1);
+        assert!((cut.value - 4.5).abs() < 1e-12);
+        assert_eq!(cut.source_side, vec![true, false]);
+    }
+
+    #[test]
+    fn classic_textbook_network() {
+        // CLRS-style 6-vertex network, max flow 23.
+        let mut net = FlowNetwork::new(6);
+        net.add_edge(0, 1, 16.0);
+        net.add_edge(0, 2, 13.0);
+        net.add_edge(1, 2, 10.0);
+        net.add_edge(2, 1, 4.0);
+        net.add_edge(1, 3, 12.0);
+        net.add_edge(3, 2, 9.0);
+        net.add_edge(2, 4, 14.0);
+        net.add_edge(4, 3, 7.0);
+        net.add_edge(3, 5, 20.0);
+        net.add_edge(4, 5, 4.0);
+        let cut = dinic(&mut net, 0, 5);
+        assert!((cut.value - 23.0).abs() < 1e-9);
+        // Min cut value recomputed from the partition must match.
+        assert!((net.cut_value(&cut.source_side) - 23.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disconnected_sink_gives_zero() {
+        let mut net = FlowNetwork::new(3);
+        net.add_edge(0, 1, 5.0);
+        let cut = dinic(&mut net, 0, 2);
+        assert_eq!(cut.value, 0.0);
+        assert!(!cut.source_side[2]);
+    }
+
+    #[test]
+    fn infinite_edges_never_cut() {
+        // s -> a (inf), a -> t (1), s -> t (2)
+        let mut net = FlowNetwork::new(3);
+        net.add_edge(0, 1, f64::INFINITY);
+        net.add_edge(1, 2, 1.0);
+        net.add_edge(0, 2, 2.0);
+        let cut = dinic(&mut net, 0, 2);
+        assert!((cut.value - 3.0).abs() < 1e-12);
+        assert!(cut.source_side[1], "a must stay on source side");
+    }
+
+    #[test]
+    fn parallel_edges_accumulate() {
+        let mut net = FlowNetwork::new(2);
+        net.add_edge(0, 1, 1.0);
+        net.add_edge(0, 1, 2.5);
+        let cut = dinic(&mut net, 0, 1);
+        assert!((cut.value - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_allows_reuse() {
+        let mut net = FlowNetwork::new(2);
+        net.add_edge(0, 1, 2.0);
+        let a = dinic(&mut net, 0, 1).value;
+        net.reset();
+        let b = dinic(&mut net, 0, 1).value;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,16 @@
+//! Maximum-flow / minimum s-t cut solvers.
+//!
+//! The paper (Sec. V-A, VI-D) uses Dinic's algorithm; [`dinic`] is the
+//! production solver and [`push_relabel`] (FIFO push-relabel with the gap
+//! heuristic) is an independent implementation used for cross-checking and
+//! the solver ablation bench. Both operate on [`FlowNetwork`] with `f64`
+//! capacities (delays in seconds) and `f64::INFINITY` support for the
+//! precedence-enforcing edges.
+
+pub mod network;
+pub mod dinic;
+pub mod push_relabel;
+
+pub use dinic::dinic;
+pub use network::{FlowNetwork, MinCut};
+pub use push_relabel::push_relabel;

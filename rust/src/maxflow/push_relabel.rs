@@ -1,0 +1,218 @@
+//! FIFO push-relabel max-flow with the gap heuristic.
+//!
+//! Independent of [`super::dinic`]; used as a cross-checking oracle in
+//! property tests and in the solver ablation (`experiments::ablations`,
+//! DESIGN.md ablB). `O(V^3)` worst case.
+
+use super::network::{FlowNetwork, MinCut, EPS};
+use std::collections::VecDeque;
+
+/// Run push-relabel; returns the max-flow value and min-cut side.
+pub fn push_relabel(net: &mut FlowNetwork, s: usize, t: usize) -> MinCut {
+    assert!(s != t);
+    let n = net.len();
+    let mut height = vec![0usize; n];
+    let mut excess = vec![0.0f64; n];
+    let mut count = vec![0usize; 2 * n + 1]; // vertices per height (gap heuristic)
+    let mut active: VecDeque<usize> = VecDeque::new();
+    let mut in_queue = vec![false; n];
+
+    height[s] = n;
+    count[0] = n - 1;
+    count[n] = 1;
+
+    // Saturate all source arcs.
+    let source_arcs: Vec<usize> = net.arcs(s).iter().map(|&a| a as usize).collect();
+    for arc in source_arcs {
+        let cap = net.arc_cap(arc);
+        if cap > EPS {
+            let to = net.arc_to(arc);
+            let amount = if cap.is_infinite() {
+                // Push a finite surrogate: total finite capacity bound.
+                total_finite_capacity(net)
+            } else {
+                cap
+            };
+            net.push_on(arc, amount);
+            excess[to] += amount;
+            excess[s] -= amount;
+            if to != t && to != s && !in_queue[to] {
+                active.push_back(to);
+                in_queue[to] = true;
+            }
+        }
+    }
+
+    while let Some(v) = active.pop_front() {
+        in_queue[v] = false;
+        discharge(
+            net,
+            v,
+            t,
+            s,
+            &mut height,
+            &mut excess,
+            &mut count,
+            &mut active,
+            &mut in_queue,
+        );
+    }
+
+    let value = excess[t];
+    let source_side = net.residual_source_side(s);
+    MinCut { value, source_side }
+}
+
+fn total_finite_capacity(net: &FlowNetwork) -> f64 {
+    let mut sum = 1.0;
+    for k in 0..net.num_edges() {
+        let c = net.arc_cap(2 * k) + net.arc_cap(2 * k + 1);
+        if c.is_finite() {
+            sum += c;
+        }
+    }
+    sum
+}
+
+#[allow(clippy::too_many_arguments)]
+fn discharge(
+    net: &mut FlowNetwork,
+    v: usize,
+    t: usize,
+    s: usize,
+    height: &mut [usize],
+    excess: &mut [f64],
+    count: &mut [usize],
+    active: &mut VecDeque<usize>,
+    in_queue: &mut [bool],
+) {
+    let n = net.len();
+    while excess[v] > EPS {
+        let arcs: Vec<usize> = net.arcs(v).iter().map(|&a| a as usize).collect();
+        let mut min_height = usize::MAX;
+        let mut pushed_any = false;
+        for arc in arcs {
+            let cap = net.arc_cap(arc);
+            if cap <= EPS {
+                continue;
+            }
+            let to = net.arc_to(arc);
+            if height[v] == height[to] + 1 {
+                // Push.
+                let amount = excess[v].min(cap);
+                net.push_on(arc, amount);
+                excess[v] -= amount;
+                excess[to] += amount;
+                if to != s && to != t && !in_queue[to] {
+                    active.push_back(to);
+                    in_queue[to] = true;
+                }
+                pushed_any = true;
+                if excess[v] <= EPS {
+                    break;
+                }
+            } else {
+                min_height = min_height.min(height[to]);
+            }
+        }
+        if excess[v] > EPS && !pushed_any {
+            // Relabel (with gap heuristic).
+            if min_height == usize::MAX {
+                break; // no residual arcs at all
+            }
+            let old = height[v];
+            count[old] -= 1;
+            if count[old] == 0 && old < n {
+                // Gap: lift all vertices above the gap beyond n.
+                for h in height.iter_mut() {
+                    if *h > old && *h < n {
+                        count[*h] -= 1;
+                        *h = n + 1;
+                        count[n + 1] += 1;
+                    }
+                }
+            }
+            height[v] = (min_height + 1).min(2 * n);
+            count[height[v]] += 1;
+            if height[v] >= 2 * n {
+                break; // unreachable from sink; excess flows back eventually
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxflow::dinic;
+    use crate::util::prop::for_all;
+
+    #[test]
+    fn matches_dinic_on_textbook_network() {
+        let build = || {
+            let mut net = FlowNetwork::new(6);
+            net.add_edge(0, 1, 16.0);
+            net.add_edge(0, 2, 13.0);
+            net.add_edge(1, 2, 10.0);
+            net.add_edge(2, 1, 4.0);
+            net.add_edge(1, 3, 12.0);
+            net.add_edge(3, 2, 9.0);
+            net.add_edge(2, 4, 14.0);
+            net.add_edge(4, 3, 7.0);
+            net.add_edge(3, 5, 20.0);
+            net.add_edge(4, 5, 4.0);
+            net
+        };
+        let d = dinic(&mut build(), 0, 5).value;
+        let p = push_relabel(&mut build(), 0, 5).value;
+        assert!((d - p).abs() < 1e-9, "dinic={d} pr={p}");
+        assert!((p - 23.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn agrees_with_dinic_on_random_networks() {
+        for_all("pr-vs-dinic", 60, |rng| {
+            let n = 2 + rng.index(14);
+            let mut edges = Vec::new();
+            for u in 0..n {
+                for v in 0..n {
+                    if u != v && rng.chance(0.3) {
+                        edges.push((u, v, rng.range(0.0, 10.0)));
+                    }
+                }
+            }
+            let build = |edges: &[(usize, usize, f64)]| {
+                let mut net = FlowNetwork::new(n);
+                for &(u, v, c) in edges {
+                    net.add_edge(u, v, c);
+                }
+                net
+            };
+            let s = 0;
+            let t = n - 1;
+            let mut net_d = build(&edges);
+            let mut net_p = build(&edges);
+            let d = dinic(&mut net_d, s, t);
+            let p = push_relabel(&mut net_p, s, t);
+            assert!(
+                (d.value - p.value).abs() < 1e-6 * (1.0 + d.value.abs()),
+                "dinic={} push_relabel={}",
+                d.value,
+                p.value
+            );
+            // Both extracted cuts must be valid cuts of value == flow.
+            assert!((net_d.cut_value(&d.source_side) - d.value).abs() < 1e-6 * (1.0 + d.value));
+            assert!((net_p.cut_value(&p.source_side) - p.value).abs() < 1e-6 * (1.0 + p.value));
+        });
+    }
+
+    #[test]
+    fn handles_infinite_source_arc() {
+        let mut net = FlowNetwork::new(3);
+        net.add_edge(0, 1, f64::INFINITY);
+        net.add_edge(1, 2, 2.0);
+        let cut = push_relabel(&mut net, 0, 2);
+        assert!((cut.value - 2.0).abs() < 1e-9);
+        assert!(cut.source_side[1]);
+    }
+}

@@ -1,0 +1,79 @@
+//! AlexNet (Krizhevsky et al., 2012) — the paper's second linear example.
+
+use super::layer::{LayerKind, Shape};
+use super::model::ModelGraph;
+use crate::graph::NodeId;
+
+fn conv(
+    m: &mut ModelGraph,
+    from: NodeId,
+    out_ch: usize,
+    kernel: usize,
+    stride: usize,
+    padding: usize,
+) -> NodeId {
+    let c = m.add(
+        LayerKind::Conv2d {
+            out_ch,
+            kernel,
+            stride,
+            padding,
+        },
+        &[from],
+    );
+    m.add(LayerKind::Relu, &[c])
+}
+
+/// AlexNet over 3x224x224 (ImageNet sizing, as in the original).
+pub fn alexnet() -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("alexnet", Shape::chw(3, 224, 224));
+    let pool = |m: &mut ModelGraph, from| {
+        m.add(
+            LayerKind::MaxPool {
+                kernel: 3,
+                stride: 2,
+                padding: 0,
+            },
+            &[from],
+        )
+    };
+    let c1 = conv(&mut m, input, 64, 11, 4, 2);
+    let p1 = pool(&mut m, c1);
+    let c2 = conv(&mut m, p1, 192, 5, 1, 2);
+    let p2 = pool(&mut m, c2);
+    let c3 = conv(&mut m, p2, 384, 3, 1, 1);
+    let c4 = conv(&mut m, c3, 256, 3, 1, 1);
+    let c5 = conv(&mut m, c4, 256, 3, 1, 1);
+    let p5 = pool(&mut m, c5);
+    let f = m.add(LayerKind::Flatten, &[p5]);
+    let d1 = m.add(LayerKind::Dense { out_features: 4096 }, &[f]);
+    let r1 = m.add(LayerKind::Relu, &[d1]);
+    let dr1 = m.add(LayerKind::Dropout, &[r1]);
+    let d2 = m.add(LayerKind::Dense { out_features: 4096 }, &[dr1]);
+    let r2 = m.add(LayerKind::Relu, &[d2]);
+    let dr2 = m.add(LayerKind::Dropout, &[r2]);
+    let d3 = m.add(LayerKind::Dense { out_features: 1000 }, &[dr2]);
+    m.add(LayerKind::Softmax, &[d3]);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_with_torchvision_sizing() {
+        let m = alexnet();
+        assert!(m.is_linear());
+        // Feature extractor output: 256 x 6 x 6 -> flatten 9216.
+        let flat = m
+            .layers()
+            .iter()
+            .position(|l| matches!(l.kind, LayerKind::Flatten))
+            .unwrap();
+        assert_eq!(m.layer(flat).out_shape, Shape::features(9216));
+        // ~61M parameters.
+        let p = m.total_params() as f64 / 1e6;
+        assert!((60.0..63.0).contains(&p), "params={p}M");
+    }
+}

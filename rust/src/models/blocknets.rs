@@ -1,0 +1,163 @@
+//! The three single-block networks of Fig. 6: a small stem, one non-linear
+//! block (residual / inception / dense), and a classifier tail. These are
+//! the workloads for Fig. 7 and Fig. 9(a), small enough that the
+//! brute-force baseline remains tractable.
+
+use super::layer::{LayerKind, Shape};
+use super::model::ModelGraph;
+use crate::graph::NodeId;
+
+fn conv(out_ch: usize, kernel: usize, stride: usize, padding: usize) -> LayerKind {
+    LayerKind::Conv2d {
+        out_ch,
+        kernel,
+        stride,
+        padding,
+    }
+}
+
+fn tail(m: &mut ModelGraph, from: NodeId, classes: usize) -> NodeId {
+    let gap = m.add(LayerKind::GlobalAvgPool, &[from]);
+    let fc = m.add(LayerKind::Dense { out_features: classes }, &[gap]);
+    m.add(LayerKind::Softmax, &[fc])
+}
+
+/// Fig. 6(a): network with one residual block (two 3x3 convs + skip add).
+pub fn residual_blocknet() -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("block-residual", Shape::chw(3, 32, 32));
+    let stem = m.add(conv(16, 3, 1, 1), &[input]);
+    let stem_relu = m.add(LayerKind::Relu, &[stem]);
+
+    // Residual block: branch from stem_relu.
+    let c1 = m.add(conv(16, 3, 1, 1), &[stem_relu]);
+    let r1 = m.add(LayerKind::Relu, &[c1]);
+    let c2 = m.add(conv(16, 3, 1, 1), &[r1]);
+    let add = m.add(LayerKind::Add, &[c2, stem_relu]);
+    let out = m.add(LayerKind::Relu, &[add]);
+    m.declare_block(vec![c1, r1, c2, add]);
+
+    tail(&mut m, out, 10);
+    m
+}
+
+/// Fig. 6(b): network with one inception block (1x1 / 3x3 / 5x5 / pool-proj
+/// branches concatenated).
+pub fn inception_blocknet() -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("block-inception", Shape::chw(3, 32, 32));
+    let stem = m.add(conv(32, 3, 1, 1), &[input]);
+    let stem_relu = m.add(LayerKind::Relu, &[stem]);
+
+    // Branch 1: 1x1.
+    let b1 = m.add(conv(16, 1, 1, 0), &[stem_relu]);
+    // Branch 2: 1x1 -> 3x3.
+    let b2a = m.add(conv(8, 1, 1, 0), &[stem_relu]);
+    let b2b = m.add(conv(16, 3, 1, 1), &[b2a]);
+    // Branch 3: 1x1 -> 5x5.
+    let b3a = m.add(conv(4, 1, 1, 0), &[stem_relu]);
+    let b3b = m.add(conv(8, 5, 1, 2), &[b3a]);
+    // Branch 4: 3x3 maxpool -> 1x1.
+    let b4a = m.add(
+        LayerKind::MaxPool {
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+        },
+        &[stem_relu],
+    );
+    let b4b = m.add(conv(8, 1, 1, 0), &[b4a]);
+    let cat = m.add(LayerKind::Concat, &[b1, b2b, b3b, b4b]);
+    let out = m.add(LayerKind::Relu, &[cat]);
+    m.declare_block(vec![b1, b2a, b2b, b3a, b3b, b4a, b4b, cat]);
+
+    tail(&mut m, out, 10);
+    m
+}
+
+/// Fig. 6(c): network with one dense block (each layer consumes the concat
+/// of all previous outputs).
+pub fn dense_blocknet() -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("block-dense", Shape::chw(3, 32, 32));
+    let stem = m.add(conv(16, 3, 1, 1), &[input]);
+    let stem_relu = m.add(LayerKind::Relu, &[stem]);
+
+    // Dense connectivity over 3 conv layers with growth 8.
+    let mut feeds = vec![stem_relu];
+    let mut members = Vec::new();
+    for _ in 0..3 {
+        let cat_in = if feeds.len() == 1 {
+            feeds[0]
+        } else {
+            let c = m.add(LayerKind::Concat, &feeds);
+            members.push(c);
+            c
+        };
+        let conv_l = m.add(conv(8, 3, 1, 1), &[cat_in]);
+        let relu_l = m.add(LayerKind::Relu, &[conv_l]);
+        members.push(conv_l);
+        members.push(relu_l);
+        feeds.push(relu_l);
+    }
+    let final_cat = m.add(LayerKind::Concat, &feeds);
+    members.push(final_cat);
+    m.declare_block(members);
+
+    tail(&mut m, final_cat, 10);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_block_shapes() {
+        let m = residual_blocknet();
+        assert!(m.dag().is_acyclic());
+        assert!(!m.is_linear());
+        // Add output shape equals stem shape.
+        let add = m
+            .layers()
+            .iter()
+            .position(|l| matches!(l.kind, LayerKind::Add))
+            .unwrap();
+        assert_eq!(m.layer(add).out_shape, Shape::chw(16, 32, 32));
+        assert_eq!(m.outputs().len(), 1);
+    }
+
+    #[test]
+    fn inception_concat_channels() {
+        let m = inception_blocknet();
+        let cat = m
+            .layers()
+            .iter()
+            .position(|l| matches!(l.kind, LayerKind::Concat))
+            .unwrap();
+        // 16 + 16 + 8 + 8 channels.
+        assert_eq!(m.layer(cat).out_shape, Shape::chw(48, 32, 32));
+    }
+
+    #[test]
+    fn dense_block_growth() {
+        let m = dense_blocknet();
+        let final_cat = m
+            .layers()
+            .iter()
+            .rposition(|l| matches!(l.kind, LayerKind::Concat))
+            .unwrap();
+        // 16 stem + 3 * growth 8 = 40 channels.
+        assert_eq!(m.layer(final_cat).out_shape, Shape::chw(40, 32, 32));
+    }
+
+    #[test]
+    fn blocknets_are_brute_force_sized() {
+        for name in super::super::BLOCK_NETS {
+            let m = super::super::by_name(name).unwrap();
+            assert!(
+                m.len() <= 20,
+                "{name} has {} layers; brute force needs small nets",
+                m.len()
+            );
+            assert_eq!(m.declared_blocks().len(), 1);
+        }
+    }
+}

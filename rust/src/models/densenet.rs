@@ -1,0 +1,111 @@
+//! DenseNet-121 (Huang et al., 2017): 58 repeated dense layers — the
+//! paper's deepest CNN (Sec. VI-A counts the dense layer as the repeating
+//! block: 6 + 12 + 24 + 16 = 58 in DenseNet-121).
+
+use super::layer::{LayerKind, Shape};
+use super::model::ModelGraph;
+use crate::graph::NodeId;
+
+fn conv(out_ch: usize, kernel: usize, stride: usize, padding: usize) -> LayerKind {
+    LayerKind::Conv2d {
+        out_ch,
+        kernel,
+        stride,
+        padding,
+    }
+}
+
+/// One dense layer: BN-ReLU-Conv1x1(4k)-BN-ReLU-Conv3x3(k), output
+/// concatenated with the input features.
+fn dense_layer(m: &mut ModelGraph, from: NodeId, growth: usize) -> NodeId {
+    let first = m.len();
+    let bn1 = m.add(LayerKind::BatchNorm, &[from]);
+    let r1 = m.add(LayerKind::Relu, &[bn1]);
+    let c1 = m.add(conv(4 * growth, 1, 1, 0), &[r1]);
+    let bn2 = m.add(LayerKind::BatchNorm, &[c1]);
+    let r2 = m.add(LayerKind::Relu, &[bn2]);
+    let c2 = m.add(conv(growth, 3, 1, 1), &[r2]);
+    let cat = m.add(LayerKind::Concat, &[from, c2]);
+    m.declare_block((first..m.len()).collect());
+    cat
+}
+
+/// Transition: BN-ReLU-Conv1x1(channels/2)-AvgPool2.
+fn transition(m: &mut ModelGraph, from: NodeId) -> NodeId {
+    let ch = m.layer(from).out_shape.dims()[0] / 2;
+    let bn = m.add(LayerKind::BatchNorm, &[from]);
+    let r = m.add(LayerKind::Relu, &[bn]);
+    let c = m.add(conv(ch, 1, 1, 0), &[r]);
+    m.add(
+        LayerKind::AvgPool {
+            kernel: 2,
+            stride: 2,
+            padding: 0,
+        },
+        &[c],
+    )
+}
+
+/// DenseNet-121 over 3x224x224 (growth rate 32, blocks [6,12,24,16]).
+pub fn densenet121() -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("densenet121", Shape::chw(3, 224, 224));
+    let growth = 32;
+    let c1 = m.add(conv(64, 7, 2, 3), &[input]);
+    let bn1 = m.add(LayerKind::BatchNorm, &[c1]);
+    let r1 = m.add(LayerKind::Relu, &[bn1]);
+    let mut x = m.add(
+        LayerKind::MaxPool {
+            kernel: 3,
+            stride: 2,
+            padding: 1,
+        },
+        &[r1],
+    );
+    for (i, reps) in [6usize, 12, 24, 16].into_iter().enumerate() {
+        for _ in 0..reps {
+            x = dense_layer(&mut m, x, growth);
+        }
+        if i < 3 {
+            x = transition(&mut m, x);
+        }
+    }
+    let bn = m.add(LayerKind::BatchNorm, &[x]);
+    let r = m.add(LayerKind::Relu, &[bn]);
+    let gap = m.add(LayerKind::GlobalAvgPool, &[r]);
+    let fc = m.add(LayerKind::Dense { out_features: 1000 }, &[gap]);
+    m.add(LayerKind::Softmax, &[fc]);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifty_eight_dense_blocks() {
+        let m = densenet121();
+        assert_eq!(m.declared_blocks().len(), 58, "6+12+24+16 (paper Sec. VI-A)");
+    }
+
+    #[test]
+    fn reference_analytics() {
+        let m = densenet121();
+        // ~8.0M params, ~2.9 GMACs -> 5.7 GFLOPs.
+        let p = m.total_params() as f64 / 1e6;
+        assert!((7.5..8.6).contains(&p), "params={p}M");
+        let gf = m.total_flops() as f64 / 1e9;
+        assert!((5.0..6.5).contains(&gf), "flops={gf}G");
+    }
+
+    #[test]
+    fn channel_bookkeeping() {
+        let m = densenet121();
+        // Final dense block output: 512 + 16*32 = 1024 channels at 7x7.
+        let gap = m
+            .layers()
+            .iter()
+            .position(|l| matches!(l.kind, LayerKind::GlobalAvgPool))
+            .unwrap();
+        assert_eq!(m.layer(gap).out_shape, Shape::features(1024));
+    }
+}

@@ -1,0 +1,128 @@
+//! GoogLeNet (Szegedy et al., 2015): 9 inception blocks — the paper's
+//! primary workload for the dynamic-network experiments (Fig. 11-13, 15, 16).
+
+use super::layer::{LayerKind, Shape};
+use super::model::ModelGraph;
+use crate::graph::NodeId;
+
+fn conv(out_ch: usize, kernel: usize, stride: usize, padding: usize) -> LayerKind {
+    LayerKind::Conv2d {
+        out_ch,
+        kernel,
+        stride,
+        padding,
+    }
+}
+
+fn conv_relu(m: &mut ModelGraph, from: NodeId, k: LayerKind) -> NodeId {
+    let c = m.add(k, &[from]);
+    m.add(LayerKind::Relu, &[c])
+}
+
+/// Inception block: (#1x1, #3x3 reduce, #3x3, #5x5 reduce, #5x5, pool proj).
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    m: &mut ModelGraph,
+    from: NodeId,
+    n1: usize,
+    n3r: usize,
+    n3: usize,
+    n5r: usize,
+    n5: usize,
+    np: usize,
+) -> NodeId {
+    let first = m.len();
+    let b1 = conv_relu(m, from, conv(n1, 1, 1, 0));
+    let b2a = conv_relu(m, from, conv(n3r, 1, 1, 0));
+    let b2b = conv_relu(m, b2a, conv(n3, 3, 1, 1));
+    let b3a = conv_relu(m, from, conv(n5r, 1, 1, 0));
+    let b3b = conv_relu(m, b3a, conv(n5, 5, 1, 2));
+    let b4a = m.add(
+        LayerKind::MaxPool {
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+        },
+        &[from],
+    );
+    let b4b = conv_relu(m, b4a, conv(np, 1, 1, 0));
+    let cat = m.add(LayerKind::Concat, &[b1, b2b, b3b, b4b]);
+    m.declare_block((first..m.len()).collect());
+    cat
+}
+
+/// GoogLeNet over 3x224x224 (no auxiliary classifiers, as in inference-time
+/// torchvision; 9 inception blocks).
+pub fn googlenet() -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("googlenet", Shape::chw(3, 224, 224));
+    let maxpool = |m: &mut ModelGraph, from| {
+        m.add(
+            LayerKind::MaxPool {
+                kernel: 3,
+                stride: 2,
+                padding: 1,
+            },
+            &[from],
+        )
+    };
+    let c1 = conv_relu(&mut m, input, conv(64, 7, 2, 3));
+    let p1 = maxpool(&mut m, c1);
+    let c2 = conv_relu(&mut m, p1, conv(64, 1, 1, 0));
+    let c3 = conv_relu(&mut m, c2, conv(192, 3, 1, 1));
+    let p2 = maxpool(&mut m, c3);
+
+    let i3a = inception(&mut m, p2, 64, 96, 128, 16, 32, 32);
+    let i3b = inception(&mut m, i3a, 128, 128, 192, 32, 96, 64);
+    let p3 = maxpool(&mut m, i3b);
+    let i4a = inception(&mut m, p3, 192, 96, 208, 16, 48, 64);
+    let i4b = inception(&mut m, i4a, 160, 112, 224, 24, 64, 64);
+    let i4c = inception(&mut m, i4b, 128, 128, 256, 24, 64, 64);
+    let i4d = inception(&mut m, i4c, 112, 144, 288, 32, 64, 64);
+    let i4e = inception(&mut m, i4d, 256, 160, 320, 32, 128, 128);
+    let p4 = maxpool(&mut m, i4e);
+    let i5a = inception(&mut m, p4, 256, 160, 320, 32, 128, 128);
+    let i5b = inception(&mut m, i5a, 384, 192, 384, 48, 128, 128);
+
+    let gap = m.add(LayerKind::GlobalAvgPool, &[i5b]);
+    let drop = m.add(LayerKind::Dropout, &[gap]);
+    let fc = m.add(LayerKind::Dense { out_features: 1000 }, &[drop]);
+    m.add(LayerKind::Softmax, &[fc]);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_inception_blocks() {
+        let m = googlenet();
+        assert_eq!(m.declared_blocks().len(), 9, "paper Sec. VI-A");
+        assert!(!m.is_linear());
+    }
+
+    #[test]
+    fn reference_analytics() {
+        let m = googlenet();
+        // ~6.6M params (no aux heads), ~1.5 GMACs -> 3 GFLOPs.
+        let p = m.total_params() as f64 / 1e6;
+        assert!((5.5..7.5).contains(&p), "params={p}M");
+        let gf = m.total_flops() as f64 / 1e9;
+        assert!((2.5..3.5).contains(&gf), "flops={gf}G");
+    }
+
+    #[test]
+    fn inception_output_channels() {
+        let m = googlenet();
+        // Last concat: 384+384+128+128 = 1024 channels at 7x7.
+        let cats: Vec<usize> = m
+            .layers()
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| matches!(l.kind, LayerKind::Concat))
+            .map(|(i, _)| i)
+            .collect();
+        let last = *cats.last().unwrap();
+        assert_eq!(m.layer(last).out_shape, Shape::chw(1024, 7, 7));
+    }
+}

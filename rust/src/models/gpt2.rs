@@ -1,0 +1,82 @@
+//! GPT-2 small (124M) as a layer graph — the paper's Sec. VI-E extension
+//! and Fig. 14 workload (trained on CARER). Each transformer block is a
+//! repeated unit with an internal residual branch structure, so the
+//! block-wise algorithm applies exactly as for CNNs.
+
+use super::layer::{LayerKind, Shape};
+use super::model::ModelGraph;
+use crate::graph::NodeId;
+
+/// One pre-norm transformer block:
+/// `x + Attn(LN(x))` then `y + MLP(LN(y))`.
+fn transformer_block(m: &mut ModelGraph, from: NodeId, heads: usize, dim: usize) -> NodeId {
+    let first = m.len();
+    let ln1 = m.add(LayerKind::LayerNorm, &[from]);
+    let attn = m.add(LayerKind::SelfAttention { heads }, &[ln1]);
+    let add1 = m.add(LayerKind::Add, &[from, attn]);
+    let ln2 = m.add(LayerKind::LayerNorm, &[add1]);
+    let fc1 = m.add(LayerKind::Dense { out_features: 4 * dim }, &[ln2]);
+    let gelu = m.add(LayerKind::Gelu, &[fc1]);
+    let fc2 = m.add(LayerKind::Dense { out_features: dim }, &[gelu]);
+    let add2 = m.add(LayerKind::Add, &[add1, fc2]);
+    m.declare_block((first..m.len()).collect());
+    add2
+}
+
+/// GPT-2 with the given depth/width over a `seq_len` token sequence.
+pub fn gpt2(layers: usize, heads: usize, dim: usize, seq_len: usize, vocab: usize) -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("gpt2", Shape::features(seq_len));
+    let mut x = m.add(LayerKind::Embedding { vocab, dim }, &[input]);
+    for _ in 0..layers {
+        x = transformer_block(&mut m, x, heads, dim);
+    }
+    let lnf = m.add(LayerKind::LayerNorm, &[x]);
+    let head = m.add(LayerKind::Dense { out_features: vocab }, &[lnf]);
+    m.add(LayerKind::Softmax, &[head]);
+    m
+}
+
+/// GPT-2 small: 12 layers, 12 heads, 768 dim, 50257 vocab, context 128
+/// (CARER sequences are short utterances; 128 covers them).
+pub fn gpt2_small() -> ModelGraph {
+    gpt2(12, 12, 768, 128, 50257)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_blocks() {
+        let m = gpt2_small();
+        assert_eq!(m.declared_blocks().len(), 12);
+        assert!(!m.is_linear());
+    }
+
+    #[test]
+    fn parameter_count_matches_gpt2_small() {
+        let m = gpt2_small();
+        // 124M total incl. tied LM head counted separately here (head adds
+        // ~38.6M): embedding 38.7M + 12 blocks x ~7.1M + head.
+        let p = m.total_params() as f64 / 1e6;
+        assert!((160.0..170.0).contains(&p), "params={p}M (untied head)");
+        // Blocks alone: ~85M.
+        let block_params: u64 = m
+            .declared_blocks()
+            .iter()
+            .flatten()
+            .map(|&v| m.layer(v).params)
+            .sum();
+        let bp = block_params as f64 / 1e6;
+        assert!((83.0..88.0).contains(&bp), "block params={bp}M");
+    }
+
+    #[test]
+    fn block_output_is_residual_stream() {
+        let m = gpt2_small();
+        for block in m.declared_blocks() {
+            let last = *block.last().unwrap();
+            assert_eq!(m.layer(last).out_shape, Shape::seq(128, 768));
+        }
+    }
+}

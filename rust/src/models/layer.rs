@@ -1,0 +1,403 @@
+//! Layer IR: kinds, tensor shapes, and per-layer analytics (shape
+//! inference, forward FLOPs, parameter count).
+
+/// Per-sample tensor shape (batch dimension excluded).
+///
+/// CNN activations are `[C, H, W]`; transformer activations are `[T, D]`;
+/// flattened feature vectors are `[F]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn chw(c: usize, h: usize, w: usize) -> Shape {
+        Shape(vec![c, h, w])
+    }
+
+    pub fn features(f: usize) -> Shape {
+        Shape(vec![f])
+    }
+
+    pub fn seq(t: usize, d: usize) -> Shape {
+        Shape(vec![t, d])
+    }
+
+    /// Total elements per sample.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+/// Layer kinds covering the paper's evaluation architectures.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    /// Data source; its "smashed data" is the raw input tensor.
+    Input,
+    /// 2D convolution (square kernel).
+    Conv2d {
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    },
+    /// Max pooling.
+    MaxPool {
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    },
+    /// Average pooling.
+    AvgPool {
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    },
+    /// Global average pooling to `[C]`.
+    GlobalAvgPool,
+    /// Fully connected layer applied to the last dimension.
+    Dense { out_features: usize },
+    /// Batch normalization over channels.
+    BatchNorm,
+    /// ReLU activation.
+    Relu,
+    /// GELU activation (transformer MLPs).
+    Gelu,
+    /// Elementwise sum of all inputs (residual connections).
+    Add,
+    /// Channel-dimension concatenation (inception / dense blocks).
+    Concat,
+    /// Flatten `[C,H,W]` -> `[C*H*W]`.
+    Flatten,
+    /// Dropout (no-op for sizing; kept for graph fidelity).
+    Dropout,
+    /// Token + positional embedding.
+    Embedding { vocab: usize, dim: usize },
+    /// Layer normalization over the last dimension.
+    LayerNorm,
+    /// Multi-head self-attention over `[T, D]`.
+    SelfAttention { heads: usize },
+    /// Softmax classifier head marker (elementwise-cost softmax).
+    Softmax,
+}
+
+impl LayerKind {
+    /// Short kind tag used in labels and DOT dumps.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            LayerKind::Input => "input",
+            LayerKind::Conv2d { .. } => "conv",
+            LayerKind::MaxPool { .. } => "maxpool",
+            LayerKind::AvgPool { .. } => "avgpool",
+            LayerKind::GlobalAvgPool => "gap",
+            LayerKind::Dense { .. } => "dense",
+            LayerKind::BatchNorm => "bn",
+            LayerKind::Relu => "relu",
+            LayerKind::Gelu => "gelu",
+            LayerKind::Add => "add",
+            LayerKind::Concat => "concat",
+            LayerKind::Flatten => "flatten",
+            LayerKind::Dropout => "dropout",
+            LayerKind::Embedding { .. } => "embed",
+            LayerKind::LayerNorm => "ln",
+            LayerKind::SelfAttention { .. } => "attn",
+            LayerKind::Softmax => "softmax",
+        }
+    }
+
+    /// Infer the output shape from the input shapes.
+    ///
+    /// Panics with a descriptive message on arity/shape violations — model
+    /// construction is build-time, so violations are programming errors.
+    pub fn infer_shape(&self, inputs: &[&Shape]) -> Shape {
+        let one = |what: &str| -> &Shape {
+            assert!(
+                inputs.len() == 1,
+                "{what} expects exactly 1 input, got {}",
+                inputs.len()
+            );
+            inputs[0]
+        };
+        match self {
+            LayerKind::Input => {
+                assert!(inputs.is_empty(), "input layer takes no inputs");
+                unreachable!("input shape is supplied at construction")
+            }
+            LayerKind::Conv2d {
+                out_ch,
+                kernel,
+                stride,
+                padding,
+            } => {
+                let s = one("conv");
+                let [_, h, w] = chw(s);
+                Shape::chw(
+                    *out_ch,
+                    conv_dim(h, *kernel, *stride, *padding),
+                    conv_dim(w, *kernel, *stride, *padding),
+                )
+            }
+            LayerKind::MaxPool {
+                kernel,
+                stride,
+                padding,
+            }
+            | LayerKind::AvgPool {
+                kernel,
+                stride,
+                padding,
+            } => {
+                let s = one("pool");
+                let [c, h, w] = chw(s);
+                Shape::chw(
+                    c,
+                    conv_dim(h, *kernel, *stride, *padding),
+                    conv_dim(w, *kernel, *stride, *padding),
+                )
+            }
+            LayerKind::GlobalAvgPool => {
+                let s = one("gap");
+                let [c, _, _] = chw(s);
+                Shape::features(c)
+            }
+            LayerKind::Dense { out_features } => {
+                let s = one("dense");
+                let mut dims = s.0.clone();
+                *dims.last_mut().expect("dense needs >= 1 dim") = *out_features;
+                Shape(dims)
+            }
+            LayerKind::BatchNorm
+            | LayerKind::Relu
+            | LayerKind::Gelu
+            | LayerKind::Dropout
+            | LayerKind::LayerNorm
+            | LayerKind::Softmax => one("elementwise").clone(),
+            LayerKind::Add => {
+                assert!(!inputs.is_empty(), "add needs >= 1 input");
+                for s in inputs {
+                    assert_eq!(
+                        s.0, inputs[0].0,
+                        "add requires identical input shapes"
+                    );
+                }
+                inputs[0].clone()
+            }
+            LayerKind::Concat => {
+                assert!(!inputs.is_empty(), "concat needs >= 1 input");
+                let first = chw(inputs[0]);
+                let mut c_total = 0;
+                for s in inputs {
+                    let [c, h, w] = chw(s);
+                    assert_eq!((h, w), (first[1], first[2]), "concat spatial mismatch");
+                    c_total += c;
+                }
+                Shape::chw(c_total, first[1], first[2])
+            }
+            LayerKind::Flatten => {
+                let s = one("flatten");
+                Shape::features(s.numel())
+            }
+            LayerKind::Embedding { dim, .. } => {
+                let s = one("embedding");
+                assert_eq!(s.0.len(), 1, "embedding input is a token sequence [T]");
+                Shape::seq(s.0[0], *dim)
+            }
+            LayerKind::SelfAttention { heads } => {
+                let s = one("attention");
+                assert_eq!(s.0.len(), 2, "attention input is [T, D]");
+                assert_eq!(s.0[1] % heads, 0, "D must divide by heads");
+                s.clone()
+            }
+        }
+    }
+
+    /// Forward FLOPs per sample (multiply-accumulate counted as 2 FLOPs).
+    pub fn flops(&self, inputs: &[&Shape], output: &Shape) -> u64 {
+        match self {
+            LayerKind::Input => 0,
+            LayerKind::Conv2d { kernel, .. } => {
+                let [in_c, _, _] = chw(inputs[0]);
+                let [out_c, oh, ow] = chw(output);
+                2 * (out_c * oh * ow) as u64 * (in_c * kernel * kernel) as u64
+            }
+            LayerKind::MaxPool { kernel, .. } | LayerKind::AvgPool { kernel, .. } => {
+                (output.numel() * kernel * kernel) as u64
+            }
+            LayerKind::GlobalAvgPool => inputs[0].numel() as u64,
+            LayerKind::Dense { out_features } => {
+                let in_f = *inputs[0].0.last().unwrap();
+                let rows: usize = inputs[0].0[..inputs[0].0.len() - 1].iter().product::<usize>().max(1);
+                2 * (rows * in_f * out_features) as u64
+            }
+            LayerKind::BatchNorm | LayerKind::LayerNorm => 4 * output.numel() as u64,
+            LayerKind::Relu | LayerKind::Dropout => output.numel() as u64,
+            LayerKind::Gelu | LayerKind::Softmax => 8 * output.numel() as u64,
+            LayerKind::Add => (inputs.len().saturating_sub(1) * output.numel()) as u64,
+            LayerKind::Concat | LayerKind::Flatten => 0,
+            LayerKind::Embedding { .. } => output.numel() as u64, // gather + pos add
+            LayerKind::SelfAttention { .. } => {
+                let (t, d) = (output.0[0], output.0[1]);
+                // QKV projections (3) + output projection (1): 8*T*D^2.
+                // Scores + weighted sum: 4*T^2*D.
+                (8 * t * d * d + 4 * t * t * d) as u64
+            }
+        }
+    }
+
+    /// Trainable parameter count.
+    pub fn params(&self, inputs: &[&Shape], _output: &Shape) -> u64 {
+        match self {
+            LayerKind::Conv2d {
+                out_ch, kernel, ..
+            } => {
+                let [in_c, _, _] = chw(inputs[0]);
+                (*out_ch * (in_c * kernel * kernel + 1)) as u64
+            }
+            LayerKind::Dense { out_features } => {
+                let in_f = *inputs[0].0.last().unwrap();
+                (*out_features * (in_f + 1)) as u64
+            }
+            LayerKind::BatchNorm => {
+                let c = inputs[0].0[0];
+                2 * c as u64
+            }
+            LayerKind::LayerNorm => {
+                let d = *inputs[0].0.last().unwrap();
+                2 * d as u64
+            }
+            LayerKind::Embedding { vocab, dim } => {
+                let t = inputs[0].0[0];
+                (*vocab * *dim + t * *dim) as u64 // token + positional tables
+            }
+            LayerKind::SelfAttention { .. } => {
+                let d = inputs[0].0[1];
+                (4 * d * d + 4 * d) as u64
+            }
+            _ => 0,
+        }
+    }
+}
+
+fn chw(s: &Shape) -> [usize; 3] {
+    assert_eq!(s.0.len(), 3, "expected [C,H,W] shape, got {:?}", s.0);
+    [s.0[0], s.0[1], s.0[2]]
+}
+
+fn conv_dim(input: usize, kernel: usize, stride: usize, padding: usize) -> usize {
+    assert!(stride > 0, "stride must be positive");
+    assert!(
+        input + 2 * padding >= kernel,
+        "kernel {kernel} larger than padded input {input}+2*{padding}"
+    );
+    (input + 2 * padding - kernel) / stride + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_and_params() {
+        let k = LayerKind::Conv2d {
+            out_ch: 64,
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+        };
+        let input = Shape::chw(3, 32, 32);
+        let out = k.infer_shape(&[&input]);
+        assert_eq!(out, Shape::chw(64, 32, 32));
+        assert_eq!(k.params(&[&input], &out), 64 * (3 * 3 * 3 + 1));
+        // 2 * 64*32*32 * 3*3*3 FLOPs
+        assert_eq!(k.flops(&[&input], &out), 2 * 64 * 32 * 32 * 27);
+    }
+
+    #[test]
+    fn strided_conv_shape() {
+        let k = LayerKind::Conv2d {
+            out_ch: 8,
+            kernel: 7,
+            stride: 2,
+            padding: 3,
+        };
+        let out = k.infer_shape(&[&Shape::chw(3, 224, 224)]);
+        assert_eq!(out, Shape::chw(8, 112, 112));
+    }
+
+    #[test]
+    fn pool_shapes() {
+        let k = LayerKind::MaxPool {
+            kernel: 2,
+            stride: 2,
+            padding: 0,
+        };
+        assert_eq!(
+            k.infer_shape(&[&Shape::chw(16, 32, 32)]),
+            Shape::chw(16, 16, 16)
+        );
+        assert_eq!(
+            LayerKind::GlobalAvgPool.infer_shape(&[&Shape::chw(512, 7, 7)]),
+            Shape::features(512)
+        );
+    }
+
+    #[test]
+    fn dense_on_features_and_sequences() {
+        let k = LayerKind::Dense { out_features: 10 };
+        assert_eq!(
+            k.infer_shape(&[&Shape::features(128)]),
+            Shape::features(10)
+        );
+        assert_eq!(k.infer_shape(&[&Shape::seq(16, 64)]), Shape::seq(16, 10));
+        // Sequence dense multiplies rows.
+        let out = Shape::seq(16, 10);
+        assert_eq!(k.flops(&[&Shape::seq(16, 64)], &out), 2 * 16 * 64 * 10);
+    }
+
+    #[test]
+    fn concat_accumulates_channels() {
+        let k = LayerKind::Concat;
+        let a = Shape::chw(16, 8, 8);
+        let b = Shape::chw(24, 8, 8);
+        assert_eq!(k.infer_shape(&[&a, &b]), Shape::chw(40, 8, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "concat spatial mismatch")]
+    fn concat_rejects_spatial_mismatch() {
+        LayerKind::Concat.infer_shape(&[&Shape::chw(16, 8, 8), &Shape::chw(16, 4, 4)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "identical input shapes")]
+    fn add_requires_same_shapes() {
+        LayerKind::Add.infer_shape(&[&Shape::chw(16, 8, 8), &Shape::chw(8, 8, 8)]);
+    }
+
+    #[test]
+    fn attention_analytics() {
+        let k = LayerKind::SelfAttention { heads: 12 };
+        let s = Shape::seq(128, 768);
+        let out = k.infer_shape(&[&s]);
+        assert_eq!(out, s);
+        assert_eq!(k.params(&[&s], &out), 4 * 768 * 768 + 4 * 768);
+        assert_eq!(
+            k.flops(&[&s], &out),
+            (8 * 128 * 768 * 768 + 4 * 128 * 128 * 768) as u64
+        );
+    }
+
+    #[test]
+    fn embedding_params_include_position_table() {
+        let k = LayerKind::Embedding {
+            vocab: 50257,
+            dim: 768,
+        };
+        let tokens = Shape::features(128);
+        let out = k.infer_shape(&[&tokens]);
+        assert_eq!(out, Shape::seq(128, 768));
+        assert_eq!(k.params(&[&tokens], &out), (50257 * 768 + 128 * 768) as u64);
+    }
+}

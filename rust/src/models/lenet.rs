@@ -1,0 +1,74 @@
+//! LeNet-5 (LeCun et al., 1998) — the paper's canonical *linear* model.
+
+use super::layer::{LayerKind, Shape};
+use super::model::ModelGraph;
+
+/// LeNet-5 over 1x32x32 input (classic digit classification sizing).
+pub fn lenet5() -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("lenet5", Shape::chw(1, 32, 32));
+    let c1 = m.add(
+        LayerKind::Conv2d {
+            out_ch: 6,
+            kernel: 5,
+            stride: 1,
+            padding: 0,
+        },
+        &[input],
+    );
+    let r1 = m.add(LayerKind::Relu, &[c1]);
+    let p1 = m.add(
+        LayerKind::AvgPool {
+            kernel: 2,
+            stride: 2,
+            padding: 0,
+        },
+        &[r1],
+    );
+    let c2 = m.add(
+        LayerKind::Conv2d {
+            out_ch: 16,
+            kernel: 5,
+            stride: 1,
+            padding: 0,
+        },
+        &[p1],
+    );
+    let r2 = m.add(LayerKind::Relu, &[c2]);
+    let p2 = m.add(
+        LayerKind::AvgPool {
+            kernel: 2,
+            stride: 2,
+            padding: 0,
+        },
+        &[r2],
+    );
+    let f = m.add(LayerKind::Flatten, &[p2]);
+    let d1 = m.add(LayerKind::Dense { out_features: 120 }, &[f]);
+    let r3 = m.add(LayerKind::Relu, &[d1]);
+    let d2 = m.add(LayerKind::Dense { out_features: 84 }, &[r3]);
+    let r4 = m.add(LayerKind::Relu, &[d2]);
+    let d3 = m.add(LayerKind::Dense { out_features: 10 }, &[r4]);
+    m.add(LayerKind::Softmax, &[d3]);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_linear_and_sized_right() {
+        let m = lenet5();
+        assert!(m.is_linear());
+        // Conv chain: 32 -> 28 -> 14 -> 10 -> 5, flatten 16*5*5 = 400.
+        let flat = m
+            .layers()
+            .iter()
+            .position(|l| matches!(l.kind, LayerKind::Flatten))
+            .unwrap();
+        assert_eq!(m.layer(flat).out_shape, Shape::features(400));
+        // ~61,706 params in the classic LeNet-5 (with bias terms).
+        let p = m.total_params();
+        assert!((60_000..64_000).contains(&(p as usize)), "params={p}");
+    }
+}

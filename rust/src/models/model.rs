@@ -1,0 +1,226 @@
+//! Model graph: a DAG of layers with computed analytics.
+
+use super::layer::{LayerKind, Shape};
+use crate::graph::{Dag, NodeId};
+
+/// Bytes per activation / parameter element (fp32, matching the paper's
+/// PyTorch profiling).
+pub const BYTES_PER_ELEM: usize = 4;
+
+/// One layer instance with its inferred analytics.
+#[derive(Clone, Debug)]
+pub struct LayerInfo {
+    pub kind: LayerKind,
+    pub name: String,
+    pub out_shape: Shape,
+    /// Forward FLOPs per sample.
+    pub flops: u64,
+    /// Trainable parameter count.
+    pub params: u64,
+}
+
+impl LayerInfo {
+    /// Parameter bytes `k_v` (Eq. (3)/(6)).
+    pub fn param_bytes(&self) -> u64 {
+        self.params * BYTES_PER_ELEM as u64
+    }
+
+    /// Smashed-data bytes per sample `a_v` (Eq. (4)/(5)).
+    pub fn act_bytes(&self) -> u64 {
+        (self.out_shape.numel() * BYTES_PER_ELEM) as u64
+    }
+}
+
+/// A complete AI model: layer DAG + analytics + optional block ground truth.
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    name: String,
+    dag: Dag,
+    layers: Vec<LayerInfo>,
+    /// Ground-truth repeated blocks (layer id sets), as declared by the
+    /// architecture builders. Alg. 3 detects blocks structurally; this is
+    /// kept for validation tests.
+    declared_blocks: Vec<Vec<NodeId>>,
+}
+
+impl ModelGraph {
+    /// Start building a model with a single input layer of the given shape.
+    pub fn new<S: Into<String>>(name: S, input_shape: Shape) -> (ModelGraph, NodeId) {
+        let mut dag = Dag::new();
+        let input = dag.add_node("input");
+        let m = ModelGraph {
+            name: name.into(),
+            dag,
+            layers: vec![LayerInfo {
+                kind: LayerKind::Input,
+                name: "input".into(),
+                out_shape: input_shape,
+                flops: 0,
+                params: 0,
+            }],
+            declared_blocks: Vec::new(),
+        };
+        (m, input)
+    }
+
+    /// Append a layer consuming `inputs`; returns its node id.
+    pub fn add(&mut self, kind: LayerKind, inputs: &[NodeId]) -> NodeId {
+        assert!(!inputs.is_empty(), "non-input layers need inputs");
+        let in_shapes: Vec<&Shape> = inputs
+            .iter()
+            .map(|&i| &self.layers[i].out_shape)
+            .collect();
+        let out_shape = kind.infer_shape(&in_shapes);
+        let flops = kind.flops(&in_shapes, &out_shape);
+        let params = kind.params(&in_shapes, &out_shape);
+        let idx = self.layers.len();
+        let name = format!("{}_{}", kind.tag(), idx);
+        let id = self.dag.add_node(name.clone());
+        debug_assert_eq!(id, idx);
+        for &i in inputs {
+            self.dag.add_edge(i, id, 0.0);
+        }
+        self.layers.push(LayerInfo {
+            kind,
+            name,
+            out_shape,
+            flops,
+            params,
+        });
+        id
+    }
+
+    /// Declare a ground-truth repeated block (for validation of Alg. 3).
+    pub fn declare_block(&mut self, members: Vec<NodeId>) {
+        self.declared_blocks.push(members);
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn dag(&self) -> &Dag {
+        &self.dag
+    }
+
+    pub fn layer(&self, v: NodeId) -> &LayerInfo {
+        &self.layers[v]
+    }
+
+    pub fn layers(&self) -> &[LayerInfo] {
+        &self.layers
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    pub fn declared_blocks(&self) -> &[Vec<NodeId>] {
+        &self.declared_blocks
+    }
+
+    /// Total forward FLOPs per sample.
+    pub fn total_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.flops).sum()
+    }
+
+    /// Total trainable parameters.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    /// Mean activation (smashed-data) bytes across layers.
+    pub fn mean_act_bytes(&self) -> f64 {
+        self.layers.iter().map(|l| l.act_bytes() as f64).sum::<f64>() / self.len() as f64
+    }
+
+    /// True if no layer has more than one child (paper's "linear" class).
+    pub fn is_linear(&self) -> bool {
+        (0..self.len()).all(|v| self.dag.out_degree(v) <= 1)
+    }
+
+    /// Output (sink) layers — layers with no children.
+    pub fn outputs(&self) -> Vec<NodeId> {
+        (0..self.len())
+            .filter(|&v| self.dag.out_degree(v) == 0)
+            .collect()
+    }
+
+    /// One-line per-layer inventory (used by `fastsplit info`).
+    pub fn describe(&self) -> String {
+        let mut t = crate::util::table::Table::new(&[
+            "id", "layer", "out-shape", "MFLOPs", "params", "act-bytes",
+        ]);
+        for (i, l) in self.layers.iter().enumerate() {
+            t.row(&[
+                i.to_string(),
+                l.name.clone(),
+                format!("{:?}", l.out_shape.dims()),
+                format!("{:.2}", l.flops as f64 / 1e6),
+                l.params.to_string(),
+                l.act_bytes().to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelGraph {
+        let (mut m, input) = ModelGraph::new("tiny", Shape::chw(3, 8, 8));
+        let c = m.add(
+            LayerKind::Conv2d {
+                out_ch: 4,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+            },
+            &[input],
+        );
+        let r = m.add(LayerKind::Relu, &[c]);
+        let f = m.add(LayerKind::Flatten, &[r]);
+        m.add(LayerKind::Dense { out_features: 10 }, &[f]);
+        m
+    }
+
+    #[test]
+    fn builds_consistent_graph() {
+        let m = tiny();
+        assert_eq!(m.len(), 5);
+        assert_eq!(m.dag().num_edges(), 4);
+        assert!(m.is_linear());
+        assert_eq!(m.outputs(), vec![4]);
+        assert_eq!(m.layer(3).out_shape, Shape::features(4 * 8 * 8));
+    }
+
+    #[test]
+    fn analytics_accumulate() {
+        let m = tiny();
+        let conv_flops = 2u64 * 4 * 8 * 8 * (3 * 3 * 3);
+        let dense_flops = 2u64 * 256 * 10;
+        assert_eq!(m.total_flops(), conv_flops + 256 + dense_flops);
+        assert_eq!(m.total_params(), (4 * (27 + 1) + 10 * 257) as u64);
+    }
+
+    #[test]
+    fn branching_is_nonlinear() {
+        let (mut m, input) = ModelGraph::new("branchy", Shape::chw(3, 8, 8));
+        let a = m.add(LayerKind::Relu, &[input]);
+        let b = m.add(LayerKind::Relu, &[input]);
+        m.add(LayerKind::Add, &[a, b]);
+        assert!(!m.is_linear());
+    }
+
+    #[test]
+    fn act_bytes_are_fp32() {
+        let m = tiny();
+        assert_eq!(m.layer(0).act_bytes(), (3 * 8 * 8 * 4) as u64);
+    }
+}

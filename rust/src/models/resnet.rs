@@ -1,0 +1,164 @@
+//! ResNet-18 and ResNet-50 (He et al., 2016): the paper's block-structured
+//! workhorses (8 basic blocks / 16 bottleneck blocks respectively).
+
+use super::layer::{LayerKind, Shape};
+use super::model::ModelGraph;
+use crate::graph::NodeId;
+
+fn conv(out_ch: usize, kernel: usize, stride: usize, padding: usize) -> LayerKind {
+    LayerKind::Conv2d {
+        out_ch,
+        kernel,
+        stride,
+        padding,
+    }
+}
+
+fn conv_bn(m: &mut ModelGraph, from: NodeId, k: LayerKind) -> NodeId {
+    let c = m.add(k, &[from]);
+    m.add(LayerKind::BatchNorm, &[c])
+}
+
+fn conv_bn_relu(m: &mut ModelGraph, from: NodeId, k: LayerKind) -> NodeId {
+    let b = conv_bn(m, from, k);
+    m.add(LayerKind::Relu, &[b])
+}
+
+/// Basic residual block (two 3x3 convs), optional downsampling projection.
+fn basic_block(m: &mut ModelGraph, from: NodeId, out_ch: usize, stride: usize) -> NodeId {
+    let first = m.len();
+    let b1 = conv_bn_relu(m, from, conv(out_ch, 3, stride, 1));
+    let b2 = conv_bn(m, b1, conv(out_ch, 3, 1, 1));
+    let skip = if stride != 1 || needs_projection(m, from, out_ch) {
+        conv_bn(m, from, conv(out_ch, 1, stride, 0))
+    } else {
+        from
+    };
+    let add = m.add(LayerKind::Add, &[b2, skip]);
+    let out = m.add(LayerKind::Relu, &[add]);
+    m.declare_block((first..m.len()).collect());
+    out
+}
+
+/// Bottleneck block (1x1 -> 3x3 -> 1x1 with 4x expansion).
+fn bottleneck_block(
+    m: &mut ModelGraph,
+    from: NodeId,
+    mid_ch: usize,
+    stride: usize,
+) -> NodeId {
+    let out_ch = mid_ch * 4;
+    let first = m.len();
+    let b1 = conv_bn_relu(m, from, conv(mid_ch, 1, 1, 0));
+    let b2 = conv_bn_relu(m, b1, conv(mid_ch, 3, stride, 1));
+    let b3 = conv_bn(m, b2, conv(out_ch, 1, 1, 0));
+    let skip = if stride != 1 || needs_projection(m, from, out_ch) {
+        conv_bn(m, from, conv(out_ch, 1, stride, 0))
+    } else {
+        from
+    };
+    let add = m.add(LayerKind::Add, &[b3, skip]);
+    let out = m.add(LayerKind::Relu, &[add]);
+    m.declare_block((first..m.len()).collect());
+    out
+}
+
+fn needs_projection(m: &ModelGraph, from: NodeId, out_ch: usize) -> bool {
+    m.layer(from).out_shape.dims()[0] != out_ch
+}
+
+fn stem(m: &mut ModelGraph, input: NodeId) -> NodeId {
+    let c = conv_bn_relu(m, input, conv(64, 7, 2, 3));
+    m.add(
+        LayerKind::MaxPool {
+            kernel: 3,
+            stride: 2,
+            padding: 1,
+        },
+        &[c],
+    )
+}
+
+fn head(m: &mut ModelGraph, from: NodeId, classes: usize) -> NodeId {
+    let gap = m.add(LayerKind::GlobalAvgPool, &[from]);
+    let fc = m.add(LayerKind::Dense { out_features: classes }, &[gap]);
+    m.add(LayerKind::Softmax, &[fc])
+}
+
+/// ResNet-18 over 3x224x224 (8 basic blocks, [2,2,2,2]).
+pub fn resnet18() -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("resnet18", Shape::chw(3, 224, 224));
+    let mut x = stem(&mut m, input);
+    for (stage, &(ch, reps)) in [(64usize, 2usize), (128, 2), (256, 2), (512, 2)]
+        .iter()
+        .enumerate()
+    {
+        for r in 0..reps {
+            let stride = if stage > 0 && r == 0 { 2 } else { 1 };
+            x = basic_block(&mut m, x, ch, stride);
+        }
+    }
+    head(&mut m, x, 1000);
+    m
+}
+
+/// ResNet-50 over 3x224x224 (16 bottleneck blocks, [3,4,6,3]).
+pub fn resnet50() -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("resnet50", Shape::chw(3, 224, 224));
+    let mut x = stem(&mut m, input);
+    for (stage, &(ch, reps)) in [(64usize, 3usize), (128, 4), (256, 6), (512, 3)]
+        .iter()
+        .enumerate()
+    {
+        for r in 0..reps {
+            let stride = if stage > 0 && r == 0 { 2 } else { 1 };
+            x = bottleneck_block(&mut m, x, ch, stride);
+        }
+    }
+    head(&mut m, x, 1000);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_matches_reference_analytics() {
+        let m = resnet18();
+        assert!(!m.is_linear());
+        assert_eq!(m.declared_blocks().len(), 8, "8 basic blocks (paper Sec. VI-A)");
+        // ~11.7M params, ~1.8 GFLOPs forward.
+        let p = m.total_params() as f64 / 1e6;
+        assert!((11.0..12.5).contains(&p), "params={p}M");
+        let gf = m.total_flops() as f64 / 1e9;
+        assert!((3.2..4.2).contains(&gf), "flops={gf}G (2*MACs)");
+    }
+
+    #[test]
+    fn resnet50_matches_reference_analytics() {
+        let m = resnet50();
+        assert_eq!(m.declared_blocks().len(), 16, "16 bottleneck blocks");
+        // ~25.6M params, ~4.1 GMACs -> 8.2 GFLOPs.
+        let p = m.total_params() as f64 / 1e6;
+        assert!((25.0..27.0).contains(&p), "params={p}M");
+        let gf = m.total_flops() as f64 / 1e9;
+        assert!((7.0..9.0).contains(&gf), "flops={gf}G");
+    }
+
+    #[test]
+    fn spatial_resolution_halves_per_stage() {
+        let m = resnet18();
+        let out = m.outputs()[0];
+        // Final softmax over 1000 classes.
+        assert_eq!(m.layer(out).out_shape, Shape::features(1000));
+        // GAP input is 512 x 7 x 7.
+        let gap = m
+            .layers()
+            .iter()
+            .position(|l| matches!(l.kind, LayerKind::GlobalAvgPool))
+            .unwrap();
+        let gap_in = m.dag().parents(gap)[0];
+        assert_eq!(m.layer(gap_in).out_shape, Shape::chw(512, 7, 7));
+    }
+}

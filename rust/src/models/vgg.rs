@@ -1,0 +1,62 @@
+//! VGG-16 (Simonyan & Zisserman) — a deep linear model used to stress the
+//! brute-force baseline's O(L) claim for linear networks.
+
+use super::layer::{LayerKind, Shape};
+use super::model::ModelGraph;
+use crate::graph::NodeId;
+
+fn conv_relu(m: &mut ModelGraph, from: NodeId, out_ch: usize) -> NodeId {
+    let c = m.add(
+        LayerKind::Conv2d {
+            out_ch,
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+        },
+        &[from],
+    );
+    m.add(LayerKind::Relu, &[c])
+}
+
+/// VGG-16 (configuration D) over 3x224x224.
+pub fn vgg16() -> ModelGraph {
+    let (mut m, input) = ModelGraph::new("vgg16", Shape::chw(3, 224, 224));
+    let mut x = input;
+    for (reps, ch) in [(2usize, 64), (2, 128), (3, 256), (3, 512), (3, 512)] {
+        for _ in 0..reps {
+            x = conv_relu(&mut m, x, ch);
+        }
+        x = m.add(
+            LayerKind::MaxPool {
+                kernel: 2,
+                stride: 2,
+                padding: 0,
+            },
+            &[x],
+        );
+    }
+    let f = m.add(LayerKind::Flatten, &[x]);
+    let d1 = m.add(LayerKind::Dense { out_features: 4096 }, &[f]);
+    let r1 = m.add(LayerKind::Relu, &[d1]);
+    let d2 = m.add(LayerKind::Dense { out_features: 4096 }, &[r1]);
+    let r2 = m.add(LayerKind::Relu, &[d2]);
+    let d3 = m.add(LayerKind::Dense { out_features: 1000 }, &[r2]);
+    m.add(LayerKind::Softmax, &[d3]);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_analytics() {
+        let m = vgg16();
+        assert!(m.is_linear());
+        // 138M params, ~15.5 GFLOPs forward per sample (MAC*2 = 31e9).
+        let p = m.total_params() as f64 / 1e6;
+        assert!((137.0..140.0).contains(&p), "params={p}M");
+        let gf = m.total_flops() as f64 / 1e9;
+        assert!((29.0..33.0).contains(&gf), "flops={gf}G");
+    }
+}

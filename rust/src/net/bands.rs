@@ -1,0 +1,100 @@
+//! 3GPP band presets used by the paper: n1 (sub-6 GHz) and n257 (mmWave),
+//! with the EIRP/beam parameters of Sec. VII-B.1.
+
+/// Radio band parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Band {
+    pub name: &'static str,
+    /// Carrier frequency in GHz.
+    pub carrier_ghz: f64,
+    /// Channel bandwidth in Hz.
+    pub bandwidth_hz: f64,
+    /// Server (base station) average EIRP in dBm.
+    pub server_eirp_dbm: f64,
+    /// Device (UE) transmit power in dBm (23 dBm is the 3GPP power class 3).
+    pub device_tx_dbm: f64,
+    /// Number of beams N in P = P_e - 10 log10 N.
+    pub beams: u32,
+    /// Path-loss exponent η in Eq. (24).
+    pub path_loss_exp: f64,
+    /// Receiver noise figure in dB.
+    pub noise_figure_db: f64,
+}
+
+impl Band {
+    /// n1 (2.1 GHz sub-6): 40 dBm EIRP, 16 beams, 20 MHz.
+    pub fn n1() -> Band {
+        Band {
+            name: "n1",
+            carrier_ghz: 2.1,
+            bandwidth_hz: 20e6,
+            server_eirp_dbm: 40.0,
+            device_tx_dbm: 23.0,
+            beams: 16,
+            path_loss_exp: 3.0,
+            noise_figure_db: 7.0,
+        }
+    }
+
+    /// n257 (28 GHz mmWave): 50 dBm EIRP, 64 beams, 200 MHz.
+    pub fn n257() -> Band {
+        Band {
+            name: "n257",
+            carrier_ghz: 28.0,
+            bandwidth_hz: 200e6,
+            server_eirp_dbm: 50.0,
+            device_tx_dbm: 23.0,
+            beams: 64,
+            path_loss_exp: 2.9,
+            noise_figure_db: 7.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Band> {
+        match name {
+            "n1" | "sub6" => Some(Band::n1()),
+            "n257" | "mmwave" => Some(Band::n257()),
+            _ => None,
+        }
+    }
+
+    /// Per-beam transmit power (Sec. VII-B.1): P = P_e - 10 log10 N.
+    pub fn server_beam_power_dbm(&self) -> f64 {
+        self.server_eirp_dbm - 10.0 * (self.beams as f64).log10()
+    }
+
+    /// Thermal noise floor over the band: -174 dBm/Hz + 10 log10 BW + NF.
+    pub fn noise_floor_dbm(&self) -> f64 {
+        -174.0 + 10.0 * self.bandwidth_hz.log10() + self.noise_figure_db
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beam_power_matches_formula() {
+        let b = Band::n257();
+        assert!((b.server_beam_power_dbm() - (50.0 - 10.0 * 64f64.log10())).abs() < 1e-12);
+        let b1 = Band::n1();
+        assert!((b1.server_beam_power_dbm() - (40.0 - 10.0 * 16f64.log10())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_floor_reasonable() {
+        // 20 MHz: about -94 dBm with 7 dB NF.
+        let nf = Band::n1().noise_floor_dbm();
+        assert!((-95.5..=-93.0).contains(&nf), "{nf}");
+        // 200 MHz is 10 dB higher.
+        let nf257 = Band::n257().noise_floor_dbm();
+        assert!((nf257 - nf - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Band::by_name("mmwave").unwrap().name, "n257");
+        assert_eq!(Band::by_name("sub6").unwrap().name, "n1");
+        assert!(Band::by_name("n77").is_none());
+    }
+}

@@ -1,0 +1,163 @@
+//! Channel model: Eq. (24) large-scale path loss with log-normal shadowing
+//! and Eq. (25) Rayleigh small-scale fading.
+
+use super::bands::Band;
+use crate::util::rng::Rng;
+
+/// The paper's three channel conditions (shadowing σ in dB).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChannelCondition {
+    Good,
+    Normal,
+    Poor,
+}
+
+impl ChannelCondition {
+    pub fn sigma_db(self) -> f64 {
+        match self {
+            ChannelCondition::Good => 2.0,
+            ChannelCondition::Normal => 4.0,
+            ChannelCondition::Poor => 6.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ChannelCondition::Good => "good",
+            ChannelCondition::Normal => "normal",
+            ChannelCondition::Poor => "poor",
+        }
+    }
+
+    pub fn all() -> [ChannelCondition; 3] {
+        [
+            ChannelCondition::Good,
+            ChannelCondition::Normal,
+            ChannelCondition::Poor,
+        ]
+    }
+}
+
+/// Stochastic channel between the base station and one device.
+#[derive(Clone, Debug)]
+pub struct ChannelModel {
+    pub band: Band,
+    pub condition: ChannelCondition,
+    /// Enable Eq. (25) Rayleigh fading on top of large-scale loss.
+    pub rayleigh: bool,
+}
+
+impl ChannelModel {
+    pub fn new(band: Band, condition: ChannelCondition) -> ChannelModel {
+        ChannelModel {
+            band,
+            condition,
+            rayleigh: false,
+        }
+    }
+
+    pub fn with_rayleigh(mut self, enable: bool) -> ChannelModel {
+        self.rayleigh = enable;
+        self
+    }
+
+    /// Eq. (24): PL(dB) = 32.5 + 20 log10 f + 10 η log10 d + χ,
+    /// f in GHz, d in meters, χ ~ N(0, σ²).
+    pub fn large_scale_path_loss(&self, distance_m: f64, rng: &mut Rng) -> f64 {
+        assert!(distance_m > 0.0, "distance must be positive");
+        let shadow = rng.normal(0.0, self.condition.sigma_db());
+        32.5 + 20.0 * self.band.carrier_ghz.log10()
+            + 10.0 * self.band.path_loss_exp * distance_m.max(1.0).log10()
+            + shadow
+    }
+
+    /// Effective path loss including Eq. (25) Rayleigh fading when enabled:
+    /// PL_small = PL - 10 log10 ψ, ψ ~ Exp(1).
+    pub fn path_loss(&self, distance_m: f64, rng: &mut Rng) -> f64 {
+        let pl = self.large_scale_path_loss(distance_m, rng);
+        if self.rayleigh {
+            let psi = rng.exponential().max(1e-9);
+            pl - 10.0 * psi.log10()
+        } else {
+            pl
+        }
+    }
+
+    /// Downlink SNR in dB at the device.
+    ///
+    /// The per-beam transmit power is `P_e - 10 log10 N` (Sec. VII-B.1),
+    /// but the serving beam recovers the array gain `10 log10 N`, so the
+    /// link budget sees the full EIRP — that is what EIRP means.
+    pub fn downlink_snr_db(&self, distance_m: f64, rng: &mut Rng) -> f64 {
+        self.band.server_eirp_dbm - self.path_loss(distance_m, rng)
+            - self.band.noise_floor_dbm()
+    }
+
+    /// Uplink SNR in dB at the base station: the UE transmits at its fixed
+    /// power class and the BS array contributes (most of) its beamforming
+    /// gain on receive, so uplink trails downlink.
+    pub fn uplink_snr_db(&self, distance_m: f64, rng: &mut Rng) -> f64 {
+        let rx_gain_db = 10.0 * (self.band.beams as f64).log10() * 0.75;
+        self.band.device_tx_dbm + rx_gain_db - self.path_loss(distance_m, rng)
+            - self.band.noise_floor_dbm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_loss_increases_with_distance() {
+        let ch = ChannelModel::new(Band::n257(), ChannelCondition::Good);
+        let mut rng = Rng::new(1);
+        // Average over shadowing.
+        let avg = |d: f64, rng: &mut Rng| -> f64 {
+            (0..2000).map(|_| ch.large_scale_path_loss(d, rng)).sum::<f64>() / 2000.0
+        };
+        let near = avg(10.0, &mut rng);
+        let far = avg(100.0, &mut rng);
+        // 10x distance at η=2.9 => +29 dB.
+        assert!((far - near - 29.0).abs() < 0.5, "near={near} far={far}");
+    }
+
+    #[test]
+    fn shadowing_sigma_scales_with_condition() {
+        let mut rng = Rng::new(2);
+        let spread = |cond: ChannelCondition, rng: &mut Rng| -> f64 {
+            let ch = ChannelModel::new(Band::n1(), cond);
+            let samples: Vec<f64> =
+                (0..4000).map(|_| ch.large_scale_path_loss(50.0, rng)).collect();
+            crate::util::stats::Summary::of(&samples).std_dev
+        };
+        let good = spread(ChannelCondition::Good, &mut rng);
+        let poor = spread(ChannelCondition::Poor, &mut rng);
+        assert!((good - 2.0).abs() < 0.2, "good σ={good}");
+        assert!((poor - 6.0).abs() < 0.5, "poor σ={poor}");
+    }
+
+    #[test]
+    fn rayleigh_adds_variance_and_tail() {
+        let mut rng = Rng::new(3);
+        let base = ChannelModel::new(Band::n257(), ChannelCondition::Good);
+        let fading = base.clone().with_rayleigh(true);
+        let sd = |ch: &ChannelModel, rng: &mut Rng| -> f64 {
+            let s: Vec<f64> = (0..4000).map(|_| ch.path_loss(50.0, rng)).collect();
+            crate::util::stats::Summary::of(&s).std_dev
+        };
+        assert!(sd(&fading, &mut rng) > sd(&base, &mut rng) * 1.5);
+    }
+
+    #[test]
+    fn downlink_beats_uplink() {
+        let ch = ChannelModel::new(Band::n257(), ChannelCondition::Normal);
+        let mut rng = Rng::new(4);
+        let n = 1000;
+        let (mut dl, mut ul) = (0.0, 0.0);
+        for _ in 0..n {
+            dl += ch.downlink_snr_db(60.0, &mut rng);
+            ul += ch.uplink_snr_db(60.0, &mut rng);
+        }
+        assert!(dl / n as f64 > ul / n as f64, "server EIRP should win");
+    }
+}

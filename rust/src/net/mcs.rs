@@ -1,0 +1,83 @@
+//! SNR → CQI → spectral efficiency mapping (3GPP TS 38.214 Table
+//! 5.2.2.1-3, 256-QAM table), used to convert simulated link quality into
+//! a bitrate as the paper does ("link bitrate is converted by the CQI to
+//! MCS mapping table", Sec. VII-B.1).
+
+/// Spectral efficiency (bit/s/Hz) per CQI index 1..=15 (index 0 = out of
+/// range / no transmission).
+pub const CQI_EFFICIENCY: [f64; 16] = [
+    0.0, // CQI 0: out of range
+    0.1523, 0.3770, 0.8770, 1.4766, 1.9141, 2.4063, 2.7305, 3.3223, 3.9023, 4.5234, 5.1152,
+    5.5547, 6.2266, 6.9141, 7.4063,
+];
+
+/// Approximate SNR thresholds (dB) for each CQI (BLER <= 0.1 operating
+/// points; standard link-level abstraction values).
+pub const CQI_SNR_THRESHOLDS_DB: [f64; 16] = [
+    f64::NEG_INFINITY,
+    -6.7, -4.7, -2.3, 0.2, 2.4, 4.3, 5.9, 8.1, 10.3, 11.7, 14.1, 16.3, 18.7, 21.0, 22.7,
+];
+
+/// Map an SNR to the highest CQI whose threshold it meets.
+pub fn snr_to_cqi(snr_db: f64) -> u8 {
+    let mut cqi = 0u8;
+    for (i, &thr) in CQI_SNR_THRESHOLDS_DB.iter().enumerate() {
+        if snr_db >= thr {
+            cqi = i as u8;
+        }
+    }
+    cqi
+}
+
+/// Link bitrate in bit/s for an SNR over a given bandwidth, including a
+/// fixed overhead factor for control signalling (~25% of REs in NR).
+pub fn bitrate_bps(snr_db: f64, bandwidth_hz: f64) -> f64 {
+    const OVERHEAD: f64 = 0.75;
+    let cqi = snr_to_cqi(snr_db) as usize;
+    CQI_EFFICIENCY[cqi] * bandwidth_hz * OVERHEAD
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cqi_monotone_in_snr() {
+        let mut prev = 0;
+        for snr10 in -100..300 {
+            let snr = snr10 as f64 / 10.0;
+            let cqi = snr_to_cqi(snr);
+            assert!(cqi >= prev, "CQI dropped at {snr} dB");
+            prev = cqi;
+        }
+    }
+
+    #[test]
+    fn boundary_values() {
+        assert_eq!(snr_to_cqi(-10.0), 0);
+        assert_eq!(snr_to_cqi(-6.7), 1);
+        assert_eq!(snr_to_cqi(22.7), 15);
+        assert_eq!(snr_to_cqi(100.0), 15);
+    }
+
+    #[test]
+    fn efficiency_table_is_increasing() {
+        for w in CQI_EFFICIENCY.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn rate_scales_with_bandwidth() {
+        let r20 = bitrate_bps(15.0, 20e6);
+        let r200 = bitrate_bps(15.0, 200e6);
+        assert!((r200 / r20 - 10.0).abs() < 1e-9);
+        // 15 dB ~ CQI 11 -> 5.1152 b/s/Hz * 20 MHz * 0.75 ≈ 76.7 Mbps.
+        assert!((r20 - 5.1152 * 20e6 * 0.75).abs() < 1.0);
+    }
+
+    #[test]
+    fn out_of_range_means_zero_rate() {
+        assert_eq!(bitrate_bps(-20.0, 20e6), 0.0);
+    }
+}

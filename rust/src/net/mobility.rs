@@ -1,0 +1,79 @@
+//! Device mobility: each device moves along a predefined trajectory at
+//! 30 km/h within the base-station coverage area (Sec. VII-B.1).
+
+use crate::util::rng::Rng;
+
+/// A device trajectory: a closed ring path around the base station with a
+/// per-device radius band and phase, traversed at constant speed.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    /// Mean distance from the base station (m).
+    pub mean_radius_m: f64,
+    /// Radial oscillation amplitude (m) — the ring is slightly elliptic.
+    pub radial_amp_m: f64,
+    /// Initial angular phase (rad).
+    pub phase: f64,
+    /// Angular velocity (rad/s), derived from 30 km/h along the ring.
+    pub angular_vel: f64,
+    /// Radial oscillation frequency multiplier.
+    pub radial_freq: f64,
+}
+
+/// Speed of all devices: 30 km/h in m/s.
+pub const SPEED_MPS: f64 = 30.0 * 1000.0 / 3600.0;
+
+impl Trajectory {
+    /// Sample a random trajectory inside the coverage annulus
+    /// [min_radius, max_radius].
+    pub fn sample(rng: &mut Rng, min_radius_m: f64, max_radius_m: f64) -> Trajectory {
+        assert!(min_radius_m > 0.0 && max_radius_m > min_radius_m);
+        let mean = rng.range(min_radius_m * 1.2, max_radius_m * 0.8);
+        let amp = rng.range(0.05, 0.25) * mean;
+        Trajectory {
+            mean_radius_m: mean,
+            radial_amp_m: amp,
+            phase: rng.range(0.0, std::f64::consts::TAU),
+            angular_vel: SPEED_MPS / mean,
+            radial_freq: rng.range(1.5, 4.0),
+        }
+    }
+
+    /// Distance to the base station at time `t` (seconds).
+    pub fn distance_at(&self, t: f64) -> f64 {
+        let theta = self.phase + self.angular_vel * t;
+        (self.mean_radius_m + self.radial_amp_m * (self.radial_freq * theta).sin()).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_stays_in_band() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let tr = Trajectory::sample(&mut rng, 10.0, 200.0);
+            for step in 0..500 {
+                let d = tr.distance_at(step as f64 * 7.0);
+                assert!(d >= tr.mean_radius_m - tr.radial_amp_m - 1e-9);
+                assert!(d <= tr.mean_radius_m + tr.radial_amp_m + 1e-9);
+                assert!(d >= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn movement_actually_changes_distance() {
+        let mut rng = Rng::new(6);
+        let tr = Trajectory::sample(&mut rng, 10.0, 200.0);
+        let d0 = tr.distance_at(0.0);
+        let moved = (0..100).any(|i| (tr.distance_at(i as f64 * 10.0) - d0).abs() > 1.0);
+        assert!(moved, "device never moved");
+    }
+
+    #[test]
+    fn speed_constant_is_30_kmh() {
+        assert!((SPEED_MPS - 8.3333).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,17 @@
+//! Edge wireless network simulator (Sec. VII-B.1).
+//!
+//! Implements the paper's own simulator components: 3GPP band presets
+//! (n1 sub-6 GHz / n257 mmWave), the Eq. (24) large-scale path-loss model
+//! with per-condition shadowing, Eq. (25) Rayleigh small-scale fading, the
+//! EIRP/beam transmit-power model, an SNR→CQI→MCS spectral-efficiency
+//! mapping (TS 38.214), and waypoint device mobility at 30 km/h.
+
+pub mod bands;
+pub mod channel;
+pub mod mcs;
+pub mod mobility;
+pub mod network;
+
+pub use bands::Band;
+pub use channel::{ChannelCondition, ChannelModel};
+pub use network::{EdgeNetwork, NetConfig};

@@ -1,0 +1,254 @@
+//! Baseline partitioning methods the paper compares against (Sec. VII):
+//! brute force [10], regression [21], OSS [17], device-only, central.
+
+use super::blocks::detect_blocks;
+use super::blockwise::passes_intra_block_test;
+use super::general::general_partition;
+use super::types::{Link, Partition, Problem};
+use crate::graph::enumerate_lower_sets;
+use crate::util::stats::{polyfit, polyval};
+
+/// Brute-force search [10]: enumerate every feasible cut (lower set of the
+/// layer DAG) and evaluate Eq. (7) directly. Exponential; only viable for
+/// the single-block networks (Fig. 7/9a).
+pub fn brute_force_partition(problem: &Problem) -> Partition {
+    let inputs: Vec<usize> = (0..problem.costs.len())
+        .filter(|&v| problem.costs.dag.in_degree(v) == 0)
+        .collect();
+    let mut best: Option<(f64, Vec<bool>)> = None;
+    enumerate_lower_sets(&problem.costs.dag, |mask| {
+        if problem.pin_inputs && inputs.iter().any(|&v| !mask[v]) {
+            return; // raw data must stay on the device
+        }
+        let delay = problem.delay(mask);
+        if best.as_ref().map_or(true, |(d, _)| delay < *d) {
+            best = Some((delay, mask.to_vec()));
+        }
+    });
+    let (delay, device_set) = best.expect("at least one feasible cut exists");
+    Partition { device_set, delay }
+}
+
+/// Theoretical operation count of brute force: `2^|V| (|V|+|E|)` (Sec. VI-D).
+pub fn brute_force_complexity(problem: &Problem) -> f64 {
+    let v = problem.costs.len() as f64;
+    let e = problem.costs.dag.num_edges() as f64;
+    2f64.powf(v) * (v + e)
+}
+
+/// Regression-based search [21]: linearize the model (block abstraction,
+/// Sec. VII-A.1), fit low-degree polynomials to the cumulative compute /
+/// parameter curves and the activation-size profile from a few anchor
+/// cuts, minimize the fitted delay over a continuous cut position, and
+/// round. Fast but suboptimal: the jagged activation-size profile is
+/// exactly what the fit cannot capture (the paper's Fig. 7(b)).
+pub fn regression_partition(problem: &Problem) -> Partition {
+    let c = problem.costs;
+    // Linearize: abstract every detected block that passes the Theorem 2
+    // test, then require a chain; if still non-linear, fall back to treating
+    // the topological order as a chain (the regression method's own
+    // approximation for unsupported topologies).
+    let order = c.dag.topo_order().expect("acyclic");
+    let n = order.len();
+
+    // Cumulative ground-truth curves over prefix cuts 0..=n.
+    let mut cum_dev = vec![0.0f64; n + 1];
+    let mut cum_srv = vec![0.0f64; n + 1];
+    let mut cum_par = vec![0.0f64; n + 1];
+    let mut act = vec![0.0f64; n + 1];
+    for (i, &v) in order.iter().enumerate() {
+        cum_dev[i + 1] = cum_dev[i] + c.xi_d[v];
+        cum_srv[i + 1] = cum_srv[i] + c.xi_s[v];
+        cum_par[i + 1] = cum_par[i] + c.param_bytes[v];
+        act[i + 1] = if c.dag.out_degree(v) > 0 {
+            c.act_bytes[v]
+        } else {
+            0.0
+        };
+    }
+    let total_srv = cum_srv[n];
+
+    // Anchor points: the regression method profiles only a handful of cuts.
+    let anchors: Vec<usize> = {
+        let k = 5.min(n);
+        (0..=k).map(|i| i * n / k).collect()
+    };
+    let xs: Vec<f64> = anchors.iter().map(|&i| i as f64).collect();
+    let fit = |ys: &[f64], deg: usize| -> Vec<f64> {
+        let pts: Vec<f64> = anchors.iter().map(|&i| ys[i]).collect();
+        polyfit(&xs, &pts, deg.min(xs.len() - 1))
+    };
+    let f_dev = fit(&cum_dev, 2);
+    let f_srv = fit(&cum_srv, 2);
+    let f_par = fit(&cum_par, 2);
+    let f_act = fit(&act, 2);
+
+    // Continuous objective; minimize over a fine grid (the continuous
+    // optimization step of [21]).
+    let inv = 1.0 / problem.link.up_bps + 1.0 / problem.link.down_bps;
+    let objective = |x: f64| -> f64 {
+        let dev = polyval(&f_dev, x).max(0.0);
+        let srv = (total_srv - polyval(&f_srv, x)).max(0.0);
+        let a = polyval(&f_act, x).max(0.0);
+        let k = polyval(&f_par, x).max(0.0);
+        c.n_loc * (dev + srv + a * inv) + k * inv
+    };
+    let mut best_x = if problem.pin_inputs { 1.0 } else { 0.0 };
+    let mut best_obj = f64::INFINITY;
+    let grid = 512;
+    let g_lo = if problem.pin_inputs {
+        // The first (input) position must stay on the device.
+        (grid as f64 / n as f64).ceil() as usize
+    } else {
+        0
+    };
+    for g in g_lo..=grid {
+        let x = g as f64 * n as f64 / grid as f64;
+        let o = objective(x);
+        if o < best_obj {
+            best_obj = o;
+            best_x = x;
+        }
+    }
+    let cut = (best_x.round() as usize).min(n);
+
+    let mut device_set = vec![false; c.len()];
+    for &v in order.iter().take(cut) {
+        device_set[v] = true;
+    }
+    problem.partition(device_set)
+}
+
+/// Optimal static split (OSS) [17]: the best *fixed* cut for nominal link
+/// rates, chosen once and never adapted (the proposed solution re-runs the
+/// partition each epoch instead).
+pub fn oss_partition(problem_nominal: &Problem) -> Partition {
+    general_partition(problem_nominal)
+}
+
+/// Evaluate a fixed device set under different (current) link conditions —
+/// how OSS is scored each epoch once the channel moved.
+pub fn evaluate_static(problem_now: &Problem, fixed: &Partition) -> Partition {
+    problem_now.partition(fixed.device_set.clone())
+}
+
+/// Convenience: all baseline names used in experiment tables.
+pub const BASELINE_NAMES: &[&str] = &["proposed", "oss", "device-only", "regression", "central"];
+
+/// Compute the partition for the named method under the given problem.
+/// OSS requires the nominal-rate problem for its static choice.
+pub fn partition_by_method(
+    method: &str,
+    problem_now: &Problem,
+    nominal_link: Link,
+) -> Partition {
+    match method {
+        "proposed" => super::blockwise::blockwise_partition(problem_now),
+        "general" => general_partition(problem_now),
+        "regression" => regression_partition(problem_now),
+        "device-only" => problem_now.device_only(),
+        "central" => problem_now.central(),
+        "oss" => {
+            let nominal = Problem::new(problem_now.costs, nominal_link);
+            let fixed = oss_partition(&nominal);
+            evaluate_static(problem_now, &fixed)
+        }
+        "brute-force" => brute_force_partition(problem_now),
+        other => panic!("unknown method '{other}'"),
+    }
+}
+
+/// Sanity helper used by multiple harnesses: does the block structure allow
+/// full abstraction (all blocks pass Theorem 2)?
+pub fn fully_abstractable(problem: &Problem) -> bool {
+    let c = problem.costs;
+    detect_blocks(&c.dag)
+        .iter()
+        .all(|b| passes_intra_block_test(c, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+
+    fn cg(model: &str) -> CostGraph {
+        let m = models::by_name(model).unwrap();
+        CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        )
+    }
+
+    #[test]
+    fn brute_force_is_a_lower_bound() {
+        for model in ["block-residual", "block-inception"] {
+            let c = cg(model);
+            let p = Problem::new(&c, Link::symmetric(1e6));
+            let bf = brute_force_partition(&p);
+            // `central` is excluded: it ignores the data-locality pin.
+            for method in ["regression", "device-only", "oss"] {
+                let m = partition_by_method(method, &p, p.link);
+                assert!(
+                    bf.delay <= m.delay + 1e-9,
+                    "{model}: brute force {} beaten by {method} {}",
+                    bf.delay,
+                    m.delay
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn regression_returns_feasible_prefix() {
+        for model in ["lenet5", "block-inception", "googlenet"] {
+            let c = cg(model);
+            let p = Problem::new(&c, Link::symmetric(1e6));
+            let r = regression_partition(&p);
+            assert!(p.is_feasible(&r.device_set), "{model}");
+        }
+    }
+
+    #[test]
+    fn regression_is_generally_suboptimal_on_nonlinear_models() {
+        // Fig. 7(b): regression should miss the optimum on at least one of
+        // the block nets across a range of rates.
+        let mut misses = 0;
+        for model in ["block-residual", "block-inception", "block-dense"] {
+            let c = cg(model);
+            for rate in [1e5, 5e5, 1e6, 5e6, 1e7] {
+                let p = Problem::new(&c, Link::symmetric(rate));
+                let bf = brute_force_partition(&p);
+                let r = regression_partition(&p);
+                if r.delay > bf.delay * (1.0 + 1e-9) {
+                    misses += 1;
+                }
+            }
+        }
+        assert!(misses > 0, "regression matched brute force everywhere");
+    }
+
+    #[test]
+    fn oss_adapts_nothing() {
+        let c = cg("block-residual");
+        let nominal = Link::symmetric(1e6);
+        let now = Problem::new(&c, Link::symmetric(1e4)); // channel collapsed
+        let oss = partition_by_method("oss", &now, nominal);
+        // Same device set as the nominal-rate optimum.
+        let fixed = general_partition(&Problem::new(&c, nominal));
+        assert_eq!(oss.device_set, fixed.device_set);
+        // But evaluated under the current (bad) channel.
+        assert!((oss.delay - now.delay(&fixed.device_set)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown method")]
+    fn unknown_method_panics() {
+        let c = cg("lenet5");
+        let p = Problem::new(&c, Link::symmetric(1e6));
+        let _ = partition_by_method("nope", &p, p.link);
+    }
+}

@@ -1,0 +1,322 @@
+//! Alg. 3: block detection.
+//!
+//! A block is a branching-reconvergence region: a parent vertex with
+//! multiple children whose parallel paths converge again at a single
+//! vertex (Sec. VI-A.1). Detection walks from every multi-child vertex to
+//! its *immediate post-dominator* — the first vertex every path to the
+//! output must pass through — and collects the vertices strictly between,
+//! plus the converged vertex (as in Alg. 3 line 10).
+//!
+//! Detected blocks are only usable for abstraction if they are *closed*:
+//! no internal vertex (other than the convergence vertex) feeds a vertex
+//! outside the block. Repetition is established by a structural signature
+//! (sequence of layer-kind labels + internal edge shape), mirroring the
+//! paper's "if G_B appears multiple times, it is retained as a reusable
+//! unit".
+
+use crate::graph::{Dag, NodeId};
+
+/// One detected block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    /// The branching vertex feeding the block (the block's v_in).
+    pub input: NodeId,
+    /// Internal members, including the convergence vertex, excluding `input`.
+    pub members: Vec<NodeId>,
+    /// The convergence vertex (last member in topological order).
+    pub output: NodeId,
+    /// Structural signature for repetition grouping.
+    pub signature: String,
+}
+
+/// Detect all closed branching-reconvergence blocks in a layer DAG.
+///
+/// Blocks are returned in topological order of their input vertex and are
+/// pairwise non-overlapping (when candidates overlap, the earlier/input-most
+/// one wins; nested candidates are skipped).
+pub fn detect_blocks(dag: &Dag) -> Vec<Block> {
+    let order = dag.topo_order().expect("layer graphs are acyclic");
+    let n = dag.len();
+    let mut pos = vec![0usize; n];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v] = i;
+    }
+
+    let ipdom = immediate_post_dominators(dag, &order);
+
+    // `claimed` marks block *members*; a member may still be the *input* of
+    // the following block (e.g. chained inception outputs in GoogLeNet).
+    let mut claimed = vec![false; n];
+    let mut blocks = Vec::new();
+    for &v in &order {
+        if dag.out_degree(v) < 2 {
+            continue;
+        }
+        let Some(conv) = ipdom[v] else { continue };
+        // Collect vertices strictly between v and conv: descendants of v
+        // that are ancestors of conv.
+        let desc = dag.descendants(v);
+        let anc = dag.ancestors(conv);
+        let mut members: Vec<NodeId> = (0..n)
+            .filter(|&u| u != v && desc[u] && anc[u])
+            .collect();
+        members.sort_by_key(|&u| pos[u]);
+        if members.len() < 2 {
+            continue; // degenerate (e.g. direct edge v -> conv only)
+        }
+        // Closedness: members other than conv must not feed outside.
+        let member_set: Vec<bool> = {
+            let mut s = vec![false; n];
+            for &u in &members {
+                s[u] = true;
+            }
+            s
+        };
+        let closed = members.iter().all(|&u| {
+            u == conv
+                || dag
+                    .children(u)
+                    .iter()
+                    .all(|&ch| member_set[ch])
+        });
+        if !closed {
+            continue;
+        }
+        // Non-overlap with already-claimed blocks.
+        if members.iter().any(|&u| claimed[u]) {
+            continue;
+        }
+        for &u in &members {
+            claimed[u] = true;
+        }
+        let signature = block_signature(dag, v, &members, &pos);
+        blocks.push(Block {
+            input: v,
+            members,
+            output: conv,
+            signature,
+        });
+    }
+    blocks
+}
+
+/// Group blocks by signature; returns (signature, block indices) for
+/// signatures appearing at least `min_repeats` times.
+pub fn repeated_blocks(blocks: &[Block], min_repeats: usize) -> Vec<Vec<usize>> {
+    let mut groups: std::collections::BTreeMap<&str, Vec<usize>> = Default::default();
+    for (i, b) in blocks.iter().enumerate() {
+        groups.entry(&b.signature).or_default().push(i);
+    }
+    groups
+        .into_values()
+        .filter(|g| g.len() >= min_repeats)
+        .collect()
+}
+
+/// Immediate post-dominator of every vertex, or `None` for output vertices.
+///
+/// Computed on the reverse graph with the classic Cooper-Harvey-Kennedy
+/// iterative intersection over reverse-topological order. Multiple outputs
+/// are handled with a virtual exit.
+pub fn immediate_post_dominators(dag: &Dag, order: &[NodeId]) -> Vec<Option<NodeId>> {
+    let n = dag.len();
+    let mut pos = vec![0usize; n];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v] = i;
+    }
+    let virtual_exit = n; // virtual vertex post-dominating everything
+    let mut idom: Vec<Option<usize>> = vec![None; n + 1];
+    idom[virtual_exit] = Some(virtual_exit);
+
+    // Successors in the post-dominance sense = children, outputs -> exit.
+    let succs = |v: usize| -> Vec<usize> {
+        if dag.out_degree(v) == 0 {
+            vec![virtual_exit]
+        } else {
+            dag.children(v)
+        }
+    };
+    // Process in reverse topological order until fixpoint (one pass
+    // suffices on DAGs, but iterate for safety).
+    let rpo_pos = |v: usize| -> usize {
+        if v == virtual_exit {
+            usize::MAX
+        } else {
+            pos[v]
+        }
+    };
+    let intersect = |idom: &[Option<usize>], mut a: usize, mut b: usize| -> usize {
+        // Walk up the post-dominator tree: idom steps increase the topo
+        // position (toward the exit), so the *smaller*-position node climbs.
+        while a != b {
+            while rpo_pos(a) < rpo_pos(b) {
+                a = idom[a].expect("processed");
+            }
+            while rpo_pos(b) < rpo_pos(a) {
+                b = idom[b].expect("processed");
+            }
+        }
+        a
+    };
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &v in order.iter().rev() {
+            let mut new_idom: Option<usize> = None;
+            for s in succs(v) {
+                if idom[s].is_none() {
+                    continue;
+                }
+                new_idom = Some(match new_idom {
+                    None => s,
+                    Some(cur) => intersect(&idom, cur, s),
+                });
+            }
+            if new_idom.is_some() && idom[v] != new_idom {
+                idom[v] = new_idom;
+                changed = true;
+            }
+        }
+    }
+    (0..n)
+        .map(|v| match idom[v] {
+            Some(d) if d != virtual_exit => Some(d),
+            _ => None,
+        })
+        .collect()
+}
+
+fn block_signature(dag: &Dag, input: NodeId, members: &[NodeId], pos: &[usize]) -> String {
+    // Kind tags in topological order + edge structure relative to the
+    // member ordering. Layer labels are "<tag>_<id>"; strip the id.
+    let tag = |v: NodeId| -> &str {
+        let l = dag.label(v);
+        l.split('_').next().unwrap_or(l)
+    };
+    let index_of = |v: NodeId| -> Option<usize> {
+        members.iter().position(|&u| u == v)
+    };
+    let mut sig = String::new();
+    sig.push_str(tag(input));
+    sig.push('|');
+    let mut sorted = members.to_vec();
+    sorted.sort_by_key(|&u| pos[u]);
+    for &u in &sorted {
+        sig.push_str(tag(u));
+        sig.push('(');
+        let mut kids: Vec<String> = dag
+            .children(u)
+            .iter()
+            .filter_map(|&c| index_of(c).map(|i| i.to_string()))
+            .collect();
+        kids.sort();
+        sig.push_str(&kids.join(","));
+        sig.push(')');
+    }
+    sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn ipdom_of_diamond() {
+        let mut g = Dag::new();
+        for i in 0..4 {
+            g.add_node(format!("v{i}"));
+        }
+        g.add_edge(0, 1, 0.0);
+        g.add_edge(0, 2, 0.0);
+        g.add_edge(1, 3, 0.0);
+        g.add_edge(2, 3, 0.0);
+        let order = g.topo_order().unwrap();
+        let ipdom = immediate_post_dominators(&g, &order);
+        assert_eq!(ipdom[0], Some(3));
+        assert_eq!(ipdom[1], Some(3));
+        assert_eq!(ipdom[2], Some(3));
+        assert_eq!(ipdom[3], None);
+    }
+
+    #[test]
+    fn detects_declared_blocks_in_zoo_models() {
+        // Structural detection must find at least as many block instances
+        // as the architecture builders declared, for every block model.
+        for (name, declared) in [
+            ("resnet18", 8usize),
+            ("resnet50", 16),
+            ("googlenet", 9),
+            ("densenet121", 58),
+            ("gpt2", 12),
+        ] {
+            let m = models::by_name(name).unwrap();
+            let blocks = detect_blocks(m.dag());
+            assert!(
+                blocks.len() >= declared,
+                "{name}: detected {} blocks, declared {declared}",
+                blocks.len()
+            );
+        }
+    }
+
+    #[test]
+    fn detected_blocks_are_repeated_in_resnet() {
+        let m = models::by_name("resnet18").unwrap();
+        let blocks = detect_blocks(m.dag());
+        let groups = repeated_blocks(&blocks, 2);
+        // ResNet18 has identity blocks repeated within stages.
+        assert!(!groups.is_empty());
+        for g in &groups {
+            assert!(g.len() >= 2);
+        }
+    }
+
+    #[test]
+    fn blocks_do_not_overlap_and_are_closed() {
+        for name in ["resnet50", "googlenet", "densenet121", "gpt2"] {
+            let m = models::by_name(name).unwrap();
+            let dag = m.dag();
+            let blocks = detect_blocks(dag);
+            let mut claimed = vec![false; m.len()];
+            for b in &blocks {
+                let member_set: std::collections::HashSet<_> =
+                    b.members.iter().copied().collect();
+                for &u in &b.members {
+                    assert!(!claimed[u], "{name}: overlap at {u}");
+                    claimed[u] = true;
+                    if u != b.output {
+                        for ch in dag.children(u) {
+                            assert!(
+                                member_set.contains(&ch),
+                                "{name}: member {u} leaks to {ch}"
+                            );
+                        }
+                    }
+                }
+                assert_eq!(*b.members.last().unwrap(), b.output);
+            }
+        }
+    }
+
+    #[test]
+    fn linear_model_has_no_blocks() {
+        let m = models::by_name("lenet5").unwrap();
+        assert!(detect_blocks(m.dag()).is_empty());
+    }
+
+    #[test]
+    fn single_block_nets_detect_one_block() {
+        for name in models::BLOCK_NETS {
+            let m = models::by_name(name).unwrap();
+            let blocks = detect_blocks(m.dag());
+            assert_eq!(blocks.len(), 1, "{name}");
+            // Matches the declared ground truth.
+            let declared: std::collections::HashSet<_> =
+                m.declared_blocks()[0].iter().copied().collect();
+            let found: std::collections::HashSet<_> =
+                blocks[0].members.iter().copied().collect();
+            assert_eq!(declared, found, "{name}");
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Theorem 1 / Theorem 2 property tests: the min-cut construction and the
+//! block-wise reduction must both match brute-force enumeration of Eq. (7)
+//! over all feasible cuts, on randomized DAGs and cost profiles satisfying
+//! Assumption 1.
+
+use super::baselines::brute_force_partition;
+use super::blockwise::blockwise_partition;
+use super::general::general_partition;
+use super::types::{Link, Problem};
+use crate::graph::Dag;
+use crate::profiles::CostGraph;
+use crate::util::prop::{for_all, random_layer_dag};
+use crate::util::rng::Rng;
+
+/// Random cost graph over a random layer DAG, honoring Assumption 1
+/// (ξ_D >= ξ_S elementwise).
+fn random_cost_graph(rng: &mut Rng, n: usize) -> CostGraph {
+    let edges = random_layer_dag(rng, n, 0.25);
+    let mut dag = Dag::new();
+    for i in 0..n {
+        dag.add_node(format!("v{i}"));
+    }
+    for (u, v) in edges {
+        dag.add_edge(u, v, 0.0);
+    }
+    let xi_s: Vec<f64> = (0..n).map(|_| rng.range(1e-4, 5e-2)).collect();
+    let xi_d: Vec<f64> = xi_s
+        .iter()
+        .map(|&s| s * rng.range(1.0, 20.0)) // device slower: Assumption 1
+        .collect();
+    let act_bytes: Vec<f64> = (0..n).map(|_| rng.range(1e3, 1e7)).collect();
+    let param_bytes: Vec<f64> = (0..n)
+        .map(|_| if rng.chance(0.5) { rng.range(0.0, 1e6) } else { 0.0 })
+        .collect();
+    CostGraph {
+        dag,
+        xi_d,
+        xi_s,
+        act_bytes,
+        param_bytes,
+        n_loc: rng.range(1.0, 20.0).round(),
+    }
+}
+
+fn random_link(rng: &mut Rng) -> Link {
+    Link {
+        up_bps: rng.range(1e4, 1e8),
+        down_bps: rng.range(1e4, 1e8),
+    }
+}
+
+#[test]
+fn theorem1_general_equals_brute_force() {
+    for_all("theorem1", 120, |rng| {
+        let n = 2 + rng.index(9); // brute force is 2^n
+        let c = random_cost_graph(rng, n);
+        assert!(c.satisfies_assumption1());
+        let link = random_link(rng);
+        let p = Problem::new(&c, link);
+        let bf = brute_force_partition(&p);
+        let gen = general_partition(&p);
+        assert!(p.is_feasible(&gen.device_set), "general infeasible");
+        assert!(
+            (gen.delay - bf.delay).abs() <= 1e-9 * (1.0 + bf.delay),
+            "general {} != brute force {} on n={n}",
+            gen.delay,
+            bf.delay
+        );
+    });
+}
+
+#[test]
+fn theorem2_blockwise_equals_brute_force() {
+    for_all("theorem2", 120, |rng| {
+        let n = 2 + rng.index(9);
+        let c = random_cost_graph(rng, n);
+        let link = random_link(rng);
+        let p = Problem::new(&c, link);
+        let bf = brute_force_partition(&p);
+        let bw = blockwise_partition(&p);
+        assert!(p.is_feasible(&bw.device_set), "blockwise infeasible");
+        assert!(
+            (bw.delay - bf.delay).abs() <= 1e-9 * (1.0 + bf.delay),
+            "blockwise {} != brute force {} on n={n}",
+            bw.delay,
+            bf.delay
+        );
+    });
+}
+
+#[test]
+fn general_optimal_without_assumption1_thanks_to_closure_edges() {
+    // The paper's Theorem 1 assumes ξ_D >= ξ_S. Our closure edges make the
+    // construction exact even when the assumption is violated (a device
+    // faster than the server for some layers), which matters for the
+    // heterogeneous fleets of Sec. VII-B. Verify against brute force.
+    for_all("no-assumption1", 80, |rng| {
+        let n = 2 + rng.index(8);
+        let mut c = random_cost_graph(rng, n);
+        // Violate Assumption 1 on some layers.
+        for v in 0..n {
+            if rng.chance(0.4) {
+                c.xi_d[v] = c.xi_s[v] * rng.range(0.05, 1.0);
+            }
+        }
+        let p = Problem::new(&c, random_link(rng));
+        let bf = brute_force_partition(&p);
+        let gen = general_partition(&p);
+        assert!(
+            (gen.delay - bf.delay).abs() <= 1e-9 * (1.0 + bf.delay),
+            "general {} != brute force {}",
+            gen.delay,
+            bf.delay
+        );
+    });
+}
+
+#[test]
+fn zoo_blocknets_all_methods_agree_with_brute_force() {
+    use crate::models;
+    use crate::profiles::{DeviceProfile, TrainCfg};
+    // The exact Fig. 7(b) setting: proposed algorithms must hit the
+    // brute-force optimum on all three single-block networks.
+    for model in models::BLOCK_NETS {
+        let m = models::by_name(model).unwrap();
+        for (i, device) in [
+            DeviceProfile::jetson_tx1(),
+            DeviceProfile::jetson_agx_orin(),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let c = CostGraph::build(&m, device, &DeviceProfile::rtx_a6000(), &TrainCfg::default());
+            for rate in [1e5, 1e6, 1e8] {
+                let p = Problem::new(&c, Link::symmetric(rate));
+                let bf = brute_force_partition(&p);
+                let gen = general_partition(&p);
+                let bw = blockwise_partition(&p);
+                for (name, got) in [("general", &gen), ("blockwise", &bw)] {
+                    assert!(
+                        (got.delay - bf.delay).abs() <= 1e-9 * (1.0 + bf.delay),
+                        "{model} dev{i} rate={rate}: {name} {} != bf {}",
+                        got.delay,
+                        bf.delay
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! Alg. 2: the general model partitioning algorithm.
+//!
+//! 1. Build the weighted partition DAG (Alg. 1).
+//! 2. For every parent vertex with multiple children, insert an auxiliary
+//!    vertex (Fig. 3) so its propagation weight is paid once however many
+//!    outgoing edges the cut crosses.
+//! 3. Add infinite-capacity precedence edges enforcing problem (12)'s
+//!    feasibility constraint (the paper leaves this to Assumption 1; the
+//!    closure edges make optimality unconditional — see DESIGN.md, ablation
+//!    `ablA` quantifies that they never change the result under
+//!    Assumption 1, as Theorem 1 predicts).
+//! 4. Solve minimum s-t cut by max flow (Dinic) and read the layer
+//!    assignment off the *execution* vertices (the auxiliary vertex carries
+//!    the execution semantics of a split layer; the original vertex becomes
+//!    a pure transmission node).
+//!
+//! For linear models (every layer has at most one child) the paper uses a
+//! brute-force scan; [`linear_scan_partition`] evaluates all `L+1` prefix
+//! cuts in O(L) total via running sums.
+
+use super::types::{Partition, Problem};
+// build_partition_dag (weights.rs) is the labelled/inspectable construction;
+// the hot path below computes the same weights inline.
+use crate::maxflow::{dinic, FlowNetwork};
+
+/// Instrumentation of a general-algorithm run (for Fig. 7/8 complexity and
+/// Table I/Fig. 9 timing harnesses).
+#[derive(Clone, Debug)]
+pub struct GeneralRun {
+    pub partition: Partition,
+    /// Vertices in the transformed flow network.
+    pub flow_vertices: usize,
+    /// Edges in the transformed flow network.
+    pub flow_edges: usize,
+    /// Dinic complexity estimate O(V^2 E).
+    pub complexity: f64,
+}
+
+/// Solve the partitioning problem with the general algorithm (Alg. 2).
+pub fn general_partition(problem: &Problem) -> Partition {
+    general_partition_instrumented(problem).partition
+}
+
+/// Alg. 2 with instrumentation (closure edges enabled, the default).
+pub fn general_partition_instrumented(problem: &Problem) -> GeneralRun {
+    general_partition_with_options(problem, true)
+}
+
+/// Alg. 2 with explicit control over the precedence (closure) edges — the
+/// paper's literal construction omits them and relies on Assumption 1;
+/// `experiments::ablations` quantifies the difference.
+pub fn general_partition_with_options(problem: &Problem, closure_edges: bool) -> GeneralRun {
+    let c = problem.costs;
+    let n = c.len();
+
+    // Linear fast path (Alg. 2 line 2-4): no parent has multiple children.
+    let has_multi_child_parent = (0..n).any(|v| c.dag.out_degree(v) > 1);
+    if !has_multi_child_parent {
+        let partition = linear_scan_partition(problem);
+        return GeneralRun {
+            partition,
+            flow_vertices: n + 2,
+            flow_edges: 2 * n + c.dag.num_edges(),
+            complexity: (n + 1) as f64, // O(L) scan
+        };
+    }
+
+    // Flow network layout: ids 0..n are layer vertices, n is source,
+    // n+1 is sink, auxiliary vertices appended after.
+    // exec[v] = flow vertex carrying layer v's execution semantics.
+    //
+    // The edge weights are Alg. 1's Eqs. (9)-(11) computed inline (the
+    // labelled `build_partition_dag` exists for inspection/DOT export; the
+    // hot path avoids its allocations — see EXPERIMENTS.md §Perf).
+    let inv_up = 1.0 / problem.link.up_bps;
+    let inv_down = 1.0 / problem.link.down_bps;
+    let mut exec: Vec<usize> = (0..n).collect();
+    let source = n;
+    let sink = n + 1;
+    let mut next = n + 2;
+    let split: Vec<bool> = (0..n).map(|v| c.dag.out_degree(v) > 1).collect();
+    for v in 0..n {
+        if split[v] {
+            exec[v] = next;
+            next += 1;
+        }
+    }
+    let mut net = FlowNetwork::new(next);
+
+    for v in 0..n {
+        // Server execution edge (v_D -> exec(v)), Eq. (10). Pinned inputs
+        // (raw data) may never move to the server: infinite weight.
+        let w = if problem.pin_inputs && c.dag.in_degree(v) == 0 {
+            f64::INFINITY
+        } else {
+            c.n_loc * c.xi_s[v]
+        };
+        net.add_edge(source, exec[v], w);
+        // Device execution edge (exec(v) -> v_S), Eq. (9) + download term.
+        net.add_edge(
+            exec[v],
+            sink,
+            c.n_loc * c.xi_d[v] + c.param_bytes[v] * (inv_up + inv_down),
+        );
+    }
+
+    // Propagation edges + the auxiliary (exec -> transmit) edge of Fig. 3.
+    for e in c.dag.edges() {
+        let w = c.n_loc
+            * (c.act_bytes[e.from] / problem.link.up_bps
+                + c.act_bytes[e.from] / problem.link.down_bps);
+        // Edge target: the execution vertex of the child (incoming edges of
+        // a split child are redirected to its auxiliary vertex, Eq. (13)).
+        let from = if split[e.from] { e.from } else { exec[e.from] };
+        net.add_edge(from, exec[e.to], w);
+        if closure_edges {
+            // Precedence: child on device => parent on device.
+            net.add_edge(exec[e.to], exec[e.from], f64::INFINITY);
+        }
+    }
+    for v in 0..n {
+        if split[v] {
+            // (v_p' -> v_p) carries one propagation weight, Eq. (15).
+            let w = c.n_loc
+                * (c.act_bytes[v] / problem.link.up_bps
+                    + c.act_bytes[v] / problem.link.down_bps);
+            net.add_edge(exec[v], v, w);
+            if closure_edges {
+                // Transmit node on device while execution on server is
+                // physically meaningless; forbid for unambiguous extraction.
+                net.add_edge(v, exec[v], f64::INFINITY);
+            }
+        }
+    }
+
+    let flow_vertices = net.len();
+    let flow_edges = net.num_edges();
+    let cut = dinic(&mut net, source, sink);
+    let device_set: Vec<bool> = (0..n).map(|v| cut.source_side[exec[v]]).collect();
+    debug_assert!(
+        !closure_edges || problem.is_feasible(&device_set),
+        "min-cut produced an infeasible partition"
+    );
+    let partition = problem.partition(device_set);
+    debug_assert!(
+        !closure_edges
+            || (partition.delay - cut.value).abs() <= 1e-6 * (1.0 + cut.value.abs()),
+        "cut value {} != Eq.(7) delay {}",
+        cut.value,
+        partition.delay
+    );
+    GeneralRun {
+        partition,
+        flow_vertices,
+        flow_edges,
+        complexity: (flow_vertices as f64).powi(2) * flow_edges as f64,
+    }
+}
+
+/// O(L) optimal scan for linear (chain) models: prefix cuts only.
+pub fn linear_scan_partition(problem: &Problem) -> Partition {
+    let c = problem.costs;
+    let order = c.dag.topo_order().expect("acyclic");
+    let n = c.len();
+    let inv_up = 1.0 / problem.link.up_bps;
+    let inv_down = 1.0 / problem.link.down_bps;
+
+    // Running totals while moving the cut from "all server" to "all device".
+    let mut device_compute = 0.0;
+    let mut server_compute: f64 = c.xi_s.iter().sum();
+    let mut device_params = 0.0;
+    // The empty device set is only admissible without input pinning.
+    let mut best_delay = if problem.pin_inputs {
+        f64::INFINITY
+    } else {
+        c.n_loc * server_compute
+    };
+    let mut best_prefix = if problem.pin_inputs { 1 } else { 0 };
+
+    for (i, &v) in order.iter().enumerate() {
+        device_compute += c.xi_d[v];
+        server_compute -= c.xi_s[v];
+        device_params += c.param_bytes[v];
+        // Boundary after taking prefix 0..=i: v's activation crosses unless
+        // v is the final layer (no children).
+        let boundary = if c.dag.out_degree(v) > 0 {
+            c.act_bytes[v]
+        } else {
+            0.0
+        };
+        let delay = c.n_loc
+            * (device_compute + server_compute + boundary * (inv_up + inv_down))
+            + device_params * (inv_up + inv_down);
+        if delay < best_delay {
+            best_delay = delay;
+            best_prefix = i + 1;
+        }
+    }
+
+    let mut device_set = vec![false; n];
+    for &v in order.iter().take(best_prefix) {
+        device_set[v] = true;
+    }
+    problem.partition(device_set)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::partition::types::Link;
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+
+    fn cg(model: &str) -> CostGraph {
+        let m = models::by_name(model).unwrap();
+        CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        )
+    }
+
+    #[test]
+    fn linear_scan_matches_exhaustive_prefixes() {
+        let cg = cg("lenet5");
+        let p = Problem::new(&cg, Link::symmetric(1e6));
+        let best = linear_scan_partition(&p);
+        // Exhaustive prefix check (prefix 0 excluded: the input is pinned).
+        let order = cg.dag.topo_order().unwrap();
+        let mut best_manual = f64::INFINITY;
+        for k in 1..=order.len() {
+            let mut mask = vec![false; cg.len()];
+            for &v in order.iter().take(k) {
+                mask[v] = true;
+            }
+            best_manual = best_manual.min(p.delay(&mask));
+        }
+        assert!((best.delay - best_manual).abs() < 1e-9);
+    }
+
+    #[test]
+    fn general_on_linear_model_uses_fast_path() {
+        let cg = cg("lenet5");
+        let p = Problem::new(&cg, Link::symmetric(1e6));
+        let run = general_partition_instrumented(&p);
+        assert_eq!(run.complexity, (cg.len() + 1) as f64);
+        assert!(p.is_feasible(&run.partition.device_set));
+    }
+
+    #[test]
+    fn general_on_blocknet_is_feasible_and_consistent() {
+        for model in ["block-residual", "block-inception", "block-dense"] {
+            let cg = cg(model);
+            let p = Problem::new(&cg, Link::symmetric(2e6));
+            let run = general_partition_instrumented(&p);
+            assert!(p.is_feasible(&run.partition.device_set), "{model}");
+            // Delay must beat or match every feasible trivial choice.
+            assert!(run.partition.delay <= p.device_only().delay + 1e-9, "{model}");
+            let mut input_only = vec![false; cg.len()];
+            input_only[0] = true;
+            assert!(run.partition.delay <= p.delay(&input_only) + 1e-9, "{model}");
+        }
+    }
+
+    #[test]
+    fn fast_link_pushes_layers_to_server() {
+        let cg = cg("block-residual");
+        // Infinite-ish bandwidth: transmission is free and the server is
+        // faster, so only the pinned input (the raw data) stays on the
+        // device.
+        let p = Problem::new(&cg, Link::symmetric(1e15));
+        let run = general_partition(&p);
+        assert_eq!(run.device_layers(), 1, "only the input layer");
+        assert!(run.device_set[0], "the input must stay pinned");
+        // The unpinned problem may do strictly better (central, free data).
+        let unpinned = Problem::unpinned(&cg, Link::symmetric(1e15));
+        assert!(general_partition(&unpinned).delay <= run.delay + 1e-12);
+    }
+
+    #[test]
+    fn slow_link_keeps_everything_on_device() {
+        let cg = cg("block-residual");
+        // Pathologically slow link: per-iteration raw-data upload (input is
+        // pinned to the device) dwarfs everything; device-only pays only
+        // the one-off model exchange and wins.
+        let p = Problem::new(&cg, Link::symmetric(10.0));
+        let run = general_partition(&p);
+        assert_eq!(run.device_layers(), cg.len());
+        assert!((run.delay - p.device_only().delay).abs() < 1e-6 * run.delay);
+    }
+
+    #[test]
+    fn full_models_partition_in_reasonable_time() {
+        for model in ["resnet18", "googlenet"] {
+            let cg = cg(model);
+            let p = Problem::new(&cg, Link::symmetric(5e6));
+            let run = general_partition_instrumented(&p);
+            assert!(p.is_feasible(&run.partition.device_set), "{model}");
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! The paper's core contribution: optimal model partitioning for split
+//! learning as a minimum s-t cut.
+//!
+//! * [`types`] — the partitioning problem ([`Problem`]) and the training-
+//!   delay objective Eq. (7) evaluated directly from model semantics.
+//! * [`weights`] — Alg. 1: DAG construction with the three edge-weight
+//!   classes (Eqs. 9-11).
+//! * [`general`] — Alg. 2: auxiliary-vertex restructuring (Fig. 3) +
+//!   max-flow min-cut (Theorem 1).
+//! * [`blocks`] — Alg. 3: block detection via branch/reconvergence
+//!   (immediate post-dominators).
+//! * [`blockwise`] — Alg. 4: intra-block cut test (Theorem 2) + block-level
+//!   abstraction (Eqs. 17-20), then Alg. 2 on the reduced DAG.
+//! * [`baselines`] — brute force (lower-set enumeration), regression [21],
+//!   OSS [17], device-only, central.
+
+pub mod types;
+pub mod weights;
+pub mod general;
+pub mod blocks;
+pub mod blockwise;
+pub mod baselines;
+
+pub use blockwise::blockwise_partition;
+pub use general::general_partition;
+pub use types::{Link, Partition, Problem};
+
+#[cfg(test)]
+mod equivalence_tests;

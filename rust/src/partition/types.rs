@@ -1,0 +1,251 @@
+//! Problem statement and the Eq. (7) training-delay objective.
+
+use crate::profiles::CostGraph;
+
+/// Wireless link state between a device and the server.
+///
+/// `up_Bps` is the device→server rate `R_D`, `down_Bps` the server→device
+/// rate `R_S`, both in **bytes per second** (the profiler reports sizes in
+/// bytes; the net simulator converts from bits).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    pub up_bps: f64,
+    pub down_bps: f64,
+}
+
+impl Link {
+    pub fn symmetric(bytes_per_sec: f64) -> Link {
+        Link {
+            up_bps: bytes_per_sec,
+            down_bps: bytes_per_sec,
+        }
+    }
+}
+
+/// A partitioning problem instance: cost graph + link state.
+///
+/// `pin_inputs` (default true) constrains every source layer (in-degree 0,
+/// i.e. the raw data) to the device side — the defining constraint of split
+/// learning: raw data never leaves the device, so sending it to the server
+/// is charged as that layer's smashed-data transmission. The unpinned
+/// variant exists for the privacy-violating `central` reference baseline
+/// and for ablations.
+#[derive(Clone, Debug)]
+pub struct Problem<'a> {
+    pub costs: &'a CostGraph,
+    pub link: Link,
+    pub pin_inputs: bool,
+}
+
+/// A model partition `c = {V_D, V_S}` with its evaluated training delay.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// `device_set[v]` is true iff layer v trains on the device.
+    pub device_set: Vec<bool>,
+    /// Eq. (7) training delay of this partition, in seconds.
+    pub delay: f64,
+}
+
+impl<'a> Problem<'a> {
+    pub fn new(costs: &'a CostGraph, link: Link) -> Problem<'a> {
+        assert!(link.up_bps > 0.0 && link.down_bps > 0.0, "rates must be positive");
+        Problem {
+            costs,
+            link,
+            pin_inputs: true,
+        }
+    }
+
+    /// Variant without the data-locality constraint (see struct docs).
+    pub fn unpinned(costs: &'a CostGraph, link: Link) -> Problem<'a> {
+        Problem {
+            pin_inputs: false,
+            ..Problem::new(costs, link)
+        }
+    }
+
+    /// Validity: the device set must be a lower set of the layer DAG
+    /// (problem (12)'s precedence constraint), and when `pin_inputs` every
+    /// source layer must be on the device.
+    pub fn is_feasible(&self, device_set: &[bool]) -> bool {
+        assert_eq!(device_set.len(), self.costs.len());
+        let lower_set = self.costs.dag.edges().iter().all(|e| {
+            // edge from -> to: if `to` is on the device, `from` must be too.
+            !device_set[e.to] || device_set[e.from]
+        });
+        if !lower_set {
+            return false;
+        }
+        if self.pin_inputs {
+            (0..self.costs.len())
+                .all(|v| self.costs.dag.in_degree(v) > 0 || device_set[v])
+        } else {
+            true
+        }
+    }
+
+    /// Evaluate the overall training delay Eq. (7) for a device set,
+    /// directly from model semantics (independent of any graph encoding —
+    /// this is the ground truth the min-cut construction is tested against).
+    ///
+    /// T(c) = N_loc (T_{D,C} + T_{D,S} + T_{S,C} + T_{S,G}) + T_{D,U} + T_{S,D}
+    pub fn delay(&self, device_set: &[bool]) -> f64 {
+        let c = self.costs;
+        assert_eq!(device_set.len(), c.len());
+        let mut compute_device = 0.0; // T_{D,C}
+        let mut compute_server = 0.0; // T_{S,C}
+        let mut boundary_bytes = 0.0; // Σ_{v ∈ V_c} a_v
+        let mut device_param_bytes = 0.0; // Σ_{v ∈ V_D} k_v
+        for v in 0..c.len() {
+            if device_set[v] {
+                compute_device += c.xi_d[v];
+                device_param_bytes += c.param_bytes[v];
+                // v ∈ V_c iff some child is on the server; smashed data is
+                // transmitted once regardless of how many such children.
+                let crosses = c
+                    .dag
+                    .out_edges(v)
+                    .iter()
+                    .any(|&e| !device_set[c.dag.edge(e).to]);
+                if crosses {
+                    boundary_bytes += c.act_bytes[v];
+                }
+            } else {
+                compute_server += c.xi_s[v];
+            }
+        }
+        let smashed_up = boundary_bytes / self.link.up_bps; // T_{D,S}
+        let grad_down = boundary_bytes / self.link.down_bps; // T_{S,G}
+        let model_up = device_param_bytes / self.link.up_bps; // T_{D,U}
+        let model_down = device_param_bytes / self.link.down_bps; // T_{S,D}
+        c.n_loc * (compute_device + compute_server + smashed_up + grad_down)
+            + model_up
+            + model_down
+    }
+
+    /// Wrap a device set into a [`Partition`] with its evaluated delay.
+    pub fn partition(&self, device_set: Vec<bool>) -> Partition {
+        let delay = self.delay(&device_set);
+        Partition { device_set, delay }
+    }
+
+    /// The all-on-server partition (the `central` reference baseline —
+    /// privacy-violating: raw data leaves the device uncharged).
+    pub fn central(&self) -> Partition {
+        self.partition(vec![false; self.costs.len()])
+    }
+
+    /// The all-on-device partition (the `device-only` baseline).
+    pub fn device_only(&self) -> Partition {
+        self.partition(vec![true; self.costs.len()])
+    }
+}
+
+impl Partition {
+    /// Number of layers on the device.
+    pub fn device_layers(&self) -> usize {
+        self.device_set.iter().filter(|&&b| b).count()
+    }
+
+    /// Human-readable cut description.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} device layers / {} total, T = {}",
+            self.device_layers(),
+            self.device_set.len(),
+            crate::util::fmt_secs(self.delay)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+
+    fn lenet_problem() -> CostGraph {
+        let m = models::by_name("lenet5").unwrap();
+        CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        )
+    }
+
+    #[test]
+    fn central_has_no_transmission_terms() {
+        let cg = lenet_problem();
+        let p = Problem::new(&cg, Link::symmetric(1e6));
+        let c = p.central();
+        // All layers on server: delay is pure server compute.
+        let server_total: f64 = cg.xi_s.iter().sum();
+        assert!((c.delay - cg.n_loc * server_total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_only_pays_model_upload() {
+        let cg = lenet_problem();
+        let p = Problem::new(&cg, Link::symmetric(1e6));
+        let d = p.device_only();
+        let device_total: f64 = cg.xi_d.iter().sum();
+        let k_total: f64 = cg.param_bytes.iter().sum();
+        let expected = cg.n_loc * device_total + k_total / 1e6 + k_total / 1e6;
+        assert!((d.delay - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn feasibility_checks_precedence() {
+        let cg = lenet_problem();
+        let p = Problem::new(&cg, Link::symmetric(1e6));
+        let n = cg.len();
+        // Prefix = feasible.
+        let mut mask = vec![false; n];
+        mask[0] = true;
+        mask[1] = true;
+        assert!(p.is_feasible(&mask));
+        // Hole in the middle = infeasible (layer 2 off-device feeding 3).
+        let mut bad = vec![false; n];
+        bad[0] = true;
+        bad[3] = true;
+        assert!(!p.is_feasible(&bad));
+    }
+
+    #[test]
+    fn boundary_counted_once_with_multiple_server_children() {
+        // Graph: 0 -> 1, 0 -> 2 with 0 on device, both children on server.
+        let m = {
+            use crate::models::{LayerKind, ModelGraph, Shape};
+            let (mut m, input) = ModelGraph::new("t", Shape::chw(1, 4, 4));
+            let a = m.add(LayerKind::Relu, &[input]);
+            let b = m.add(LayerKind::Relu, &[input]);
+            m.add(LayerKind::Add, &[a, b]);
+            m
+        };
+        let cg = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx1(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg {
+                batch: 1,
+                n_loc: 1,
+                bwd_ratio: 0.0,
+            },
+        );
+        let p = Problem::new(&cg, Link::symmetric(1.0)); // 1 B/s: bytes = secs
+        let mask = vec![true, false, false, false];
+        let t = p.delay(&mask);
+        // input activation = 16 elems * 4 B = 64 B, up + down = 128 s;
+        // both children AND add on server side -> server compute.
+        let server: f64 = cg.xi_s[1] + cg.xi_s[2] + cg.xi_s[3];
+        assert!((t - (128.0 + server)).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    #[should_panic(expected = "rates must be positive")]
+    fn rejects_zero_rate() {
+        let cg = lenet_problem();
+        let _ = Problem::new(&cg, Link::symmetric(0.0));
+    }
+}

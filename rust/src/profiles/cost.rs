@@ -1,0 +1,188 @@
+//! Cost graph: the layer DAG annotated with everything the partitioning
+//! problem needs — per-layer device/server compute delays (ξ_D, ξ_S),
+//! smashed-data bytes (a) and parameter bytes (k).
+//!
+//! This is the interface between the model zoo / profiler and the
+//! partition algorithms: Alg. 1-4 and all baselines consume a [`CostGraph`]
+//! only, so they work identically for measured or analytic profiles and
+//! for block-reduced graphs.
+
+use super::devices::DeviceProfile;
+use crate::graph::Dag;
+use crate::models::ModelGraph;
+
+/// Training configuration entering the delay model (Sec. III-B).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainCfg {
+    /// Mini-batch size (activations scale with it; Sec. VII-B.6 uses 32).
+    pub batch: usize,
+    /// Local iterations per epoch, `N_loc` in Eq. (7).
+    pub n_loc: u32,
+    /// Backward/forward FLOPs ratio (standard 2:1 for training).
+    pub bwd_ratio: f64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            batch: 32,
+            n_loc: 10,
+            bwd_ratio: 2.0,
+        }
+    }
+}
+
+/// The partitioning problem's view of a model: DAG + per-layer costs.
+#[derive(Clone, Debug)]
+pub struct CostGraph {
+    /// Layer dependency DAG (vertex ids match the cost vectors).
+    pub dag: Dag,
+    /// ξ_D: fwd+bwd compute delay of each layer on the device (seconds).
+    pub xi_d: Vec<f64>,
+    /// ξ_S: fwd+bwd compute delay of each layer on the server (seconds).
+    pub xi_s: Vec<f64>,
+    /// a_v: smashed-data bytes for a full mini-batch per layer output.
+    pub act_bytes: Vec<f64>,
+    /// k_v: parameter bytes per layer.
+    pub param_bytes: Vec<f64>,
+    /// N_loc.
+    pub n_loc: f64,
+}
+
+impl CostGraph {
+    /// Build from a zoo model + device/server profiles + training config.
+    pub fn build(
+        model: &ModelGraph,
+        device: &DeviceProfile,
+        server: &DeviceProfile,
+        cfg: &TrainCfg,
+    ) -> CostGraph {
+        let n = model.len();
+        let mut xi_d = Vec::with_capacity(n);
+        let mut xi_s = Vec::with_capacity(n);
+        let mut act_bytes = Vec::with_capacity(n);
+        let mut param_bytes = Vec::with_capacity(n);
+        for l in model.layers() {
+            let train_flops = l.flops as f64 * cfg.batch as f64 * (1.0 + cfg.bwd_ratio);
+            // The input layer is free: it is the data source.
+            let (d, s) = if train_flops == 0.0 && l.params == 0 {
+                (0.0, 0.0)
+            } else {
+                (
+                    train_flops / device.flops_per_sec + device.layer_overhead,
+                    train_flops / server.flops_per_sec + server.layer_overhead,
+                )
+            };
+            xi_d.push(d);
+            xi_s.push(s);
+            act_bytes.push(l.act_bytes() as f64 * cfg.batch as f64);
+            param_bytes.push(l.param_bytes() as f64);
+        }
+        CostGraph {
+            dag: model.dag().clone(),
+            xi_d,
+            xi_s,
+            act_bytes,
+            param_bytes,
+            n_loc: cfg.n_loc as f64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xi_d.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xi_d.is_empty()
+    }
+
+    /// Assumption 1 (Eq. 16): ξ_D >= ξ_S for every layer.
+    pub fn satisfies_assumption1(&self) -> bool {
+        self.xi_d
+            .iter()
+            .zip(&self.xi_s)
+            .all(|(&d, &s)| d >= s - 1e-15)
+    }
+
+    /// Total device-side compute delay if everything ran on the device.
+    pub fn total_device_compute(&self) -> f64 {
+        self.xi_d.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn cost_graph_dimensions_match_model() {
+        let m = models::by_name("resnet18").unwrap();
+        let cg = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        assert_eq!(cg.len(), m.len());
+        assert_eq!(cg.dag.num_edges(), m.dag().num_edges());
+        assert!(cg.satisfies_assumption1());
+    }
+
+    #[test]
+    fn input_layer_is_free() {
+        let m = models::by_name("lenet5").unwrap();
+        let cg = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx1(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        assert_eq!(cg.xi_d[0], 0.0);
+        assert_eq!(cg.xi_s[0], 0.0);
+        assert_eq!(cg.param_bytes[0], 0.0);
+        assert!(cg.act_bytes[0] > 0.0, "input activation is the raw batch");
+    }
+
+    #[test]
+    fn batch_scales_activations_linearly() {
+        let m = models::by_name("lenet5").unwrap();
+        let mk = |batch| {
+            CostGraph::build(
+                &m,
+                &DeviceProfile::jetson_tx1(),
+                &DeviceProfile::rtx_a6000(),
+                &TrainCfg {
+                    batch,
+                    ..TrainCfg::default()
+                },
+            )
+        };
+        let a = mk(8);
+        let b = mk(16);
+        for v in 0..a.len() {
+            assert!((b.act_bytes[v] - 2.0 * a.act_bytes[v]).abs() < 1e-9);
+            // Parameters do not scale with batch.
+            assert_eq!(a.param_bytes[v], b.param_bytes[v]);
+        }
+    }
+
+    #[test]
+    fn faster_device_lowers_xi_d() {
+        let m = models::by_name("googlenet").unwrap();
+        let cfg = TrainCfg::default();
+        let slow = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx1(),
+            &DeviceProfile::rtx_a6000(),
+            &cfg,
+        );
+        let fast = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_agx_orin(),
+            &DeviceProfile::rtx_a6000(),
+            &cfg,
+        );
+        assert!(fast.total_device_compute() < slow.total_device_compute());
+    }
+}

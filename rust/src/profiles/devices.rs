@@ -1,0 +1,125 @@
+//! Hardware tiers of the paper's prototype (Fig. 10) as analytic profiles.
+
+/// Compute profile of one device (or the server).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Effective sustained training throughput in FLOP/s (fp32, achievable
+    /// fraction of peak — not spec-sheet peak).
+    pub flops_per_sec: f64,
+    /// Fixed per-layer launch/dispatch overhead in seconds.
+    pub layer_overhead: f64,
+}
+
+impl DeviceProfile {
+    /// NVIDIA Jetson TX1 (256-core Maxwell): ~1 TFLOPS fp16 peak,
+    /// ~0.25 effective fp32 training.
+    pub fn jetson_tx1() -> DeviceProfile {
+        DeviceProfile {
+            name: "jetson-tx1",
+            flops_per_sec: 0.25e12,
+            layer_overhead: 250e-6,
+        }
+    }
+
+    /// NVIDIA Jetson TX2 (256-core Pascal): ~1.33 TFLOPS fp16 peak.
+    pub fn jetson_tx2() -> DeviceProfile {
+        DeviceProfile {
+            name: "jetson-tx2",
+            flops_per_sec: 0.35e12,
+            layer_overhead: 220e-6,
+        }
+    }
+
+    /// NVIDIA Jetson Orin Nano (1024-core Ampere).
+    pub fn jetson_orin_nano() -> DeviceProfile {
+        DeviceProfile {
+            name: "jetson-orin-nano",
+            flops_per_sec: 1.3e12,
+            layer_overhead: 150e-6,
+        }
+    }
+
+    /// NVIDIA Jetson AGX Orin (2048-core Ampere).
+    pub fn jetson_agx_orin() -> DeviceProfile {
+        DeviceProfile {
+            name: "jetson-agx-orin",
+            flops_per_sec: 4.5e12,
+            layer_overhead: 120e-6,
+        }
+    }
+
+    /// Server PC with one RTX A6000 (38.7 TFLOPS fp32 peak; ~50% achievable
+    /// on training workloads).
+    pub fn rtx_a6000() -> DeviceProfile {
+        DeviceProfile {
+            name: "rtx-a6000",
+            flops_per_sec: 19.0e12,
+            layer_overhead: 40e-6,
+        }
+    }
+
+    /// The paper's 20-device fleet: 5 of each Jetson tier (Sec. VII-B.1).
+    pub fn paper_fleet() -> Vec<DeviceProfile> {
+        let mut fleet = Vec::new();
+        for _ in 0..5 {
+            fleet.push(DeviceProfile::jetson_tx1());
+        }
+        for _ in 0..5 {
+            fleet.push(DeviceProfile::jetson_tx2());
+        }
+        for _ in 0..5 {
+            fleet.push(DeviceProfile::jetson_orin_nano());
+        }
+        for _ in 0..5 {
+            fleet.push(DeviceProfile::jetson_agx_orin());
+        }
+        fleet
+    }
+
+    /// A fleet of `n` devices cycling through the four Jetson tiers.
+    pub fn fleet_of(n: usize) -> Vec<DeviceProfile> {
+        let tiers = [
+            DeviceProfile::jetson_tx1(),
+            DeviceProfile::jetson_tx2(),
+            DeviceProfile::jetson_orin_nano(),
+            DeviceProfile::jetson_agx_orin(),
+        ];
+        (0..n).map(|i| tiers[i % 4].clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_dominates_every_device() {
+        // Assumption 1 (Eq. 16) requires the server at least as fast.
+        let server = DeviceProfile::rtx_a6000();
+        for d in DeviceProfile::paper_fleet() {
+            assert!(server.flops_per_sec > d.flops_per_sec, "{}", d.name);
+            assert!(server.layer_overhead <= d.layer_overhead, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn fleet_sizes() {
+        assert_eq!(DeviceProfile::paper_fleet().len(), 20);
+        assert_eq!(DeviceProfile::fleet_of(10).len(), 10);
+        assert_eq!(DeviceProfile::fleet_of(40).len(), 40);
+    }
+
+    #[test]
+    fn tiers_are_ordered() {
+        let f = [
+            DeviceProfile::jetson_tx1(),
+            DeviceProfile::jetson_tx2(),
+            DeviceProfile::jetson_orin_nano(),
+            DeviceProfile::jetson_agx_orin(),
+        ];
+        for w in f.windows(2) {
+            assert!(w[0].flops_per_sec < w[1].flops_per_sec);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Device/server compute-cost profiles.
+//!
+//! The paper profiles per-layer forward/backward times with PyTorch hooks
+//! on a Jetson testbed (Sec. VII-B.1: 5x TX1, 5x TX2, 5x Orin Nano,
+//! 5x AGX Orin, server with RTX A6000). Offline we substitute an analytic
+//! cost model: `delay = flops * batch * (1 + bwd_ratio) / throughput +
+//! overhead`, with effective throughputs calibrated to the hardware tiers
+//! (DESIGN.md §Substitutions). What the partition algorithms consume is
+//! only the per-layer ξ_D / ξ_S vectors, so any profile satisfying
+//! Assumption 1 exercises the identical code paths.
+
+pub mod devices;
+pub mod cost;
+
+pub use cost::{CostGraph, TrainCfg};
+pub use devices::DeviceProfile;

@@ -1,0 +1,113 @@
+//! PJRT engine: CPU client + HLO-text compilation cache.
+//!
+//! Follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` (the
+//! text parser reassigns instruction ids, which is why text — not the
+//! serialized proto — is the interchange format with jax >= 0.5).
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A PJRT CPU execution engine with a compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the HLO text at `path` under `key`.
+    pub fn load(&mut self, key: &str, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(key) {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.cache.insert(key.to_string(), exe);
+        }
+        Ok(self.cache.get(key).unwrap())
+    }
+
+    /// Execute a cached executable on literal inputs; returns the flattened
+    /// tuple elements (aot.py lowers with return_tuple=True).
+    pub fn run(&mut self, key: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .cache
+            .get(key)
+            .with_context(|| format!("executable '{key}' not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing '{key}'"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        literal.to_tuple().context("untupling result")
+    }
+
+    /// Number of compiled executables held.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat row-major slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(
+        data.len() == numel,
+        "literal data {} != shape numel {numel}",
+        data.len()
+    );
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(data.len() == numel, "literal data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let back = l.to_vec::<f32>().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    // Engine tests requiring the PJRT client live in rust/tests/ (they link
+    // against libxla_extension and need the artifacts built).
+}

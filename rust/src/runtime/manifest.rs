@@ -1,0 +1,219 @@
+//! Artifact manifest: shapes and file names of every AOT-compiled function,
+//! parsed from `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Declared input tensor of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub img: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub stages: usize,
+    pub cuts: Vec<usize>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let dir = Path::new(dir).to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let usize_field = |k: &str| -> Result<usize> {
+            json.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing '{k}'"))
+        };
+        let batch = usize_field("batch")?;
+        let img = usize_field("img")?;
+        let channels = usize_field("channels")?;
+        let num_classes = usize_field("num_classes")?;
+        let stages = usize_field("stages")?;
+        let cuts: Vec<usize> = json
+            .get("cuts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'cuts'"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let param_shapes: Vec<Vec<usize>> = json
+            .get("param_shapes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'param_shapes'"))?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default()
+            })
+            .collect();
+
+        let mut artifacts = BTreeMap::new();
+        let arts = json
+            .get("artifacts")
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        if let Json::Obj(map) = arts {
+            for (name, info) in map {
+                let file = info
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact '{name}' missing file"))?;
+                let inputs = info
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|i| TensorSpec {
+                        shape: i
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                            .unwrap_or_default(),
+                        dtype: i
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("float32")
+                            .to_string(),
+                    })
+                    .collect();
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactInfo {
+                        file: dir.join(file),
+                        inputs,
+                    },
+                );
+            }
+        }
+
+        let m = Manifest {
+            dir,
+            batch,
+            img,
+            channels,
+            num_classes,
+            stages,
+            cuts,
+            param_shapes,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for cut in &self.cuts {
+            for prefix in ["dev_fwd", "srv_step", "dev_bwd"] {
+                let name = format!("{prefix}_cut{cut}");
+                let info = self
+                    .artifacts
+                    .get(&name)
+                    .ok_or_else(|| anyhow!("manifest missing artifact '{name}'"))?;
+                if !info.file.exists() {
+                    return Err(anyhow!("artifact file missing: {}", info.file.display()));
+                }
+            }
+        }
+        for name in ["full_step", "predict"] {
+            if !self.artifacts.contains_key(name) {
+                return Err(anyhow!("manifest missing artifact '{name}'"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Load the initial parameter values exported by aot.py.
+    pub fn load_init_params(&self) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join("init_params.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let arr = json.as_arr().ok_or_else(|| anyhow!("params not an array"))?;
+        let mut out = Vec::with_capacity(arr.len());
+        for (i, p) in arr.iter().enumerate() {
+            let mut flat = Vec::new();
+            flatten_into(p, &mut flat);
+            let expect: usize = self.param_shapes[i].iter().product();
+            if flat.len() != expect {
+                return Err(anyhow!(
+                    "param {i}: {} values, expected {expect}",
+                    flat.len()
+                ));
+            }
+            out.push(flat);
+        }
+        Ok(out)
+    }
+}
+
+fn flatten_into(v: &Json, out: &mut Vec<f32>) {
+    match v {
+        Json::Num(n) => out.push(*n as f32),
+        Json::Arr(items) => {
+            for i in items {
+                flatten_into(i, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        crate::runtime::artifacts_available(crate::runtime::DEFAULT_ARTIFACTS_DIR)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(crate::runtime::DEFAULT_ARTIFACTS_DIR).unwrap();
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.cuts, vec![1, 2, 3]);
+        assert_eq!(m.param_shapes.len(), 8);
+        assert!(m.artifacts.len() >= 11);
+        let params = m.load_init_params().unwrap();
+        assert_eq!(params.len(), 8);
+        assert_eq!(params[0].len(), 3 * 3 * 3 * 16);
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load("/nonexistent-dir").is_err());
+    }
+}

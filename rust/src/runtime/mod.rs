@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs on this path — the rust binary is self-contained once
+//! `make artifacts` has run.
+
+pub mod manifest;
+pub mod engine;
+pub mod split_exec;
+pub mod data;
+
+pub use engine::Engine;
+pub use manifest::Manifest;
+pub use split_exec::SplitTrainer;
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// True if the artifacts directory looks complete (manifest present).
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

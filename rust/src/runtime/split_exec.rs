@@ -1,0 +1,188 @@
+//! Split executor: drives real split-training steps through the PJRT
+//! engine — dev_fwd on the "device", srv_step on the "server", dev_bwd back
+//! on the device — with parameters held as XLA literals across steps.
+//!
+//! Placement is an accounting concept (both sides execute on the local CPU
+//! client); the coordinator charges the simulated link/compute delays. The
+//! numerics are the real L2 model compiled by aot.py.
+
+use super::data::Batch;
+use super::engine::{literal_f32, literal_i32, literal_scalar, Engine};
+use super::manifest::Manifest;
+use anyhow::{ensure, Context, Result};
+
+/// Outcome of one training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    pub loss: f32,
+    /// Bytes that crossed the simulated wire (smashed data + gradient).
+    pub wire_bytes: u64,
+    /// Cut used (0 = central/full-step on the server, stages = device-only).
+    pub cut: usize,
+}
+
+/// The split trainer: owns parameters and compiled executables.
+pub struct SplitTrainer {
+    engine: Engine,
+    manifest: Manifest,
+    /// Current parameter literals, one per model.PARAM_SHAPES entry.
+    params: Vec<xla::Literal>,
+}
+
+impl SplitTrainer {
+    /// Load artifacts + initial parameters and precompile every cut.
+    pub fn new(artifacts_dir: &str) -> Result<SplitTrainer> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let mut engine = Engine::cpu()?;
+        for (name, info) in &manifest.artifacts {
+            engine.load(name, &info.file)?;
+        }
+        let init = manifest.load_init_params()?;
+        let params = init
+            .iter()
+            .zip(&manifest.param_shapes)
+            .map(|(flat, shape)| literal_f32(flat, shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SplitTrainer {
+            engine,
+            manifest,
+            params,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Valid cut choices: 0 (central) plus the compiled split cuts.
+    pub fn available_cuts(&self) -> Vec<usize> {
+        let mut cuts = vec![0];
+        cuts.extend(self.manifest.cuts.iter().copied());
+        cuts
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> Result<(xla::Literal, xla::Literal)> {
+        let m = &self.manifest;
+        ensure!(batch.batch == m.batch, "batch size mismatch");
+        let x = literal_f32(&batch.x, &[m.batch, m.img, m.img, m.channels])?;
+        let labels = literal_i32(&batch.labels, &[m.batch])?;
+        Ok((x, labels))
+    }
+
+    /// Run one training step at the given cut (0 = central full step).
+    /// `cut == stages` is device-only: the same full step, accounted on the
+    /// device by the coordinator.
+    pub fn step(&mut self, cut: usize, batch: &Batch, lr: f32) -> Result<StepOutcome> {
+        let (x, labels) = self.batch_literals(batch)?;
+        if cut == 0 || cut >= self.manifest.stages {
+            return self.full_step(x, labels, lr, cut);
+        }
+        ensure!(
+            self.manifest.cuts.contains(&cut),
+            "cut {cut} not compiled (available: {:?})",
+            self.available_cuts()
+        );
+        let n_dev = 2 * cut;
+
+        // Device forward -> smashed activation.
+        let mut fwd_inputs = vec![x];
+        for p in &self.params[..n_dev] {
+            fwd_inputs.push(p.clone());
+        }
+        let x_again = fwd_inputs[0].clone();
+        let mut fwd_out = self
+            .engine
+            .run(&format!("dev_fwd_cut{cut}"), &fwd_inputs)
+            .context("dev_fwd")?;
+        let smashed = fwd_out.remove(0);
+        let smashed_bytes = smashed.size_bytes() as u64;
+
+        // Server step -> loss, gradient of smashed, updated server params.
+        let mut srv_inputs = vec![smashed, labels, literal_scalar(lr)];
+        for p in &self.params[n_dev..] {
+            srv_inputs.push(p.clone());
+        }
+        let mut srv_out = self
+            .engine
+            .run(&format!("srv_step_cut{cut}"), &srv_inputs)
+            .context("srv_step")?;
+        let loss = srv_out.remove(0).to_vec::<f32>()?[0];
+        let d_smashed = srv_out.remove(0);
+        let grad_bytes = d_smashed.size_bytes() as u64;
+        for (i, new_p) in srv_out.into_iter().enumerate() {
+            self.params[n_dev + i] = new_p;
+        }
+
+        // Device backward -> updated device params.
+        let mut bwd_inputs = vec![x_again, d_smashed, literal_scalar(lr)];
+        for p in &self.params[..n_dev] {
+            bwd_inputs.push(p.clone());
+        }
+        let bwd_out = self
+            .engine
+            .run(&format!("dev_bwd_cut{cut}"), &bwd_inputs)
+            .context("dev_bwd")?;
+        ensure!(bwd_out.len() == n_dev, "dev_bwd arity");
+        for (i, new_p) in bwd_out.into_iter().enumerate() {
+            self.params[i] = new_p;
+        }
+
+        Ok(StepOutcome {
+            loss,
+            wire_bytes: smashed_bytes + grad_bytes,
+            cut,
+        })
+    }
+
+    fn full_step(
+        &mut self,
+        x: xla::Literal,
+        labels: xla::Literal,
+        lr: f32,
+        cut: usize,
+    ) -> Result<StepOutcome> {
+        // cut 0 = the whole model on the server: the raw batch crosses the
+        // wire each iteration; cut >= stages = device-only: nothing crosses.
+        let wire_bytes = if cut == 0 { x.size_bytes() as u64 } else { 0 };
+        let mut inputs = vec![x, labels, literal_scalar(lr)];
+        for p in &self.params {
+            inputs.push(p.clone());
+        }
+        let mut out = self.engine.run("full_step", &inputs).context("full_step")?;
+        let loss = out.remove(0).to_vec::<f32>()?[0];
+        for (i, new_p) in out.into_iter().enumerate() {
+            self.params[i] = new_p;
+        }
+        Ok(StepOutcome {
+            loss,
+            wire_bytes,
+            cut,
+        })
+    }
+
+    /// Evaluate accuracy on a batch with the current parameters.
+    pub fn accuracy(&mut self, batch: &Batch) -> Result<f64> {
+        let (x, _) = self.batch_literals(batch)?;
+        let mut inputs = vec![x];
+        for p in &self.params {
+            inputs.push(p.clone());
+        }
+        let out = self.engine.run("predict", &inputs).context("predict")?;
+        let logits = out[0].to_vec::<f32>()?;
+        let classes = self.manifest.num_classes;
+        let mut correct = 0usize;
+        for (i, &label) in batch.labels.iter().enumerate() {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == label as usize {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / batch.labels.len() as f64)
+    }
+}

@@ -1,0 +1,109 @@
+//! Per-component delay decomposition of Eq. (7) — the quantities Fig. 16
+//! plots (device compute / server compute / transmission).
+
+use crate::partition::Problem;
+
+/// Decomposed training delay for one epoch under a given partition.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DelayBreakdown {
+    /// N_loc * T_{D,C}: device-side compute.
+    pub device_compute: f64,
+    /// N_loc * T_{S,C}: server-side compute.
+    pub server_compute: f64,
+    /// N_loc * (T_{D,S} + T_{S,G}): smashed data up + gradients down.
+    pub activation_transfer: f64,
+    /// T_{D,U} + T_{S,D}: device-side model upload + download.
+    pub model_transfer: f64,
+}
+
+impl DelayBreakdown {
+    /// Compute the decomposition for a device set (components sum to
+    /// [`Problem::delay`]).
+    pub fn of(problem: &Problem, device_set: &[bool]) -> DelayBreakdown {
+        let c = problem.costs;
+        let mut device_compute = 0.0;
+        let mut server_compute = 0.0;
+        let mut boundary_bytes = 0.0;
+        let mut device_param_bytes = 0.0;
+        for v in 0..c.len() {
+            if device_set[v] {
+                device_compute += c.xi_d[v];
+                device_param_bytes += c.param_bytes[v];
+                if c
+                    .dag
+                    .out_edges(v)
+                    .iter()
+                    .any(|&e| !device_set[c.dag.edge(e).to])
+                {
+                    boundary_bytes += c.act_bytes[v];
+                }
+            } else {
+                server_compute += c.xi_s[v];
+            }
+        }
+        DelayBreakdown {
+            device_compute: c.n_loc * device_compute,
+            server_compute: c.n_loc * server_compute,
+            activation_transfer: c.n_loc
+                * (boundary_bytes / problem.link.up_bps + boundary_bytes / problem.link.down_bps),
+            model_transfer: device_param_bytes / problem.link.up_bps
+                + device_param_bytes / problem.link.down_bps,
+        }
+    }
+
+    /// Total = Eq. (7).
+    pub fn total(&self) -> f64 {
+        self.device_compute + self.server_compute + self.activation_transfer + self.model_transfer
+    }
+
+    /// All transmission components combined (Fig. 16's third bar).
+    pub fn transmission(&self) -> f64 {
+        self.activation_transfer + self.model_transfer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::partition::{blockwise_partition, Link};
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+
+    #[test]
+    fn components_sum_to_delay() {
+        let m = models::by_name("googlenet").unwrap();
+        let c = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        for rate in [1e5, 1e6, 1e8] {
+            let p = Problem::new(&c, Link::symmetric(rate));
+            let part = blockwise_partition(&p);
+            let b = DelayBreakdown::of(&p, &part.device_set);
+            assert!(
+                (b.total() - part.delay).abs() < 1e-9 * (1.0 + part.delay),
+                "rate={rate}: {} vs {}",
+                b.total(),
+                part.delay
+            );
+        }
+    }
+
+    #[test]
+    fn central_is_pure_server_compute() {
+        let m = models::by_name("lenet5").unwrap();
+        let c = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx1(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        let p = Problem::new(&c, Link::symmetric(1e6));
+        let b = DelayBreakdown::of(&p, &vec![false; c.len()]);
+        assert_eq!(b.device_compute, 0.0);
+        assert_eq!(b.transmission(), 0.0);
+        assert!(b.server_compute > 0.0);
+    }
+}

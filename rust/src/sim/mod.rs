@@ -1,0 +1,16 @@
+//! Split-learning training-delay simulator (Sec. VII-B).
+//!
+//! Drives the full SL loop of Sec. III-A in simulated time: per epoch the
+//! server samples the selected device's link state, the chosen method
+//! decides a partition, and the epoch delay follows Eq. (7). Convergence
+//! experiments (Fig. 13-15, Table II) additionally model epochs-to-accuracy
+//! with parameterized learning curves ([`convergence`], a documented
+//! substitution for real CIFAR training — DESIGN.md §Substitutions).
+
+pub mod trainer;
+pub mod convergence;
+pub mod breakdown;
+
+pub use breakdown::DelayBreakdown;
+pub use convergence::{Dataset, LearningCurve};
+pub use trainer::{SimConfig, SimResult, Trainer};

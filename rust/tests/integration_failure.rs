@@ -1,0 +1,96 @@
+//! Failure-injection tests: corrupted artifacts, malformed manifests, and
+//! hostile inputs must produce errors, never panics or wrong results.
+
+use fastsplit::runtime::{Engine, Manifest};
+use std::io::Write;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fastsplit-failtest-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_is_an_error() {
+    let dir = tmpdir("missing");
+    let err = Manifest::load(dir.to_str().unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("manifest.json"), "{err:#}");
+}
+
+#[test]
+fn malformed_manifest_json_is_an_error() {
+    let dir = tmpdir("badjson");
+    std::fs::write(dir.join("manifest.json"), b"{ not json !").unwrap();
+    assert!(Manifest::load(dir.to_str().unwrap()).is_err());
+}
+
+#[test]
+fn manifest_missing_required_fields_is_an_error() {
+    let dir = tmpdir("nofields");
+    std::fs::write(dir.join("manifest.json"), br#"{"batch": 32}"#).unwrap();
+    let err = Manifest::load(dir.to_str().unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("missing"), "{err:#}");
+}
+
+#[test]
+fn manifest_referencing_absent_files_is_an_error() {
+    let dir = tmpdir("nofiles");
+    let manifest = r#"{
+        "batch": 32, "img": 16, "channels": 3, "num_classes": 10,
+        "stages": 4, "cuts": [1],
+        "param_shapes": [[3]],
+        "artifacts": {
+            "dev_fwd_cut1": {"file": "missing.hlo.txt", "inputs": []},
+            "srv_step_cut1": {"file": "missing.hlo.txt", "inputs": []},
+            "dev_bwd_cut1": {"file": "missing.hlo.txt", "inputs": []},
+            "full_step": {"file": "missing.hlo.txt", "inputs": []},
+            "predict": {"file": "missing.hlo.txt", "inputs": []}
+        }
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    let err = Manifest::load(dir.to_str().unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("missing"), "{err:#}");
+}
+
+#[test]
+fn garbage_hlo_text_fails_to_compile() {
+    let dir = tmpdir("badhlo");
+    let path = dir.join("garbage.hlo.txt");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(b"HloModule nonsense\nENTRY { this is not hlo }\n")
+        .unwrap();
+    drop(f);
+    let mut engine = Engine::cpu().unwrap();
+    assert!(engine.load("garbage", &path).is_err());
+    // The failed load must not poison the engine.
+    assert_eq!(engine.cached(), 0);
+}
+
+#[test]
+fn running_unloaded_executable_is_an_error() {
+    let mut engine = Engine::cpu().unwrap();
+    let err = match engine.run("never-loaded", &[]) {
+        Ok(_) => panic!("run of an unloaded executable succeeded"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("not loaded"));
+}
+
+#[test]
+fn init_params_shape_mismatch_is_an_error() {
+    // A manifest whose declared shape disagrees with the shipped values.
+    let dir = tmpdir("badparams");
+    if !fastsplit::runtime::artifacts_available(fastsplit::runtime::DEFAULT_ARTIFACTS_DIR) {
+        eprintln!("skipping: needs real artifacts to copy");
+        return;
+    }
+    // Copy the real artifacts, then corrupt init_params.json.
+    for entry in std::fs::read_dir(fastsplit::runtime::DEFAULT_ARTIFACTS_DIR).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dir.join(entry.file_name())).unwrap();
+    }
+    std::fs::write(dir.join("init_params.json"), b"[[1.0, 2.0]]").unwrap();
+    let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+    assert!(m.load_init_params().is_err());
+}

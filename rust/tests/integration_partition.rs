@@ -1,0 +1,163 @@
+//! Cross-module integration: zoo models x device tiers x link regimes,
+//! exercising the full partition stack (model -> cost graph -> Alg. 1-4 ->
+//! Eq. (7)) and the baseline battery together.
+
+use fastsplit::models;
+use fastsplit::partition::baselines::{partition_by_method, BASELINE_NAMES};
+use fastsplit::partition::blockwise::blockwise_partition_instrumented;
+use fastsplit::partition::general::general_partition_instrumented;
+use fastsplit::partition::{Link, Problem};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+
+fn tiers() -> Vec<DeviceProfile> {
+    vec![
+        DeviceProfile::jetson_tx1(),
+        DeviceProfile::jetson_tx2(),
+        DeviceProfile::jetson_orin_nano(),
+        DeviceProfile::jetson_agx_orin(),
+    ]
+}
+
+#[test]
+fn every_model_partitions_under_every_tier_and_rate() {
+    for model_name in models::MODEL_NAMES {
+        let model = models::by_name(model_name).unwrap();
+        for device in tiers() {
+            let costs = CostGraph::build(
+                &model,
+                &device,
+                &DeviceProfile::rtx_a6000(),
+                &TrainCfg::default(),
+            );
+            assert!(costs.satisfies_assumption1(), "{model_name}/{}", device.name);
+            for rate in [1e4, 1e6, 1e8] {
+                let p = Problem::new(&costs, Link::symmetric(rate));
+                let gen = general_partition_instrumented(&p);
+                let bw = blockwise_partition_instrumented(&p);
+                assert!(
+                    p.is_feasible(&gen.partition.device_set),
+                    "{model_name}/{}/{rate}: general infeasible",
+                    device.name
+                );
+                assert!(
+                    p.is_feasible(&bw.partition.device_set),
+                    "{model_name}/{}/{rate}: blockwise infeasible",
+                    device.name
+                );
+                let tol = 1e-9 * (1.0 + gen.partition.delay);
+                assert!(
+                    (gen.partition.delay - bw.partition.delay).abs() <= tol,
+                    "{model_name}/{}/{rate}: general {} != blockwise {}",
+                    device.name,
+                    gen.partition.delay,
+                    bw.partition.delay
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_baselines_run_on_all_models() {
+    for model_name in models::MODEL_NAMES {
+        let model = models::by_name(model_name).unwrap();
+        let costs = CostGraph::build(
+            &model,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        let link = Link::symmetric(1e6);
+        let p = Problem::new(&costs, link);
+        let proposed = partition_by_method("proposed", &p, link);
+        for method in BASELINE_NAMES {
+            let part = partition_by_method(method, &p, link);
+            assert!(part.delay > 0.0, "{model_name}/{method}");
+            if *method != "central" {
+                assert!(
+                    proposed.delay <= part.delay + 1e-9 * part.delay,
+                    "{model_name}: proposed {} beaten by {method} {}",
+                    proposed.delay,
+                    part.delay
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rate_monotonicity_of_optimal_delay() {
+    // A strictly better link can never make the optimal delay worse.
+    let model = models::by_name("googlenet").unwrap();
+    let costs = CostGraph::build(
+        &model,
+        &DeviceProfile::jetson_tx2(),
+        &DeviceProfile::rtx_a6000(),
+        &TrainCfg::default(),
+    );
+    let mut prev = f64::INFINITY;
+    for rate in [1e4, 3e4, 1e5, 1e6, 1e7, 1e8, 1e9] {
+        let p = Problem::new(&costs, Link::symmetric(rate));
+        let d = partition_by_method("proposed", &p, p.link).delay;
+        assert!(
+            d <= prev * (1.0 + 1e-9),
+            "optimal delay rose with rate: {prev} -> {d} at {rate}"
+        );
+        prev = d;
+    }
+}
+
+#[test]
+fn stronger_device_never_hurts() {
+    let model = models::by_name("resnet18").unwrap();
+    let mut prev = f64::INFINITY;
+    for device in tiers() {
+        let costs = CostGraph::build(
+            &model,
+            &device,
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        let p = Problem::new(&costs, Link::symmetric(1e6));
+        let d = partition_by_method("proposed", &p, p.link).delay;
+        assert!(
+            d <= prev * (1.0 + 1e-9),
+            "optimal delay rose with a faster device tier: {prev} -> {d}"
+        );
+        prev = d;
+    }
+}
+
+#[test]
+fn n_loc_scales_iteration_terms_only() {
+    let model = models::by_name("lenet5").unwrap();
+    let build = |n_loc: u32| {
+        CostGraph::build(
+            &model,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg {
+                batch: 32,
+                n_loc,
+                bwd_ratio: 2.0,
+            },
+        )
+    };
+    let c1 = build(1);
+    let c10 = build(10);
+    let link = Link::symmetric(1e6);
+    // Evaluate the same device set under both: delay difference must be
+    // exactly 9x the per-iteration part.
+    let mask: Vec<bool> = (0..c1.len()).map(|v| v < 4).collect();
+    let p1 = Problem::new(&c1, link);
+    let p10 = Problem::new(&c10, link);
+    let d1 = p1.delay(&mask);
+    let d10 = p10.delay(&mask);
+    let model_bytes: f64 = (0..4).map(|v| c1.param_bytes[v]).sum();
+    let model_xfer = model_bytes * 2.0 / 1e6;
+    let per_iter = d1 - model_xfer;
+    assert!(
+        (d10 - (10.0 * per_iter + model_xfer)).abs() < 1e-9 * d10,
+        "d1={d1} d10={d10}"
+    );
+}

@@ -1,0 +1,138 @@
+//! PJRT runtime integration: requires `make artifacts` to have run (tests
+//! self-skip otherwise so `cargo test` stays green pre-build).
+
+use fastsplit::runtime::data::Synthetic;
+use fastsplit::runtime::{artifacts_available, Manifest, SplitTrainer, DEFAULT_ARTIFACTS_DIR};
+
+fn skip() -> bool {
+    if !artifacts_available(DEFAULT_ARTIFACTS_DIR) {
+        eprintln!("skipping runtime integration: run `make artifacts`");
+        return true;
+    }
+    false
+}
+
+fn data(m: &Manifest, seed: u64) -> Synthetic {
+    Synthetic::new(m.img, m.channels, m.num_classes, m.batch, seed)
+}
+
+#[test]
+fn every_cut_trains_and_reduces_loss() {
+    if skip() {
+        return;
+    }
+    let mut trainer = SplitTrainer::new(DEFAULT_ARTIFACTS_DIR).unwrap();
+    let mut gen = data(trainer.manifest(), 1);
+    // Alternate through all cuts, including device-only (4): parameters are
+    // shared, so training progress must survive cut switches — the SL
+    // invariant the coordinator depends on.
+    let cuts = [0usize, 1, 2, 3, 4];
+    let mut first = None;
+    let mut losses = Vec::new();
+    for step in 0..30 {
+        let batch = gen.next_batch();
+        let out = trainer.step(cuts[step % cuts.len()], &batch, 0.1).unwrap();
+        assert!(out.loss.is_finite(), "step {step} loss not finite");
+        first.get_or_insert(out.loss);
+        losses.push(out.loss as f64);
+    }
+    let head: f64 = losses[..5].iter().sum::<f64>() / 5.0;
+    let tail: f64 = losses[losses.len() - 5..].iter().sum::<f64>() / 5.0;
+    assert!(
+        tail < head,
+        "loss did not decrease across cut switches: {head} -> {tail}"
+    );
+}
+
+#[test]
+fn split_step_matches_full_step_numerics() {
+    if skip() {
+        return;
+    }
+    // Two trainers from identical initial params; one runs the monolithic
+    // full step, the other the 3-artifact split pipeline. Losses must match
+    // step for step (the rust-side counterpart of the python
+    // test_split_equals_full_step).
+    let mut full = SplitTrainer::new(DEFAULT_ARTIFACTS_DIR).unwrap();
+    let mut split = SplitTrainer::new(DEFAULT_ARTIFACTS_DIR).unwrap();
+    let mut gen_a = data(full.manifest(), 2);
+    let mut gen_b = data(split.manifest(), 2);
+    for cut in [1usize, 2, 3] {
+        let ba = gen_a.next_batch();
+        let bb = gen_b.next_batch();
+        assert_eq!(ba.labels, bb.labels);
+        let lf = full.step(0, &ba, 0.05).unwrap().loss;
+        let ls = split.step(cut, &bb, 0.05).unwrap().loss;
+        assert!(
+            (lf - ls).abs() < 1e-4 * (1.0 + lf.abs()),
+            "cut {cut}: full {lf} vs split {ls}"
+        );
+    }
+}
+
+#[test]
+fn wire_bytes_match_manifest_shapes() {
+    if skip() {
+        return;
+    }
+    let mut trainer = SplitTrainer::new(DEFAULT_ARTIFACTS_DIR).unwrap();
+    let m = trainer.manifest().clone();
+    let mut gen = data(&m, 3);
+    for cut in m.cuts.clone() {
+        let batch = gen.next_batch();
+        let out = trainer.step(cut, &batch, 0.05).unwrap();
+        let smashed_elems: usize = m.artifacts[&format!("srv_step_cut{cut}")].inputs[0].numel();
+        // smashed up + gradient down, fp32.
+        assert_eq!(out.wire_bytes, (2 * smashed_elems * 4) as u64, "cut {cut}");
+    }
+}
+
+#[test]
+fn accuracy_improves_with_training() {
+    if skip() {
+        return;
+    }
+    let mut trainer = SplitTrainer::new(DEFAULT_ARTIFACTS_DIR).unwrap();
+    let mut gen = data(trainer.manifest(), 4);
+    let evals: Vec<_> = (0..4).map(|_| gen.next_batch()).collect();
+    let acc_mean = |t: &mut SplitTrainer, evals: &[fastsplit::runtime::data::Batch]| {
+        evals.iter().map(|b| t.accuracy(b).unwrap()).sum::<f64>() / evals.len() as f64
+    };
+    let acc0 = acc_mean(&mut trainer, &evals);
+    let mut losses = Vec::new();
+    for _ in 0..120 {
+        let batch = gen.next_batch();
+        losses.push(trainer.step(2, &batch, 0.05).unwrap().loss as f64);
+    }
+    let acc1 = acc_mean(&mut trainer, &evals);
+    let head: f64 = losses[..10].iter().sum::<f64>() / 10.0;
+    let tail: f64 = losses[losses.len() - 10..].iter().sum::<f64>() / 10.0;
+    assert!(tail < head, "loss did not decrease: {head} -> {tail}");
+    // Accuracy on a 128-sample eval set is noisy; allow slack but require
+    // no collapse.
+    assert!(
+        acc1 >= acc0 - 0.05,
+        "accuracy collapsed after training: {acc0} -> {acc1}"
+    );
+}
+
+#[test]
+fn invalid_cut_is_rejected() {
+    if skip() {
+        return;
+    }
+    let mut trainer = SplitTrainer::new(DEFAULT_ARTIFACTS_DIR).unwrap();
+    let mut gen = data(trainer.manifest(), 5);
+    let batch = gen.next_batch();
+    // Cut 7 is beyond stages and maps to device-only (full step) — allowed.
+    assert!(trainer.step(7, &batch, 0.05).is_ok());
+    // Wrong batch size is rejected.
+    let mut small = Synthetic::new(
+        trainer.manifest().img,
+        trainer.manifest().channels,
+        trainer.manifest().num_classes,
+        8,
+        6,
+    );
+    assert!(trainer.step(1, &small.next_batch(), 0.05).is_err());
+}

@@ -1,0 +1,100 @@
+//! Simulator + experiment-harness integration: the scenario battery of
+//! Sec. VII-B runs end to end and exhibits the paper's qualitative shape
+//! (who wins, and roughly by how much).
+
+use fastsplit::net::{Band, ChannelCondition, NetConfig};
+use fastsplit::sim::{Dataset, SimConfig, Trainer};
+
+fn cfg(model: &str, method: &str, seed: u64) -> SimConfig {
+    SimConfig {
+        model: model.into(),
+        net: NetConfig {
+            band: Band::n257(),
+            condition: ChannelCondition::Normal,
+            ..NetConfig::default()
+        },
+        method: method.into(),
+        seed,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn paper_shape_proposed_beats_all_sl_baselines_on_googlenet() {
+    // Fig. 13-style check with reduced epochs: mean epoch delay of the
+    // proposed method beats OSS / device-only / regression, and the margin
+    // against the best baseline is in a plausible band (the paper reports
+    // 8-39% across scenarios; we accept >2% to stay robust to seeds).
+    let mean = |method: &str| {
+        let mut t = Trainer::new(cfg("googlenet", method, 7));
+        t.run_epochs(60).mean_epoch_delay
+    };
+    let proposed = mean("proposed");
+    let oss = mean("oss");
+    let dev = mean("device-only");
+    let reg = mean("regression");
+    for (name, d) in [("oss", oss), ("device-only", dev), ("regression", reg)] {
+        assert!(
+            proposed < d,
+            "proposed {proposed} not better than {name} {d}"
+        );
+    }
+    let best = oss.min(dev).min(reg);
+    assert!(
+        proposed < best * 0.98,
+        "margin too small: proposed {proposed} vs best baseline {best}"
+    );
+}
+
+#[test]
+fn mmwave_beats_sub6_for_proposed() {
+    // 10x bandwidth should reduce the transmission-bound epochs.
+    let mean = |band: Band| {
+        let mut c = cfg("googlenet", "proposed", 9);
+        c.net.band = band;
+        let mut t = Trainer::new(c);
+        t.run_epochs(40).mean_epoch_delay
+    };
+    assert!(mean(Band::n257()) < mean(Band::n1()));
+}
+
+#[test]
+fn non_iid_needs_more_total_delay() {
+    let total = |iid: bool| {
+        let mut t = Trainer::new(cfg("resnet18", "proposed", 11));
+        let (res, _) = t.run_to_accuracy(Dataset::Cifar10, iid, 5000);
+        res.total_delay
+    };
+    assert!(total(false) > total(true));
+}
+
+#[test]
+fn larger_fleet_does_not_break_the_loop() {
+    for devices in [10usize, 40] {
+        let mut c = cfg("resnet18", "proposed", 13);
+        c.net.num_devices = devices;
+        let mut t = Trainer::new(c);
+        let res = t.run_epochs(devices + 5);
+        // All devices participated at least once (round-robin fairness).
+        let seen: std::collections::HashSet<usize> =
+            res.records.iter().map(|r| r.device).collect();
+        assert_eq!(seen.len(), devices, "{devices} devices");
+    }
+}
+
+#[test]
+fn quick_experiment_harnesses_produce_reports() {
+    for id in ["fig7a", "fig8", "fig16", "ablB"] {
+        let out = fastsplit::experiments::run(id, true).unwrap();
+        assert!(out.len() > 100, "{id} output too small:\n{out}");
+    }
+    assert!(fastsplit::experiments::run("nope", true).is_none());
+}
+
+#[test]
+fn gpt2_scenario_runs() {
+    let mut t = Trainer::new(cfg("gpt2", "proposed", 17));
+    let res = t.run_epochs(10);
+    assert!(res.total_delay > 0.0);
+    assert!(res.mean_decision_time < 0.5);
+}
