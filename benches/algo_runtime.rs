@@ -55,10 +55,11 @@ fn main() {
         b.bench("gpt2/block-wise", || blockwise_partition(&p));
     }
     // Amortized planner (the coordinator's actual per-epoch hot path):
-    // structure once, re-solve per link state.
+    // structure + transformed network once, warm re-solve per link state.
+    // See benches/replan.rs for the dedicated cold-vs-warm comparison.
     for model in ["googlenet", "densenet121", "gpt2"] {
         let c = costs(model);
-        let planner = fastsplit::partition::blockwise::Planner::new(&c);
+        let mut planner = fastsplit::partition::blockwise::Planner::new(&c);
         let mut rate = 1e5;
         b.bench(&format!("planner/{model}/repartition"), || {
             rate = if rate > 1e8 { 1e5 } else { rate * 1.37 };

@@ -34,6 +34,20 @@ fn main() {
             let bd = DelayBreakdown::of(&p, &part.device_set);
             (part.delay, bd.total())
         });
+        // The same pipeline on the amortized planner (what the coordinator
+        // actually runs per epoch): warm re-solve instead of a full
+        // block-detection + network rebuild.
+        let mut planner = fastsplit::partition::blockwise::Planner::new(&costs);
+        let mut t = 0.0;
+        b.bench(&format!("epoch-decision-warm/{model}"), || {
+            t += 1.0;
+            let dev = net.select_device(t);
+            let link = net.sample_link(dev, t).to_link();
+            let p = Problem::new(&costs, link);
+            let part = planner.partition(link);
+            let bd = DelayBreakdown::of(&p, &part.device_set);
+            (part.delay, bd.total())
+        });
     }
 
     // Simulator epoch throughput per method (30-epoch chunks).

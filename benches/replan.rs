@@ -1,0 +1,124 @@
+//! Benchmark: amortized re-partitioning — cold network rebuild
+//! (`general_partition`) vs warm capacity-refresh re-solve
+//! (`PartitionPlanner`) across the model zoo, over the same cycling link
+//! trace. This is the dynamic-edge hot path: the coordinator re-makes the
+//! decision every epoch while only the link rates change.
+//!
+//! ```sh
+//! cargo bench --bench replan [-- filter] [--quick]
+//! ```
+//!
+//! Writes the cold/warm means and speedups to `BENCH_PR1.json` (override
+//! with `FASTSPLIT_REPLAN_OUT`, disable with `FASTSPLIT_REPLAN_OUT=-`) so
+//! the perf trajectory is tracked in-repo (see PERF.md).
+
+use fastsplit::partition::{general_partition, Link, PartitionPlanner, Problem};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use fastsplit::util::bench::Bencher;
+use fastsplit::util::json::Json;
+
+const MODELS: &[&str] = &[
+    "resnet18",
+    "resnet50",
+    "googlenet",
+    "densenet121",
+    "gpt2",
+    "block-inception",
+];
+
+fn costs(model: &str) -> CostGraph {
+    let m = fastsplit::models::by_name(model).unwrap();
+    CostGraph::build(
+        &m,
+        &DeviceProfile::jetson_tx2(),
+        &DeviceProfile::rtx_a6000(),
+        &TrainCfg::default(),
+    )
+}
+
+/// Deterministic fading-like link trace shared by the cold and warm runs.
+fn link_trace() -> Vec<Link> {
+    let mut links = Vec::with_capacity(64);
+    let mut rate = 1e5_f64;
+    for i in 0..64 {
+        rate = if rate > 1e8 { 1e5 } else { rate * 1.31 };
+        links.push(Link {
+            up_bps: rate,
+            down_bps: rate * (1.0 + (i % 4) as f64),
+        });
+    }
+    links
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let links = link_trace();
+    let mut rows: Vec<Json> = Vec::new();
+
+    for model in MODELS {
+        let c = costs(model);
+
+        // Correctness gate before timing: warm must equal cold on the trace.
+        let mut check = PartitionPlanner::new(&c);
+        for &link in &links {
+            let cold = general_partition(&Problem::new(&c, link));
+            let warm = check.partition(link);
+            assert_eq!(
+                warm.device_set, cold.device_set,
+                "{model}: warm replan diverged from cold rebuild"
+            );
+        }
+
+        // Guard against `-- filter` skipping a side: only read a result row
+        // if the bench call actually appended one.
+        let before = b.results().len();
+        let mut i = 0;
+        b.bench(&format!("replan/{model}/cold-rebuild"), || {
+            i = (i + 1) % links.len();
+            general_partition(&Problem::new(&c, links[i]))
+        });
+        let cold = (b.results().len() > before).then(|| b.results()[before].summary.mean);
+
+        let mut planner = PartitionPlanner::new(&c);
+        let before = b.results().len();
+        let mut i = 0;
+        b.bench(&format!("replan/{model}/warm-refresh"), || {
+            i = (i + 1) % links.len();
+            planner.partition(links[i])
+        });
+        let warm = (b.results().len() > before).then(|| b.results()[before].summary.mean);
+
+        if let (Some(cold), Some(warm)) = (cold, warm) {
+            let speedup = cold / warm.max(1e-12);
+            println!("replan/{model}: cold/warm speedup {speedup:.1}x");
+            let (fv, fe) = planner.flow_size().unwrap_or((0, 0));
+            rows.push(Json::obj(vec![
+                ("model", Json::str(*model)),
+                ("cold_rebuild_mean_s", Json::num(cold)),
+                ("warm_refresh_mean_s", Json::num(warm)),
+                ("speedup", Json::num(speedup)),
+                ("flow_vertices", Json::num(fv as f64)),
+                ("flow_edges", Json::num(fe as f64)),
+            ]));
+        }
+    }
+    b.finish();
+
+    let out = std::env::var("FASTSPLIT_REPLAN_OUT").unwrap_or_else(|_| "BENCH_PR1.json".into());
+    if out == "-" || rows.is_empty() {
+        return;
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("replan")),
+        ("measured", Json::Bool(true)),
+        (
+            "note",
+            Json::str("cold general_partition rebuild vs PartitionPlanner warm refresh, 64-link trace"),
+        ),
+        ("results", Json::Arr(rows)),
+    ]);
+    match std::fs::write(&out, doc.pretty() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -3,14 +3,19 @@
 //! The paper (Sec. V-A, VI-D) uses Dinic's algorithm; [`dinic`] is the
 //! production solver and [`push_relabel`] (FIFO push-relabel with the gap
 //! heuristic) is an independent implementation used for cross-checking and
-//! the solver ablation bench. Both operate on [`FlowNetwork`] with `f64`
-//! capacities (delays in seconds) and `f64::INFINITY` support for the
-//! precedence-enforcing edges.
+//! the solver ablation bench. Both operate on [`FlowNetwork`] — a frozen
+//! CSR residual network with `f64` capacities (delays in seconds) and
+//! `f64::INFINITY` support for the precedence-enforcing edges.
+//!
+//! Hot-path reuse: [`dinic_with`] takes caller-owned [`DinicScratch`]
+//! buffers, and `FlowNetwork::set_edge_capacity` re-capacitates edges
+//! without touching topology, so a network can be re-solved every epoch
+//! with zero allocation (see `partition::planner`).
 
 pub mod network;
 pub mod dinic;
 pub mod push_relabel;
 
-pub use dinic::dinic;
+pub use dinic::{dinic, dinic_with, DinicScratch};
 pub use network::{FlowNetwork, MinCut};
 pub use push_relabel::push_relabel;

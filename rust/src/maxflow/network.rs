@@ -1,4 +1,17 @@
 //! Residual flow network representation shared by both solvers.
+//!
+//! Storage is a frozen CSR adjacency: `offsets[v]..offsets[v+1]` indexes a
+//! flat `arcs` array of arc ids, built once by [`FlowNetwork::freeze`] (or
+//! lazily by the first solve) with a stable counting sort. Compared to the
+//! previous `Vec<Vec<u32>>` adjacency this removes one heap allocation per
+//! vertex and makes the solvers' BFS/DFS scans cache-friendly — the
+//! coordinator re-solves the same network every epoch (Sec. III-A), so the
+//! build cost is paid once and the scan cost every epoch.
+//!
+//! Capacity mutation never invalidates the CSR: [`FlowNetwork::reset`] and
+//! [`FlowNetwork::set_edge_capacity`] touch only the capacity arrays, which
+//! is what enables the planner's O(E) warm refresh (see
+//! `partition::planner`). Only [`FlowNetwork::add_edge`] invalidates it.
 
 /// Tolerance for treating residual capacity as zero (capacities are delays
 /// in seconds; 1e-15 s is far below any meaningful delay).
@@ -10,13 +23,17 @@ pub const EPS: f64 = 1e-15;
 #[derive(Clone, Debug)]
 pub struct FlowNetwork {
     /// arc target vertex
-    to: Vec<usize>,
+    to: Vec<u32>,
     /// residual capacity per arc
     cap: Vec<f64>,
-    /// adjacency: arc ids per vertex
-    adj: Vec<Vec<u32>>,
-    /// original capacity of each forward arc (for flow reporting)
+    /// original capacity of each forward arc (for flow reporting / reset)
     orig_cap: Vec<f64>,
+    /// CSR adjacency: arc ids of vertex `v` are
+    /// `arcs[offsets[v] as usize .. offsets[v+1] as usize]`.
+    offsets: Vec<u32>,
+    arcs: Vec<u32>,
+    /// True while `offsets`/`arcs` reflect the current arc set.
+    frozen: bool,
     n: usize,
 }
 
@@ -31,11 +48,19 @@ pub struct MinCut {
 
 impl FlowNetwork {
     pub fn new(n: usize) -> FlowNetwork {
+        FlowNetwork::with_capacity(n, 0)
+    }
+
+    /// Preallocate for `edges` forward edges (the planner knows the exact
+    /// count of the transformed DAG up front).
+    pub fn with_capacity(n: usize, edges: usize) -> FlowNetwork {
         FlowNetwork {
-            to: Vec::new(),
-            cap: Vec::new(),
-            adj: vec![Vec::new(); n],
-            orig_cap: Vec::new(),
+            to: Vec::with_capacity(2 * edges),
+            cap: Vec::with_capacity(2 * edges),
+            orig_cap: Vec::with_capacity(edges),
+            offsets: Vec::new(),
+            arcs: Vec::new(),
+            frozen: false,
             n,
         }
     }
@@ -49,27 +74,69 @@ impl FlowNetwork {
     }
 
     pub fn num_edges(&self) -> usize {
-        self.to.len() / 2
+        self.orig_cap.len()
     }
 
     /// Add a directed edge with the given capacity (may be `INFINITY`).
+    /// Invalidates the frozen adjacency (rebuilt on the next solve).
     pub fn add_edge(&mut self, from: usize, to: usize, capacity: f64) -> usize {
         assert!(from < self.n && to < self.n);
         assert!(capacity >= 0.0, "negative capacity");
-        let id = self.to.len();
-        self.to.push(to);
+        let id = self.orig_cap.len();
+        debug_assert!(self.to.len() == 2 * id);
+        self.to.push(to as u32);
         self.cap.push(capacity);
-        self.adj[from].push(id as u32);
-        self.to.push(from);
+        self.to.push(from as u32);
         self.cap.push(0.0);
-        self.adj[to].push(id as u32 + 1);
         self.orig_cap.push(capacity);
-        id / 2
+        self.frozen = false;
+        id
+    }
+
+    /// Source vertex of an arc (the target of its residual twin).
+    #[inline]
+    fn arc_src(&self, arc: usize) -> usize {
+        self.to[arc ^ 1] as usize
+    }
+
+    /// Build the CSR adjacency with a stable counting sort over arc
+    /// sources. Arc order within a vertex is insertion order, matching the
+    /// old per-vertex `Vec` layout (solver traversal order is unchanged).
+    pub fn freeze(&mut self) {
+        if self.frozen {
+            return;
+        }
+        let m = self.to.len();
+        self.offsets.clear();
+        self.offsets.resize(self.n + 1, 0);
+        for arc in 0..m {
+            let s = self.arc_src(arc);
+            self.offsets[s + 1] += 1;
+        }
+        for v in 0..self.n {
+            self.offsets[v + 1] += self.offsets[v];
+        }
+        // Fill through a separate cursor copy so `offsets` itself stays
+        // untouched (cursor[v] ends exactly at offsets[v+1]).
+        let mut cursor: Vec<u32> = self.offsets[..self.n].to_vec();
+        self.arcs.clear();
+        self.arcs.resize(m, 0);
+        for arc in 0..m {
+            let s = self.arc_src(arc);
+            self.arcs[cursor[s] as usize] = arc as u32;
+            cursor[s] += 1;
+        }
+        self.frozen = true;
+    }
+
+    /// Whether the CSR adjacency is current.
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
     }
 
     #[inline]
     pub(crate) fn arc_to(&self, arc: usize) -> usize {
-        self.to[arc]
+        self.to[arc] as usize
     }
 
     #[inline]
@@ -83,9 +150,25 @@ impl FlowNetwork {
         self.cap[arc ^ 1] += amount;
     }
 
+    /// Arc ids leaving vertex `v`. Requires a frozen network.
     #[inline]
     pub(crate) fn arcs(&self, v: usize) -> &[u32] {
-        &self.adj[v]
+        debug_assert!(self.frozen, "call freeze() before traversing");
+        &self.arcs[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Index range of `v`'s arcs in the flat CSR array (for solvers that
+    /// need to interleave traversal with capacity mutation).
+    #[inline]
+    pub(crate) fn arc_range(&self, v: usize) -> std::ops::Range<usize> {
+        debug_assert!(self.frozen, "call freeze() before traversing");
+        self.offsets[v] as usize..self.offsets[v + 1] as usize
+    }
+
+    /// Arc id stored at CSR position `i` (see [`FlowNetwork::arc_range`]).
+    #[inline]
+    pub(crate) fn arc_at(&self, i: usize) -> usize {
+        self.arcs[i] as usize
     }
 
     /// Flow currently routed through forward edge `k`.
@@ -106,10 +189,10 @@ impl FlowNetwork {
         let mut stack = vec![s];
         seen[s] = true;
         while let Some(v) = stack.pop() {
-            for &arc in &self.adj[v] {
+            for &arc in self.arcs(v) {
                 let arc = arc as usize;
                 if self.cap[arc] > EPS {
-                    let to = self.to[arc];
+                    let to = self.to[arc] as usize;
                     if !seen[to] {
                         seen[to] = true;
                         stack.push(to);
@@ -121,6 +204,7 @@ impl FlowNetwork {
     }
 
     /// Reset all arcs to their original capacities (reuse between solves).
+    /// Touches only capacities; the frozen adjacency stays valid.
     pub fn reset(&mut self) {
         for k in 0..self.orig_cap.len() {
             self.cap[2 * k] = self.orig_cap[k];
@@ -128,13 +212,26 @@ impl FlowNetwork {
         }
     }
 
+    /// Re-capacitate forward edge `k` and clear any routed flow on it: the
+    /// planner's warm-refresh primitive. Writing every edge between solves
+    /// is equivalent to rebuilding the network from scratch with the new
+    /// capacities (and is what `partition::planner` does each epoch); the
+    /// frozen adjacency stays valid because topology is untouched.
+    #[inline]
+    pub fn set_edge_capacity(&mut self, edge: usize, capacity: f64) {
+        debug_assert!(capacity >= 0.0, "negative capacity");
+        self.orig_cap[edge] = capacity;
+        self.cap[2 * edge] = capacity;
+        self.cap[2 * edge + 1] = 0.0;
+    }
+
     /// Sum of capacities crossing a given vertex bipartition (cut value
     /// computed directly — used by tests to validate solver results).
     pub fn cut_value(&self, source_side: &[bool]) -> f64 {
         let mut total = 0.0;
         for k in 0..self.orig_cap.len() {
-            let from = self.to[2 * k + 1];
-            let to = self.to[2 * k];
+            let from = self.to[2 * k + 1] as usize;
+            let to = self.to[2 * k] as usize;
             if source_side[from] && !source_side[to] {
                 total += self.orig_cap[k];
             }
@@ -168,5 +265,41 @@ mod tests {
         net.add_edge(2, 0, 7.0); // backward across the cut below
         let cut = net.cut_value(&[true, false, false]);
         assert_eq!(cut, 2.0);
+    }
+
+    #[test]
+    fn csr_preserves_insertion_order_per_vertex() {
+        let mut net = FlowNetwork::new(3);
+        let a = net.add_edge(0, 1, 1.0); // arc 2a
+        let b = net.add_edge(0, 2, 1.0); // arc 2b
+        let c = net.add_edge(1, 2, 1.0); // arc 2c, twin 2c+1 at vertex 2
+        net.freeze();
+        assert_eq!(net.arcs(0), &[2 * a as u32, 2 * b as u32][..]);
+        assert_eq!(net.arcs(1), &[(2 * a + 1) as u32, 2 * c as u32][..]);
+        assert_eq!(net.arcs(2), &[(2 * b + 1) as u32, (2 * c + 1) as u32][..]);
+    }
+
+    #[test]
+    fn add_edge_invalidates_and_refreeze_extends() {
+        let mut net = FlowNetwork::new(3);
+        net.add_edge(0, 1, 1.0);
+        net.freeze();
+        assert!(net.is_frozen());
+        let e = net.add_edge(1, 2, 4.0);
+        assert!(!net.is_frozen());
+        net.freeze();
+        assert_eq!(net.arcs(1).len(), 2); // twin of edge 0 + forward of e
+        assert_eq!(net.flow_on(e), 0.0);
+    }
+
+    #[test]
+    fn set_edge_capacity_recapacitates_and_clears_flow() {
+        let mut net = FlowNetwork::new(2);
+        let e = net.add_edge(0, 1, 5.0);
+        net.push_on(2 * e, 3.0);
+        net.set_edge_capacity(e, 7.5);
+        assert_eq!(net.flow_on(e), 0.0);
+        assert_eq!(net.arc_cap(2 * e), 7.5);
+        assert_eq!(net.arc_cap(2 * e + 1), 0.0);
     }
 }

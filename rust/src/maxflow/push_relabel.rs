@@ -10,6 +10,7 @@ use std::collections::VecDeque;
 /// Run push-relabel; returns the max-flow value and min-cut side.
 pub fn push_relabel(net: &mut FlowNetwork, s: usize, t: usize) -> MinCut {
     assert!(s != t);
+    net.freeze();
     let n = net.len();
     let mut height = vec![0usize; n];
     let mut excess = vec![0.0f64; n];
@@ -21,9 +22,10 @@ pub fn push_relabel(net: &mut FlowNetwork, s: usize, t: usize) -> MinCut {
     count[0] = n - 1;
     count[n] = 1;
 
-    // Saturate all source arcs.
-    let source_arcs: Vec<usize> = net.arcs(s).iter().map(|&a| a as usize).collect();
-    for arc in source_arcs {
+    // Saturate all source arcs (index through the CSR positions so the
+    // borrow doesn't conflict with push_on).
+    for i in net.arc_range(s) {
+        let arc = net.arc_at(i);
         let cap = net.arc_cap(arc);
         if cap > EPS {
             let to = net.arc_to(arc);
@@ -88,10 +90,10 @@ fn discharge(
 ) {
     let n = net.len();
     while excess[v] > EPS {
-        let arcs: Vec<usize> = net.arcs(v).iter().map(|&a| a as usize).collect();
         let mut min_height = usize::MAX;
         let mut pushed_any = false;
-        for arc in arcs {
+        for i in net.arc_range(v) {
+            let arc = net.arc_at(i);
             let cap = net.arc_cap(arc);
             if cap <= EPS {
                 continue;

@@ -14,6 +14,7 @@
 
 use super::blocks::{detect_blocks, Block};
 use super::general::{general_partition_instrumented, GeneralRun};
+use super::planner::PartitionPlanner;
 use super::types::{Partition, Problem};
 use crate::graph::Dag;
 use crate::maxflow::{dinic, FlowNetwork};
@@ -88,21 +89,30 @@ pub fn blockwise_partition_instrumented(problem: &Problem) -> BlockwiseRun {
 }
 
 /// Amortized block-wise planner: the structural work of Alg. 3/4 — block
-/// detection, the Theorem 2 tests, and the reduction mapping — depends only
-/// on the model's DAG and activation sizes, **not** on the link state. The
+/// detection, the Theorem 2 tests, the reduction mapping, **and** the
+/// transformed flow network of the (reduced) DAG — depends only on the
+/// model's DAG and activation sizes, **not** on the link state. The
 /// coordinator re-partitions every epoch as rates change (Sec. III-A), so
-/// the planner does the structure once and each [`Planner::partition`] call
-/// only rebuilds edge weights and solves the (reduced) min cut.
-/// EXPERIMENTS.md §Perf quantifies the speedup over the one-shot Alg. 4.
+/// construction does all of that once and each [`Planner::partition`] call
+/// is a warm [`PartitionPlanner`] re-solve: an O(E) capacity refresh + a
+/// Dinic run on reusable scratch, with no allocation and no topology work.
+/// PERF.md quantifies the speedup over the one-shot Alg. 4.
 pub struct Planner {
-    costs: CostGraph,
-    reduced: Option<(CostGraph, Vec<usize>)>,
+    /// `Some((full_costs, map))` when blocks were abstracted: the full
+    /// cost graph (for expansion + Eq. (7) evaluation) and the
+    /// full-vertex -> reduced-vertex mapping. `None` when the inner
+    /// planner already works on the full DAG (it owns its own copy;
+    /// holding a second one here would just duplicate gpt2-scale graphs).
+    expand: Option<(CostGraph, Vec<usize>)>,
+    /// Warm solver over the reduced DAG (or the full DAG if no block
+    /// passed the Theorem 2 test).
+    inner: PartitionPlanner,
     blocks_detected: usize,
     blocks_abstracted: usize,
 }
 
 impl Planner {
-    /// Run detection + Theorem 2 tests + reduction once.
+    /// Run detection + Theorem 2 tests + reduction + network build once.
     pub fn new(costs: &CostGraph) -> Planner {
         let blocks = detect_blocks(&costs.dag);
         let abstractable: Vec<&Block> = blocks
@@ -111,14 +121,15 @@ impl Planner {
             .collect();
         let blocks_detected = blocks.len();
         let blocks_abstracted = abstractable.len();
-        let reduced = if abstractable.is_empty() {
-            None
+        let (inner, expand) = if abstractable.is_empty() {
+            (PartitionPlanner::new(costs), None)
         } else {
-            Some(reduce(costs, &abstractable))
+            let (reduced, map) = reduce(costs, &abstractable);
+            (PartitionPlanner::new(&reduced), Some((costs.clone(), map)))
         };
         Planner {
-            costs: costs.clone(),
-            reduced,
+            expand,
+            inner,
             blocks_detected,
             blocks_abstracted,
         }
@@ -133,17 +144,15 @@ impl Planner {
     }
 
     /// Solve for the current link state (the per-epoch hot path).
-    pub fn partition(&self, link: crate::partition::Link) -> Partition {
-        let problem = Problem::new(&self.costs, link);
-        match &self.reduced {
-            None => general_partition_instrumented(&problem).partition,
-            Some((reduced, to_reduced)) => {
-                let reduced_problem = Problem::new(reduced, link);
-                let run = general_partition_instrumented(&reduced_problem);
-                let device_set: Vec<bool> = (0..self.costs.len())
-                    .map(|v| run.partition.device_set[to_reduced[v]])
+    pub fn partition(&mut self, link: crate::partition::Link) -> Partition {
+        match &self.expand {
+            None => self.inner.partition(link),
+            Some((costs, to_reduced)) => {
+                let run = self.inner.partition(link);
+                let device_set: Vec<bool> = (0..costs.len())
+                    .map(|v| run.device_set[to_reduced[v]])
                     .collect();
-                problem.partition(device_set)
+                Problem::new(costs, link).partition(device_set)
             }
         }
     }
@@ -382,7 +391,7 @@ mod tests {
     fn planner_matches_one_shot_blockwise_across_links() {
         for model in ["resnet18", "googlenet", "gpt2", "lenet5"] {
             let c = cg(model);
-            let planner = Planner::new(&c);
+            let mut planner = Planner::new(&c);
             for rate in [1e4, 1e6, 1e8] {
                 let link = Link::symmetric(rate);
                 let p = Problem::new(&c, link);

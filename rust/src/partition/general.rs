@@ -18,10 +18,9 @@
 //! brute-force scan; [`linear_scan_partition`] evaluates all `L+1` prefix
 //! cuts in O(L) total via running sums.
 
+use super::planner::TransformedNet;
 use super::types::{Partition, Problem};
-// build_partition_dag (weights.rs) is the labelled/inspectable construction;
-// the hot path below computes the same weights inline.
-use crate::maxflow::{dinic, FlowNetwork};
+use crate::maxflow::DinicScratch;
 
 /// Instrumentation of a general-algorithm run (for Fig. 7/8 complexity and
 /// Table I/Fig. 9 timing harnesses).
@@ -65,78 +64,20 @@ pub fn general_partition_with_options(problem: &Problem, closure_edges: bool) ->
         };
     }
 
-    // Flow network layout: ids 0..n are layer vertices, n is source,
-    // n+1 is sink, auxiliary vertices appended after.
-    // exec[v] = flow vertex carrying layer v's execution semantics.
-    //
-    // The edge weights are Alg. 1's Eqs. (9)-(11) computed inline (the
-    // labelled `build_partition_dag` exists for inspection/DOT export; the
-    // hot path avoids its allocations — see EXPERIMENTS.md §Perf).
-    let inv_up = 1.0 / problem.link.up_bps;
-    let inv_down = 1.0 / problem.link.down_bps;
-    let mut exec: Vec<usize> = (0..n).collect();
-    let source = n;
-    let sink = n + 1;
-    let mut next = n + 2;
-    let split: Vec<bool> = (0..n).map(|v| c.dag.out_degree(v) > 1).collect();
-    for v in 0..n {
-        if split[v] {
-            exec[v] = next;
-            next += 1;
-        }
-    }
-    let mut net = FlowNetwork::new(next);
-
-    for v in 0..n {
-        // Server execution edge (v_D -> exec(v)), Eq. (10). Pinned inputs
-        // (raw data) may never move to the server: infinite weight.
-        let w = if problem.pin_inputs && c.dag.in_degree(v) == 0 {
-            f64::INFINITY
-        } else {
-            c.n_loc * c.xi_s[v]
-        };
-        net.add_edge(source, exec[v], w);
-        // Device execution edge (exec(v) -> v_S), Eq. (9) + download term.
-        net.add_edge(
-            exec[v],
-            sink,
-            c.n_loc * c.xi_d[v] + c.param_bytes[v] * (inv_up + inv_down),
-        );
-    }
-
-    // Propagation edges + the auxiliary (exec -> transmit) edge of Fig. 3.
-    for e in c.dag.edges() {
-        let w = c.n_loc
-            * (c.act_bytes[e.from] / problem.link.up_bps
-                + c.act_bytes[e.from] / problem.link.down_bps);
-        // Edge target: the execution vertex of the child (incoming edges of
-        // a split child are redirected to its auxiliary vertex, Eq. (13)).
-        let from = if split[e.from] { e.from } else { exec[e.from] };
-        net.add_edge(from, exec[e.to], w);
-        if closure_edges {
-            // Precedence: child on device => parent on device.
-            net.add_edge(exec[e.to], exec[e.from], f64::INFINITY);
-        }
-    }
-    for v in 0..n {
-        if split[v] {
-            // (v_p' -> v_p) carries one propagation weight, Eq. (15).
-            let w = c.n_loc
-                * (c.act_bytes[v] / problem.link.up_bps
-                    + c.act_bytes[v] / problem.link.down_bps);
-            net.add_edge(exec[v], v, w);
-            if closure_edges {
-                // Transmit node on device while execution on server is
-                // physically meaningless; forbid for unambiguous extraction.
-                net.add_edge(v, exec[v], f64::INFINITY);
-            }
-        }
-    }
-
-    let flow_vertices = net.len();
-    let flow_edges = net.num_edges();
-    let cut = dinic(&mut net, source, sink);
-    let device_set: Vec<bool> = (0..n).map(|v| cut.source_side[exec[v]]).collect();
+    // The transformed network (Alg. 1's Eqs. (9)-(11) weights, Fig. 3
+    // auxiliary vertices, optional closure edges) is built by the shared
+    // `partition::planner::TransformedNet` — the same construction the
+    // amortized `PartitionPlanner` caches across epochs, so a cold one-shot
+    // solve here and a warm planner re-solve are bit-identical. (The
+    // labelled `build_partition_dag` in weights.rs remains the
+    // inspectable/DOT-export construction.)
+    let mut tnet = TransformedNet::build(c, problem.pin_inputs, closure_edges);
+    tnet.refresh(problem.link);
+    let mut scratch = DinicScratch::default();
+    let flow_vertices = tnet.num_vertices();
+    let flow_edges = tnet.num_edges();
+    let cut = tnet.min_cut(&mut scratch);
+    let device_set = tnet.device_set(&cut.source_side);
     debug_assert!(
         !closure_edges || problem.is_feasible(&device_set),
         "min-cut produced an infeasible partition"

@@ -7,6 +7,9 @@
 //!   classes (Eqs. 9-11).
 //! * [`general`] — Alg. 2: auxiliary-vertex restructuring (Fig. 3) +
 //!   max-flow min-cut (Theorem 1).
+//! * [`planner`] — amortized re-partitioning: the transformed network is
+//!   built once per (model, device-tier) and re-solved per epoch via an
+//!   O(E) capacity refresh ([`PartitionPlanner`], see PERF.md).
 //! * [`blocks`] — Alg. 3: block detection via branch/reconvergence
 //!   (immediate post-dominators).
 //! * [`blockwise`] — Alg. 4: intra-block cut test (Theorem 2) + block-level
@@ -17,12 +20,14 @@
 pub mod types;
 pub mod weights;
 pub mod general;
+pub mod planner;
 pub mod blocks;
 pub mod blockwise;
 pub mod baselines;
 
 pub use blockwise::blockwise_partition;
 pub use general::general_partition;
+pub use planner::PartitionPlanner;
 pub use types::{Link, Partition, Problem};
 
 #[cfg(test)]

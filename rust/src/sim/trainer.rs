@@ -128,7 +128,8 @@ impl Trainer {
         let device = self.net.select_device(self.sim_time);
         let tier = self.tier_of_device[device];
         let link = self.net.sample_link(device, self.sim_time).to_link();
-        let (tier_name, costs) = &self.tier_costs[tier];
+        let tier_name = self.tier_costs[tier].0;
+        let costs = &self.tier_costs[tier].1;
         let problem = Problem::new(costs, link);
 
         let t0 = Instant::now();

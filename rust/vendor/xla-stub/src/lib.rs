@@ -1,0 +1,231 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links against `libxla_extension`, which is not present in
+//! the reproduction containers. This stub keeps the whole workspace
+//! compiling and testable offline:
+//!
+//! * [`Literal`] is a real host-side tensor (enough for the engine's
+//!   literal construction/round-trip unit tests to run for real);
+//! * [`PjRtClient::cpu`] returns an error, so every PJRT-dependent path
+//!   (`SplitTrainer`, the `train` CLI command, runtime integration tests)
+//!   degrades to its existing "artifacts unavailable" skip behavior.
+//!
+//! Swap this path dependency for the real `xla` crate to run split
+//! training end-to-end; no call-site changes are needed.
+
+use std::fmt;
+
+/// Stub error type; satisfies `std::error::Error` so `?` converts into
+/// `anyhow::Error` at call sites.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real PJRT runtime (this build uses the offline xla stub)"
+    )))
+}
+
+/// Element types a [`Literal`] can hold. Public only because the
+/// [`NativeType`] trait mentions it; not part of the stable surface.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+
+    fn elem_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Conversion between native slices and [`Storage`].
+pub trait NativeType: Sized {
+    fn store(data: &[Self]) -> Storage;
+    fn load(storage: &Storage) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn store(data: &[f32]) -> Storage {
+        Storage::F32(data.to_vec())
+    }
+
+    fn load(storage: &Storage) -> Result<Vec<f32>> {
+        match storage {
+            Storage::F32(v) => Ok(v.clone()),
+            Storage::I32(_) => unavailable("f32 view of an i32 literal"),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn store(data: &[i32]) -> Storage {
+        Storage::I32(data.to_vec())
+    }
+
+    fn load(storage: &Storage) -> Result<Vec<i32>> {
+        match storage {
+            Storage::I32(v) => Ok(v.clone()),
+            Storage::F32(_) => unavailable("i32 view of an f32 literal"),
+        }
+    }
+}
+
+/// A host tensor: flat storage + dimensions. Functional in the stub.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            storage: T::store(data),
+        }
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.storage.len() {
+            return Err(Error(format!(
+                "reshape to {:?} ({} elements) from {} elements",
+                dims,
+                numel,
+                self.storage.len()
+            )));
+        }
+        Ok(Literal {
+            storage: self.storage.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Flat row-major copy of the elements.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.storage)
+    }
+
+    /// Flatten a tuple literal into its elements (real XLA only).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("tuple literals")
+    }
+
+    /// Total payload size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.storage.len() * self.storage.elem_bytes()
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(v: f32) -> Literal {
+        Literal {
+            storage: Storage::F32(vec![v]),
+            dims: Vec::new(),
+        }
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HLO text parsing")
+    }
+}
+
+/// XLA computation handle (opaque in the stub).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer handle returned by an execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("buffer readback")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execution")
+    }
+}
+
+/// PJRT client. `cpu()` always errors in the stub, which is the single
+/// gate that keeps every runtime path in "unavailable, skip" mode.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("the PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compilation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_and_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.size_bytes(), 16);
+    }
+
+    #[test]
+    fn reshape_mismatch_rejected() {
+        assert!(Literal::vec1(&[1i32, 2]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Repo-wide lint + build + test gate (run locally or from CI).
+#
+#   scripts/check.sh           # everything
+#   scripts/check.sh --fast    # skip the release build
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fast=0
+[[ "${1:-}" == "--fast" ]] && fast=1
+
+echo "==> cargo fmt --check"
+cargo fmt --all -- --check
+
+echo "==> cargo clippy -D warnings"
+cargo clippy --workspace --all-targets -- -D warnings
+
+if [[ $fast -eq 0 ]]; then
+  echo "==> cargo build --release"
+  cargo build --release
+fi
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "OK"
