@@ -1,0 +1,161 @@
+//! Benchmark: fleet-scale epoch decisions through the `FleetPlanner`
+//! facade — one `plan()` call answering a whole 10/100/1000-device fleet.
+//! Devices deduplicate into four Jetson tiers sharing one struct-of-arrays
+//! capacity layout, so a dirty epoch costs O(tiers · E) solve work plus
+//! O(devices) fan-out, and a clean epoch (links unchanged) is pure fan-out.
+//!
+//! ```sh
+//! cargo bench --bench fleet [-- filter] [--quick] [--smoke]
+//! ```
+//!
+//! `--smoke` is the CI fast mode: tiny measurement windows, the 1000-device
+//! sweep skipped, no JSON written — it exists so the bench compiles and
+//! runs on every push. A full run writes the epoch decision times to
+//! `BENCH_PR2.json` (override with `FASTSPLIT_FLEET_OUT`, disable with
+//! `FASTSPLIT_FLEET_OUT=-`) so the perf trajectory is tracked in-repo
+//! (see PERF.md).
+
+use fastsplit::partition::{FleetPlanner, FleetSpec, Link, PartitionPlanner};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use fastsplit::util::bench::{BenchConfig, Bencher};
+use fastsplit::util::json::Json;
+use std::time::Duration;
+
+const MODEL: &str = "googlenet";
+
+fn costs(device: &DeviceProfile) -> CostGraph {
+    let m = fastsplit::models::by_name(MODEL).unwrap();
+    CostGraph::build(
+        &m,
+        device,
+        &DeviceProfile::rtx_a6000(),
+        &TrainCfg::default(),
+    )
+}
+
+/// Deterministic per-(tier, epoch) link: every tier is dirty every epoch.
+fn epoch_link(tier: usize, epoch: u64) -> Link {
+    let phase = (epoch % 13 + 1) as f64;
+    Link {
+        up_bps: 2e5 * (1.0 + tier as f64) * phase,
+        down_bps: 8e5 * (1.0 + tier as f64) * phase,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = if smoke {
+        Bencher::with_config(BenchConfig {
+            measure_time: Duration::from_millis(40),
+            warmup_time: Duration::from_millis(10),
+            max_samples: 200,
+        })
+    } else {
+        Bencher::from_env()
+    };
+    let fleet_sizes: &[usize] = if smoke { &[10, 100] } else { &[10, 100, 1000] };
+
+    // Correctness gate before timing: fleet decisions must be bit-identical
+    // to per-tier PartitionPlanner solves over the same link trace.
+    {
+        let devices = DeviceProfile::fleet_of(100);
+        let spec = FleetSpec::from_fleet(&devices, costs);
+        let num_tiers = spec.num_tiers();
+        let mut reference: Vec<PartitionPlanner> = (0..num_tiers)
+            .map(|t| PartitionPlanner::new(spec.tier_costs(t)))
+            .collect();
+        let mut fleet = FleetPlanner::new(spec);
+        for epoch in 0..8u64 {
+            let reqs = fleet.spec().requests(|t| epoch_link(t, epoch));
+            // One reference solve per (tier, link) — all devices of a tier
+            // share the epoch link, so per-request solves would only
+            // re-check bit-exact cache copies at 100x the cost.
+            let want: Vec<_> = (0..num_tiers)
+                .map(|t| reference[t].partition(epoch_link(t, epoch)))
+                .collect();
+            for (r, d) in reqs.iter().zip(fleet.plan(&reqs)) {
+                assert_eq!(
+                    d.partition.device_set, want[r.tier].device_set,
+                    "fleet decision diverged from per-device planner"
+                );
+                assert_eq!(d.partition.delay.to_bits(), want[r.tier].delay.to_bits());
+            }
+        }
+        let s = fleet.stats();
+        assert_eq!(
+            s.refreshes,
+            8 * fleet.spec().num_tiers() as u64,
+            "expected exactly one refresh per dirty tier per epoch"
+        );
+    }
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in fleet_sizes {
+        let devices = DeviceProfile::fleet_of(n);
+        let spec = FleetSpec::from_fleet(&devices, costs);
+        let num_tiers = spec.num_tiers();
+
+        // Dirty epoch: fresh per-tier links every iteration — the facade
+        // refreshes + re-solves each tier, then fans decisions out.
+        let mut planner = FleetPlanner::new(spec);
+        let before = b.results().len();
+        let mut epoch = 0u64;
+        b.bench(&format!("fleet/{MODEL}/{n}dev/epoch-dirty"), || {
+            epoch += 1;
+            let reqs = planner.spec().requests(|t| epoch_link(t, epoch));
+            planner.plan(&reqs)
+        });
+        let dirty = (b.results().len() > before).then(|| b.results()[before].summary.mean);
+
+        // Clean epoch: identical links every iteration — after the first
+        // solve the epoch is pure cache fan-out (the facade's floor).
+        let before = b.results().len();
+        b.bench(&format!("fleet/{MODEL}/{n}dev/epoch-clean"), || {
+            let reqs = planner.spec().requests(|t| epoch_link(t, 0));
+            planner.plan(&reqs)
+        });
+        let clean = (b.results().len() > before).then(|| b.results()[before].summary.mean);
+
+        if let (Some(dirty), Some(clean)) = (dirty, clean) {
+            println!(
+                "fleet/{n}dev: dirty epoch {dirty:.3e}s ({:.3e}s/device), clean epoch {clean:.3e}s",
+                dirty / n as f64
+            );
+            rows.push(Json::obj(vec![
+                ("devices", Json::num(n as f64)),
+                ("tiers", Json::num(num_tiers as f64)),
+                ("epoch_dirty_mean_s", Json::num(dirty)),
+                ("epoch_dirty_per_device_s", Json::num(dirty / n as f64)),
+                ("epoch_clean_mean_s", Json::num(clean)),
+            ]));
+        }
+    }
+    b.finish();
+
+    if smoke {
+        println!("smoke mode: skipping BENCH_PR2.json");
+        return;
+    }
+    let out = std::env::var("FASTSPLIT_FLEET_OUT").unwrap_or_else(|_| "BENCH_PR2.json".into());
+    if out == "-" || rows.is_empty() {
+        return;
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fleet")),
+        ("measured", Json::Bool(true)),
+        (
+            "note",
+            Json::str(
+                "FleetPlanner::plan epoch decision over 10/100/1000-device fleets \
+                 (googlenet, 4 deduplicated Jetson tiers, per-tier links); dirty = fresh \
+                 links each epoch (refresh+solve per tier), clean = unchanged links \
+                 (cache fan-out only)",
+            ),
+        ),
+        ("results", Json::Arr(rows)),
+    ]);
+    match std::fs::write(&out, doc.pretty() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

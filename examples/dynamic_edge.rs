@@ -9,7 +9,9 @@
 
 use fastsplit::models;
 use fastsplit::net::{Band, ChannelCondition, EdgeNetwork, NetConfig};
-use fastsplit::partition::{general_partition, PartitionPlanner, Problem};
+use fastsplit::partition::{
+    general_partition, FleetPlanner, FleetSpec, PartitionPlanner, Problem,
+};
 use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
 use fastsplit::sim::{SimConfig, Trainer};
 use fastsplit::util::fmt_secs;
@@ -128,4 +130,40 @@ fn main() {
         fmt_secs(warm_time / links.len() as f64),
         cold_time / warm_time.max(1e-12),
     );
+
+    // Fleet-scale epoch decisions: the FleetPlanner facade answers a whole
+    // fleet in one plan() call. Devices deduplicate into four Jetson tiers
+    // sharing one struct-of-arrays capacity layout, and each tier's channel
+    // state is sampled once per epoch, so the epoch costs O(tiers · E) —
+    // not O(devices · E) — no matter how large the fleet grows.
+    println!("\nfleet-scale epoch decision (GoogLeNet, deduplicated Jetson tiers, per-tier links)");
+    let server = DeviceProfile::rtx_a6000();
+    for n in [10usize, 100, 1000] {
+        let devices = DeviceProfile::fleet_of(n);
+        let spec = FleetSpec::from_fleet(&devices, |d| {
+            CostGraph::build(&model, d, &server, &TrainCfg::default())
+        });
+        let tiers = spec.num_tiers();
+        let mut planner = FleetPlanner::new(spec);
+        let mut total = 0.0;
+        let fleet_epochs = 12usize;
+        for epoch in 0..fleet_epochs {
+            let tier_links: Vec<_> = (0..tiers)
+                .map(|t| net.sample_link(0, (epoch * tiers + t) as f64).to_link())
+                .collect();
+            let requests = planner.spec().requests(|tier| tier_links[tier]);
+            let t0 = Instant::now();
+            let decisions = planner.plan(&requests);
+            total += t0.elapsed().as_secs_f64();
+            assert_eq!(decisions.len(), n);
+        }
+        let stats = planner.stats();
+        println!(
+            "  {n:>4} devices / {tiers} tiers: {} per epoch ({} per device), {} refreshes over {} epochs",
+            fmt_secs(total / fleet_epochs as f64),
+            fmt_secs(total / (fleet_epochs * n) as f64),
+            stats.refreshes,
+            fleet_epochs,
+        );
+    }
 }

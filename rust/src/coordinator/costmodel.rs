@@ -9,6 +9,7 @@
 
 use crate::graph::Dag;
 use crate::models::{LayerKind, ModelGraph, Shape};
+use crate::partition::Partition;
 use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
 use crate::runtime::Manifest;
 
@@ -96,10 +97,14 @@ pub fn stage_cost_graph(
     }
 }
 
-/// Map a partition device-set over the stage chain to an artifact cut
-/// index: the number of *stages* on the device (input vertex excluded).
-pub fn device_set_to_cut(device_set: &[bool]) -> usize {
-    device_set.iter().skip(1).filter(|&&b| b).count()
+/// Map a stage-chain partition to an artifact cut index: the number of
+/// *stages* on the device, i.e. [`Partition::cut_layer`] minus the input
+/// vertex (vertex 0, pinned to the device). Feasible device sets on the
+/// chain are exactly the prefixes, so a non-prefix here is a solver bug.
+pub fn partition_to_cut(p: &Partition) -> usize {
+    p.cut_layer()
+        .expect("stage-chain partition must be a contiguous prefix")
+        .saturating_sub(1)
 }
 
 #[cfg(test)]
@@ -152,8 +157,10 @@ mod tests {
         for rate in [1e3, 1e5, 1e7, 1e9, 1e12] {
             let p = Problem::new(&cg, Link::symmetric(rate));
             let part = blockwise_partition(&p);
-            let cut = device_set_to_cut(&part.device_set);
+            let cut = partition_to_cut(&part);
             assert!(cut <= 4);
+            // The chain's device set is a prefix including the pinned input.
+            assert_eq!(part.cut_layer(), Some(cut + 1));
         }
     }
 }

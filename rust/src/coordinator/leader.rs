@@ -2,11 +2,10 @@
 //! decision → real split-training iterations via PJRT → Eq. (7) delay
 //! accounting in simulated time.
 
-use super::costmodel::{device_set_to_cut, stage_cost_graph};
+use super::costmodel::{partition_to_cut, stage_cost_graph};
 use crate::net::{EdgeNetwork, NetConfig};
-use crate::partition::blockwise::Planner;
-use crate::partition::Problem;
-use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use crate::partition::{FleetPlanner, FleetSpec, PlanRequest, Problem};
+use crate::profiles::{DeviceProfile, TrainCfg};
 use crate::runtime::data::Synthetic;
 use crate::runtime::SplitTrainer;
 use crate::sim::DelayBreakdown;
@@ -60,7 +59,13 @@ pub struct EpochReport {
     pub sim_delay: f64,
     pub breakdown: DelayBreakdown,
     /// Wall-clock of the partition decision (the paper's Table I metric).
+    /// This is the fleet facade's actual per-epoch cost: a refresh + solve
+    /// when the tier's link changed, a cache fan-out when it did not —
+    /// `decision_refreshed` says which one was measured.
     pub decision_time: f64,
+    /// True iff the decision ran a fresh solve (false only when the facade
+    /// served the tier's bit-identical cached decision).
+    pub decision_refreshed: bool,
     /// Real bytes that crossed the simulated wire this epoch.
     pub wire_bytes: u64,
     /// Real wall-clock of the epoch's PJRT execution.
@@ -73,14 +78,11 @@ pub struct Coordinator {
     trainer: SplitTrainer,
     net: EdgeNetwork,
     fleet: Vec<DeviceProfile>,
-    /// Stage cost graph per deduplicated fleet tier (the model and the
-    /// training config are fixed for the run, so this never changes).
-    tier_costs: Vec<(&'static str, CostGraph)>,
-    /// Amortized partition planner per tier: the transformed flow network
-    /// is built once here; each epoch's decision is a warm re-solve
-    /// (capacity refresh + Dinic on reusable scratch).
-    tier_planners: Vec<Planner>,
-    tier_of_device: Vec<usize>,
+    /// The fleet planning facade: per-tier stage cost graphs and
+    /// transformed networks, deduplicated and built once at construction
+    /// (the model and the training config are fixed for the run). Each
+    /// epoch's decision is a single [`FleetPlanner::plan`] call.
+    planner: FleetPlanner,
     data: Synthetic,
     eval_batch: crate::runtime::data::Batch,
     sim_time: f64,
@@ -95,33 +97,17 @@ impl Coordinator {
         let eval_batch = data.next_batch();
         let fleet = DeviceProfile::fleet_of(cfg.net.num_devices);
         let server = DeviceProfile::rtx_a6000();
-        // Deduplicate tiers: one cost graph + one planner per tier, shared
-        // by every device of that tier.
-        let mut tier_costs: Vec<(&'static str, CostGraph)> = Vec::new();
-        let mut tier_of_device = Vec::with_capacity(fleet.len());
-        for d in &fleet {
-            let idx = match tier_costs.iter().position(|(n, _)| *n == d.name) {
-                Some(i) => i,
-                None => {
-                    tier_costs.push((
-                        d.name,
-                        stage_cost_graph(trainer.manifest(), d, &server, &cfg.train),
-                    ));
-                    tier_costs.len() - 1
-                }
-            };
-            tier_of_device.push(idx);
-        }
-        let tier_planners = tier_costs.iter().map(|(_, c)| Planner::new(c)).collect();
+        let spec = FleetSpec::from_fleet(&fleet, |d| {
+            stage_cost_graph(trainer.manifest(), d, &server, &cfg.train)
+        });
+        let planner = FleetPlanner::new(spec);
         let net = EdgeNetwork::new(cfg.net.clone());
         Ok(Coordinator {
             cfg,
             trainer,
             net,
             fleet,
-            tier_costs,
-            tier_planners,
-            tier_of_device,
+            planner,
             data,
             eval_batch,
             sim_time: 0.0,
@@ -146,19 +132,24 @@ impl Coordinator {
         // 1. Collect network + device information.
         let device = self.net.select_device(self.sim_time);
         let link = self.net.sample_link(device, self.sim_time).to_link();
-        let tier = self.tier_of_device[device];
-        let tier_name = self.tier_costs[tier].0;
-        let costs = &self.tier_costs[tier].1;
+        let tier = self.planner.spec().tier_of(device);
+        let tier_name = self.planner.spec().tier_name(tier);
 
-        // 2. Decide the partition on the amortized hot path: the tier's
-        // planner already holds the transformed network, so the timed
-        // region is exactly the per-epoch work (capacity refresh + warm
-        // Dinic solve) — the paper's Table I decision metric.
-        let problem = Problem::new(costs, link);
+        // 2. Decide the partition through the fleet facade: the tier's
+        // transformed network is already built, so the timed region is
+        // exactly the per-epoch work (capacity refresh + warm solve for a
+        // dirty tier) — the paper's Table I decision metric.
         let t0 = Instant::now();
-        let partition = self.tier_planners[tier].partition(link);
+        let decision = self
+            .planner
+            .plan(&[PlanRequest { device, tier, link }])
+            .pop()
+            .expect("one decision per request");
         let decision_time = t0.elapsed().as_secs_f64();
-        let cut = device_set_to_cut(&partition.device_set);
+        let decision_refreshed = decision.stats.refreshed;
+        let partition = decision.partition;
+        let cut = partition_to_cut(&partition);
+        let problem = Problem::new(self.planner.spec().tier_costs(tier), link);
         let breakdown = DelayBreakdown::of(&problem, &partition.device_set);
 
         // 3. Execute N_loc real local iterations at the chosen cut.
@@ -187,6 +178,7 @@ impl Coordinator {
             sim_delay: partition.delay,
             breakdown,
             decision_time,
+            decision_refreshed,
             wire_bytes,
             wall_time,
         })

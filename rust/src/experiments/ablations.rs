@@ -118,14 +118,11 @@ pub fn run_solvers() -> String {
                 net.add_edge(
                     v,
                     t,
-                    costs.n_loc * costs.xi_d[v]
-                        + costs.param_bytes[v] * (1.0 / link.up_bps + 1.0 / link.down_bps),
+                    costs.n_loc * costs.xi_d[v] + costs.param_bytes[v] * link.sigma(),
                 );
             }
             for e in costs.dag.edges() {
-                let w = costs.n_loc
-                    * costs.act_bytes[e.from]
-                    * (1.0 / link.up_bps + 1.0 / link.down_bps);
+                let w = costs.n_loc * costs.act_bytes[e.from] * link.sigma();
                 net.add_edge(e.from, e.to, w);
             }
             net

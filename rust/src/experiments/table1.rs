@@ -4,8 +4,14 @@
 use super::common::{cost_graph, time_median};
 use crate::models::FULL_MODELS;
 use crate::partition::blockwise::Planner;
-use crate::partition::{blockwise_partition, general_partition, Link, Problem};
+use crate::partition::{
+    blockwise_partition, general_partition, FleetPlanner, FleetSpec, Link, Problem,
+};
+use crate::profiles::DeviceProfile;
 use crate::util::table::Table;
+
+/// Devices in the fleet-epoch column (4 deduplicated Jetson tiers).
+const FLEET_DEVICES: usize = 100;
 
 pub fn run(reps: usize) -> String {
     let mut t = Table::new(&[
@@ -13,11 +19,12 @@ pub fn run(reps: usize) -> String {
         "general (s)",
         "block-wise (s)",
         "warm replan (s)",
+        "fleet-100 epoch (s)",
         "train delay/iter (s)",
         "ratio (delay/decision)",
     ]);
     for model in FULL_MODELS {
-        let costs = cost_graph(model, &crate::profiles::DeviceProfile::jetson_tx2());
+        let costs = cost_graph(model, &DeviceProfile::jetson_tx2());
         let p = Problem::new(&costs, Link::symmetric(1e6));
         let gen = time_median(reps, || {
             std::hint::black_box(general_partition(&p));
@@ -31,6 +38,21 @@ pub fn run(reps: usize) -> String {
         let warm = time_median(reps, || {
             std::hint::black_box(planner.partition(Link::symmetric(1e6)));
         });
+        // Fleet-scale epoch decision: one FleetPlanner::plan call covering
+        // a 100-device fleet (per-tier links, varied per rep so every tier
+        // is dirty each epoch — the worst case).
+        let devices = DeviceProfile::fleet_of(FLEET_DEVICES);
+        let mut fleet = FleetPlanner::new(FleetSpec::from_fleet(&devices, |d| {
+            cost_graph(model, d)
+        }));
+        let mut epoch = 0u64;
+        let fleet_epoch = time_median(reps, || {
+            epoch += 1;
+            let requests = fleet
+                .spec()
+                .requests(|tier| Link::symmetric(1e6 * (1.0 + (epoch + tier as u64) as f64)));
+            std::hint::black_box(fleet.plan(&requests));
+        });
         // Per-iteration training delay: Eq. (7) for the optimal partition,
         // divided by N_loc local iterations.
         let part = blockwise_partition(&p);
@@ -40,13 +62,15 @@ pub fn run(reps: usize) -> String {
             format!("{gen:.2e}"),
             format!("{bw:.2e}"),
             format!("{warm:.2e}"),
+            format!("{fleet_epoch:.2e}"),
             format!("{per_iter:.2}"),
             format!("{:.1e}", per_iter / bw.max(1e-12)),
         ]);
     }
     format!(
         "Table I: running time vs training delay per iteration ({reps} reps)\n{}\n\
-         (decision time is {} orders of magnitude below the training delay)\n",
+         (decision time is {} orders of magnitude below the training delay;\n\
+          the fleet column is one batched epoch decision for {FLEET_DEVICES} devices)\n",
         t.render(),
         "several"
     )

@@ -14,4 +14,4 @@ pub mod network;
 
 pub use bands::Band;
 pub use channel::{ChannelCondition, ChannelModel};
-pub use network::{EdgeNetwork, NetConfig};
+pub use network::{EdgeNetwork, LinkSample, NetConfig, BITS_PER_BYTE, MIN_LINK_BYTES_PER_SEC};

@@ -36,7 +36,23 @@ impl Default for NetConfig {
     }
 }
 
-/// Sampled link state of one device at one instant.
+/// The net ↔ partition unit boundary: the radio stack (MCS tables, CQI
+/// efficiencies) reports **bits per second**, while [`Link`] — and every
+/// capacity of the partitioner's flow networks — is **bytes per second**
+/// (the profiler reports activation/parameter sizes in bytes). All
+/// conversions go through this one constant so the boundary stays in one
+/// place; `LinkSample::to_link` is the only crossing.
+pub const BITS_PER_BYTE: f64 = 8.0;
+
+/// Floor applied when converting to the partitioner's byte rates: a dead
+/// radio sample becomes 1 B/s instead of 0, because `Problem::new`
+/// (correctly) rejects non-positive rates — a scheduler never transmits at
+/// literally zero forever.
+pub const MIN_LINK_BYTES_PER_SEC: f64 = 1.0;
+
+/// Sampled link state of one device at one instant. Rates are **bits/s**
+/// (radio convention); convert with [`LinkSample::to_link`] before handing
+/// them to the partitioner.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkSample {
     pub device: usize,
@@ -46,11 +62,16 @@ pub struct LinkSample {
 }
 
 impl LinkSample {
-    /// Convert to the partitioner's byte-rate link (bits → bytes).
+    /// Convert to the partitioner's byte-rate link (bits → bytes, floored
+    /// at [`MIN_LINK_BYTES_PER_SEC`]).
     pub fn to_link(self) -> Link {
+        debug_assert!(
+            self.uplink_bps >= 0.0 && self.downlink_bps >= 0.0,
+            "radio rates are non-negative bits/s"
+        );
         Link {
-            up_bps: (self.uplink_bps / 8.0).max(1.0),
-            down_bps: (self.downlink_bps / 8.0).max(1.0),
+            up_bps: (self.uplink_bps / BITS_PER_BYTE).max(MIN_LINK_BYTES_PER_SEC),
+            down_bps: (self.downlink_bps / BITS_PER_BYTE).max(MIN_LINK_BYTES_PER_SEC),
         }
     }
 }
@@ -152,10 +173,13 @@ impl EdgeNetwork {
             up += bitrate_bps(ul, self.cfg.band.bandwidth_hz);
             down += bitrate_bps(dl, self.cfg.band.bandwidth_hz);
         }
-        Link {
-            up_bps: (up / samples as f64 / 8.0).max(1.0),
-            down_bps: (down / samples as f64 / 8.0).max(1.0),
+        LinkSample {
+            device: usize::MAX,
+            distance_m: d,
+            uplink_bps: up / samples as f64,
+            downlink_bps: down / samples as f64,
         }
+        .to_link()
     }
 }
 
@@ -225,6 +249,31 @@ mod tests {
             total / 300.0
         };
         assert!(rate(Band::n257()) > rate(Band::n1()));
+    }
+
+    #[test]
+    fn to_link_converts_bits_to_bytes() {
+        let s = LinkSample {
+            device: 0,
+            distance_m: 25.0,
+            uplink_bps: 80e6,  // 80 Mb/s radio rate
+            downlink_bps: 160e6,
+        };
+        let l = s.to_link();
+        assert_eq!(l.up_bps, 10e6, "80 Mb/s == 10 MB/s");
+        assert_eq!(l.down_bps, 20e6);
+        // σ sanity through the same boundary: bytes/s in, s/byte out.
+        assert!((l.sigma() - (1.0 / 10e6 + 1.0 / 20e6)).abs() < 1e-18);
+        // A dead radio sample floors at 1 B/s so Problem::new's positive-
+        // rate validation holds downstream.
+        let dead = LinkSample {
+            device: 0,
+            distance_m: 1e4,
+            uplink_bps: 0.0,
+            downlink_bps: 0.0,
+        };
+        assert_eq!(dead.to_link().up_bps, MIN_LINK_BYTES_PER_SEC);
+        assert_eq!(dead.to_link().down_bps, MIN_LINK_BYTES_PER_SEC);
     }
 
     #[test]

@@ -85,7 +85,7 @@ pub fn regression_partition(problem: &Problem) -> Partition {
 
     // Continuous objective; minimize over a fine grid (the continuous
     // optimization step of [21]).
-    let inv = 1.0 / problem.link.up_bps + 1.0 / problem.link.down_bps;
+    let inv = problem.link.sigma();
     let objective = |x: f64| -> f64 {
         let dev = polyval(&f_dev, x).max(0.0);
         let srv = (total_srv - polyval(&f_srv, x)).max(0.0);

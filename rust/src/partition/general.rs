@@ -18,7 +18,7 @@
 //! brute-force scan; [`linear_scan_partition`] evaluates all `L+1` prefix
 //! cuts in O(L) total via running sums.
 
-use super::planner::TransformedNet;
+use super::fleet::TransformedNet;
 use super::types::{Partition, Problem};
 use crate::maxflow::DinicScratch;
 
@@ -66,11 +66,11 @@ pub fn general_partition_with_options(problem: &Problem, closure_edges: bool) ->
 
     // The transformed network (Alg. 1's Eqs. (9)-(11) weights, Fig. 3
     // auxiliary vertices, optional closure edges) is built by the shared
-    // `partition::planner::TransformedNet` — the same construction the
-    // amortized `PartitionPlanner` caches across epochs, so a cold one-shot
-    // solve here and a warm planner re-solve are bit-identical. (The
-    // labelled `build_partition_dag` in weights.rs remains the
-    // inspectable/DOT-export construction.)
+    // `partition::fleet::TransformedNet` — the same construction the
+    // amortized planners cache across epochs, so a cold one-shot solve
+    // here and a warm planner re-solve are bit-identical. (The labelled
+    // `build_partition_dag` in weights.rs remains the inspectable/
+    // DOT-export construction.)
     let mut tnet = TransformedNet::build(c, problem.pin_inputs, closure_edges);
     tnet.refresh(problem.link);
     let mut scratch = DinicScratch::default();
@@ -103,8 +103,7 @@ pub fn linear_scan_partition(problem: &Problem) -> Partition {
     let c = problem.costs;
     let order = c.dag.topo_order().expect("acyclic");
     let n = c.len();
-    let inv_up = 1.0 / problem.link.up_bps;
-    let inv_down = 1.0 / problem.link.down_bps;
+    let sigma = problem.link.sigma();
 
     // Running totals while moving the cut from "all server" to "all device".
     let mut device_compute = 0.0;
@@ -129,9 +128,8 @@ pub fn linear_scan_partition(problem: &Problem) -> Partition {
         } else {
             0.0
         };
-        let delay = c.n_loc
-            * (device_compute + server_compute + boundary * (inv_up + inv_down))
-            + device_params * (inv_up + inv_down);
+        let delay = c.n_loc * (device_compute + server_compute + boundary * sigma)
+            + device_params * sigma;
         if delay < best_delay {
             best_delay = delay;
             best_prefix = i + 1;

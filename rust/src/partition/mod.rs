@@ -7,9 +7,13 @@
 //!   classes (Eqs. 9-11).
 //! * [`general`] — Alg. 2: auxiliary-vertex restructuring (Fig. 3) +
 //!   max-flow min-cut (Theorem 1).
-//! * [`planner`] — amortized re-partitioning: the transformed network is
-//!   built once per (model, device-tier) and re-solved per epoch via an
-//!   O(E) capacity refresh ([`PartitionPlanner`], see PERF.md).
+//! * [`fleet`] — the fleet-scale planning engine and facade: per-tier
+//!   transformed networks over a shared struct-of-arrays capacity layout,
+//!   batch-refreshed and solved per epoch through [`FleetPlanner::plan`]
+//!   (see PERF.md).
+//! * [`planner`] — amortized re-partitioning for a single (model,
+//!   device-tier): [`PartitionPlanner`], a thin one-tier wrapper over the
+//!   fleet engine, re-solved per epoch via an O(E) capacity refresh.
 //! * [`blocks`] — Alg. 3: block detection via branch/reconvergence
 //!   (immediate post-dominators).
 //! * [`blockwise`] — Alg. 4: intra-block cut test (Theorem 2) + block-level
@@ -20,12 +24,16 @@
 pub mod types;
 pub mod weights;
 pub mod general;
+pub mod fleet;
 pub mod planner;
 pub mod blocks;
 pub mod blockwise;
 pub mod baselines;
 
 pub use blockwise::blockwise_partition;
+pub use fleet::{
+    DecisionStats, FleetPlanner, FleetSpec, FleetStats, PlanDecision, PlanRequest,
+};
 pub use general::general_partition;
 pub use planner::PartitionPlanner;
 pub use types::{Link, Partition, Problem};

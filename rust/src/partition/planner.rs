@@ -4,179 +4,22 @@
 //! The coordinator's loop (Sec. III-A) re-makes the partition decision
 //! every epoch as link rates fluctuate, but between epochs only the rates
 //! change: the layer DAG, the auxiliary vertices of Fig. 3, and the
-//! infinite closure edges are identical every time. The one-shot path
-//! (`general::general_partition_with_options`) nevertheless used to rebuild
-//! the whole network — including one heap allocation per vertex — on every
-//! call.
+//! infinite closure edges are identical every time. The engine that
+//! exploits this lives in [`super::fleet`]: every forward-edge capacity is
+//! affine in `σ = 1/R_up + 1/R_down`, so a warm re-solve is one O(E)
+//! capacity refresh + a Dinic run on reusable scratch, bit-identical to a
+//! cold build (PERF.md documents the invariants and layout).
 //!
-//! [`TransformedNet`] separates the two concerns. Every forward-edge
-//! capacity of the transformed network is affine in the round-trip byte
-//! cost `σ = 1/R_up + 1/R_down`:
-//!
-//! ```text
-//!   cap(e) = base(e) + bw_scale(e) · σ          with, per edge class:
-//!   server-exec  (s  → v')   base = N_loc·ξ_S(v)   scale = 0      (∞ if pinned input)
-//!   device-exec  (v' → t)    base = N_loc·ξ_D(v)   scale = k_v
-//!   propagation  (u  → v')   base = 0              scale = N_loc·a_u
-//!   aux transmit (v' → v)    base = 0              scale = N_loc·a_v
-//!   closure      (reverse)   base = ∞              scale = 0
-//! ```
-//!
-//! so [`TransformedNet::refresh`] re-capacitates the frozen network for a
-//! new link in one pass over the edge arrays — no allocation, no topology
-//! work — and `FlowNetwork::set_edge_capacity` doubles as the between-solve
-//! reset. Refreshing every edge leaves the network in exactly the state a
-//! cold build would produce, which is why the warm solve is bit-identical
-//! to the cold one (asserted by the property tests below across the whole
-//! model zoo; PERF.md documents the invariants and the measured speedup).
-//!
-//! [`PartitionPlanner`] owns a `TransformedNet` plus reusable
-//! [`DinicScratch`] buffers and is the type repeated-solve callers hold —
-//! one per (model, device-tier): `blockwise::Planner` (on the reduced DAG),
-//! the coordinator, the simulator, and the replan bench.
+//! [`PartitionPlanner`] is the single-(model, device-tier) view of that
+//! engine — a thin wrapper around a one-tier [`FleetPlanner`] — and is the
+//! type repeated-solve callers hold when they do not plan fleet-wide:
+//! `blockwise::Planner` (on the reduced DAG) and the replan bench. Keeping
+//! it wrapper-thin means PR-1's warm≡cold property tests below keep
+//! pinning the exact arithmetic the fleet facade runs per tier.
 
-use super::general::linear_scan_partition;
-use super::types::{Link, Partition, Problem};
-use crate::maxflow::{dinic_with, DinicScratch, FlowNetwork, MinCut};
+use super::fleet::{FleetPlanner, FleetSpec};
+use super::types::{Link, Partition};
 use crate::profiles::CostGraph;
-
-/// The Alg. 2 transformed flow network with link-independent structure and
-/// per-edge affine capacity models (see the module docs).
-pub(crate) struct TransformedNet {
-    net: FlowNetwork,
-    /// Link-independent part of each forward edge's capacity.
-    base: Vec<f64>,
-    /// Coefficient of `σ = 1/R_up + 1/R_down` in each capacity.
-    bw_scale: Vec<f64>,
-    /// exec[v] = flow vertex carrying layer v's execution semantics.
-    exec: Vec<usize>,
-    source: usize,
-    sink: usize,
-}
-
-impl TransformedNet {
-    /// Build the transformed network (Alg. 1 weights + Fig. 3 auxiliary
-    /// vertices + optional closure edges). Capacities are left at zero;
-    /// call [`TransformedNet::refresh`] with a link before solving.
-    ///
-    /// Edge insertion order matches the historical one-shot construction in
-    /// `general.rs` so solver traversal (and thus tie-breaking among equal
-    /// minimum cuts) is unchanged.
-    pub(crate) fn build(c: &CostGraph, pin_inputs: bool, closure_edges: bool) -> TransformedNet {
-        let n = c.len();
-        // Flow network layout: ids 0..n are layer vertices, n is source,
-        // n+1 is sink, auxiliary vertices appended after.
-        let mut exec: Vec<usize> = (0..n).collect();
-        let source = n;
-        let sink = n + 1;
-        let mut next = n + 2;
-        let split: Vec<bool> = (0..n).map(|v| c.dag.out_degree(v) > 1).collect();
-        for v in 0..n {
-            if split[v] {
-                exec[v] = next;
-                next += 1;
-            }
-        }
-        let num_split = next - (n + 2);
-        let dag_edges = c.dag.num_edges();
-        let closure = if closure_edges { dag_edges + num_split } else { 0 };
-        let num_edges = 2 * n + dag_edges + num_split + closure;
-
-        let mut net = FlowNetwork::with_capacity(next, num_edges);
-        let mut base = Vec::with_capacity(num_edges);
-        let mut bw_scale = Vec::with_capacity(num_edges);
-
-        for v in 0..n {
-            // Server execution edge (s -> exec(v)), Eq. (10). Pinned inputs
-            // (raw data) may never move to the server: infinite weight.
-            let w = if pin_inputs && c.dag.in_degree(v) == 0 {
-                f64::INFINITY
-            } else {
-                c.n_loc * c.xi_s[v]
-            };
-            net.add_edge(source, exec[v], 0.0);
-            base.push(w);
-            bw_scale.push(0.0);
-            // Device execution edge (exec(v) -> t), Eq. (9) + the one-off
-            // model up/download of the layer's parameters.
-            net.add_edge(exec[v], sink, 0.0);
-            base.push(c.n_loc * c.xi_d[v]);
-            bw_scale.push(c.param_bytes[v]);
-        }
-
-        // Propagation edges + the auxiliary (exec -> transmit) edge of
-        // Fig. 3. Incoming edges of a split child are redirected to its
-        // auxiliary vertex, Eq. (13).
-        for e in c.dag.edges() {
-            let from = if split[e.from] { e.from } else { exec[e.from] };
-            net.add_edge(from, exec[e.to], 0.0);
-            base.push(0.0);
-            bw_scale.push(c.n_loc * c.act_bytes[e.from]);
-            if closure_edges {
-                // Precedence: child on device => parent on device.
-                net.add_edge(exec[e.to], exec[e.from], 0.0);
-                base.push(f64::INFINITY);
-                bw_scale.push(0.0);
-            }
-        }
-        for v in 0..n {
-            if split[v] {
-                // (v' -> v) carries one propagation weight, Eq. (15).
-                net.add_edge(exec[v], v, 0.0);
-                base.push(0.0);
-                bw_scale.push(c.n_loc * c.act_bytes[v]);
-                if closure_edges {
-                    // Transmit node on device while execution on server is
-                    // physically meaningless; forbid for unambiguous
-                    // extraction.
-                    net.add_edge(v, exec[v], 0.0);
-                    base.push(f64::INFINITY);
-                    bw_scale.push(0.0);
-                }
-            }
-        }
-        debug_assert_eq!(net.num_edges(), num_edges);
-        net.freeze();
-        TransformedNet {
-            net,
-            base,
-            bw_scale,
-            exec,
-            source,
-            sink,
-        }
-    }
-
-    /// Re-capacitate every edge for the given link and clear all routed
-    /// flow: one O(E) pass, no allocation. Invariant: after this call the
-    /// network state is indistinguishable from a cold
-    /// [`TransformedNet::build`] + refresh — every forward arc holds its
-    /// full capacity, every residual twin holds zero.
-    pub(crate) fn refresh(&mut self, link: Link) {
-        let sigma = 1.0 / link.up_bps + 1.0 / link.down_bps;
-        for k in 0..self.base.len() {
-            self.net.set_edge_capacity(k, self.base[k] + self.bw_scale[k] * sigma);
-        }
-    }
-
-    /// Solve min s-t cut on the current capacities.
-    pub(crate) fn min_cut(&mut self, scratch: &mut DinicScratch) -> MinCut {
-        dinic_with(&mut self.net, self.source, self.sink, scratch)
-    }
-
-    /// Read the layer assignment off the execution vertices.
-    pub(crate) fn device_set(&self, source_side: &[bool]) -> Vec<bool> {
-        self.exec.iter().map(|&e| source_side[e]).collect()
-    }
-
-    pub(crate) fn num_vertices(&self) -> usize {
-        self.net.len()
-    }
-
-    pub(crate) fn num_edges(&self) -> usize {
-        self.net.num_edges()
-    }
-}
 
 /// Amortized per-(model, device-tier) partition planner: the dynamic-edge
 /// hot path. Construction does all structural work (transformed-network
@@ -187,17 +30,8 @@ impl TransformedNet {
 /// fast path of Alg. 2 lines 2-4 — already allocation-light, and exactly
 /// what the one-shot algorithm does.
 pub struct PartitionPlanner {
-    costs: CostGraph,
-    pin_inputs: bool,
-    closure_edges: bool,
-    /// `None` for linear models (scan fast path).
-    flow: Option<Box<FlowState>>,
+    fleet: FleetPlanner,
     solves: u64,
-}
-
-struct FlowState {
-    tnet: TransformedNet,
-    scratch: DinicScratch,
 }
 
 impl PartitionPlanner {
@@ -213,50 +47,26 @@ impl PartitionPlanner {
         pin_inputs: bool,
         closure_edges: bool,
     ) -> PartitionPlanner {
-        let n = costs.len();
-        let linear = !(0..n).any(|v| costs.dag.out_degree(v) > 1);
-        let flow = if linear {
-            None
-        } else {
-            Some(Box::new(FlowState {
-                tnet: TransformedNet::build(costs, pin_inputs, closure_edges),
-                scratch: DinicScratch::default(),
-            }))
-        };
         PartitionPlanner {
-            costs: costs.clone(),
-            pin_inputs,
-            closure_edges,
-            flow,
+            fleet: FleetPlanner::with_options(
+                FleetSpec::single(costs.clone()),
+                pin_inputs,
+                closure_edges,
+            ),
             solves: 0,
         }
     }
 
     /// Solve for the current link state (the per-epoch hot path). Bitwise
     /// identical to a cold `general_partition` on the same problem.
+    ///
+    /// Every call refreshes + re-solves, bypassing the fleet facade's tier
+    /// cache entirely (`take_solve` moves the decision out instead of
+    /// cloning it into a cache this wrapper would never read) — the PR-1
+    /// contract, and what `solves()`/timing callers count on.
     pub fn partition(&mut self, link: Link) -> Partition {
         self.solves += 1;
-        // Problem::new validates the link (positive rates), exactly like
-        // the cold path — a dead uplink must panic, not produce NaN
-        // capacities that solve to a silent garbage cut.
-        let mut problem = Problem::new(&self.costs, link);
-        problem.pin_inputs = self.pin_inputs;
-        match &mut self.flow {
-            None => linear_scan_partition(&problem),
-            Some(state) => {
-                state.tnet.refresh(link);
-                let cut = state.tnet.min_cut(&mut state.scratch);
-                let device_set = state.tnet.device_set(&cut.source_side);
-                // Without closure edges the cut need not be a lower set
-                // (that is the point of ablA), so only assert under the
-                // default construction — mirrors general.rs.
-                debug_assert!(
-                    !self.closure_edges || problem.is_feasible(&device_set),
-                    "planner produced an infeasible partition"
-                );
-                problem.partition(device_set)
-            }
-        }
+        self.fleet.take_solve(0, link)
     }
 
     /// Number of solves served since construction.
@@ -267,26 +77,27 @@ impl PartitionPlanner {
     /// (vertices, edges) of the cached flow network; `None` on the linear
     /// fast path.
     pub fn flow_size(&self) -> Option<(usize, usize)> {
-        self.flow
-            .as_ref()
-            .map(|s| (s.tnet.num_vertices(), s.tnet.num_edges()))
+        self.fleet.flow_size()
     }
 
     /// The cost graph this planner was built for.
     pub fn costs(&self) -> &CostGraph {
-        &self.costs
+        self.fleet.spec().tier_costs(0)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::Dag;
     use crate::models;
-    use crate::partition::general::{general_partition, general_partition_with_options};
+    use crate::partition::general::{
+        general_partition, general_partition_with_options, linear_scan_partition,
+    };
+    use crate::partition::types::Problem;
     use crate::profiles::{DeviceProfile, TrainCfg};
     use crate::util::prop::{for_all, random_layer_dag};
     use crate::util::rng::Rng;
-    use crate::graph::Dag;
 
     fn cg(model: &str) -> CostGraph {
         let m = models::by_name(model).unwrap();

@@ -1,5 +1,6 @@
 //! Problem statement and the Eq. (7) training-delay objective.
 
+use crate::graph::Dag;
 use crate::profiles::CostGraph;
 
 /// Wireless link state between a device and the server.
@@ -19,6 +20,15 @@ impl Link {
             up_bps: bytes_per_sec,
             down_bps: bytes_per_sec,
         }
+    }
+
+    /// Round-trip cost `σ = 1/R_up + 1/R_down` in seconds per byte — one
+    /// byte crossing the cut pays it once up (smashed data / parameters)
+    /// and once down (gradients / parameters). Every capacity of the
+    /// transformed flow network is affine in σ (see `partition::fleet` and
+    /// PERF.md), which is what makes the warm O(E) refresh possible.
+    pub fn sigma(&self) -> f64 {
+        1.0 / self.up_bps + 1.0 / self.down_bps
     }
 }
 
@@ -147,6 +157,48 @@ impl Partition {
         self.device_set.iter().filter(|&&b| b).count()
     }
 
+    /// The cut position when the device set is an index-contiguous prefix:
+    /// `Some(k)` means layers `0..k` train on the device and `k..` on the
+    /// server. Chain models (and the coordinator's stage graph) always
+    /// produce prefixes; general DAG partitions need not be contiguous, in
+    /// which case this returns `None` and callers should consult
+    /// [`Partition::boundary_edges`] instead of re-deriving anything from
+    /// the raw `device_set`.
+    pub fn cut_layer(&self) -> Option<usize> {
+        let k = self.device_set.iter().take_while(|&&b| b).count();
+        if self.device_set[k..].iter().any(|&b| b) {
+            None
+        } else {
+            Some(k)
+        }
+    }
+
+    /// The cut-set edges `V_c` of this partition in `dag`: every
+    /// `(device parent, server child)` pair, i.e. the edges whose smashed
+    /// data / gradients cross the wire.
+    pub fn boundary_edges(&self, dag: &Dag) -> Vec<(usize, usize)> {
+        dag.edges()
+            .iter()
+            .filter(|e| self.device_set[e.from] && !self.device_set[e.to])
+            .map(|e| (e.from, e.to))
+            .collect()
+    }
+
+    /// Device layers with at least one server child — the vertices whose
+    /// activations are transmitted (each pays its `a_v` once, however many
+    /// boundary edges it has).
+    pub fn boundary_layers(&self, dag: &Dag) -> Vec<usize> {
+        (0..self.device_set.len())
+            .filter(|&v| {
+                self.device_set[v]
+                    && dag
+                        .out_edges(v)
+                        .iter()
+                        .any(|&e| !self.device_set[dag.edge(e).to])
+            })
+            .collect()
+    }
+
     /// Human-readable cut description.
     pub fn describe(&self) -> String {
         format!(
@@ -247,5 +299,68 @@ mod tests {
     fn rejects_zero_rate() {
         let cg = lenet_problem();
         let _ = Problem::new(&cg, Link::symmetric(0.0));
+    }
+
+    #[test]
+    fn sigma_is_round_trip_byte_cost() {
+        let l = Link {
+            up_bps: 4.0,
+            down_bps: 8.0,
+        };
+        assert_eq!(l.sigma(), 0.25 + 0.125);
+        assert_eq!(Link::symmetric(2.0).sigma(), 1.0);
+    }
+
+    #[test]
+    fn cut_layer_detects_prefixes() {
+        let prefix = Partition {
+            device_set: vec![true, true, false, false],
+            delay: 0.0,
+        };
+        assert_eq!(prefix.cut_layer(), Some(2));
+        let all_device = Partition {
+            device_set: vec![true; 3],
+            delay: 0.0,
+        };
+        assert_eq!(all_device.cut_layer(), Some(3));
+        let all_server = Partition {
+            device_set: vec![false; 3],
+            delay: 0.0,
+        };
+        assert_eq!(all_server.cut_layer(), Some(0));
+        let hole = Partition {
+            device_set: vec![true, false, true],
+            delay: 0.0,
+        };
+        assert_eq!(hole.cut_layer(), None);
+    }
+
+    #[test]
+    fn boundary_accessors_match_delay_accounting() {
+        // Diamond: 0 -> {1, 2} -> 3 with {0, 1} on the device: layer 0's
+        // activation crosses to 2, layer 1's to 3 — two boundary edges,
+        // two boundary layers.
+        let mut dag = crate::graph::Dag::new();
+        for i in 0..4 {
+            dag.add_node(format!("v{i}"));
+        }
+        dag.add_edge(0, 1, 0.0);
+        dag.add_edge(0, 2, 0.0);
+        dag.add_edge(1, 3, 0.0);
+        dag.add_edge(2, 3, 0.0);
+        let p = Partition {
+            device_set: vec![true, true, false, false],
+            delay: 0.0,
+        };
+        assert_eq!(p.boundary_edges(&dag), vec![(0, 2), (1, 3)]);
+        assert_eq!(p.boundary_layers(&dag), vec![0, 1]);
+        assert_eq!(p.cut_layer(), Some(2));
+        // Device-only: nothing crosses.
+        let d = Partition {
+            device_set: vec![true; 4],
+            delay: 0.0,
+        };
+        assert!(d.boundary_edges(&dag).is_empty());
+        assert!(d.boundary_layers(&dag).is_empty());
     }
 }

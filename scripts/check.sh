@@ -23,4 +23,14 @@ fi
 echo "==> cargo test -q"
 cargo test -q
 
+if [[ $fast -eq 0 ]]; then
+  # Bench smoke: compile + run the bench binaries so they cannot bit-rot.
+  # Output files are disabled (-) so committed BENCH_*.json results are
+  # only ever replaced by deliberate full runs.
+  echo "==> cargo bench --bench replan -- --quick (smoke)"
+  FASTSPLIT_REPLAN_OUT=- cargo bench --bench replan -- --quick
+  echo "==> cargo bench --bench fleet -- --smoke"
+  FASTSPLIT_FLEET_OUT=- cargo bench --bench fleet -- --smoke
+fi
+
 echo "OK"
