@@ -3,34 +3,43 @@
 //! Devices deduplicate into four Jetson tiers sharing one struct-of-arrays
 //! capacity layout, so a dirty epoch costs O(tiers · E) solve work plus
 //! O(devices) fan-out, and a clean epoch (links unchanged) is pure fan-out.
+//! A second sweep times the fleet-level Theorem 2 block reduction on
+//! block-structured fleets (ResNet-18 / GPT-2): the same dirty epoch with
+//! the engine solving the reduced DAG vs the full general DAG.
 //!
 //! ```sh
 //! cargo bench --bench fleet [-- filter] [--quick] [--smoke]
 //! ```
 //!
 //! `--smoke` is the CI fast mode: tiny measurement windows, the 1000-device
-//! sweep skipped, no JSON written — it exists so the bench compiles and
-//! runs on every push. A full run writes the epoch decision times to
-//! `BENCH_PR2.json` (override with `FASTSPLIT_FLEET_OUT`, disable with
-//! `FASTSPLIT_FLEET_OUT=-`) so the perf trajectory is tracked in-repo
-//! (see PERF.md).
+//! sweep skipped, smaller block fleets, no JSON written — it exists so the
+//! bench compiles and runs on every push. A full run writes the epoch
+//! decision times to `BENCH_PR2.json` and the reduced-vs-full sweep to
+//! `BENCH_PR3.json` (override with `FASTSPLIT_FLEET_OUT` /
+//! `FASTSPLIT_FLEET_BLOCK_OUT`, disable either with `=-`) so the perf
+//! trajectory is tracked in-repo (see PERF.md).
 
-use fastsplit::partition::{FleetPlanner, FleetSpec, Link, PartitionPlanner};
+use fastsplit::partition::{FleetPlanner, FleetSpec, Link, PartitionPlanner, Problem};
 use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
 use fastsplit::util::bench::{BenchConfig, Bencher};
 use fastsplit::util::json::Json;
+use fastsplit::util::prop::assert_cut_cost_equal;
 use std::time::Duration;
 
 const MODEL: &str = "googlenet";
 
-fn costs(device: &DeviceProfile) -> CostGraph {
-    let m = fastsplit::models::by_name(MODEL).unwrap();
+fn costs_for(model: &str, device: &DeviceProfile) -> CostGraph {
+    let m = fastsplit::models::by_name(model).unwrap();
     CostGraph::build(
         &m,
         device,
         &DeviceProfile::rtx_a6000(),
         &TrainCfg::default(),
     )
+}
+
+fn costs(device: &DeviceProfile) -> CostGraph {
+    costs_for(MODEL, device)
 }
 
 /// Deterministic per-(tier, epoch) link: every tier is dirty every epoch.
@@ -55,8 +64,11 @@ fn main() {
     };
     let fleet_sizes: &[usize] = if smoke { &[10, 100] } else { &[10, 100, 1000] };
 
-    // Correctness gate before timing: fleet decisions must be bit-identical
-    // to per-tier PartitionPlanner solves over the same link trace.
+    // Correctness gate before timing: fleet decisions (which solve the
+    // Theorem 2 reduced DAG by default) must be cost-equivalent — equal
+    // Eq. (7) training delay — to per-tier PartitionPlanner solves (the
+    // unreduced general engine) over the same link trace, and refresh
+    // exactly once per dirty tier per epoch.
     {
         let devices = DeviceProfile::fleet_of(100);
         let spec = FleetSpec::from_fleet(&devices, costs);
@@ -73,12 +85,10 @@ fn main() {
             let want: Vec<_> = (0..num_tiers)
                 .map(|t| reference[t].partition(epoch_link(t, epoch)))
                 .collect();
-            for (r, d) in reqs.iter().zip(fleet.plan(&reqs)) {
-                assert_eq!(
-                    d.partition.device_set, want[r.tier].device_set,
-                    "fleet decision diverged from per-device planner"
-                );
-                assert_eq!(d.partition.delay.to_bits(), want[r.tier].delay.to_bits());
+            let decisions = fleet.plan(&reqs);
+            for (r, d) in reqs.iter().zip(&decisions) {
+                let problem = Problem::new(fleet.spec().tier_costs(r.tier), r.link);
+                assert_cut_cost_equal(&problem, &d.partition, &want[r.tier]);
             }
         }
         let s = fleet.stats();
@@ -86,6 +96,10 @@ fn main() {
             s.refreshes,
             8 * fleet.spec().num_tiers() as u64,
             "expected exactly one refresh per dirty tier per epoch"
+        );
+        assert!(
+            s.reduced_vertices < s.full_vertices,
+            "googlenet must solve on a reduced DAG"
         );
     }
 
@@ -130,32 +144,130 @@ fn main() {
             ]));
         }
     }
+
+    // Block-structured sweep (PR 3): the same dirty-epoch decision with the
+    // fleet-level Theorem 2 reduction on (default) vs off (full general
+    // DAG), on fleets of models whose blocks abstract — ResNet-18 reduces
+    // to a chain (linear-scan epochs), GPT-2 likewise at transformer scale.
+    let block_models: &[&str] = if smoke {
+        &["resnet18"]
+    } else {
+        &["resnet18", "gpt2"]
+    };
+    let block_devices = if smoke { 10 } else { 100 };
+    let mut block_rows: Vec<Json> = Vec::new();
+    for &model in block_models {
+        let devices = DeviceProfile::fleet_of(block_devices);
+        let spec_of = || FleetSpec::from_fleet(&devices, |d| costs_for(model, d));
+
+        // Reduced-vs-full cost-equivalence gate on a short trace.
+        let mut reduced = FleetPlanner::new(spec_of());
+        let mut full = FleetPlanner::with_options(spec_of(), true, true, false);
+        for epoch in 0..4u64 {
+            let reqs = reduced.spec().requests(|t| epoch_link(t, epoch));
+            let red_decisions = reduced.plan(&reqs);
+            let full_decisions = full.plan(&reqs);
+            for ((r, da), db) in reqs.iter().zip(&red_decisions).zip(&full_decisions) {
+                let problem = Problem::new(reduced.spec().tier_costs(r.tier), r.link);
+                assert_cut_cost_equal(&problem, &da.partition, &db.partition);
+            }
+        }
+        let stats = reduced.stats();
+        assert!(
+            stats.reduced_vertices < stats.full_vertices,
+            "{model}: fleet reduction abstracted nothing"
+        );
+
+        let mut means = Vec::new();
+        for (mode, reduce) in [("reduced", true), ("full", false)] {
+            let mut planner = if reduce {
+                FleetPlanner::new(spec_of())
+            } else {
+                FleetPlanner::with_options(spec_of(), true, true, false)
+            };
+            let mut epoch = 0u64;
+            let before = b.results().len();
+            b.bench(
+                &format!("fleet/{model}/{block_devices}dev/epoch-dirty-{mode}"),
+                || {
+                    epoch += 1;
+                    let reqs = planner.spec().requests(|t| epoch_link(t, epoch));
+                    planner.plan(&reqs)
+                },
+            );
+            means.push((b.results().len() > before).then(|| b.results()[before].summary.mean));
+        }
+        if let [Some(reduced_s), Some(full_s)] = means[..] {
+            println!(
+                "fleet/{model}: reduced dirty epoch {reduced_s:.3e}s vs full {full_s:.3e}s \
+                 ({:.1}x, solve DAG {}v/{}e vs {}v/{}e)",
+                full_s / reduced_s.max(1e-12),
+                stats.reduced_vertices,
+                stats.reduced_edges,
+                stats.full_vertices,
+                stats.full_edges,
+            );
+            block_rows.push(Json::obj(vec![
+                ("model", Json::str(model)),
+                ("devices", Json::num(block_devices as f64)),
+                ("blocks_abstracted", Json::num(stats.blocks_abstracted as f64)),
+                ("full_vertices", Json::num(stats.full_vertices as f64)),
+                ("full_edges", Json::num(stats.full_edges as f64)),
+                ("reduced_vertices", Json::num(stats.reduced_vertices as f64)),
+                ("reduced_edges", Json::num(stats.reduced_edges as f64)),
+                ("epoch_dirty_reduced_mean_s", Json::num(reduced_s)),
+                ("epoch_dirty_full_mean_s", Json::num(full_s)),
+                ("speedup", Json::num(full_s / reduced_s.max(1e-12))),
+            ]));
+        }
+    }
     b.finish();
 
     if smoke {
-        println!("smoke mode: skipping BENCH_PR2.json");
+        println!("smoke mode: skipping BENCH_PR2.json / BENCH_PR3.json");
         return;
     }
     let out = std::env::var("FASTSPLIT_FLEET_OUT").unwrap_or_else(|_| "BENCH_PR2.json".into());
-    if out == "-" || rows.is_empty() {
-        return;
-    }
-    let doc = Json::obj(vec![
-        ("bench", Json::str("fleet")),
-        ("measured", Json::Bool(true)),
-        (
-            "note",
-            Json::str(
-                "FleetPlanner::plan epoch decision over 10/100/1000-device fleets \
-                 (googlenet, 4 deduplicated Jetson tiers, per-tier links); dirty = fresh \
-                 links each epoch (refresh+solve per tier), clean = unchanged links \
-                 (cache fan-out only)",
+    if out != "-" && !rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("fleet")),
+            ("measured", Json::Bool(true)),
+            (
+                "note",
+                Json::str(
+                    "FleetPlanner::plan epoch decision over 10/100/1000-device fleets \
+                     (googlenet, 4 deduplicated Jetson tiers, per-tier links); dirty = fresh \
+                     links each epoch (refresh+solve per tier), clean = unchanged links \
+                     (cache fan-out only)",
+                ),
             ),
-        ),
-        ("results", Json::Arr(rows)),
-    ]);
-    match std::fs::write(&out, doc.pretty() + "\n") {
-        Ok(()) => println!("wrote {out}"),
-        Err(e) => eprintln!("could not write {out}: {e}"),
+            ("results", Json::Arr(rows)),
+        ]);
+        match std::fs::write(&out, doc.pretty() + "\n") {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
+    }
+    let out = std::env::var("FASTSPLIT_FLEET_BLOCK_OUT")
+        .unwrap_or_else(|_| "BENCH_PR3.json".into());
+    if out != "-" && !block_rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("fleet-block-reduction")),
+            ("measured", Json::Bool(true)),
+            (
+                "note",
+                Json::str(
+                    "Dirty fleet epochs on block-structured models (100 devices, 4 Jetson \
+                     tiers): fleet-level Theorem 2 reduction on (reduced DAG / linear scan \
+                     for chain-reduced models) vs off (full general DAG); decisions \
+                     cost-equivalent by the assert_cut_cost_equal gate",
+                ),
+            ),
+            ("results", Json::Arr(block_rows)),
+        ]);
+        match std::fs::write(&out, doc.pretty() + "\n") {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
     }
 }

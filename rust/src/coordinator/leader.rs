@@ -4,7 +4,7 @@
 
 use super::costmodel::{partition_to_cut, stage_cost_graph};
 use crate::net::{EdgeNetwork, NetConfig};
-use crate::partition::{FleetPlanner, FleetSpec, PlanRequest, Problem};
+use crate::partition::{FleetPlanner, FleetSpec, FleetStats, PlanRequest, Problem};
 use crate::profiles::{DeviceProfile, TrainCfg};
 use crate::runtime::data::Synthetic;
 use crate::runtime::SplitTrainer;
@@ -122,6 +122,14 @@ impl Coordinator {
     /// The device fleet (for reporting; mirrors [`crate::sim::Trainer::fleet`]).
     pub fn fleet(&self) -> &[DeviceProfile] {
         &self.fleet
+    }
+
+    /// Solver counters of the fleet planning facade: decision provenance
+    /// (refresh/solve counts, reduced-vs-full solve DAG sizes — the stage
+    /// graph is a chain, so here `reduced == full` and every decision is an
+    /// O(L) scan; mirrors [`crate::sim::Trainer::planner_stats`]).
+    pub fn planner_stats(&self) -> FleetStats {
+        self.planner.stats()
     }
 
     /// Run one epoch of the Sec. III-A loop.

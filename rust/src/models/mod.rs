@@ -62,6 +62,13 @@ pub const FULL_MODELS: &[&str] = &["googlenet", "resnet18", "resnet50", "densene
 /// The three single-block networks of Fig. 6/7/9(a).
 pub const BLOCK_NETS: &[&str] = &["block-residual", "block-inception", "block-dense"];
 
+/// Zoo models whose Theorem 2 block reduction abstracts at least one block
+/// on the default device/server profiles (pinned by the
+/// `partition::blockwise` and `experiments::fig14` suites) — the fleet-level
+/// reduction must provably solve these on strictly smaller DAGs.
+pub const REDUCING_MODELS: &[&str] =
+    &["resnet18", "densenet121", "googlenet", "gpt2", "block-residual"];
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -239,6 +239,123 @@ mod tests {
         assert_eq!(ipdom[3], None);
     }
 
+    /// A pure chain has no branching vertex, so nothing to abstract: every
+    /// vertex stays its own "block" in the reduced sense, and the
+    /// post-dominator of each vertex is simply its successor.
+    #[test]
+    fn pure_chain_every_vertex_is_its_own_block() {
+        let mut g = Dag::new();
+        for i in 0..5 {
+            g.add_node(format!("v{i}"));
+        }
+        for i in 0..4 {
+            g.add_edge(i, i + 1, 0.0);
+        }
+        assert!(detect_blocks(&g).is_empty());
+        let order = g.topo_order().unwrap();
+        let ipdom = immediate_post_dominators(&g, &order);
+        for v in 0..4 {
+            assert_eq!(ipdom[v], Some(v + 1), "chain ipdom is the successor");
+        }
+        assert_eq!(ipdom[4], None, "the output has no post-dominator");
+    }
+
+    /// The smallest closed block: a skip edge around one layer
+    /// (`0 -> 1 -> 2` plus `0 -> 2`). Its two members are the single
+    /// branch layer and the convergence vertex.
+    #[test]
+    fn detects_single_layer_branch_block() {
+        let mut g = Dag::new();
+        for i in 0..3 {
+            g.add_node(format!("v{i}"));
+        }
+        g.add_edge(0, 1, 0.0);
+        g.add_edge(1, 2, 0.0);
+        g.add_edge(0, 2, 0.0);
+        let blocks = detect_blocks(&g);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].input, 0);
+        assert_eq!(blocks[0].members, vec![1, 2]);
+        assert_eq!(blocks[0].output, 2);
+    }
+
+    /// Nested candidates: an outer diamond whose left branch is itself a
+    /// diamond. Detection walks inputs in topological order, so the
+    /// input-most (outer) candidate claims the vertices and the nested
+    /// inner candidate is skipped.
+    #[test]
+    fn nested_candidates_resolve_to_the_outer_block() {
+        let mut g = Dag::new();
+        for i in 0..7 {
+            g.add_node(format!("v{i}"));
+        }
+        // Outer: 0 -> {1, 4} -> 6; inner: 1 -> {2, 3} -> 5.
+        g.add_edge(0, 1, 0.0);
+        g.add_edge(0, 4, 0.0);
+        g.add_edge(1, 2, 0.0);
+        g.add_edge(1, 3, 0.0);
+        g.add_edge(2, 5, 0.0);
+        g.add_edge(3, 5, 0.0);
+        g.add_edge(5, 6, 0.0);
+        g.add_edge(4, 6, 0.0);
+        let blocks = detect_blocks(&g);
+        assert_eq!(blocks.len(), 1, "inner candidate must be skipped");
+        assert_eq!(blocks[0].input, 0);
+        assert_eq!(blocks[0].output, 6);
+        // Members are ordered by topological position; compare as a set.
+        let mut members = blocks[0].members.clone();
+        members.sort_unstable();
+        assert_eq!(members, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    /// Overlapping candidates at a shared boundary: the convergence vertex
+    /// of one block may serve as the *input* of the next (GoogLeNet chains
+    /// inceptions this way), so both are detected — members never overlap,
+    /// boundary vertices may.
+    #[test]
+    fn chained_blocks_share_boundary_vertices() {
+        let mut g = Dag::new();
+        for i in 0..7 {
+            g.add_node(format!("v{i}"));
+        }
+        // 0 -> {1, 2} -> 3 -> {4, 5} -> 6.
+        g.add_edge(0, 1, 0.0);
+        g.add_edge(0, 2, 0.0);
+        g.add_edge(1, 3, 0.0);
+        g.add_edge(2, 3, 0.0);
+        g.add_edge(3, 4, 0.0);
+        g.add_edge(3, 5, 0.0);
+        g.add_edge(4, 6, 0.0);
+        g.add_edge(5, 6, 0.0);
+        let blocks = detect_blocks(&g);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].input, 0);
+        assert_eq!(blocks[0].output, 3);
+        assert_eq!(blocks[1].input, 3, "block 0's output feeds block 1");
+        assert_eq!(blocks[1].output, 6);
+        let m0: std::collections::HashSet<_> = blocks[0].members.iter().collect();
+        assert!(blocks[1].members.iter().all(|m| !m0.contains(m)));
+    }
+
+    /// GPT-2's transformer stack: every pre-norm block splits into an
+    /// attention sub-block and an MLP sub-block; `repeated_blocks` must
+    /// group the 12 structurally identical repetitions of each so they are
+    /// retained as reusable units.
+    #[test]
+    fn gpt2_repeated_blocks_form_twelve_wide_groups() {
+        let m = models::by_name("gpt2").unwrap();
+        let blocks = detect_blocks(m.dag());
+        assert!(blocks.len() >= 24, "2 sub-blocks per transformer block");
+        let groups = repeated_blocks(&blocks, 2);
+        assert!(
+            groups.iter().any(|g| g.len() >= 12),
+            "no 12-wide repeated group: {:?}",
+            groups.iter().map(|g| g.len()).collect::<Vec<_>>()
+        );
+        let grouped: usize = groups.iter().map(|g| g.len()).sum();
+        assert!(grouped >= 22, "repetition grouping too sparse: {grouped}");
+    }
+
     #[test]
     fn detects_declared_blocks_in_zoo_models() {
         // Structural detection must find at least as many block instances

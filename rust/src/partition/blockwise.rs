@@ -13,12 +13,61 @@
 //! is exact in all cases and never slower than the full fallback.
 
 use super::blocks::{detect_blocks, Block};
+use super::fleet::{FleetPlanner, FleetSpec};
 use super::general::{general_partition_instrumented, GeneralRun};
-use super::planner::PartitionPlanner;
 use super::types::{Partition, Problem};
 use crate::graph::Dag;
 use crate::maxflow::{dinic, FlowNetwork};
 use crate::profiles::CostGraph;
+
+/// The Theorem-2 reduction plan of one model: the detected blocks and which
+/// of them pass the intra-block cut test. Detection reads only the layer
+/// DAG and the activation bytes — both model properties shared by every
+/// device tier — which is what lets `partition::fleet` compute the plan
+/// **once per fleet** and [`Reduction::apply`] it to each tier's cost graph
+/// (only the summed execution weights differ between tiers).
+pub(crate) struct Reduction {
+    blocks_detected: usize,
+    abstractable: Vec<Block>,
+}
+
+impl Reduction {
+    /// Run Alg. 3 detection + the Theorem 2 test on every block.
+    pub(crate) fn detect(c: &CostGraph) -> Reduction {
+        let blocks = detect_blocks(&c.dag);
+        let blocks_detected = blocks.len();
+        let abstractable = blocks
+            .into_iter()
+            .filter(|b| passes_intra_block_test(c, b))
+            .collect();
+        Reduction {
+            blocks_detected,
+            abstractable,
+        }
+    }
+
+    pub(crate) fn blocks_detected(&self) -> usize {
+        self.blocks_detected
+    }
+
+    pub(crate) fn blocks_abstracted(&self) -> usize {
+        self.abstractable.len()
+    }
+
+    /// True iff at least one block passed the test, i.e. the reduced DAG is
+    /// strictly smaller than the full one.
+    pub(crate) fn reduces(&self) -> bool {
+        !self.abstractable.is_empty()
+    }
+
+    /// Apply the plan to a cost graph sharing the model shape (Eqs. 17-20).
+    /// Returns the reduced cost graph and the full→reduced vertex mapping
+    /// (the mapping is identical for every tier of a fleet).
+    pub(crate) fn apply(&self, c: &CostGraph) -> (CostGraph, Vec<usize>) {
+        let refs: Vec<&Block> = self.abstractable.iter().collect();
+        reduce(c, &refs)
+    }
+}
 
 /// Instrumentation of a block-wise run.
 #[derive(Clone, Debug)]
@@ -41,32 +90,28 @@ pub fn blockwise_partition(problem: &Problem) -> Partition {
 /// Alg. 4 with instrumentation.
 pub fn blockwise_partition_instrumented(problem: &Problem) -> BlockwiseRun {
     let c = problem.costs;
-    let blocks = detect_blocks(&c.dag);
-    let abstractable: Vec<&Block> = blocks
-        .iter()
-        .filter(|b| passes_intra_block_test(c, b))
-        .collect();
+    let red = Reduction::detect(c);
 
-    if abstractable.is_empty() {
+    if !red.reduces() {
         let run = general_partition_instrumented(problem);
         return BlockwiseRun {
             partition: run.partition,
             flow_vertices: run.flow_vertices,
             flow_edges: run.flow_edges,
             complexity: run.complexity,
-            blocks_detected: blocks.len(),
+            blocks_detected: red.blocks_detected(),
             blocks_abstracted: 0,
         };
     }
 
-    let (reduced, to_reduced) = reduce(c, &abstractable);
-    let mut reduced_problem = Problem::new(&reduced, problem.link);
-    reduced_problem.pin_inputs = problem.pin_inputs;
+    let (reduced, to_reduced) = red.apply(c);
+    let reduced_problem = Problem::with_pin(&reduced, problem.link, problem.pin_inputs);
     let run: GeneralRun = general_partition_instrumented(&reduced_problem);
 
     // Expand the reduced assignment back to the full layer set.
-    let device_set: Vec<bool> = (0..c.len())
-        .map(|v| run.partition.device_set[to_reduced[v]])
+    let device_set: Vec<bool> = to_reduced
+        .iter()
+        .map(|&r| run.partition.device_set[r])
         .collect();
     debug_assert!(problem.is_feasible(&device_set));
     let partition = problem.partition(device_set);
@@ -83,8 +128,8 @@ pub fn blockwise_partition_instrumented(problem: &Problem) -> BlockwiseRun {
         flow_vertices: run.flow_vertices,
         flow_edges: run.flow_edges,
         complexity: run.complexity,
-        blocks_detected: blocks.len(),
-        blocks_abstracted: abstractable.len(),
+        blocks_detected: red.blocks_detected(),
+        blocks_abstracted: red.blocks_abstracted(),
     }
 }
 
@@ -94,67 +139,42 @@ pub fn blockwise_partition_instrumented(problem: &Problem) -> BlockwiseRun {
 /// model's DAG and activation sizes, **not** on the link state. The
 /// coordinator re-partitions every epoch as rates change (Sec. III-A), so
 /// construction does all of that once and each [`Planner::partition`] call
-/// is a warm [`PartitionPlanner`] re-solve: an O(E) capacity refresh + a
-/// Dinic run on reusable scratch, with no allocation and no topology work.
-/// PERF.md quantifies the speedup over the one-shot Alg. 4.
+/// is a warm re-solve: an O(E) capacity refresh + a Dinic run on reusable
+/// scratch (or the O(L) scan when the reduced DAG is a chain), with no
+/// allocation and no topology work. PERF.md quantifies the speedup over
+/// the one-shot Alg. 4.
+///
+/// Since the fleet-level block reduction, this is a thin **one-tier
+/// wrapper over the same reduction engine** the fleet facade runs —
+/// exactly as [`PartitionPlanner`](super::PartitionPlanner) wraps the
+/// unreduced engine — so single-tier and fleet callers cannot drift apart.
 pub struct Planner {
-    /// `Some((full_costs, map))` when blocks were abstracted: the full
-    /// cost graph (for expansion + Eq. (7) evaluation) and the
-    /// full-vertex -> reduced-vertex mapping. `None` when the inner
-    /// planner already works on the full DAG (it owns its own copy;
-    /// holding a second one here would just duplicate gpt2-scale graphs).
-    expand: Option<(CostGraph, Vec<usize>)>,
-    /// Warm solver over the reduced DAG (or the full DAG if no block
-    /// passed the Theorem 2 test).
-    inner: PartitionPlanner,
-    blocks_detected: usize,
-    blocks_abstracted: usize,
+    /// Single-tier fleet engine with block reduction enabled.
+    fleet: FleetPlanner,
 }
 
 impl Planner {
     /// Run detection + Theorem 2 tests + reduction + network build once.
     pub fn new(costs: &CostGraph) -> Planner {
-        let blocks = detect_blocks(&costs.dag);
-        let abstractable: Vec<&Block> = blocks
-            .iter()
-            .filter(|b| passes_intra_block_test(costs, b))
-            .collect();
-        let blocks_detected = blocks.len();
-        let blocks_abstracted = abstractable.len();
-        let (inner, expand) = if abstractable.is_empty() {
-            (PartitionPlanner::new(costs), None)
-        } else {
-            let (reduced, map) = reduce(costs, &abstractable);
-            (PartitionPlanner::new(&reduced), Some((costs.clone(), map)))
-        };
         Planner {
-            expand,
-            inner,
-            blocks_detected,
-            blocks_abstracted,
+            fleet: FleetPlanner::with_options(FleetSpec::single(costs.clone()), true, true, true),
         }
     }
 
     pub fn blocks_detected(&self) -> usize {
-        self.blocks_detected
+        self.fleet.stats().blocks_detected
     }
 
     pub fn blocks_abstracted(&self) -> usize {
-        self.blocks_abstracted
+        self.fleet.stats().blocks_abstracted
     }
 
-    /// Solve for the current link state (the per-epoch hot path).
+    /// Solve for the current link state (the per-epoch hot path). Every
+    /// call refreshes + re-solves on the reduced DAG and expands the
+    /// decision to the full layer set (evaluated via Eq. (7) on the full
+    /// cost graph).
     pub fn partition(&mut self, link: crate::partition::Link) -> Partition {
-        match &self.expand {
-            None => self.inner.partition(link),
-            Some((costs, to_reduced)) => {
-                let run = self.inner.partition(link);
-                let device_set: Vec<bool> = (0..costs.len())
-                    .map(|v| run.device_set[to_reduced[v]])
-                    .collect();
-                Problem::new(costs, link).partition(device_set)
-            }
-        }
+        self.fleet.take_solve(0, link)
     }
 }
 

@@ -48,10 +48,31 @@
 //! scratch and only reads the shared [`NetShape`] — so a future `rayon`
 //! feature flag can parallelize the per-tier loop without any API change.
 //!
-//! [`crate::partition::PartitionPlanner`] is a thin single-tier wrapper
-//! over this engine, which keeps PR-1's warm≡cold property tests pinning
-//! the shared arithmetic.
+//! # Fleet-level block reduction
+//!
+//! The Theorem 2 reduction (intra-block min-cut over **activation bytes**)
+//! depends only on the model DAG — not on any tier's compute profile — so
+//! the facade computes one [`blockwise::Reduction`](super::blockwise) plan
+//! per [`FleetSpec`] and applies it to every tier's cost graph: block
+//! detection and the intra-block min-cuts run **once per fleet**, and the
+//! shared/per-tier SoA capacity split above hangs off the *reduced* DAG.
+//! Block-structured models (ResNet, DenseNet, GPT-2) therefore pay
+//! blockwise-scale warm solves per dirty tier instead of full-DAG ones;
+//! each decision is expanded back to the full layer set and evaluated via
+//! Eq. (7) on the full cost graph before it leaves the planner.
+//!
+//! Reduced-DAG solves may tie-break among **co-optimal** cuts differently
+//! than the full general engine, so the pinned equivalence property is
+//! *cost equality* — equal T(cut) under Eq. (7), see
+//! [`crate::util::prop::assert_cut_cost_equal`] — not bit-identity.
+//! [`FleetStats`] carries the reduced-vs-full DAG sizes so tests can
+//! assert the smaller solves actually happen. Reduction is **off** for
+//! [`crate::partition::PartitionPlanner`], the thin single-tier wrapper
+//! over this engine: its contract (and PR-1's warm≡cold property tests)
+//! is bit-identity with the cold general engine, which is also what the
+//! cost-equivalence suites diff the reduced path against.
 
+use super::blockwise::Reduction;
 use super::general::linear_scan_partition;
 use super::types::{Link, Partition, Problem};
 use crate::maxflow::{dinic_with, DinicScratch, FlowNetwork, MinCut};
@@ -244,6 +265,62 @@ impl TransformedNet {
     }
 }
 
+/// The fleet-wide Theorem 2 reduction: one detection + intra-block min-cut
+/// pass (activation bytes are tier-independent), one full→reduced vertex
+/// mapping shared by every tier, and the per-tier *reduced* cost graphs the
+/// solver actually runs on. The reduced graphs preserve the SoA invariant
+/// of the full ones — identical DAG/bytes/server costs, only the summed
+/// ξ_D differs — so [`NetShape`] and `assert_shared_shape` apply unchanged.
+struct FleetReduction {
+    /// Full vertex → reduced vertex (identical for every tier).
+    to_reduced: Vec<usize>,
+    /// Per-tier reduced cost graphs, in the spec's tier order.
+    reduced: Vec<CostGraph>,
+}
+
+/// A tier's reduced cost graph differs from the (already-reduced) template
+/// only in ξ_D — `assert_shared_shape` guarantees everything else is
+/// identical — so it is rebuilt by accumulating the tier's per-layer device
+/// costs through the shared full→reduced mapping instead of re-running the
+/// whole reduction per tier. The accumulation visits a block's members in
+/// vertex-id order while `reduce` sums them in topo-position order; when
+/// those differ the ξ_D sums may differ from a direct `Reduction::apply`
+/// in the last ULPs, which is below the cost-equivalence tolerance that
+/// pins every reduced decision (reduced tiers carry no bit-identity
+/// contract — that belongs to the unreduced path only).
+fn retarget_xi_d(template: &CostGraph, to_reduced: &[usize], tier: &CostGraph) -> CostGraph {
+    let mut xi_d = vec![0.0; template.len()];
+    for (v, &r) in to_reduced.iter().enumerate() {
+        xi_d[r] += tier.xi_d[v];
+    }
+    CostGraph {
+        dag: template.dag.clone(),
+        xi_d,
+        xi_s: template.xi_s.clone(),
+        act_bytes: template.act_bytes.clone(),
+        param_bytes: template.param_bytes.clone(),
+        n_loc: template.n_loc,
+    }
+}
+
+/// (costs the tier's solver runs on, expansion input for [`solve_tier`]):
+/// the reduced graph plus the mapping back to the tier's full graph when
+/// the reduction is active, the full graph alone otherwise. Free function
+/// over split borrows so `plan`'s per-tier loop can hold `tiers` mutably.
+fn tier_inputs<'a>(
+    reduction: &'a Option<FleetReduction>,
+    spec: &'a FleetSpec,
+    tier: usize,
+) -> (&'a CostGraph, Option<(&'a [usize], &'a CostGraph)>) {
+    match reduction {
+        None => (&spec.tiers[tier].1, None),
+        Some(r) => (
+            &r.reduced[tier],
+            Some((r.to_reduced.as_slice(), &spec.tiers[tier].1)),
+        ),
+    }
+}
+
 /// A fleet of devices deduplicated into tiers: one [`CostGraph`] per tier
 /// (same model + server, per-tier device compute) and the device → tier
 /// mapping. This is the construction-time input of [`FleetPlanner`]; the
@@ -369,6 +446,11 @@ pub struct PlanDecision {
 /// Aggregate solver counters (see the module docs' batched-refresh
 /// invariant). `refreshes == flow_solves` always; they are distinct fields
 /// because the linear fast path solves without a capacity refresh.
+///
+/// The `full_*`/`reduced_*` fields expose the fleet-level block reduction:
+/// `reduced_vertices < full_vertices` proves every solve of this planner
+/// ran on the Theorem 2 reduced DAG rather than the full model DAG (they
+/// are equal when no block was abstracted or reduction was disabled).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FleetStats {
     /// `plan` calls served (one per epoch in the coordinator loop).
@@ -379,9 +461,23 @@ pub struct FleetStats {
     pub refreshes: u64,
     /// Dinic runs (== refreshes; every refresh is followed by one solve).
     pub flow_solves: u64,
-    /// Linear-scan solves (chain models take the O(L) fast path instead of
-    /// the flow network).
+    /// Linear-scan solves (chain *solve* DAGs — either a chain model or a
+    /// block model whose reduced DAG collapsed to a chain — take the O(L)
+    /// fast path instead of the flow network).
     pub linear_scans: u64,
+    /// Vertices of the full model DAG (shared by every tier).
+    pub full_vertices: usize,
+    /// Edges of the full model DAG.
+    pub full_edges: usize,
+    /// Vertices of the DAG the engine actually solves on.
+    pub reduced_vertices: usize,
+    /// Edges of the DAG the engine actually solves on.
+    pub reduced_edges: usize,
+    /// Blocks found by Alg. 3 detection (0 when reduction is disabled —
+    /// detection is skipped entirely on the bit-exact general path).
+    pub blocks_detected: usize,
+    /// Blocks that passed the Theorem 2 test and were abstracted.
+    pub blocks_abstracted: usize,
 }
 
 impl FleetStats {
@@ -409,12 +505,16 @@ struct TierState {
     linear_scans: u64,
 }
 
-/// Refresh + solve one tier for `link` and cache the decision. Free
-/// function over split borrows so a rayon `par_iter_mut` over tiers can
-/// adopt it unchanged.
+/// Refresh + solve one tier for `link` and cache the decision. When the
+/// fleet reduction is active, `solve_costs` is the tier's *reduced* cost
+/// graph and `expand` carries the full→reduced mapping plus the full graph:
+/// the solved device set is expanded back to full layers and the cached
+/// partition's delay is Eq. (7) on the full graph. Free function over split
+/// borrows so a rayon `par_iter_mut` over tiers can adopt it unchanged.
 fn solve_tier(
     shape: Option<&NetShape>,
-    costs: &CostGraph,
+    solve_costs: &CostGraph,
+    expand: Option<(&[usize], &CostGraph)>,
     pin_inputs: bool,
     closure_edges: bool,
     tier: &mut TierState,
@@ -429,12 +529,11 @@ fn solve_tier(
         flow_solves,
         linear_scans,
     } = tier;
-    // Problem::new validates the link (positive rates), exactly like the
-    // cold path — a dead uplink must panic, not produce NaN capacities
+    // Problem::with_pin validates the link (positive rates), exactly like
+    // the cold path — a dead uplink must panic, not produce NaN capacities
     // that solve to a silent garbage cut.
-    let mut problem = Problem::new(costs, link);
-    problem.pin_inputs = pin_inputs;
-    let partition = match (shape, net.as_mut()) {
+    let problem = Problem::with_pin(solve_costs, link, pin_inputs);
+    let solved_partition = match (shape, net.as_mut()) {
         (None, None) => {
             *linear_scans += 1;
             linear_scan_partition(&problem)
@@ -456,6 +555,21 @@ fn solve_tier(
         }
         _ => unreachable!("tier flow state out of sync with the shared shape"),
     };
+    let partition = match expand {
+        None => solved_partition,
+        Some((to_reduced, full)) => {
+            let device_set: Vec<bool> = to_reduced
+                .iter()
+                .map(|&r| solved_partition.device_set[r])
+                .collect();
+            let full_problem = Problem::with_pin(full, link, pin_inputs);
+            debug_assert!(
+                !closure_edges || full_problem.is_feasible(&device_set),
+                "expanded block-reduced partition is infeasible"
+            );
+            full_problem.partition(device_set)
+        }
+    };
     *solved = Some((link, partition));
 }
 
@@ -467,54 +581,114 @@ pub struct FleetPlanner {
     spec: FleetSpec,
     pin_inputs: bool,
     closure_edges: bool,
-    /// Shared structure; `None` when the model DAG is a chain (every tier
-    /// then takes the O(L) linear-scan fast path).
+    /// The fleet-wide Theorem 2 reduction; `Some` iff block reduction was
+    /// requested and at least one block passed the intra-block cut test.
+    reduction: Option<FleetReduction>,
+    /// Shared structure of the *solved* (reduced when active) DAG; `None`
+    /// when that DAG is a chain (every tier then takes the O(L) linear-scan
+    /// fast path — e.g. ResNet/GPT-2 fleets, whose reduced DAGs are chains).
     shape: Option<NetShape>,
     tiers: Vec<TierState>,
+    /// (vertices, edges) of the full model DAG.
+    full_dag: (usize, usize),
+    /// (vertices, edges) of the DAG the solver actually runs on.
+    solve_dag: (usize, usize),
+    blocks_detected: usize,
+    blocks_abstracted: usize,
     plans: u64,
     requests: u64,
 }
 
 impl FleetPlanner {
-    /// Plan for the default problem (pinned inputs, closure edges on).
+    /// Plan for the default problem (pinned inputs, closure edges on,
+    /// fleet-level block reduction enabled).
     pub fn new(spec: FleetSpec) -> FleetPlanner {
-        FleetPlanner::with_options(spec, true, true)
+        FleetPlanner::with_options(spec, true, true, true)
     }
 
-    /// Explicit control over input pinning and closure edges (mirrors
-    /// `general_partition_with_options`).
-    pub fn with_options(spec: FleetSpec, pin_inputs: bool, closure_edges: bool) -> FleetPlanner {
+    /// Explicit control over input pinning, closure edges (mirrors
+    /// `general_partition_with_options`) and the fleet-level block
+    /// reduction. With `block_reduction` **off** the engine solves the full
+    /// DAG and decisions are bit-identical to the cold general engine (the
+    /// [`super::PartitionPlanner`] contract); with it **on**, decisions on
+    /// block-structured models are solved at blockwise scale and are
+    /// *cost-equivalent* — equal T(cut), possibly a different co-optimal
+    /// cut (see the module docs).
+    pub fn with_options(
+        spec: FleetSpec,
+        pin_inputs: bool,
+        closure_edges: bool,
+        block_reduction: bool,
+    ) -> FleetPlanner {
         let template = &spec.tiers[0].1;
         for (name, costs) in &spec.tiers[1..] {
             assert_shared_shape(template, costs, name);
         }
-        let n = template.len();
-        let linear = !(0..n).any(|v| template.dag.out_degree(v) > 1);
+
+        // One Theorem 2 pass for the whole fleet: detection + intra-block
+        // min-cuts read only the DAG and activation bytes, which
+        // `assert_shared_shape` just proved identical across tiers. The
+        // full reduction (mapping + shared arrays) is applied once, to the
+        // template; every other tier differs only in ξ_D, which is
+        // re-derived through the shared mapping.
+        let (reduction, blocks_detected, blocks_abstracted) = if block_reduction {
+            let plan = Reduction::detect(template);
+            let (detected, abstracted) = (plan.blocks_detected(), plan.blocks_abstracted());
+            let reduction = if plan.reduces() {
+                let (first, to_reduced) = plan.apply(template);
+                let mut reduced = Vec::with_capacity(spec.tiers.len());
+                reduced.push(first);
+                for (_, costs) in &spec.tiers[1..] {
+                    let r = retarget_xi_d(&reduced[0], &to_reduced, costs);
+                    reduced.push(r);
+                }
+                Some(FleetReduction { to_reduced, reduced })
+            } else {
+                None
+            };
+            (reduction, detected, abstracted)
+        } else {
+            (None, 0, 0)
+        };
+
+        let full_dag = (template.len(), template.dag.num_edges());
+        let solve_template = reduction.as_ref().map_or(template, |r| &r.reduced[0]);
+        let solve_dag = (solve_template.len(), solve_template.dag.num_edges());
+        let n = solve_template.len();
+        let linear = !(0..n).any(|v| solve_template.dag.out_degree(v) > 1);
         let (shape, proto) = if linear {
             (None, None)
         } else {
-            let (shape, proto) = NetShape::build(template, pin_inputs, closure_edges);
+            let (shape, proto) = NetShape::build(solve_template, pin_inputs, closure_edges);
             (Some(shape), Some(proto))
         };
-        let tiers = spec
-            .tiers
-            .iter()
-            .map(|(_, costs)| TierState {
-                net: proto.clone(),
-                exec_base: NetShape::exec_base(costs),
-                scratch: DinicScratch::default(),
-                solved: None,
-                refreshes: 0,
-                flow_solves: 0,
-                linear_scans: 0,
+        let tiers = (0..spec.tiers.len())
+            .map(|t| {
+                let solve_costs = reduction
+                    .as_ref()
+                    .map_or(&spec.tiers[t].1, |r| &r.reduced[t]);
+                TierState {
+                    net: proto.clone(),
+                    exec_base: NetShape::exec_base(solve_costs),
+                    scratch: DinicScratch::default(),
+                    solved: None,
+                    refreshes: 0,
+                    flow_solves: 0,
+                    linear_scans: 0,
+                }
             })
             .collect();
         FleetPlanner {
             spec,
             pin_inputs,
             closure_edges,
+            reduction,
             shape,
             tiers,
+            full_dag,
+            solve_dag,
+            blocks_detected,
+            blocks_abstracted,
             plans: 0,
             requests: 0,
         }
@@ -545,12 +719,14 @@ impl FleetPlanner {
         // stays allocation-free apart from the returned decision itself —
         // the PR-1 contract.
         if let [r] = requests {
+            let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, r.tier);
             let tier = &mut self.tiers[r.tier];
             let clean = matches!(&tier.solved, Some((l, _)) if *l == r.link);
             if !clean {
                 solve_tier(
                     self.shape.as_ref(),
-                    &self.spec.tiers[r.tier].1,
+                    solve_costs,
+                    expand,
                     self.pin_inputs,
                     self.closure_edges,
                     tier,
@@ -589,7 +765,7 @@ impl FleetPlanner {
         let mut results: Vec<Option<(Partition, bool)>> = vec![None; requests.len()];
         let shape = self.shape.as_ref();
         for (t, tier) in self.tiers.iter_mut().enumerate() {
-            let costs = &self.spec.tiers[t].1;
+            let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, t);
             // Serve the group matching the tier's epoch-start cache first:
             // processed later it would find the cache evicted by another of
             // the tier's links and re-solve a decision that was still valid.
@@ -604,7 +780,15 @@ impl FleetPlanner {
                 let (link, idxs) = &by_tier[t][g];
                 let clean = matches!(&tier.solved, Some((l, _)) if l == link);
                 if !clean {
-                    solve_tier(shape, costs, self.pin_inputs, self.closure_edges, tier, *link);
+                    solve_tier(
+                        shape,
+                        solve_costs,
+                        expand,
+                        self.pin_inputs,
+                        self.closure_edges,
+                        tier,
+                        *link,
+                    );
                 }
                 let partition = &tier.solved.as_ref().expect("tier just solved").1;
                 for (j, &i) in idxs.iter().enumerate() {
@@ -654,10 +838,12 @@ impl FleetPlanner {
         );
         self.plans += 1;
         self.requests += 1;
+        let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, tier);
         let t = &mut self.tiers[tier];
         solve_tier(
             self.shape.as_ref(),
-            &self.spec.tiers[tier].1,
+            solve_costs,
+            expand,
             self.pin_inputs,
             self.closure_edges,
             t,
@@ -671,6 +857,12 @@ impl FleetPlanner {
         let mut s = FleetStats {
             plans: self.plans,
             requests: self.requests,
+            full_vertices: self.full_dag.0,
+            full_edges: self.full_dag.1,
+            reduced_vertices: self.solve_dag.0,
+            reduced_edges: self.solve_dag.1,
+            blocks_detected: self.blocks_detected,
+            blocks_abstracted: self.blocks_abstracted,
             ..FleetStats::default()
         };
         for t in &self.tiers {
@@ -686,8 +878,9 @@ impl FleetPlanner {
         &self.spec
     }
 
-    /// (vertices, edges) of the shared flow-network shape; `None` on the
-    /// linear fast path.
+    /// (vertices, edges) of the shared flow-network shape — built on the
+    /// *reduced* DAG when the fleet-level block reduction is active;
+    /// `None` on the linear fast path (chain solve DAGs never build one).
     pub fn flow_size(&self) -> Option<(usize, usize)> {
         self.shape.as_ref().map(|s| (s.vertices, s.edges))
     }
@@ -725,11 +918,11 @@ fn assert_shared_shape(a: &CostGraph, b: &CostGraph, tier: &str) {
 mod tests {
     use super::*;
     use crate::models;
+    use crate::models::REDUCING_MODELS;
     use crate::partition::PartitionPlanner;
     use crate::profiles::TrainCfg;
+    use crate::util::prop::{assert_cut_cost_equal, random_link};
     use crate::util::rng::Rng;
-
-    const SEED: u64 = 0x51AB_1E5E_ED0F_1EE7;
 
     fn tier_profiles() -> [DeviceProfile; 4] {
         [
@@ -747,13 +940,6 @@ mod tests {
         })
     }
 
-    fn random_link(rng: &mut Rng) -> Link {
-        Link {
-            up_bps: rng.range(1e4, 1e9),
-            down_bps: rng.range(1e4, 1e9),
-        }
-    }
-
     #[test]
     fn spec_deduplicates_tiers_by_name() {
         let spec = spec_for("block-residual", 10);
@@ -765,19 +951,23 @@ mod tests {
         }
     }
 
-    /// The ISSUE acceptance property: a batched `plan` is bit-identical to
-    /// N independent `PartitionPlanner::partition` calls, across the whole
-    /// model zoo and random tier/link batches (duplicates included), over
-    /// several epochs.
+    /// The fleet-vs-independent equivalence suite: a batched `plan` is
+    /// **cost-equivalent** to N independent `PartitionPlanner::partition`
+    /// calls (the unreduced general engine), across the whole model zoo and
+    /// random tier/link batches (duplicates included), over several epochs.
+    /// Reduced-DAG solves may pick different co-optimal cuts, so the pinned
+    /// property is equal T(cut) — while duplicates of one (tier, link)
+    /// within the fleet remain bit-exact cache copies of each other.
     #[test]
-    fn plan_matches_independent_partition_planners_across_zoo() {
+    fn plan_cost_equivalent_to_independent_partition_planners_across_zoo() {
+        let base = crate::util::rng::test_seed();
         for model in models::MODEL_NAMES {
             let spec = spec_for(model, 6);
             let mut reference: Vec<PartitionPlanner> = (0..spec.num_tiers())
                 .map(|t| PartitionPlanner::new(spec.tier_costs(t)))
                 .collect();
             let mut fleet = FleetPlanner::new(spec);
-            let mut rng = Rng::new(SEED ^ model.len() as u64);
+            let mut rng = Rng::new(base ^ model.len() as u64);
             for epoch in 0..6 {
                 let batch_size = rng.index(7); // includes the empty batch
                 let mut requests = Vec::with_capacity(batch_size);
@@ -795,21 +985,56 @@ mod tests {
                 }
                 let decisions = fleet.plan(&requests);
                 assert_eq!(decisions.len(), requests.len());
-                for (r, d) in requests.iter().zip(&decisions) {
+                for (i, (r, d)) in requests.iter().zip(&decisions).enumerate() {
                     assert_eq!(d.device, r.device);
                     assert_eq!(d.tier, r.tier);
                     let reference = reference[r.tier].partition(r.link);
-                    assert_eq!(
-                        d.partition.device_set, reference.device_set,
-                        "{model} epoch {epoch}: device sets diverged"
-                    );
-                    assert_eq!(
-                        d.partition.delay.to_bits(),
-                        reference.delay.to_bits(),
-                        "{model} epoch {epoch}: delay bits diverged"
-                    );
+                    let problem = Problem::new(fleet.spec().tier_costs(r.tier), r.link);
+                    assert_cut_cost_equal(&problem, &d.partition, &reference);
                     assert_eq!(d.cut_layer, d.partition.cut_layer());
+                    // Duplicate (tier, link) pairs in the batch are served
+                    // from the tier cache, bit-exactly.
+                    for (r2, d2) in requests.iter().zip(&decisions).take(i) {
+                        if r2.tier == r.tier && r2.link == r.link {
+                            assert_eq!(
+                                d.partition.delay.to_bits(),
+                                d2.partition.delay.to_bits(),
+                                "{model} epoch {epoch}: cache copy diverged"
+                            );
+                            assert_eq!(d.partition.device_set, d2.partition.device_set);
+                        }
+                    }
                 }
+            }
+        }
+    }
+
+    /// With block reduction disabled the facade stays bit-identical to
+    /// independent `PartitionPlanner`s — the PR-2 pinned property, now the
+    /// explicit contract of the unreduced configuration.
+    #[test]
+    fn unreduced_plan_is_bit_identical_to_partition_planners() {
+        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0xB17);
+        for model in ["googlenet", "resnet18", "gpt2"] {
+            let spec = spec_for(model, 6);
+            let mut reference: Vec<PartitionPlanner> = (0..spec.num_tiers())
+                .map(|t| PartitionPlanner::new(spec.tier_costs(t)))
+                .collect();
+            let mut fleet = FleetPlanner::with_options(spec, true, true, false);
+            let s = fleet.stats();
+            assert_eq!(s.reduced_vertices, s.full_vertices, "{model}");
+            assert_eq!(s.blocks_detected, 0, "{model}: detection must be skipped");
+            for _ in 0..8 {
+                let link = random_link(&mut rng);
+                let device = rng.index(fleet.spec().num_devices());
+                let tier = fleet.spec().tier_of(device);
+                let d = fleet
+                    .plan(&[PlanRequest { device, tier, link }])
+                    .pop()
+                    .unwrap();
+                let want = reference[tier].partition(link);
+                assert_eq!(d.partition.device_set, want.device_set, "{model}");
+                assert_eq!(d.partition.delay.to_bits(), want.delay.to_bits(), "{model}");
             }
         }
     }
@@ -827,7 +1052,7 @@ mod tests {
     }
 
     #[test]
-    fn single_device_fleet_matches_partition_planner() {
+    fn single_device_fleet_cost_matches_partition_planner() {
         let m = models::by_name("googlenet").unwrap();
         let costs = CostGraph::build(
             &m,
@@ -837,7 +1062,7 @@ mod tests {
         );
         let mut fleet = FleetPlanner::new(FleetSpec::single(costs.clone()));
         let mut reference = PartitionPlanner::new(&costs);
-        let mut rng = Rng::new(SEED);
+        let mut rng = Rng::new(crate::util::rng::test_seed());
         for _ in 0..10 {
             let link = random_link(&mut rng);
             let d = fleet
@@ -849,24 +1074,35 @@ mod tests {
                 .pop()
                 .unwrap();
             let r = reference.partition(link);
-            assert_eq!(d.partition.device_set, r.device_set);
-            assert_eq!(d.partition.delay.to_bits(), r.delay.to_bits());
+            assert_cut_cost_equal(&Problem::new(&costs, link), &d.partition, &r);
         }
-        assert_eq!(fleet.stats().flow_solves, 10);
+        // GoogLeNet reduces only partially (several mid-network inception
+        // blocks fail the Theorem 2 test), so the reduced DAG still has
+        // branches and every solve runs the flow network — on a strictly
+        // smaller graph.
+        let s = fleet.stats();
+        assert_eq!(s.flow_solves, 10);
+        assert!(s.blocks_abstracted > 0);
+        assert!(s.reduced_vertices < s.full_vertices);
     }
 
-    /// The ISSUE acceptance criterion: a 1000-device epoch performs exactly
-    /// one capacity-refresh pass per dirty tier, asserted via solver stats,
-    /// while clean tiers (unchanged link) are served from cache.
+    /// The PR-2 acceptance criterion, kept under the reduction: a
+    /// 1000-device epoch performs exactly one capacity-refresh pass per
+    /// dirty tier, asserted via solver stats, while clean tiers (unchanged
+    /// link) are served from cache. GoogLeNet keeps the flow path after
+    /// reduction (partial abstraction), so refresh accounting is exercised
+    /// on the reduced network; decisions are cost-checked against the
+    /// unreduced reference.
     #[test]
     fn thousand_device_epoch_refreshes_once_per_dirty_tier() {
-        let spec = spec_for("block-inception", 1000);
+        let spec = spec_for("googlenet", 1000);
         let num_tiers = spec.num_tiers();
         assert_eq!(num_tiers, 4);
         let mut reference: Vec<PartitionPlanner> = (0..num_tiers)
             .map(|t| PartitionPlanner::new(spec.tier_costs(t)))
             .collect();
         let mut fleet = FleetPlanner::new(spec);
+        assert!(fleet.flow_size().is_some(), "googlenet must stay on flow");
 
         // Per-tier epoch links (the broadcast channel state of each tier).
         let epoch_link = |tier: usize, epoch: usize| Link {
@@ -875,6 +1111,15 @@ mod tests {
         };
         let requests_for = |fleet: &FleetPlanner, epoch: usize| -> Vec<PlanRequest> {
             fleet.spec().requests(|tier| epoch_link(tier, epoch))
+        };
+        let check = |fleet: &FleetPlanner,
+                     refs: &[Partition],
+                     reqs: &[PlanRequest],
+                     decisions: &[PlanDecision]| {
+            for (r, d) in reqs.iter().zip(decisions) {
+                let problem = Problem::new(fleet.spec().tier_costs(r.tier), r.link);
+                assert_cut_cost_equal(&problem, &d.partition, &refs[r.tier]);
+            }
         };
 
         // Epoch 0: all four tiers dirty -> exactly 4 refreshes, 1000 answers.
@@ -890,10 +1135,7 @@ mod tests {
         let refs: Vec<Partition> = (0..num_tiers)
             .map(|t| reference[t].partition(epoch_link(t, 0)))
             .collect();
-        for (r, d) in reqs.iter().zip(&decisions) {
-            assert_eq!(d.partition.device_set, refs[r.tier].device_set);
-            assert_eq!(d.partition.delay.to_bits(), refs[r.tier].delay.to_bits());
-        }
+        check(&fleet, &refs, &reqs, &decisions);
 
         // Epoch 1: same links -> every tier clean, no new refreshes.
         let reqs = requests_for(&fleet, 0);
@@ -909,9 +1151,7 @@ mod tests {
         let refs: Vec<Partition> = (0..num_tiers)
             .map(|t| reference[t].partition(epoch_link(t, 2)))
             .collect();
-        for (r, d) in reqs.iter().zip(&decisions) {
-            assert_eq!(d.partition.device_set, refs[r.tier].device_set);
-        }
+        check(&fleet, &refs, &reqs, &decisions);
         assert_eq!(fleet.stats().plans, 3);
         assert_eq!(fleet.stats().requests, 3000);
     }
@@ -934,8 +1174,10 @@ mod tests {
     }
 
     /// Different links of one tier interleaved in a batch must not thrash
-    /// the tier cache: each distinct (tier, link) refreshes + solves at
-    /// most once per epoch, with duplicates served bit-exactly.
+    /// the tier cache: each distinct (tier, link) solves at most once per
+    /// epoch, with duplicates served bit-exactly. (block-residual's reduced
+    /// DAG is a chain, so the solves here are linear scans — the cache
+    /// grouping is engine-agnostic.)
     #[test]
     fn interleaved_links_solve_once_per_distinct_pair() {
         let mut fleet = FleetPlanner::new(spec_for("block-residual", 1));
@@ -947,8 +1189,7 @@ mod tests {
             link,
         };
         let decisions = fleet.plan(&[req(a), req(b), req(a)]);
-        assert_eq!(fleet.stats().flow_solves, 2, "a and b each solve once");
-        assert_eq!(fleet.stats().refreshes, 2);
+        assert_eq!(fleet.stats().solves(), 2, "a and b each solve once");
         assert_eq!(
             decisions[0].partition.delay.to_bits(),
             decisions[2].partition.delay.to_bits()
@@ -991,6 +1232,73 @@ mod tests {
             tier: 0,
             link: Link::symmetric(0.0),
         }]);
+    }
+
+    /// The tentpole acceptance hook: `FleetStats` proves block-structured
+    /// models actually solve on strictly smaller DAGs, fleet-wide, while
+    /// every decision stays cost-equivalent to the unreduced engine.
+    #[test]
+    fn reduction_solves_on_strictly_smaller_dags_for_block_models() {
+        for model in REDUCING_MODELS {
+            let spec = spec_for(model, 8);
+            let mut reference: Vec<PartitionPlanner> = (0..spec.num_tiers())
+                .map(|t| PartitionPlanner::new(spec.tier_costs(t)))
+                .collect();
+            let mut fleet = FleetPlanner::new(spec);
+            let s = fleet.stats();
+            assert!(s.blocks_abstracted > 0, "{model}: nothing abstracted");
+            assert!(
+                s.reduced_vertices < s.full_vertices && s.reduced_edges < s.full_edges,
+                "{model}: solve DAG {}v/{}e is not smaller than full {}v/{}e",
+                s.reduced_vertices,
+                s.reduced_edges,
+                s.full_vertices,
+                s.full_edges
+            );
+            let link = Link::symmetric(2e6);
+            let reqs = fleet.spec().requests(|_| link);
+            let decisions = fleet.plan(&reqs);
+            for (r, d) in reqs.iter().zip(&decisions) {
+                let problem = Problem::new(fleet.spec().tier_costs(r.tier), link);
+                assert_cut_cost_equal(&problem, &d.partition, &reference[r.tier].partition(link));
+            }
+        }
+    }
+
+    /// ResNet-style models whose blocks all abstract reduce to a pure
+    /// chain: the engine then runs the O(L) linear scan on the reduced DAG
+    /// — no flow network at all — and still matches the unreduced engine's
+    /// cut cost on the full DAG.
+    #[test]
+    fn chain_reduced_models_take_the_linear_path() {
+        let spec = spec_for("block-residual", 4);
+        let mut reference: Vec<PartitionPlanner> = (0..spec.num_tiers())
+            .map(|t| PartitionPlanner::new(spec.tier_costs(t)))
+            .collect();
+        let mut fleet = FleetPlanner::new(spec);
+        assert!(
+            fleet.flow_size().is_none(),
+            "reduced block-residual must be a chain"
+        );
+        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0xC4A1);
+        for _ in 0..6 {
+            let link = random_link(&mut rng);
+            let reqs = fleet.spec().requests(|_| link);
+            let decisions = fleet.plan(&reqs);
+            for (r, d) in reqs.iter().zip(&decisions) {
+                let problem = Problem::new(fleet.spec().tier_costs(r.tier), link);
+                assert_cut_cost_equal(&problem, &d.partition, &reference[r.tier].partition(link));
+                // The decision is over the FULL layer set, not the reduced.
+                assert_eq!(
+                    d.partition.device_set.len(),
+                    fleet.spec().tier_costs(r.tier).len()
+                );
+            }
+        }
+        let s = fleet.stats();
+        assert_eq!(s.refreshes, 0, "linear path never refreshes capacities");
+        assert!(s.linear_scans > 0 && s.flow_solves == 0);
+        assert!(s.reduced_vertices < s.full_vertices);
     }
 
     #[test]

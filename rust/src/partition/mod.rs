@@ -9,15 +9,21 @@
 //!   max-flow min-cut (Theorem 1).
 //! * [`fleet`] — the fleet-scale planning engine and facade: per-tier
 //!   transformed networks over a shared struct-of-arrays capacity layout,
-//!   batch-refreshed and solved per epoch through [`FleetPlanner::plan`]
-//!   (see PERF.md).
+//!   batch-refreshed and solved per epoch through [`FleetPlanner::plan`],
+//!   with the Theorem 2 block reduction computed once per fleet so
+//!   block-structured models solve at blockwise scale (see PERF.md; the
+//!   pinned equivalence property is cost equality of co-optimal cuts,
+//!   `util::prop::assert_cut_cost_equal`).
 //! * [`planner`] — amortized re-partitioning for a single (model,
 //!   device-tier): [`PartitionPlanner`], a thin one-tier wrapper over the
-//!   fleet engine, re-solved per epoch via an O(E) capacity refresh.
+//!   fleet engine with reduction off (bit-identical to the cold general
+//!   engine), re-solved per epoch via an O(E) capacity refresh.
 //! * [`blocks`] — Alg. 3: block detection via branch/reconvergence
 //!   (immediate post-dominators).
 //! * [`blockwise`] — Alg. 4: intra-block cut test (Theorem 2) + block-level
-//!   abstraction (Eqs. 17-20), then Alg. 2 on the reduced DAG.
+//!   abstraction (Eqs. 17-20), then Alg. 2 on the reduced DAG;
+//!   `blockwise::Planner` is the one-tier wrapper over the fleet engine
+//!   with reduction on.
 //! * [`baselines`] — brute force (lower-set enumeration), regression [21],
 //!   OSS [17], device-only, central.
 

@@ -68,8 +68,15 @@ impl<'a> Problem<'a> {
 
     /// Variant without the data-locality constraint (see struct docs).
     pub fn unpinned(costs: &'a CostGraph, link: Link) -> Problem<'a> {
+        Problem::with_pin(costs, link, false)
+    }
+
+    /// Explicit-pinning constructor: the variant the amortized planners use
+    /// when replicating a caller's pinning choice on a derived (e.g.
+    /// Theorem-2 reduced) problem.
+    pub fn with_pin(costs: &'a CostGraph, link: Link, pin_inputs: bool) -> Problem<'a> {
         Problem {
-            pin_inputs: false,
+            pin_inputs,
             ..Problem::new(costs, link)
         }
     }

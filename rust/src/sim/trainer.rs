@@ -7,7 +7,7 @@ use super::convergence::{Dataset, LearningCurve};
 use crate::models;
 use crate::net::{EdgeNetwork, NetConfig};
 use crate::partition::baselines::{evaluate_static, oss_partition};
-use crate::partition::{FleetPlanner, FleetSpec, Link, PlanRequest, Problem};
+use crate::partition::{FleetPlanner, FleetSpec, FleetStats, Link, PlanRequest, Problem};
 use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
 use crate::util::rng::Rng;
 use std::time::Instant;
@@ -201,6 +201,15 @@ impl Trainer {
     pub fn fleet(&self) -> &[DeviceProfile] {
         &self.fleet
     }
+
+    /// Solver counters of the fleet planning facade behind the "proposed"
+    /// method. The `reduced_*` vs `full_*` fields prove block-structured
+    /// models decide epochs on the Theorem 2 reduced DAG (the Table I
+    /// decision-time metric measures blockwise-scale solves, not full-DAG
+    /// ones — see the regression test below).
+    pub fn planner_stats(&self) -> FleetStats {
+        self.planner.stats()
+    }
 }
 
 fn summarize(records: Vec<EpochRecord>) -> SimResult {
@@ -276,6 +285,32 @@ mod tests {
             assert!(
                 proposed <= b * 1.05,
                 "{baseline}: proposed {proposed} vs baseline {b}"
+            );
+        }
+    }
+
+    /// Guards the PR-2 regression from recurring: the fleet facade used to
+    /// run the full general engine per tier, so "proposed" decision stats
+    /// (the Table I metric) measured full-DAG solves on block-structured
+    /// zoo models. They must report reduced-DAG solves again.
+    #[test]
+    fn proposed_reports_reduced_dag_solves_for_block_models() {
+        for model in ["block-residual", "resnet18", "gpt2"] {
+            let mut cfg = quick_cfg("proposed");
+            cfg.model = model.into();
+            let mut t = Trainer::new(cfg);
+            t.run_epochs(3);
+            let s = t.planner_stats();
+            assert!(s.solves() > 0, "{model}: no decision solved");
+            assert!(s.blocks_abstracted > 0, "{model}: no blocks abstracted");
+            assert!(
+                s.reduced_vertices < s.full_vertices && s.reduced_edges < s.full_edges,
+                "{model}: decisions solved on {}v/{}e, full DAG {}v/{}e — \
+                 not a reduced-DAG solve",
+                s.reduced_vertices,
+                s.reduced_edges,
+                s.full_vertices,
+                s.full_edges
             );
         }
     }

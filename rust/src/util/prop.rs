@@ -1,10 +1,21 @@
-//! Lightweight property-testing driver (proptest is unavailable offline).
+//! Lightweight property-testing driver (proptest is unavailable offline)
+//! plus the shared generators and the cut-cost equivalence harness of the
+//! partition property suites.
 //!
 //! [`for_all`] runs a property over `cases` seeded generations; on failure
 //! it retries with the same seed to confirm determinism and reports the
 //! failing seed so the case can be replayed with `FASTSPLIT_PROP_SEED`.
+//! [`zoo_matrix`] is the shared generator matrix of the partition suites:
+//! every zoo model × every Jetson device tier, with a deterministic
+//! per-cell RNG for drawing random links. Both drivers derive their base
+//! seed from [`crate::util::rng::test_seed`], so `PALLAS_TEST_SEED`
+//! reseeds every suite at once and failures print the seed to replay with
+//! (recipe in PERF.md).
 
 use super::rng::Rng;
+use crate::models;
+use crate::partition::types::{Link, Partition, Problem};
+use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
 
 /// Number of cases to run per property (override with FASTSPLIT_PROP_CASES).
 pub fn default_cases() -> u64 {
@@ -25,7 +36,7 @@ pub fn for_all<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
             return;
         }
     }
-    let base = 0xF057_5EEDu64;
+    let base = crate::util::rng::test_seed();
     for case in 0..cases {
         let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -33,17 +44,22 @@ pub fn for_all<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
             prop(&mut rng);
         }));
         if let Err(payload) = result {
-            let msg = payload
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".into());
+            let msg = panic_message(payload.as_ref());
             panic!(
-                "property '{name}' failed on case {case} (seed {seed}):\n{msg}\n\
-                 replay with FASTSPLIT_PROP_SEED={seed}"
+                "property '{name}' failed on case {case} (seed {seed}, base seed {base}):\n{msg}\n\
+                 replay this case with FASTSPLIT_PROP_SEED={seed}, or the whole \
+                 suite with PALLAS_TEST_SEED={base}"
             );
         }
     }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
 }
 
 /// Generate a random connected DAG as an edge list over `n` vertices where
@@ -74,6 +90,119 @@ pub fn random_layer_dag(rng: &mut Rng, n: usize, extra_edge_prob: f64) -> Vec<(u
     edges.sort();
     edges.dedup();
     edges
+}
+
+/// A random link spanning the suites' 1e4..1e9 bytes/s rate regime.
+pub fn random_link(rng: &mut Rng) -> Link {
+    Link {
+        up_bps: rng.range(1e4, 1e9),
+        down_bps: rng.range(1e4, 1e9),
+    }
+}
+
+/// Relative tolerance of [`assert_cut_cost_equal`], in units of
+/// `f64::EPSILON` at the delay's magnitude (i.e. ULPs): 2^16. Two
+/// co-optimal cuts have mathematically equal T(cut), but evaluating Eq. (7)
+/// over *different* device sets sums different terms in different orders,
+/// so the computed delays may differ by accumulation rounding — a few
+/// hundred ULPs at zoo-model sizes, bounded comfortably by 2^16 ULPs
+/// (≈1.5e-11 relative) while staying orders of magnitude below any genuine
+/// cost gap between distinct cut values.
+pub const CUT_COST_ULPS: f64 = 65536.0;
+
+/// Assert two partitions of the same problem are **cost-equivalent**: both
+/// feasible, and with equal total training delay T(cut) under the paper's
+/// Eq. (7) cost model, to within the ULP-scale tolerance [`CUT_COST_ULPS`].
+///
+/// This is the property that licenses the fleet-level block reduction:
+/// Theorem 2 preserves the optimal *value*, not the argmin, so reduced-DAG
+/// and full-DAG solves may tie-break among co-optimal cuts differently and
+/// bit-identity of device sets cannot be demanded. Both delays are
+/// re-evaluated here through the same [`Problem::delay`] path, so a stored
+/// delay's provenance (reduced vs full evaluation) cannot skew the
+/// comparison.
+pub fn assert_cut_cost_equal(problem: &Problem, a: &Partition, b: &Partition) {
+    assert!(
+        problem.is_feasible(&a.device_set),
+        "first cut is infeasible: {:?}",
+        a.device_set
+    );
+    assert!(
+        problem.is_feasible(&b.device_set),
+        "second cut is infeasible: {:?}",
+        b.device_set
+    );
+    let ta = problem.delay(&a.device_set);
+    let tb = problem.delay(&b.device_set);
+    let tol = CUT_COST_ULPS * f64::EPSILON * (1.0 + ta.abs().max(tb.abs()));
+    assert!(
+        (ta - tb).abs() <= tol,
+        "cut costs differ: {ta} vs {tb} (|delta| = {:.3e}, tol = {tol:.3e}, \
+         device layers {} vs {})",
+        (ta - tb).abs(),
+        a.device_layers(),
+        b.device_layers(),
+    );
+}
+
+/// One (model, device-tier) cell of the shared generator matrix.
+pub struct ZooCase {
+    pub model: &'static str,
+    pub tier: &'static str,
+    pub costs: CostGraph,
+}
+
+/// The shared generator matrix of the partition property suites: every zoo
+/// model × every Jetson device tier, each cell receiving its own
+/// deterministic RNG for drawing random links (suites draw ≥13 links per
+/// cell, so every model sees ≥52 random (tier, link) pairs — the ISSUE's
+/// ≥50-draw floor). The base seed comes from
+/// [`crate::util::rng::test_seed`]; on failure the cell and the base seed
+/// are reported so the whole matrix replays with `PALLAS_TEST_SEED`.
+pub fn zoo_matrix<F: FnMut(&ZooCase, &mut Rng)>(name: &str, mut prop: F) {
+    let base = crate::util::rng::test_seed();
+    let server = DeviceProfile::rtx_a6000();
+    let tiers = [
+        DeviceProfile::jetson_tx1(),
+        DeviceProfile::jetson_tx2(),
+        DeviceProfile::jetson_orin_nano(),
+        DeviceProfile::jetson_agx_orin(),
+    ];
+    for &model in models::MODEL_NAMES {
+        let m = models::by_name(model).expect("zoo model");
+        for (t, device) in tiers.iter().enumerate() {
+            let case = ZooCase {
+                model,
+                tier: device.name,
+                costs: CostGraph::build(&m, device, &server, &TrainCfg::default()),
+            };
+            let seed = mix(mix(base, fnv(model)), t as u64 + 1);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut rng = Rng::new(seed);
+                prop(&case, &mut rng);
+            }));
+            if let Err(payload) = result {
+                let msg = panic_message(payload.as_ref());
+                panic!(
+                    "matrix property '{name}' failed on {model}/{} (cell seed {seed}, \
+                     base seed {base}):\n{msg}\n\
+                     replay the suite with PALLAS_TEST_SEED={base}",
+                    device.name
+                );
+            }
+        }
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    s.bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+        })
+}
+
+fn mix(a: u64, b: u64) -> u64 {
+    (a ^ b).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 #[cfg(test)]
@@ -113,5 +242,49 @@ mod tests {
                 assert!(has_parent[v], "vertex {v} orphaned");
             }
         });
+    }
+
+    #[test]
+    fn zoo_matrix_covers_every_model_tier_cell() {
+        let mut cells: Vec<(String, String)> = Vec::new();
+        zoo_matrix("coverage", |case, rng| {
+            assert_eq!(case.costs.len(), models::by_name(case.model).unwrap().len());
+            let l = random_link(rng);
+            assert!(l.up_bps >= 1e4 && l.up_bps < 1e9);
+            cells.push((case.model.to_string(), case.tier.to_string()));
+        });
+        assert_eq!(cells.len(), models::MODEL_NAMES.len() * 4);
+        // Deterministic order and no duplicate cells.
+        let mut dedup = cells.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), cells.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "matrix property 'zoo-fails'")]
+    fn zoo_matrix_reports_cell_and_seed() {
+        zoo_matrix("zoo-fails", |_case, _rng| panic!("boom"));
+    }
+
+    #[test]
+    fn cost_equal_accepts_coptimal_and_rejects_gaps() {
+        let m = models::by_name("lenet5").unwrap();
+        let costs = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        let p = Problem::new(&costs, Link::symmetric(1e6));
+        let all = p.device_only();
+        assert_cut_cost_equal(&p, &all, &all);
+        let mut prefix = vec![false; costs.len()];
+        prefix[0] = true;
+        let one = p.partition(prefix);
+        let gap = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            assert_cut_cost_equal(&p, &all, &one);
+        }));
+        assert!(gap.is_err(), "distinct cut costs must not compare equal");
     }
 }

@@ -24,13 +24,24 @@ echo "==> cargo test -q"
 cargo test -q
 
 if [[ $fast -eq 0 ]]; then
+  # Property suites at optimized speed (they only ran in debug before PR 3).
+  echo "==> cargo test -q --release"
+  cargo test -q --release
+
+  # The cost-equivalence suite must hold for any seed; re-run it under two
+  # fixed seeds so CI covers more of the generator matrix than the default
+  # stream (replay recipe: PERF.md "Deterministic seeds").
+  echo "==> equivalence suite under two fixed seeds"
+  PALLAS_TEST_SEED=1 cargo test -q --release equivalence
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release equivalence
+
   # Bench smoke: compile + run the bench binaries so they cannot bit-rot.
   # Output files are disabled (-) so committed BENCH_*.json results are
   # only ever replaced by deliberate full runs.
   echo "==> cargo bench --bench replan -- --quick (smoke)"
   FASTSPLIT_REPLAN_OUT=- cargo bench --bench replan -- --quick
   echo "==> cargo bench --bench fleet -- --smoke"
-  FASTSPLIT_FLEET_OUT=- cargo bench --bench fleet -- --smoke
+  FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- cargo bench --bench fleet -- --smoke
 fi
 
 echo "OK"
