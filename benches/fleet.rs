@@ -19,11 +19,12 @@
 //! `FASTSPLIT_FLEET_BLOCK_OUT`, disable either with `=-`) so the perf
 //! trajectory is tracked in-repo (see PERF.md).
 
-use fastsplit::partition::{FleetPlanner, FleetSpec, Link, PartitionPlanner, Problem};
+use fastsplit::partition::{FleetOptions, FleetPlanner, FleetSpec, Link, PartitionPlanner, Problem};
 use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
 use fastsplit::util::bench::{BenchConfig, Bencher};
 use fastsplit::util::json::Json;
-use fastsplit::util::prop::assert_cut_cost_equal;
+use fastsplit::util::prop::{assert_cut_cost_equal, fading_walk};
+use fastsplit::util::rng::Rng;
 use std::time::Duration;
 
 const MODEL: &str = "googlenet";
@@ -130,18 +131,71 @@ fn main() {
         });
         let clean = (b.results().len() > before).then(|| b.results()[before].summary.mean);
 
+        // σ-drift dirty epoch: per-tier links drift a few percent per
+        // epoch — the fading case the incremental (flow-reusing) re-solve
+        // targets — vs the same walk with the incremental path disabled
+        // (the PR-1 cold-refresh engine). The planner's own counters must
+        // prove the fast path actually ran.
+        let mut drift_means = Vec::new();
+        for (mode, options) in [
+            ("incremental", FleetOptions::default()),
+            (
+                "cold-refresh",
+                FleetOptions {
+                    incremental: false,
+                    ..FleetOptions::default()
+                },
+            ),
+        ] {
+            let spec = FleetSpec::from_fleet(&devices, costs);
+            let mut planner = FleetPlanner::with_options(spec, options);
+            let mut rng = Rng::new(0xD81F7 ^ n as u64);
+            let mut tier_links: Vec<Link> = (0..num_tiers).map(|t| epoch_link(t, 0)).collect();
+            let before = b.results().len();
+            b.bench(&format!("fleet/{MODEL}/{n}dev/epoch-drift-{mode}"), || {
+                for l in tier_links.iter_mut() {
+                    *l = fading_walk(&mut rng, *l, 1, 0.96, 1.04)[0];
+                }
+                let reqs = planner.spec().requests(|t| tier_links[t]);
+                planner.plan(&reqs)
+            });
+            drift_means
+                .push((b.results().len() > before).then(|| b.results()[before].summary.mean));
+            let ps = planner.stats();
+            if mode == "incremental" && ps.flow_solves > 0 {
+                assert!(
+                    ps.incremental_solves > 0,
+                    "σ-drift epochs must take the incremental path"
+                );
+            }
+            if mode == "cold-refresh" {
+                assert_eq!(ps.incremental_solves, 0);
+            }
+        }
+
         if let (Some(dirty), Some(clean)) = (dirty, clean) {
             println!(
                 "fleet/{n}dev: dirty epoch {dirty:.3e}s ({:.3e}s/device), clean epoch {clean:.3e}s",
                 dirty / n as f64
             );
-            rows.push(Json::obj(vec![
+            let mut row = vec![
                 ("devices", Json::num(n as f64)),
                 ("tiers", Json::num(num_tiers as f64)),
                 ("epoch_dirty_mean_s", Json::num(dirty)),
                 ("epoch_dirty_per_device_s", Json::num(dirty / n as f64)),
                 ("epoch_clean_mean_s", Json::num(clean)),
-            ]));
+            ];
+            if let [Some(inc), Some(cold)] = drift_means[..] {
+                println!(
+                    "fleet/{n}dev: drift epoch incremental {inc:.3e}s vs cold-refresh {cold:.3e}s \
+                     ({:.1}x)",
+                    cold / inc.max(1e-12)
+                );
+                row.push(("epoch_drift_incremental_mean_s", Json::num(inc)));
+                row.push(("epoch_drift_cold_refresh_mean_s", Json::num(cold)));
+                row.push(("drift_speedup", Json::num(cold / inc.max(1e-12))));
+            }
+            rows.push(Json::obj(row));
         }
     }
 
@@ -160,9 +214,10 @@ fn main() {
         let devices = DeviceProfile::fleet_of(block_devices);
         let spec_of = || FleetSpec::from_fleet(&devices, |d| costs_for(model, d));
 
-        // Reduced-vs-full cost-equivalence gate on a short trace.
+        // Reduced-vs-full cost-equivalence gate on a short trace (full =
+        // the bit-identical PR-1 engine: no reduction, no flow reuse).
         let mut reduced = FleetPlanner::new(spec_of());
-        let mut full = FleetPlanner::with_options(spec_of(), true, true, false);
+        let mut full = FleetPlanner::with_options(spec_of(), FleetOptions::bit_identical());
         for epoch in 0..4u64 {
             let reqs = reduced.spec().requests(|t| epoch_link(t, epoch));
             let red_decisions = reduced.plan(&reqs);
@@ -183,7 +238,7 @@ fn main() {
             let mut planner = if reduce {
                 FleetPlanner::new(spec_of())
             } else {
-                FleetPlanner::with_options(spec_of(), true, true, false)
+                FleetPlanner::with_options(spec_of(), FleetOptions::bit_identical())
             };
             let mut epoch = 0u64;
             let before = b.results().len();

@@ -4,18 +4,33 @@
 //! trace. This is the dynamic-edge hot path: the coordinator re-makes the
 //! decision every epoch while only the link rates change.
 //!
+//! A second sweep (PR 4) times the **incremental** flow-reusing re-solve
+//! (GGT-style repair + residual augmentation, `FleetOptions::incremental`)
+//! against the warm-full re-solve and the cold rebuild, over σ-delta
+//! traces of three shapes: small monotone drift, large monotone drift,
+//! and hard random jumps. Decisions are cost-equivalence-gated against
+//! cold solves before timing, and the planner's own counters must prove
+//! every timed solve after the first actually reused flow.
+//!
 //! ```sh
-//! cargo bench --bench replan [-- filter] [--quick]
+//! cargo bench --bench replan [-- filter] [--quick] [--smoke]
 //! ```
 //!
 //! Writes the cold/warm means and speedups to `BENCH_PR1.json` (override
-//! with `FASTSPLIT_REPLAN_OUT`, disable with `FASTSPLIT_REPLAN_OUT=-`) so
-//! the perf trajectory is tracked in-repo (see PERF.md).
+//! with `FASTSPLIT_REPLAN_OUT`, disable with `FASTSPLIT_REPLAN_OUT=-`)
+//! and the incremental sweep to `BENCH_PR4.json` (`FASTSPLIT_REPLAN4_OUT`
+//! likewise) so the perf trajectory is tracked in-repo (see PERF.md).
+//! `--smoke` is the CI fast mode: one model, short traces, no JSON.
 
-use fastsplit::partition::{general_partition, Link, PartitionPlanner, Problem};
+use fastsplit::partition::{
+    general_partition, FleetOptions, FleetPlanner, FleetSpec, Link, PartitionPlanner, Problem,
+};
 use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
-use fastsplit::util::bench::Bencher;
+use fastsplit::util::bench::{BenchConfig, Bencher};
 use fastsplit::util::json::Json;
+use fastsplit::util::prop::{assert_cut_cost_equal, fading_walk};
+use fastsplit::util::rng::Rng;
+use std::time::Duration;
 
 const MODELS: &[&str] = &[
     "resnet18",
@@ -25,6 +40,11 @@ const MODELS: &[&str] = &[
     "gpt2",
     "block-inception",
 ];
+
+/// Models of the PR-4 incremental sweep: branched full DAGs, so the
+/// unreduced engine (the comparison's level ground) stays on the flow
+/// path for all three columns.
+const INCREMENTAL_MODELS: &[&str] = &["googlenet", "resnet18", "gpt2"];
 
 fn costs(model: &str) -> CostGraph {
     let m = fastsplit::models::by_name(model).unwrap();
@@ -50,12 +70,82 @@ fn link_trace() -> Vec<Link> {
     links
 }
 
+/// One σ-delta trace shape of the incremental sweep. Drift traces are
+/// monotone per half (σ first grows — rates fade — then shrinks back),
+/// so both the pure-augmentation and the repair direction are timed;
+/// jump traces redraw the link uniformly at random every step. Starts
+/// and factor ranges are chosen so drift walks stay strictly inside the
+/// 1e4..1e9 B/s regime even at the factor extremes — a clamped rate
+/// would repeat links and make the "incremental" column time no-op
+/// refreshes (see `fading_walk`'s clamp caveat).
+fn sigma_trace(kind: &str, steps: usize, seed: u64) -> Vec<Link> {
+    let mut rng = Rng::new(seed);
+    let half = steps / 2;
+    match kind {
+        "drift-small" => {
+            // Worst case over 32 steps: x0.96^32 ≈ 0.27, x1.04^32 ≈ 3.5.
+            let start = Link {
+                up_bps: 2e6,
+                down_bps: 6e6,
+            };
+            let mut links = fading_walk(&mut rng, start, half, 0.96, 0.995);
+            let mid = *links.last().unwrap();
+            links.extend(fading_walk(&mut rng, mid, steps - half, 1.005, 1.04));
+            links
+        }
+        "drift-large" => {
+            // Worst case over 32 steps: x0.8^32 ≈ 7.9e-4 of 3e7 ≈ 2.4e4
+            // (above the 1e4 floor); the recovery half starts from the
+            // faded midpoint (≤ 9e7·0.95^32 ≈ 1.8e7) and x1.13^32 ≈ 50
+            // keeps even that below the 1e9 ceiling.
+            let start = Link {
+                up_bps: 3e7,
+                down_bps: 9e7,
+            };
+            let mut links = fading_walk(&mut rng, start, half, 0.8, 0.95);
+            let mid = *links.last().unwrap();
+            links.extend(fading_walk(&mut rng, mid, steps - half, 1.05, 1.13));
+            links
+        }
+        "jump" => (0..steps)
+            .map(|_| Link {
+                up_bps: rng.range(1e4, 1e9),
+                down_bps: rng.range(1e4, 1e9),
+            })
+            .collect(),
+        other => unreachable!("unknown trace kind {other}"),
+    }
+}
+
+/// A fresh single-tier incremental planner on the unreduced DAG — the
+/// same flow problem `PartitionPlanner` and `general_partition` solve,
+/// so the three columns differ only in how much work they reuse.
+fn incremental_planner(c: &CostGraph) -> FleetPlanner {
+    FleetPlanner::with_options(
+        FleetSpec::single(c.clone()),
+        FleetOptions {
+            block_reduction: false,
+            ..FleetOptions::default()
+        },
+    )
+}
+
 fn main() {
-    let mut b = Bencher::from_env();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = if smoke {
+        Bencher::with_config(BenchConfig {
+            measure_time: Duration::from_millis(40),
+            warmup_time: Duration::from_millis(10),
+            max_samples: 200,
+        })
+    } else {
+        Bencher::from_env()
+    };
     let links = link_trace();
     let mut rows: Vec<Json> = Vec::new();
 
-    for model in MODELS {
+    let models: &[&str] = if smoke { &["googlenet"] } else { MODELS };
+    for model in models {
         let c = costs(model);
 
         // Correctness gate before timing: warm must equal cold on the trace.
@@ -102,23 +192,135 @@ fn main() {
             ]));
         }
     }
+
+    // PR-4 sweep: incremental (flow-reusing) vs warm-full vs cold, over
+    // small-drift / large-drift / jump σ traces.
+    let inc_models: &[&str] = if smoke { &["googlenet"] } else { INCREMENTAL_MODELS };
+    let trace_steps = if smoke { 16 } else { 64 };
+    let mut inc_rows: Vec<Json> = Vec::new();
+    for model in inc_models {
+        let c = costs(model);
+        for (ki, kind) in ["drift-small", "drift-large", "jump"].into_iter().enumerate() {
+            let trace = sigma_trace(kind, trace_steps, 0x9E11_0000 + ki as u64);
+
+            // Correctness gate: every incremental decision on the trace
+            // must be cost-equivalent to a cold solve, and every solve
+            // after the first must actually have reused the flow.
+            let mut gate = incremental_planner(&c);
+            for &link in &trace {
+                let p = Problem::new(&c, link);
+                let inc = gate.take_solve(0, link);
+                let cold = general_partition(&p);
+                assert_cut_cost_equal(&p, &inc, &cold);
+            }
+            let gs = gate.stats();
+            assert_eq!(
+                gs.incremental_solves,
+                gs.flow_solves - 1,
+                "{model}/{kind}: a non-first solve fell back to cold"
+            );
+
+            let before = b.results().len();
+            let mut i = 0;
+            b.bench(&format!("replan4/{model}/{kind}/cold-rebuild"), || {
+                i = (i + 1) % trace.len();
+                general_partition(&Problem::new(&c, trace[i]))
+            });
+            let cold = (b.results().len() > before).then(|| b.results()[before].summary.mean);
+
+            let mut warm_planner = PartitionPlanner::new(&c);
+            let before = b.results().len();
+            let mut i = 0;
+            b.bench(&format!("replan4/{model}/{kind}/warm-full"), || {
+                i = (i + 1) % trace.len();
+                warm_planner.partition(trace[i])
+            });
+            let warm = (b.results().len() > before).then(|| b.results()[before].summary.mean);
+
+            let mut inc_planner = incremental_planner(&c);
+            let before = b.results().len();
+            let mut i = 0;
+            b.bench(&format!("replan4/{model}/{kind}/incremental"), || {
+                i = (i + 1) % trace.len();
+                inc_planner.take_solve(0, trace[i])
+            });
+            let inc = (b.results().len() > before).then(|| b.results()[before].summary.mean);
+
+            if let (Some(cold), Some(warm), Some(inc)) = (cold, warm, inc) {
+                let s = inc_planner.stats();
+                assert!(
+                    s.incremental_solves > 0,
+                    "{model}/{kind}: timed run never took the incremental path"
+                );
+                let solves = s.flow_solves.max(1) as f64;
+                println!(
+                    "replan4/{model}/{kind}: cold {cold:.3e}s, warm-full {warm:.3e}s, \
+                     incremental {inc:.3e}s ({:.1}x vs warm, {:.1}x vs cold)",
+                    warm / inc.max(1e-12),
+                    cold / inc.max(1e-12),
+                );
+                inc_rows.push(Json::obj(vec![
+                    ("model", Json::str(*model)),
+                    ("trace", Json::str(kind)),
+                    ("steps", Json::num(trace.len() as f64)),
+                    ("cold_rebuild_mean_s", Json::num(cold)),
+                    ("warm_full_mean_s", Json::num(warm)),
+                    ("incremental_mean_s", Json::num(inc)),
+                    ("speedup_vs_cold", Json::num(cold / inc.max(1e-12))),
+                    ("speedup_vs_warm_full", Json::num(warm / inc.max(1e-12))),
+                    (
+                        "repair_pushes_per_solve",
+                        Json::num(s.repair_pushes as f64 / solves),
+                    ),
+                    (
+                        "augment_rounds_per_solve",
+                        Json::num(s.augment_rounds as f64 / solves),
+                    ),
+                ]));
+            }
+        }
+    }
     b.finish();
 
-    let out = std::env::var("FASTSPLIT_REPLAN_OUT").unwrap_or_else(|_| "BENCH_PR1.json".into());
-    if out == "-" || rows.is_empty() {
+    if smoke {
+        println!("smoke mode: skipping BENCH_PR1.json / BENCH_PR4.json");
         return;
     }
-    let doc = Json::obj(vec![
-        ("bench", Json::str("replan")),
-        ("measured", Json::Bool(true)),
-        (
-            "note",
-            Json::str("cold general_partition rebuild vs PartitionPlanner warm refresh, 64-link trace"),
-        ),
-        ("results", Json::Arr(rows)),
-    ]);
-    match std::fs::write(&out, doc.pretty() + "\n") {
-        Ok(()) => println!("wrote {out}"),
-        Err(e) => eprintln!("could not write {out}: {e}"),
+    let out = std::env::var("FASTSPLIT_REPLAN_OUT").unwrap_or_else(|_| "BENCH_PR1.json".into());
+    if out != "-" && !rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("replan")),
+            ("measured", Json::Bool(true)),
+            (
+                "note",
+                Json::str("cold general_partition rebuild vs PartitionPlanner warm refresh, 64-link trace"),
+            ),
+            ("results", Json::Arr(rows)),
+        ]);
+        match std::fs::write(&out, doc.pretty() + "\n") {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
+    }
+    let out = std::env::var("FASTSPLIT_REPLAN4_OUT").unwrap_or_else(|_| "BENCH_PR4.json".into());
+    if out != "-" && !inc_rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("replan-incremental")),
+            ("measured", Json::Bool(true)),
+            (
+                "note",
+                Json::str(
+                    "incremental (GGT-style flow-reusing) re-solve vs warm-full refresh \
+                     (PartitionPlanner) vs cold rebuild (general_partition), unreduced DAGs, \
+                     64-step σ traces (small/large monotone drift + random jumps); decisions \
+                     cost-equivalence-gated and FleetStats-verified before timing",
+                ),
+            ),
+            ("results", Json::Arr(inc_rows)),
+        ]);
+        match std::fs::write(&out, doc.pretty() + "\n") {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
     }
 }

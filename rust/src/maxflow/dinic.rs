@@ -36,12 +36,33 @@ pub fn dinic_with(
     t: usize,
     scratch: &mut DinicScratch,
 ) -> MinCut {
+    let (value, _phases) = dinic_augment(net, s, t, scratch);
+    let source_side = net.residual_source_side(s);
+    debug_assert!(!source_side[t], "sink on source side after max-flow");
+    MinCut { value, source_side }
+}
+
+/// Augment the network's **current** residual flow to a maximum flow:
+/// repeated BFS level graphs + blocking flows until the sink is
+/// unreachable. Returns `(added, phases)` — the flow value pushed by this
+/// call (the total max-flow value when starting from zero flow, which is
+/// what [`dinic_with`] does after a capacity refresh) and the number of
+/// BFS phases run. The incremental re-solver ([`super::incremental`])
+/// calls this on a repaired carried flow, where few (often zero) phases
+/// remain — that phase count is the `augment_rounds` it reports.
+pub fn dinic_augment(
+    net: &mut FlowNetwork,
+    s: usize,
+    t: usize,
+    scratch: &mut DinicScratch,
+) -> (f64, u64) {
     assert!(s != t, "source and sink must differ");
     net.freeze();
     let n = net.len();
     scratch.level.resize(n, -1);
     scratch.iter.resize(n, 0);
     let mut value = 0.0f64;
+    let mut phases = 0u64;
 
     loop {
         // BFS: build level graph.
@@ -68,6 +89,7 @@ pub fn dinic_with(
         if level[t] < 0 {
             break; // no augmenting path remains
         }
+        phases += 1;
 
         // DFS blocking flow with current-arc optimization.
         for it in scratch.iter.iter_mut() {
@@ -82,9 +104,7 @@ pub fn dinic_with(
         }
     }
 
-    let source_side = net.residual_source_side(s);
-    debug_assert!(!source_side[t], "sink on source side after max-flow");
-    MinCut { value, source_side }
+    (value, phases)
 }
 
 /// Find one augmenting path in the level graph and push its bottleneck

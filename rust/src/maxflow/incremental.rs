@@ -1,0 +1,488 @@
+//! Incremental (flow-reusing) max-flow re-solves — Gallo–Grigoriadis–
+//! Tarjan-style warm starts for the per-epoch re-partitioning loop.
+//!
+//! The planner's transformed networks change only in *capacities* between
+//! epochs (every capacity is affine in the link's round-trip byte cost
+//! σ — see `partition::fleet`), so consecutive solves are solves of
+//! closely-related networks. The PR-1 warm path already reuses the
+//! topology (frozen CSR + O(E) capacity refresh) but discards the flow
+//! and re-runs Dinic from zero. This module carries the **flow** across
+//! the refresh as well:
+//!
+//! 1. [`FlowNetwork::update_edge_capacity`] rewrites each capacity while
+//!    keeping `min(flow, new_cap)` units routed, reporting the amount by
+//!    which the carried flow overshoots the new capacity (the *violation*).
+//! 2. [`IncrementalScratch::resolve`] repairs flow conservation: every
+//!    violated edge `(u, v)` with overshoot δ leaves `u` with δ excess
+//!    inflow and `v` with δ missing inflow. Excess drains **backwards**
+//!    along flow-carrying arcs into the source or into a deficit vertex;
+//!    remaining deficits drain **forwards** along flow-carrying arcs into
+//!    the sink (both exist by flow decomposition: the clamped flow plus
+//!    the removed δ·(u,v) units decompose into s-t paths and cycles, whose
+//!    fragments end exactly at those terminals). Each cancellation is a
+//!    bounded DFS over arcs that still carry flow.
+//! 3. The repaired flow is feasible, so [`dinic_augment`] completes it to
+//!    a maximum flow from the residual — on small σ drifts this is zero or
+//!    one BFS phase instead of a from-scratch Dinic run. When σ *grows*
+//!    (rates fading), capacities only increase, no repair is needed at
+//!    all, and the resolve is the classic monotone GGT case.
+//!
+//! The resulting min cut has the same **value** as a cold solve (max-flow
+//! is max-flow) but may be a different *co-optimal* cut: the residual
+//! reachability of a different maximum flow. Callers that promise
+//! bit-identity must keep using the cold path (`set_edge_capacity` +
+//! `dinic_with`); the fleet engine pins the incremental path with the
+//! cut-cost equivalence harness instead (`util::prop::assert_cut_cost_equal`).
+//!
+//! Robustness: [`IncrementalScratch::resolve`] returns `None` if a repair
+//! DFS ever fails to find a cancel path (which the decomposition argument
+//! rules out up to floating-point pathology) — callers fall back to a cold
+//! refresh + solve, so correctness never rests on the repair pass.
+
+use super::dinic::{dinic_augment, DinicScratch};
+use super::network::{FlowNetwork, MinCut, EPS};
+
+/// Counters from one incremental resolve (surfaced by `FleetStats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResolveStats {
+    /// Arc cancellations performed by the conservation-repair passes.
+    pub repair_pushes: u64,
+    /// BFS phases the post-repair Dinic augmentation ran.
+    pub augment_rounds: u64,
+    /// Forward edges whose refreshed capacity undercut their carried flow.
+    pub violated_edges: u64,
+}
+
+/// Reusable state of the incremental re-solver: the violation list filled
+/// between [`IncrementalScratch::begin`] and [`IncrementalScratch::resolve`]
+/// plus the repair passes' scratch buffers, so a warm re-solve allocates
+/// nothing after the first call.
+#[derive(Default)]
+pub struct IncrementalScratch {
+    /// (edge id, overshoot) pairs recorded during the capacity refresh.
+    violations: Vec<(u32, f64)>,
+    /// Net excess inflow per vertex (positive entries need draining).
+    excess: Vec<f64>,
+    /// Net missing inflow per vertex.
+    deficit: Vec<f64>,
+    excess_verts: Vec<u32>,
+    deficit_verts: Vec<u32>,
+    /// DFS visit stamps (per-search epoch marking, never cleared).
+    visited: Vec<u32>,
+    stamp: u32,
+    /// DFS frames: (vertex, next CSR position to scan).
+    frames: Vec<(u32, u32)>,
+    /// Cancel arcs (always odd twins) of the current DFS path.
+    path: Vec<u32>,
+}
+
+impl IncrementalScratch {
+    /// Start recording capacity violations for a new refresh pass.
+    pub fn begin(&mut self) {
+        self.violations.clear();
+    }
+
+    /// Record that forward edge `edge`'s refresh left `amount` units of
+    /// carried flow above its new capacity (the return value of
+    /// [`FlowNetwork::update_edge_capacity`]; ~0 amounts are ignored).
+    pub fn record(&mut self, edge: usize, amount: f64) {
+        if amount > EPS {
+            self.violations.push((edge as u32, amount));
+        }
+    }
+
+    /// Edges recorded as violated since the last [`IncrementalScratch::begin`].
+    pub fn violations(&self) -> usize {
+        self.violations.len()
+    }
+
+    /// Repair the carried flow's conservation at every recorded violation,
+    /// then augment the repaired residual to a maximum flow. Returns the
+    /// min cut (value read back from the source's net outflow) and the
+    /// repair/augment counters, or `None` if a repair DFS dead-ends —
+    /// callers must then fall back to a cold refresh + solve.
+    pub fn resolve(
+        &mut self,
+        net: &mut FlowNetwork,
+        s: usize,
+        t: usize,
+        scratch: &mut DinicScratch,
+    ) -> Option<(MinCut, ResolveStats)> {
+        net.freeze();
+        let n = net.len();
+        let mut stats = ResolveStats {
+            violated_edges: self.violations.len() as u64,
+            ..ResolveStats::default()
+        };
+
+        // Net per-vertex imbalance of the clamped flow. Excess at the
+        // source or deficit at the sink is just a smaller flow value, not
+        // a conservation break — only interior vertices need repair.
+        self.excess.clear();
+        self.excess.resize(n, 0.0);
+        self.deficit.clear();
+        self.deficit.resize(n, 0.0);
+        self.excess_verts.clear();
+        self.deficit_verts.clear();
+        let violations = std::mem::take(&mut self.violations);
+        for &(e, amount) in &violations {
+            let (u, v) = net.edge_endpoints(e as usize);
+            if u != s && u != t {
+                if self.excess[u] == 0.0 {
+                    self.excess_verts.push(u as u32);
+                }
+                self.excess[u] += amount;
+            }
+            if v != s && v != t {
+                if self.deficit[v] == 0.0 {
+                    self.deficit_verts.push(v as u32);
+                }
+                self.deficit[v] += amount;
+            }
+        }
+        self.violations = violations;
+        // A vertex hit by violations on both sides carries only its *net*
+        // imbalance (conservation is a net property); cancel the overlap
+        // locally so the passes below see disjoint excess/deficit sets.
+        let excess_verts = std::mem::take(&mut self.excess_verts);
+        let deficit_verts = std::mem::take(&mut self.deficit_verts);
+        for &x in &excess_verts {
+            let x = x as usize;
+            let overlap = self.excess[x].min(self.deficit[x]);
+            if overlap > 0.0 {
+                self.excess[x] -= overlap;
+                self.deficit[x] -= overlap;
+            }
+        }
+
+        // Pass 1 — drain every interior excess backwards along
+        // flow-carrying arcs into the source (reducing the flow value) or
+        // into a deficit vertex (net rebalance, value unchanged).
+        let mut repaired = true;
+        'excess: for &u in &excess_verts {
+            let u = u as usize;
+            while self.excess[u] > EPS {
+                let Some(target) = self.find_cancel_path(net, u, s, t, true) else {
+                    repaired = false;
+                    break 'excess;
+                };
+                let mut amt = self.excess[u];
+                for &arc in &self.path {
+                    amt = amt.min(net.arc_cap(arc as usize));
+                }
+                if target != s {
+                    amt = amt.min(self.deficit[target]);
+                }
+                if amt <= EPS {
+                    repaired = false; // numerical dead end: fall back to cold
+                    break 'excess;
+                }
+                for &arc in &self.path {
+                    net.push_on(arc as usize, amt);
+                }
+                stats.repair_pushes += self.path.len() as u64;
+                self.excess[u] -= amt;
+                if target != s {
+                    self.deficit[target] -= amt;
+                }
+            }
+        }
+
+        // Pass 2 — drain every remaining deficit forwards along
+        // flow-carrying arcs into the sink (reducing the flow value).
+        if repaired {
+            'deficit: for &v in &deficit_verts {
+                let v = v as usize;
+                while self.deficit[v] > EPS {
+                    if self.find_cancel_path(net, v, s, t, false).is_none() {
+                        repaired = false;
+                        break 'deficit;
+                    }
+                    let mut amt = self.deficit[v];
+                    for &arc in &self.path {
+                        amt = amt.min(net.arc_cap(arc as usize));
+                    }
+                    if amt <= EPS {
+                        repaired = false;
+                        break 'deficit;
+                    }
+                    for &arc in &self.path {
+                        net.push_on(arc as usize, amt);
+                    }
+                    stats.repair_pushes += self.path.len() as u64;
+                    self.deficit[v] -= amt;
+                }
+            }
+        }
+        self.excess_verts = excess_verts;
+        self.deficit_verts = deficit_verts;
+        if !repaired {
+            return None;
+        }
+
+        // The carried flow is feasible again: complete it to a maximum
+        // flow from the repaired residual.
+        let (_added, phases) = dinic_augment(net, s, t, scratch);
+        stats.augment_rounds = phases;
+        let source_side = net.residual_source_side(s);
+        debug_assert!(!source_side[t], "sink on source side after incremental re-solve");
+        let value = net.outflow(s);
+        Some((MinCut { value, source_side }, stats))
+    }
+
+    /// DFS for one cancelable path of routed flow, left in `self.path` as
+    /// cancel arcs (always the odd twin of each traversed edge — pushing
+    /// on them reduces the edge's flow), tail first. `backward == true`
+    /// searches from an excess vertex *against* the flow direction (odd
+    /// twin arcs with positive cap, i.e. edges carrying flow into the
+    /// current vertex) and succeeds on reaching the source or any vertex
+    /// with outstanding deficit; `backward == false` searches from a
+    /// deficit vertex *along* the flow direction and succeeds on reaching
+    /// the sink. Returns the terminal vertex.
+    ///
+    /// The source is never traversed through in the forward pass and the
+    /// sink never in the backward pass: conservation does not hold at the
+    /// terminals, so flow cannot be traced through them.
+    fn find_cancel_path(
+        &mut self,
+        net: &FlowNetwork,
+        start: usize,
+        s: usize,
+        t: usize,
+        backward: bool,
+    ) -> Option<usize> {
+        let n = net.len();
+        self.visited.resize(n, 0);
+        if self.stamp == u32::MAX {
+            self.visited.fill(0);
+            self.stamp = 0;
+        }
+        self.stamp += 1;
+        let stamp = self.stamp;
+        self.visited[start] = stamp;
+        self.frames.clear();
+        self.path.clear();
+        self.frames
+            .push((start as u32, net.arc_range(start).start as u32));
+
+        'outer: loop {
+            let &(v, pos) = self.frames.last()?;
+            let v = v as usize;
+            let mut pos = pos as usize;
+            let end = net.arc_range(v).end;
+            while pos < end {
+                let arc = net.arc_at(pos);
+                pos += 1;
+                // An arc is traversable iff its edge still carries flow in
+                // the direction of this pass; the cancel arc is the edge's
+                // odd twin either way.
+                let (ok, cancel_arc) = if backward {
+                    (arc & 1 == 1 && net.arc_cap(arc) > EPS, arc)
+                } else {
+                    (arc & 1 == 0 && net.arc_cap(arc ^ 1) > EPS, arc ^ 1)
+                };
+                if !ok {
+                    continue;
+                }
+                let w = net.arc_to(arc);
+                let done = if backward {
+                    w == s || self.deficit[w] > EPS
+                } else {
+                    w == t
+                };
+                if done {
+                    self.path.push(cancel_arc as u32);
+                    return Some(w);
+                }
+                let blocked = if backward { w == t } else { w == s };
+                if !blocked && self.visited[w] != stamp {
+                    self.visited[w] = stamp;
+                    let last = self.frames.last_mut().expect("frame just read");
+                    last.1 = pos as u32;
+                    self.frames.push((w as u32, net.arc_range(w).start as u32));
+                    self.path.push(cancel_arc as u32);
+                    continue 'outer;
+                }
+            }
+            self.frames.pop();
+            self.path.pop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxflow::{dinic, dinic_with};
+    use crate::util::prop::for_all;
+
+    /// Apply new capacities flow-preservingly, recording violations.
+    fn refresh_preserving(net: &mut FlowNetwork, caps: &[f64], inc: &mut IncrementalScratch) {
+        inc.begin();
+        for (e, &c) in caps.iter().enumerate() {
+            let violated = net.update_edge_capacity(e, c);
+            inc.record(e, violated);
+        }
+    }
+
+    fn clrs_edges() -> Vec<(usize, usize, f64)> {
+        vec![
+            (0, 1, 16.0),
+            (0, 2, 13.0),
+            (1, 2, 10.0),
+            (2, 1, 4.0),
+            (1, 3, 12.0),
+            (3, 2, 9.0),
+            (2, 4, 14.0),
+            (4, 3, 7.0),
+            (3, 5, 20.0),
+            (4, 5, 4.0),
+        ]
+    }
+
+    fn build(n: usize, edges: &[(usize, usize, f64)]) -> FlowNetwork {
+        let mut net = FlowNetwork::new(n);
+        for &(u, v, c) in edges {
+            net.add_edge(u, v, c);
+        }
+        net
+    }
+
+    /// Incremental re-solve after a capacity change must match a cold
+    /// solve of a freshly-built network with the same capacities.
+    fn assert_matches_cold(
+        net: &mut FlowNetwork,
+        n: usize,
+        edges: &[(usize, usize, f64)],
+        caps: &[f64],
+        s: usize,
+        t: usize,
+    ) -> ResolveStats {
+        let mut inc = IncrementalScratch::default();
+        let mut scratch = DinicScratch::default();
+        refresh_preserving(net, caps, &mut inc);
+        let (cut, stats) = inc
+            .resolve(net, s, t, &mut scratch)
+            .expect("repair pass must succeed on well-formed flows");
+        let fresh_edges: Vec<(usize, usize, f64)> = edges
+            .iter()
+            .zip(caps)
+            .map(|(&(u, v, _), &c)| (u, v, c))
+            .collect();
+        let cold = dinic(&mut build(n, &fresh_edges), s, t);
+        assert!(
+            (cut.value - cold.value).abs() <= 1e-9 * (1.0 + cold.value.abs()),
+            "incremental value {} != cold value {}",
+            cut.value,
+            cold.value
+        );
+        // The incremental cut must itself be a cut of value == flow.
+        assert!(
+            (net.cut_value(&cut.source_side) - cut.value).abs() <= 1e-9 * (1.0 + cut.value.abs()),
+            "incremental cut is not tight"
+        );
+        assert!(!cut.source_side[t]);
+        assert!(cut.source_side[s]);
+        stats
+    }
+
+    #[test]
+    fn clrs_capacity_cut_resolves_incrementally() {
+        let edges = clrs_edges();
+        let mut net = build(6, &edges);
+        let first = dinic(&mut net, 0, 5);
+        assert!((first.value - 23.0).abs() < 1e-9);
+        // Shrink the two source edges below their carried flow: new max
+        // flow is 5 + 13 = 18 and both repairs drain straight into s.
+        let caps = [5.0, 13.0, 10.0, 4.0, 12.0, 9.0, 14.0, 7.0, 20.0, 4.0];
+        let stats = assert_matches_cold(&mut net, 6, &edges, &caps, 0, 5);
+        assert!(stats.violated_edges >= 1);
+        assert!(stats.repair_pushes >= 1);
+    }
+
+    #[test]
+    fn pure_capacity_increase_needs_no_repair() {
+        let edges = clrs_edges();
+        let mut net = build(6, &edges);
+        let _ = dinic(&mut net, 0, 5);
+        let caps: Vec<f64> = edges.iter().map(|&(_, _, c)| c * 1.5).collect();
+        let stats = assert_matches_cold(&mut net, 6, &edges, &caps, 0, 5);
+        assert_eq!(stats.violated_edges, 0);
+        assert_eq!(stats.repair_pushes, 0);
+    }
+
+    #[test]
+    fn unchanged_capacities_resolve_with_zero_work() {
+        let edges = clrs_edges();
+        let mut net = build(6, &edges);
+        let mut scratch = DinicScratch::default();
+        let first = dinic_with(&mut net, 0, 5, &mut scratch);
+        let caps: Vec<f64> = edges.iter().map(|&(_, _, c)| c).collect();
+        let mut inc = IncrementalScratch::default();
+        refresh_preserving(&mut net, &caps, &mut inc);
+        let (cut, stats) = inc.resolve(&mut net, 0, 5, &mut scratch).unwrap();
+        assert_eq!(stats.repair_pushes, 0);
+        assert_eq!(stats.augment_rounds, 0, "flow already maximal");
+        assert!((cut.value - first.value).abs() < 1e-9);
+        assert_eq!(cut.source_side, first.source_side);
+    }
+
+    #[test]
+    fn edge_zeroed_to_nothing_resolves() {
+        let edges = clrs_edges();
+        let mut net = build(6, &edges);
+        let _ = dinic(&mut net, 0, 5);
+        // Kill the 3->5 edge entirely: max flow collapses to the 4->5 cap.
+        let caps = [16.0, 13.0, 10.0, 4.0, 12.0, 9.0, 14.0, 7.0, 0.0, 4.0];
+        let stats = assert_matches_cold(&mut net, 6, &edges, &caps, 0, 5);
+        assert!(stats.violated_edges >= 1);
+    }
+
+    #[test]
+    fn infinite_edges_survive_incremental_refreshes() {
+        // s -> a (inf), a -> t (1), s -> t (2): the infinite edge carries
+        // flow; refreshing must keep it routed and never violate it.
+        let edges = [(0, 1, f64::INFINITY), (1, 2, 1.0), (0, 2, 2.0)];
+        let mut net = build(3, &edges);
+        let _ = dinic(&mut net, 0, 2);
+        let caps = [f64::INFINITY, 3.0, 0.5];
+        let stats = assert_matches_cold(&mut net, 3, &edges, &caps, 0, 2);
+        assert_eq!(
+            stats.violated_edges, 1,
+            "only the finite s->t edge can be violated"
+        );
+    }
+
+    #[test]
+    fn random_capacity_walks_match_cold_solves() {
+        for_all("incremental-random-walks", 40, |rng| {
+            let n = 2 + rng.index(12);
+            let mut edges = Vec::new();
+            for u in 0..n {
+                for v in 0..n {
+                    if u != v && rng.chance(0.35) {
+                        edges.push((u, v, rng.range(0.0, 10.0)));
+                    }
+                }
+            }
+            if edges.is_empty() {
+                edges.push((0, n - 1, rng.range(0.0, 10.0)));
+            }
+            let mut net = build(n, &edges);
+            let _ = dinic(&mut net, 0, n - 1);
+            // A walk of refreshes: small drifts and occasional hard jumps,
+            // each incremental resolve checked against a cold rebuild.
+            let mut caps: Vec<f64> = edges.iter().map(|&(_, _, c)| c).collect();
+            for _ in 0..6 {
+                for c in caps.iter_mut() {
+                    *c = if rng.chance(0.2) {
+                        rng.range(0.0, 10.0)
+                    } else {
+                        (*c * rng.range(0.7, 1.3)).min(20.0)
+                    };
+                }
+                assert_matches_cold(&mut net, n, &edges, &caps, 0, n - 1);
+            }
+        });
+    }
+}

@@ -10,12 +10,20 @@
 //! Hot-path reuse: [`dinic_with`] takes caller-owned [`DinicScratch`]
 //! buffers, and `FlowNetwork::set_edge_capacity` re-capacitates edges
 //! without touching topology, so a network can be re-solved every epoch
-//! with zero allocation (see `partition::planner`).
+//! with zero allocation (see `partition::planner`). On top of that,
+//! [`incremental`] carries the previous solve's **flow** across a
+//! capacity refresh (`FlowNetwork::update_edge_capacity` +
+//! `IncrementalScratch::resolve`): violated arcs are repaired by bounded
+//! cancel-DFS passes and Dinic only augments the repaired residual — the
+//! GGT-style warm re-solve the fleet planner runs when only the link's
+//! σ = 1/R_up + 1/R_down changed between epochs.
 
 pub mod network;
 pub mod dinic;
+pub mod incremental;
 pub mod push_relabel;
 
-pub use dinic::{dinic, dinic_with, DinicScratch};
+pub use dinic::{dinic, dinic_augment, dinic_with, DinicScratch};
+pub use incremental::{IncrementalScratch, ResolveStats};
 pub use network::{FlowNetwork, MinCut};
 pub use push_relabel::push_relabel;

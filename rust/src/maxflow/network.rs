@@ -225,6 +225,55 @@ impl FlowNetwork {
         self.cap[2 * edge + 1] = 0.0;
     }
 
+    /// Re-capacitate forward edge `k` **preserving** its routed flow: the
+    /// flow-reusing refresh primitive of [`super::incremental`]. The edge
+    /// keeps `min(flow, capacity)` units routed; the returned value is the
+    /// amount by which the carried flow exceeded the new capacity (0 when
+    /// none). A positive return leaves the flow *unbalanced* at the edge's
+    /// endpoints — the caller must repair conservation (see
+    /// [`super::incremental::IncrementalScratch::resolve`]) before treating
+    /// the network state as a feasible flow again.
+    ///
+    /// Relies on the arc-pair invariant that the residual twin `2k+1`
+    /// always holds exactly the routed flow (true for both finite and
+    /// infinite forward capacities under `add_edge`/`set_edge_capacity`/
+    /// `push_on`/`reset`, and preserved here).
+    #[inline]
+    pub fn update_edge_capacity(&mut self, edge: usize, capacity: f64) -> f64 {
+        debug_assert!(capacity >= 0.0, "negative capacity");
+        let flow = self.cap[2 * edge + 1];
+        let kept = flow.min(capacity);
+        self.orig_cap[edge] = capacity;
+        self.cap[2 * edge] = capacity - kept; // INF - finite = INF
+        self.cap[2 * edge + 1] = kept;
+        flow - kept
+    }
+
+    /// Tail and head vertex of forward edge `k`.
+    #[inline]
+    pub fn edge_endpoints(&self, edge: usize) -> (usize, usize) {
+        (self.to[2 * edge + 1] as usize, self.to[2 * edge] as usize)
+    }
+
+    /// Net flow currently leaving vertex `v` (outgoing minus incoming
+    /// routed flow). At the source this is the flow *value*; the
+    /// incremental re-solver reads it instead of carrying value
+    /// bookkeeping through the repair passes. Requires a frozen network.
+    pub fn outflow(&self, v: usize) -> f64 {
+        let mut sum = 0.0;
+        for &arc in self.arcs(v) {
+            let arc = arc as usize;
+            // The odd twin of each pair holds the pair's routed flow.
+            let flow = self.cap[arc | 1];
+            if arc & 1 == 0 {
+                sum += flow;
+            } else {
+                sum -= flow;
+            }
+        }
+        sum
+    }
+
     /// Sum of capacities crossing a given vertex bipartition (cut value
     /// computed directly — used by tests to validate solver results).
     pub fn cut_value(&self, source_side: &[bool]) -> f64 {
@@ -290,6 +339,41 @@ mod tests {
         net.freeze();
         assert_eq!(net.arcs(1).len(), 2); // twin of edge 0 + forward of e
         assert_eq!(net.flow_on(e), 0.0);
+    }
+
+    #[test]
+    fn update_edge_capacity_preserves_flow_and_reports_violation() {
+        let mut net = FlowNetwork::new(2);
+        let e = net.add_edge(0, 1, 5.0);
+        net.push_on(2 * e, 3.0);
+        // Raising the capacity keeps the flow and reports no violation.
+        assert_eq!(net.update_edge_capacity(e, 7.0), 0.0);
+        assert_eq!(net.flow_on(e), 3.0);
+        assert_eq!(net.arc_cap(2 * e), 4.0);
+        // Cutting below the carried flow clamps it and reports the excess.
+        assert_eq!(net.update_edge_capacity(e, 1.0), 2.0);
+        assert_eq!(net.flow_on(e), 1.0);
+        assert_eq!(net.arc_cap(2 * e), 0.0);
+        assert_eq!(net.arc_cap(2 * e + 1), 1.0);
+        // Infinite capacity keeps the residual infinite.
+        assert_eq!(net.update_edge_capacity(e, f64::INFINITY), 0.0);
+        assert_eq!(net.flow_on(e), 1.0);
+        assert!(net.arc_cap(2 * e).is_infinite());
+    }
+
+    #[test]
+    fn edge_endpoints_and_outflow() {
+        let mut net = FlowNetwork::new(3);
+        let a = net.add_edge(0, 1, 4.0);
+        let b = net.add_edge(1, 2, 4.0);
+        assert_eq!(net.edge_endpoints(a), (0, 1));
+        assert_eq!(net.edge_endpoints(b), (1, 2));
+        net.freeze();
+        net.push_on(2 * a, 2.5);
+        net.push_on(2 * b, 2.5);
+        assert_eq!(net.outflow(0), 2.5);
+        assert_eq!(net.outflow(1), 0.0);
+        assert_eq!(net.outflow(2), -2.5);
     }
 
     #[test]

@@ -155,9 +155,14 @@ pub struct Planner {
 
 impl Planner {
     /// Run detection + Theorem 2 tests + reduction + network build once.
+    /// Uses the engine's full fast configuration (reduction + incremental
+    /// re-solves), matching what the fleet facade runs per tier.
     pub fn new(costs: &CostGraph) -> Planner {
         Planner {
-            fleet: FleetPlanner::with_options(FleetSpec::single(costs.clone()), true, true, true),
+            fleet: FleetPlanner::with_options(
+                FleetSpec::single(costs.clone()),
+                crate::partition::fleet::FleetOptions::default(),
+            ),
         }
     }
 

@@ -71,11 +71,43 @@
 //! over this engine: its contract (and PR-1's warm≡cold property tests)
 //! is bit-identity with the cold general engine, which is also what the
 //! cost-equivalence suites diff the reduced path against.
+//!
+//! # Incremental (flow-reusing) re-solves
+//!
+//! Between two solves of one tier only σ changes (the spec — DAG, bytes,
+//! server costs, ξ_D — is fixed at construction), so consecutive flow
+//! networks differ only in capacities. With [`FleetOptions::incremental`]
+//! on (the default), a tier that already holds a solved flow re-solves
+//! through [`crate::maxflow::incremental`]: the refresh keeps the carried
+//! flow per edge ([`FlowNetwork::update_edge_capacity`]), conservation is
+//! repaired at the few arcs whose new capacity undercut their flow, and
+//! Dinic merely augments the repaired residual — typically zero or one
+//! BFS phase on a small σ drift instead of a from-scratch run. The
+//! per-tier `last_sigma` marks whether the network carries a reusable
+//! flow; any repair failure falls back to the cold refresh + solve, so
+//! correctness never depends on the repair pass. Like the block
+//! reduction, the incremental path is pinned **cost-equivalent** (a
+//! different maximum flow may expose a different co-optimal cut);
+//! incremental **off** keeps the engine bit-identical to the PR-1 cold
+//! refresh path, which is what [`crate::partition::PartitionPlanner`]
+//! wraps. [`FleetStats`] counts `incremental_solves`, `repair_pushes`
+//! and `augment_rounds` so tests and benches can prove the fast path ran.
+//!
+//! # Parallel dirty-tier sweep (`parallel` feature)
+//!
+//! The per-tier solve loop in [`FleetPlanner::plan`] iterates explicit
+//! [`TierJob`]s — each owns `&mut TierState` plus that tier's request
+//! groups and only reads the shared spec/shape — and runs them through
+//! `rayon::par_iter_mut` when the `parallel` cargo feature is enabled
+//! (a vendored `std::thread::scope`-backed rayon stand-in offline).
+//! Tiers are solved in index order within a job and jobs are mutually
+//! independent, so feature-on and feature-off produce **bit-identical**
+//! decisions and stats — pinned by the determinism test below.
 
 use super::blockwise::Reduction;
 use super::general::linear_scan_partition;
 use super::types::{Link, Partition, Problem};
-use crate::maxflow::{dinic_with, DinicScratch, FlowNetwork, MinCut};
+use crate::maxflow::{dinic_with, DinicScratch, FlowNetwork, IncrementalScratch, MinCut};
 use crate::profiles::{CostGraph, DeviceProfile};
 
 /// Link-independent, tier-independent structure of the transformed flow
@@ -218,6 +250,36 @@ fn refresh_capacities(net: &mut FlowNetwork, shape: &NetShape, exec_base: &[f64]
     }
 }
 
+/// Flow-preserving variant of [`refresh_capacities`]: writes the exact
+/// same target capacities (bit-for-bit — the device-exec override is
+/// folded into the single pass) but keeps each edge's carried flow,
+/// recording in `inc` every edge whose new capacity undercuts it. The
+/// incremental re-solve path's refresh half; must be followed by
+/// [`IncrementalScratch::resolve`] (or a cold refresh on fallback) before
+/// the network state is a feasible flow again.
+fn refresh_capacities_preserving(
+    net: &mut FlowNetwork,
+    shape: &NetShape,
+    exec_base: &[f64],
+    sigma: f64,
+    inc: &mut IncrementalScratch,
+) {
+    inc.begin();
+    let layer_pairs = 2 * exec_base.len();
+    for k in 0..shape.base.len() {
+        // Edges 0..2L are the per-layer (server, device) exec pairs, in
+        // that order; device-exec edges (odd ids) take their base from the
+        // tier's exec_base instead of the shared shape.
+        let target = if k < layer_pairs && k & 1 == 1 {
+            exec_base[k / 2] + shape.bw_scale[k] * sigma
+        } else {
+            shape.base[k] + shape.bw_scale[k] * sigma
+        };
+        let violated = net.update_edge_capacity(k, target);
+        inc.record(k, violated);
+    }
+}
+
 /// The Alg. 2 transformed network for a single (model, device-tier) pair:
 /// a [`NetShape`] plus its working network and tier base — the cold-path
 /// unit `partition::general` builds per call and the fleet engine
@@ -249,6 +311,16 @@ impl TransformedNet {
     /// Solve min s-t cut on the current capacities.
     pub(crate) fn min_cut(&mut self, scratch: &mut DinicScratch) -> MinCut {
         dinic_with(&mut self.net, self.shape.source, self.shape.sink, scratch)
+    }
+
+    /// Solve min s-t cut with the push-relabel oracle instead of Dinic —
+    /// the cross-solver parity suites' entry point onto the *transformed*
+    /// (Alg. 2) networks the fleet path actually solves. Call
+    /// [`TransformedNet::refresh`] first; the run leaves routed flow
+    /// behind, so refresh again before any subsequent solve.
+    #[cfg(test)]
+    pub(crate) fn min_cut_push_relabel(&mut self) -> MinCut {
+        crate::maxflow::push_relabel(&mut self.net, self.shape.source, self.shape.sink)
     }
 
     /// Read the layer assignment off the execution vertices.
@@ -421,6 +493,49 @@ pub struct PlanRequest {
     pub link: Link,
 }
 
+/// Construction-time switches of the fleet engine (see
+/// [`FleetPlanner::with_options`]). `Default` is the full fast
+/// configuration: pinned inputs, closure edges, block reduction and
+/// incremental re-solves all on — what [`FleetPlanner::new`] builds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FleetOptions {
+    /// Input layers (raw data) may never move to the server.
+    pub pin_inputs: bool,
+    /// Infinite precedence edges for unambiguous cut extraction.
+    pub closure_edges: bool,
+    /// Fleet-level Theorem 2 block reduction (cost-equivalent decisions).
+    pub block_reduction: bool,
+    /// GGT-style flow-reusing re-solves when only σ changed since a
+    /// tier's previous solve (cost-equivalent decisions); off = the PR-1
+    /// bit-identical cold-refresh path.
+    pub incremental: bool,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions {
+            pin_inputs: true,
+            closure_edges: true,
+            block_reduction: true,
+            incremental: true,
+        }
+    }
+}
+
+impl FleetOptions {
+    /// The unreduced, non-incremental engine: bit-identical to the cold
+    /// general engine — the [`crate::partition::PartitionPlanner`]
+    /// contract and the reference configuration the cost-equivalence
+    /// suites diff the fast paths against.
+    pub fn bit_identical() -> FleetOptions {
+        FleetOptions {
+            block_reduction: false,
+            incremental: false,
+            ..FleetOptions::default()
+        }
+    }
+}
+
 /// Per-decision solver provenance.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DecisionStats {
@@ -465,6 +580,16 @@ pub struct FleetStats {
     /// block model whose reduced DAG collapsed to a chain — take the O(L)
     /// fast path instead of the flow network).
     pub linear_scans: u64,
+    /// Flow solves that reused the previous epoch's flow (repair +
+    /// residual augmentation) instead of running Dinic from zero. Always
+    /// `<= flow_solves`; 0 when [`FleetOptions::incremental`] is off, on
+    /// the linear path, or when every solve was a tier's first.
+    pub incremental_solves: u64,
+    /// Arc cancellations performed by incremental repair passes (0 on
+    /// pure capacity-increase refreshes — the monotone GGT case).
+    pub repair_pushes: u64,
+    /// BFS phases run by incremental residual augmentations.
+    pub augment_rounds: u64,
     /// Vertices of the full model DAG (shared by every tier).
     pub full_vertices: usize,
     /// Edges of the full model DAG.
@@ -496,6 +621,14 @@ struct TierState {
     /// `N_loc·ξ_D` per layer (the tier half of the SoA capacity layout).
     exec_base: Vec<f64>,
     scratch: DinicScratch,
+    inc: IncrementalScratch,
+    /// The σ the network's capacities (and its routed flow) were last
+    /// solved for. `Some` marks the network as carrying a reusable
+    /// maximum flow — the precondition of the incremental re-solve path.
+    /// Only σ can change between a tier's solves (the spec is fixed at
+    /// construction), so this is also the structural-change guard: the
+    /// facade never reuses flow across anything but a σ refresh.
+    last_sigma: Option<f64>,
     /// The link of the tier's cached solve and its decision. A request
     /// with the same link is served from here without touching the
     /// network; any other link marks the tier dirty.
@@ -503,31 +636,47 @@ struct TierState {
     refreshes: u64,
     flow_solves: u64,
     linear_scans: u64,
+    incremental_solves: u64,
+    repair_pushes: u64,
+    augment_rounds: u64,
 }
 
 /// Refresh + solve one tier for `link` and cache the decision. When the
 /// fleet reduction is active, `solve_costs` is the tier's *reduced* cost
 /// graph and `expand` carries the full→reduced mapping plus the full graph:
 /// the solved device set is expanded back to full layers and the cached
-/// partition's delay is Eq. (7) on the full graph. Free function over split
-/// borrows so a rayon `par_iter_mut` over tiers can adopt it unchanged.
+/// partition's delay is Eq. (7) on the full graph. With
+/// [`FleetOptions::incremental`] on and a previous flow in the tier's
+/// network, the solve routes through the flow-reusing refresh + repair +
+/// residual augmentation, falling back to the cold refresh + Dinic run if
+/// the repair pass dead-ends. Free function over split borrows so a rayon
+/// `par_iter_mut` over tiers can adopt it unchanged.
 fn solve_tier(
     shape: Option<&NetShape>,
     solve_costs: &CostGraph,
     expand: Option<(&[usize], &CostGraph)>,
-    pin_inputs: bool,
-    closure_edges: bool,
+    options: FleetOptions,
     tier: &mut TierState,
     link: Link,
 ) {
+    let FleetOptions {
+        pin_inputs,
+        closure_edges,
+        ..
+    } = options;
     let TierState {
         net,
         exec_base,
         scratch,
+        inc,
+        last_sigma,
         solved,
         refreshes,
         flow_solves,
         linear_scans,
+        incremental_solves,
+        repair_pushes,
+        augment_rounds,
     } = tier;
     // Problem::with_pin validates the link (positive rates), exactly like
     // the cold path — a dead uplink must panic, not produce NaN capacities
@@ -541,8 +690,27 @@ fn solve_tier(
         (Some(shape), Some(net)) => {
             *refreshes += 1;
             *flow_solves += 1;
-            refresh_capacities(net, shape, exec_base, link.sigma());
-            let cut = dinic_with(net, shape.source, shape.sink, scratch);
+            let sigma = link.sigma();
+            // Flow reuse is sound only across pure σ refreshes of a net
+            // that holds a solved flow; `last_sigma` certifies both.
+            let mut cut = None;
+            if options.incremental && last_sigma.is_some() {
+                refresh_capacities_preserving(net, shape, exec_base, sigma, inc);
+                if let Some((c, rs)) = inc.resolve(net, shape.source, shape.sink, scratch) {
+                    *incremental_solves += 1;
+                    *repair_pushes += rs.repair_pushes;
+                    *augment_rounds += rs.augment_rounds;
+                    cut = Some(c);
+                }
+                // A failed repair leaves arbitrary residual state; the
+                // cold refresh below rewrites every capacity and clears
+                // all flow, so the fallback solve is exact regardless.
+            }
+            let cut = cut.unwrap_or_else(|| {
+                refresh_capacities(net, shape, exec_base, sigma);
+                dinic_with(net, shape.source, shape.sink, scratch)
+            });
+            *last_sigma = Some(sigma);
             let device_set: Vec<bool> = shape.exec.iter().map(|&e| cut.source_side[e]).collect();
             // Without closure edges the cut need not be a lower set (that
             // is the point of ablA), so only assert under the default
@@ -573,14 +741,67 @@ fn solve_tier(
     *solved = Some((link, partition));
 }
 
+/// One tier's slice of an epoch batch: its mutable solver state, the
+/// tier's distinct-link request groups, and the per-group decisions the
+/// sweep produces. The unit of the (optionally rayon-parallel) dirty-tier
+/// loop in [`FleetPlanner::plan`] — a job touches nothing but its own
+/// `tier`/`out` plus shared read-only state, which is what makes the
+/// sweep embarrassingly parallel.
+struct TierJob<'a> {
+    /// Tier index (keys the shared reduction/spec lookups).
+    t: usize,
+    tier: &'a mut TierState,
+    /// This tier's (link, request indices) groups, first-seen order.
+    groups: &'a [(Link, Vec<usize>)],
+    /// Per-group (decision, freshly solved) results, in `groups` order.
+    out: Vec<Option<(Partition, bool)>>,
+}
+
+/// Serve every group of one tier job: the group matching the tier's
+/// epoch-start cache first (processed later it would find the cache
+/// evicted by another of the tier's links and re-solve a decision that
+/// was still valid), then the rest in first-seen order. The within-job
+/// order is fixed, so the produced decisions, flow history, and counters
+/// are identical however jobs are scheduled across threads.
+fn run_tier_job(
+    shape: Option<&NetShape>,
+    solve_costs: &CostGraph,
+    expand: Option<(&[usize], &CostGraph)>,
+    options: FleetOptions,
+    job: &mut TierJob,
+) {
+    let cached = job
+        .tier
+        .solved
+        .as_ref()
+        .and_then(|(l, _)| job.groups.iter().position(|(gl, _)| gl == l));
+    let order = cached
+        .into_iter()
+        .chain((0..job.groups.len()).filter(|&g| Some(g) != cached));
+    for g in order {
+        let (link, _) = &job.groups[g];
+        let clean = matches!(&job.tier.solved, Some((l, _)) if l == link);
+        if !clean {
+            solve_tier(shape, solve_costs, expand, options, job.tier, *link);
+        }
+        let partition = job
+            .tier
+            .solved
+            .as_ref()
+            .expect("tier just solved")
+            .1
+            .clone();
+        job.out[g] = Some((partition, !clean));
+    }
+}
+
 /// The fleet planning facade: all per-tier transformed networks behind one
 /// batched request/response epoch API. See the module docs for the layout
 /// and invariants; `benches/fleet.rs` measures the 10/100/1000-device epoch
 /// decision times this design targets.
 pub struct FleetPlanner {
     spec: FleetSpec,
-    pin_inputs: bool,
-    closure_edges: bool,
+    options: FleetOptions,
     /// The fleet-wide Theorem 2 reduction; `Some` iff block reduction was
     /// requested and at least one block passed the intra-block cut test.
     reduction: Option<FleetReduction>,
@@ -601,25 +822,22 @@ pub struct FleetPlanner {
 
 impl FleetPlanner {
     /// Plan for the default problem (pinned inputs, closure edges on,
-    /// fleet-level block reduction enabled).
+    /// fleet-level block reduction and incremental re-solves enabled).
     pub fn new(spec: FleetSpec) -> FleetPlanner {
-        FleetPlanner::with_options(spec, true, true, true)
+        FleetPlanner::with_options(spec, FleetOptions::default())
     }
 
-    /// Explicit control over input pinning, closure edges (mirrors
-    /// `general_partition_with_options`) and the fleet-level block
-    /// reduction. With `block_reduction` **off** the engine solves the full
-    /// DAG and decisions are bit-identical to the cold general engine (the
-    /// [`super::PartitionPlanner`] contract); with it **on**, decisions on
-    /// block-structured models are solved at blockwise scale and are
-    /// *cost-equivalent* — equal T(cut), possibly a different co-optimal
-    /// cut (see the module docs).
-    pub fn with_options(
-        spec: FleetSpec,
-        pin_inputs: bool,
-        closure_edges: bool,
-        block_reduction: bool,
-    ) -> FleetPlanner {
+    /// Explicit control over every engine switch ([`FleetOptions`]):
+    /// input pinning and closure edges (mirror
+    /// `general_partition_with_options`), the fleet-level block reduction,
+    /// and the incremental flow-reusing re-solves. With both fast paths
+    /// **off** ([`FleetOptions::bit_identical`]) the engine solves the
+    /// full DAG from a cold refresh every time and decisions are
+    /// bit-identical to the cold general engine (the
+    /// [`super::PartitionPlanner`] contract); with either **on**,
+    /// decisions are *cost-equivalent* — equal T(cut), possibly a
+    /// different co-optimal cut (see the module docs).
+    pub fn with_options(spec: FleetSpec, options: FleetOptions) -> FleetPlanner {
         let template = &spec.tiers[0].1;
         for (name, costs) in &spec.tiers[1..] {
             assert_shared_shape(template, costs, name);
@@ -631,7 +849,7 @@ impl FleetPlanner {
         // full reduction (mapping + shared arrays) is applied once, to the
         // template; every other tier differs only in ξ_D, which is
         // re-derived through the shared mapping.
-        let (reduction, blocks_detected, blocks_abstracted) = if block_reduction {
+        let (reduction, blocks_detected, blocks_abstracted) = if options.block_reduction {
             let plan = Reduction::detect(template);
             let (detected, abstracted) = (plan.blocks_detected(), plan.blocks_abstracted());
             let reduction = if plan.reduces() {
@@ -659,7 +877,8 @@ impl FleetPlanner {
         let (shape, proto) = if linear {
             (None, None)
         } else {
-            let (shape, proto) = NetShape::build(solve_template, pin_inputs, closure_edges);
+            let (shape, proto) =
+                NetShape::build(solve_template, options.pin_inputs, options.closure_edges);
             (Some(shape), Some(proto))
         };
         let tiers = (0..spec.tiers.len())
@@ -671,17 +890,21 @@ impl FleetPlanner {
                     net: proto.clone(),
                     exec_base: NetShape::exec_base(solve_costs),
                     scratch: DinicScratch::default(),
+                    inc: IncrementalScratch::default(),
+                    last_sigma: None,
                     solved: None,
                     refreshes: 0,
                     flow_solves: 0,
                     linear_scans: 0,
+                    incremental_solves: 0,
+                    repair_pushes: 0,
+                    augment_rounds: 0,
                 }
             })
             .collect();
         FleetPlanner {
             spec,
-            pin_inputs,
-            closure_edges,
+            options,
             reduction,
             shape,
             tiers,
@@ -723,15 +946,7 @@ impl FleetPlanner {
             let tier = &mut self.tiers[r.tier];
             let clean = matches!(&tier.solved, Some((l, _)) if *l == r.link);
             if !clean {
-                solve_tier(
-                    self.shape.as_ref(),
-                    solve_costs,
-                    expand,
-                    self.pin_inputs,
-                    self.closure_edges,
-                    tier,
-                    r.link,
-                );
+                solve_tier(self.shape.as_ref(), solve_costs, expand, self.options, tier, r.link);
             }
             let partition = tier.solved.as_ref().expect("tier just solved").1.clone();
             return vec![PlanDecision {
@@ -758,42 +973,48 @@ impl FleetPlanner {
             by_tier[r.tier][g].1.push(i);
         }
 
-        // Per-tier solve sweep. Tiers are independent (each TierState owns
-        // its network + scratch and reads only the shared shape/spec), so a
-        // future rayon feature flag can turn this into a par_iter_mut
-        // without changing the API.
-        let mut results: Vec<Option<(Partition, bool)>> = vec![None; requests.len()];
+        // Per-tier solve sweep over explicit jobs. Tiers are independent
+        // (each TierState owns its network + scratch and reads only the
+        // shared shape/spec), so the jobs run serially or — behind the
+        // `parallel` cargo feature — through rayon's par_iter_mut; each
+        // job's groups are served in a deterministic order either way, so
+        // decisions and stats are bit-identical across the two modes.
         let shape = self.shape.as_ref();
-        for (t, tier) in self.tiers.iter_mut().enumerate() {
-            let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, t);
-            // Serve the group matching the tier's epoch-start cache first:
-            // processed later it would find the cache evicted by another of
-            // the tier's links and re-solve a decision that was still valid.
-            let cached = tier
-                .solved
-                .as_ref()
-                .and_then(|(l, _)| by_tier[t].iter().position(|(gl, _)| gl == l));
-            let order = cached
-                .into_iter()
-                .chain((0..by_tier[t].len()).filter(|&g| Some(g) != cached));
-            for g in order {
-                let (link, idxs) = &by_tier[t][g];
-                let clean = matches!(&tier.solved, Some((l, _)) if l == link);
-                if !clean {
-                    solve_tier(
-                        shape,
-                        solve_costs,
-                        expand,
-                        self.pin_inputs,
-                        self.closure_edges,
-                        tier,
-                        *link,
-                    );
-                }
-                let partition = &tier.solved.as_ref().expect("tier just solved").1;
+        let reduction = &self.reduction;
+        let spec = &self.spec;
+        let options = self.options;
+        let mut jobs: Vec<TierJob> = self
+            .tiers
+            .iter_mut()
+            .zip(by_tier.iter())
+            .enumerate()
+            .map(|(t, (tier, groups))| TierJob {
+                t,
+                tier,
+                groups,
+                out: vec![None; groups.len()],
+            })
+            .collect();
+        let run = |job: &mut TierJob| {
+            let (solve_costs, expand) = tier_inputs(reduction, spec, job.t);
+            run_tier_job(shape, solve_costs, expand, options, job);
+        };
+        #[cfg(not(feature = "parallel"))]
+        jobs.iter_mut().for_each(run);
+        #[cfg(feature = "parallel")]
+        {
+            use rayon::prelude::*;
+            jobs.par_iter_mut().for_each(run);
+        }
+
+        // Serial fan-out of the per-group decisions, in request order.
+        let mut results: Vec<Option<(Partition, bool)>> = vec![None; requests.len()];
+        for job in &jobs {
+            for (g, (_, idxs)) in job.groups.iter().enumerate() {
+                let (partition, fresh) = job.out[g].as_ref().expect("every group is solved");
                 for (j, &i) in idxs.iter().enumerate() {
                     // Only the group's first request carries refreshed=true.
-                    results[i] = Some((partition.clone(), !clean && j == 0));
+                    results[i] = Some((partition.clone(), *fresh && j == 0));
                 }
             }
         }
@@ -828,9 +1049,12 @@ impl FleetPlanner {
     /// [`super::PartitionPlanner`] per-call hot path, which re-solves every
     /// call anyway (so a cached copy would be discarded unused) and whose
     /// PR-1 contract is one O(E) refresh + one Dinic run + only the
-    /// returned device-set allocation. Leaves the tier with no cached
-    /// decision.
-    pub(crate) fn take_solve(&mut self, tier: usize, link: Link) -> Partition {
+    /// returned device-set allocation. With [`FleetOptions::incremental`]
+    /// on, the solve still reuses the previous call's flow (the skipped
+    /// cache holds decisions, not flow), which is what `benches/replan.rs`
+    /// times as the incremental per-epoch path. Leaves the tier with no
+    /// cached decision.
+    pub fn take_solve(&mut self, tier: usize, link: Link) -> Partition {
         assert!(tier < self.spec.num_tiers(), "unknown tier {tier}");
         assert!(
             link.up_bps > 0.0 && link.down_bps > 0.0,
@@ -840,15 +1064,7 @@ impl FleetPlanner {
         self.requests += 1;
         let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, tier);
         let t = &mut self.tiers[tier];
-        solve_tier(
-            self.shape.as_ref(),
-            solve_costs,
-            expand,
-            self.pin_inputs,
-            self.closure_edges,
-            t,
-            link,
-        );
+        solve_tier(self.shape.as_ref(), solve_costs, expand, self.options, t, link);
         t.solved.take().expect("tier just solved").1
     }
 
@@ -869,8 +1085,16 @@ impl FleetPlanner {
             s.refreshes += t.refreshes;
             s.flow_solves += t.flow_solves;
             s.linear_scans += t.linear_scans;
+            s.incremental_solves += t.incremental_solves;
+            s.repair_pushes += t.repair_pushes;
+            s.augment_rounds += t.augment_rounds;
         }
         s
+    }
+
+    /// The switches this planner was built with.
+    pub fn options(&self) -> FleetOptions {
+        self.options
     }
 
     /// The fleet this planner serves.
@@ -919,9 +1143,10 @@ mod tests {
     use super::*;
     use crate::models;
     use crate::models::REDUCING_MODELS;
+    use crate::partition::general::general_partition;
     use crate::partition::PartitionPlanner;
     use crate::profiles::TrainCfg;
-    use crate::util::prop::{assert_cut_cost_equal, random_link};
+    use crate::util::prop::{assert_cut_cost_equal, fading_walk, random_link};
     use crate::util::rng::Rng;
 
     fn tier_profiles() -> [DeviceProfile; 4] {
@@ -1009,9 +1234,10 @@ mod tests {
         }
     }
 
-    /// With block reduction disabled the facade stays bit-identical to
-    /// independent `PartitionPlanner`s — the PR-2 pinned property, now the
-    /// explicit contract of the unreduced configuration.
+    /// With both fast paths disabled (`FleetOptions::bit_identical`: no
+    /// block reduction, no incremental re-solves) the facade stays
+    /// bit-identical to independent `PartitionPlanner`s — the PR-2 pinned
+    /// property, now the explicit contract of that configuration.
     #[test]
     fn unreduced_plan_is_bit_identical_to_partition_planners() {
         let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0xB17);
@@ -1020,7 +1246,7 @@ mod tests {
             let mut reference: Vec<PartitionPlanner> = (0..spec.num_tiers())
                 .map(|t| PartitionPlanner::new(spec.tier_costs(t)))
                 .collect();
-            let mut fleet = FleetPlanner::with_options(spec, true, true, false);
+            let mut fleet = FleetPlanner::with_options(spec, FleetOptions::bit_identical());
             let s = fleet.stats();
             assert_eq!(s.reduced_vertices, s.full_vertices, "{model}");
             assert_eq!(s.blocks_detected, 0, "{model}: detection must be skipped");
@@ -1299,6 +1525,154 @@ mod tests {
         assert_eq!(s.refreshes, 0, "linear path never refreshes capacities");
         assert!(s.linear_scans > 0 && s.flow_solves == 0);
         assert!(s.reduced_vertices < s.full_vertices);
+    }
+
+    /// The σ-drift regression (ISSUE 4 satellite): a fading walk — many
+    /// consecutive small σ steps on one tier — must take the incremental
+    /// path on every step after the first, and every step's cost must
+    /// match a per-step cold general solve. Two walks cover both
+    /// directions: rates fading (σ grows → capacities grow → pure
+    /// augmentation) and recovering (σ shrinks → capacities shrink →
+    /// repair passes run).
+    #[test]
+    fn fading_walk_resolves_incrementally_with_cold_costs() {
+        let m = models::by_name("googlenet").unwrap();
+        let costs = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        let mut fleet = FleetPlanner::new(FleetSpec::single(costs.clone()));
+        assert!(
+            fleet.flow_size().is_some(),
+            "googlenet must stay on the flow path"
+        );
+        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0xFAD1);
+        let mut steps = 0u64;
+        for start_rate in [4e6, 2e5] {
+            // Phase A: rates fade (σ grows); phase B: rates recover
+            // (σ shrinks). Factor ranges exclude 1.0, so consecutive
+            // links always differ and every plan call really solves.
+            for (lo, hi) in [(0.85, 0.99), (1.02, 1.25)] {
+                let start = Link {
+                    up_bps: start_rate,
+                    down_bps: 3.0 * start_rate,
+                };
+                for link in fading_walk(&mut rng, start, 12, lo, hi) {
+                    let d = fleet
+                        .plan(&[PlanRequest {
+                            device: 0,
+                            tier: 0,
+                            link,
+                        }])
+                        .pop()
+                        .unwrap();
+                    let p = Problem::new(&costs, link);
+                    let cold = general_partition(&p);
+                    assert_cut_cost_equal(&p, &d.partition, &cold);
+                    steps += 1;
+                }
+            }
+        }
+        let s = fleet.stats();
+        assert_eq!(s.flow_solves, steps);
+        assert_eq!(
+            s.incremental_solves,
+            steps - 1,
+            "every step after the first must reuse the previous flow"
+        );
+        assert!(
+            s.repair_pushes > 0,
+            "σ-shrinking steps must exercise the repair pass"
+        );
+    }
+
+    /// The parallel-feature determinism pin: the batched sweep (rayon
+    /// `par_iter_mut` under `--features parallel`, serial otherwise) must
+    /// produce decisions bit-identical to a fresh planner answering the
+    /// same epochs one request at a time through the always-serial
+    /// single-request fast path — same per-tier link and flow history,
+    /// same tie-breaks. Since this holds under any job schedule,
+    /// feature-on ≡ feature-off (CI runs both).
+    #[test]
+    fn batched_plan_is_bit_identical_to_sequential_plans() {
+        for model in ["googlenet", "block-residual"] {
+            let mut batched = FleetPlanner::new(spec_for(model, 12));
+            let mut serial = FleetPlanner::new(spec_for(model, 12));
+            for epoch in 0..5u64 {
+                let reqs = batched.spec().requests(|t| Link {
+                    up_bps: 1e5 * (1.0 + t as f64) * (1.0 + 0.37 * epoch as f64),
+                    down_bps: 5e5 * (1.0 + t as f64) * (1.0 + 0.29 * epoch as f64),
+                });
+                let decisions = batched.plan(&reqs);
+                for (r, d) in reqs.iter().zip(&decisions) {
+                    let want = serial.plan(&[*r]).pop().unwrap();
+                    assert_eq!(d.partition.device_set, want.partition.device_set, "{model}");
+                    assert_eq!(
+                        d.partition.delay.to_bits(),
+                        want.partition.delay.to_bits(),
+                        "{model}"
+                    );
+                    assert_eq!(d.cut_layer, want.cut_layer, "{model}");
+                    assert_eq!(d.stats.refreshed, want.stats.refreshed, "{model}");
+                }
+            }
+            let (b, s) = (batched.stats(), serial.stats());
+            assert_eq!(b.refreshes, s.refreshes, "{model}");
+            assert_eq!(b.flow_solves, s.flow_solves, "{model}");
+            assert_eq!(b.incremental_solves, s.incremental_solves, "{model}");
+            assert_eq!(b.repair_pushes, s.repair_pushes, "{model}");
+            assert_eq!(b.augment_rounds, s.augment_rounds, "{model}");
+        }
+    }
+
+    /// Dirty multi-tier epochs route every flow tier through the
+    /// incremental path from its second solve on.
+    #[test]
+    fn dirty_epochs_reuse_flow_across_all_tiers() {
+        let spec = spec_for("googlenet", 8);
+        let num_tiers = spec.num_tiers() as u64;
+        let mut fleet = FleetPlanner::new(spec);
+        for epoch in 0..4u64 {
+            let reqs = fleet.spec().requests(|t| Link {
+                up_bps: 2e5 * (1.0 + t as f64) * (1.0 + epoch as f64),
+                down_bps: 8e5 * (1.0 + t as f64) * (1.0 + epoch as f64),
+            });
+            let _ = fleet.plan(&reqs);
+        }
+        let s = fleet.stats();
+        assert_eq!(s.flow_solves, 4 * num_tiers);
+        assert_eq!(
+            s.incremental_solves,
+            3 * num_tiers,
+            "only each tier's first solve may run cold"
+        );
+    }
+
+    /// `FleetOptions::incremental` off = the PR-1 engine: every solve is
+    /// a cold refresh + Dinic run, and no incremental counter ever moves.
+    #[test]
+    fn incremental_off_never_reuses_flow() {
+        let mut fleet = FleetPlanner::with_options(
+            spec_for("googlenet", 4),
+            FleetOptions {
+                incremental: false,
+                ..FleetOptions::default()
+            },
+        );
+        for epoch in 0..3u64 {
+            let reqs = fleet.spec().requests(|t| Link {
+                up_bps: 3e5 * (1.0 + t as f64) * (1.0 + epoch as f64),
+                down_bps: 9e5 * (1.0 + t as f64) * (1.0 + epoch as f64),
+            });
+            let _ = fleet.plan(&reqs);
+        }
+        let s = fleet.stats();
+        assert!(s.flow_solves > 0);
+        assert_eq!(s.incremental_solves, 0);
+        assert_eq!(s.repair_pushes, 0);
+        assert_eq!(s.augment_rounds, 0);
     }
 
     #[test]

@@ -11,9 +11,12 @@
 //!   transformed networks over a shared struct-of-arrays capacity layout,
 //!   batch-refreshed and solved per epoch through [`FleetPlanner::plan`],
 //!   with the Theorem 2 block reduction computed once per fleet so
-//!   block-structured models solve at blockwise scale (see PERF.md; the
-//!   pinned equivalence property is cost equality of co-optimal cuts,
-//!   `util::prop::assert_cut_cost_equal`).
+//!   block-structured models solve at blockwise scale, GGT-style
+//!   incremental re-solves reusing the previous epoch's flow across σ
+//!   refreshes ([`FleetOptions::incremental`]), and a dirty-tier sweep
+//!   that parallelizes behind the `parallel` cargo feature (see PERF.md;
+//!   the pinned equivalence property of both fast paths is cost equality
+//!   of co-optimal cuts, `util::prop::assert_cut_cost_equal`).
 //! * [`planner`] — amortized re-partitioning for a single (model,
 //!   device-tier): [`PartitionPlanner`], a thin one-tier wrapper over the
 //!   fleet engine with reduction off (bit-identical to the cold general
@@ -38,7 +41,7 @@ pub mod baselines;
 
 pub use blockwise::blockwise_partition;
 pub use fleet::{
-    DecisionStats, FleetPlanner, FleetSpec, FleetStats, PlanDecision, PlanRequest,
+    DecisionStats, FleetOptions, FleetPlanner, FleetSpec, FleetStats, PlanDecision, PlanRequest,
 };
 pub use general::general_partition;
 pub use planner::PartitionPlanner;

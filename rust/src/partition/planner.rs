@@ -19,7 +19,7 @@
 //! wrapper-thin means PR-1's warm≡cold property tests below keep pinning
 //! the exact arithmetic the fleet facade runs per tier.
 
-use super::fleet::{FleetPlanner, FleetSpec};
+use super::fleet::{FleetOptions, FleetPlanner, FleetSpec};
 use super::types::{Link, Partition};
 use crate::profiles::CostGraph;
 
@@ -44,10 +44,11 @@ impl PartitionPlanner {
 
     /// Explicit control over input pinning and closure edges (mirrors
     /// `general_partition_with_options`). The fleet-level block reduction
-    /// stays **off**: this wrapper's contract is bit-identity with the cold
-    /// general engine (the PR-1 warm≡cold property), and it is the
-    /// reference the reduced path's cost-equivalence suites diff against.
-    /// Single-tier callers who want reduced-DAG solves use
+    /// and the incremental flow-reusing re-solves both stay **off**: this
+    /// wrapper's contract is bit-identity with the cold general engine
+    /// (the PR-1 warm≡cold property), and it is the reference the fast
+    /// paths' cost-equivalence suites diff against. Single-tier callers
+    /// who want reduced-DAG solves use
     /// [`crate::partition::blockwise::Planner`], the one-tier wrapper over
     /// the reduction engine.
     pub fn with_options(
@@ -58,9 +59,11 @@ impl PartitionPlanner {
         PartitionPlanner {
             fleet: FleetPlanner::with_options(
                 FleetSpec::single(costs.clone()),
-                pin_inputs,
-                closure_edges,
-                false,
+                FleetOptions {
+                    pin_inputs,
+                    closure_edges,
+                    ..FleetOptions::bit_identical()
+                },
             ),
             solves: 0,
         }

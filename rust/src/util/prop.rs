@@ -100,6 +100,39 @@ pub fn random_link(rng: &mut Rng) -> Link {
     }
 }
 
+/// A σ-drift link trajectory: `steps` links starting from (but not
+/// including) `start`, each multiplying both rates independently by a
+/// factor drawn from `[factor_lo, factor_hi)` and clamping to the suites'
+/// 1e4..1e9 B/s regime. Factors below 1 model fading (σ = 1/R_up +
+/// 1/R_down grows, transformed-network capacities grow), factors above 1
+/// model recovery (capacities shrink — the repair case of the
+/// incremental re-solver). With 1.0 outside the factor range, consecutive
+/// links differ **as long as the clamp does not engage** — a rate pinned
+/// at a regime bound repeats while its factors keep pushing outward, so
+/// callers that rely on every step being dirty (the σ-drift regressions
+/// and `benches/replan.rs` do) must pick `start`/`steps`/factors whose
+/// walk stays inside 1e4..1e9. Shared by the σ-drift regression suites
+/// and `benches/replan.rs`.
+pub fn fading_walk(
+    rng: &mut Rng,
+    start: Link,
+    steps: usize,
+    factor_lo: f64,
+    factor_hi: f64,
+) -> Vec<Link> {
+    let mut links = Vec::with_capacity(steps);
+    let (mut up, mut down) = (start.up_bps, start.down_bps);
+    for _ in 0..steps {
+        up = (up * rng.range(factor_lo, factor_hi)).clamp(1e4, 1e9);
+        down = (down * rng.range(factor_lo, factor_hi)).clamp(1e4, 1e9);
+        links.push(Link {
+            up_bps: up,
+            down_bps: down,
+        });
+    }
+    links
+}
+
 /// Relative tolerance of [`assert_cut_cost_equal`], in units of
 /// `f64::EPSILON` at the delay's magnitude (i.e. ULPs): 2^16. Two
 /// co-optimal cuts have mathematically equal T(cut), but evaluating Eq. (7)
@@ -240,6 +273,28 @@ mod tests {
             }
             for v in 1..n {
                 assert!(has_parent[v], "vertex {v} orphaned");
+            }
+        });
+    }
+
+    #[test]
+    fn fading_walk_stays_in_regime_and_always_moves() {
+        for_all("fading-walk", 16, |rng| {
+            let start = Link {
+                up_bps: 1e6,
+                down_bps: 4e6,
+            };
+            let links = fading_walk(rng, start, 20, 1.02, 1.3);
+            assert_eq!(links.len(), 20);
+            let mut prev = start;
+            for l in links {
+                assert!(l.up_bps >= 1e4 && l.up_bps <= 1e9);
+                assert!(l.down_bps >= 1e4 && l.down_bps <= 1e9);
+                assert!(
+                    l.up_bps != prev.up_bps && l.down_bps != prev.down_bps,
+                    "consecutive links must differ"
+                );
+                prev = l;
             }
         });
     }

@@ -1,0 +1,110 @@
+//! Minimal offline stand-in for the `rayon` crate.
+//!
+//! The reproduction containers have no crates.io access, so the real
+//! rayon cannot be vendored wholesale; this shim implements exactly the
+//! surface `fastsplit`'s `parallel` feature uses —
+//! `slice.par_iter_mut().for_each(op)` — by splitting the slice into one
+//! contiguous chunk per available core and running each chunk on a
+//! `std::thread::scope` thread. Call sites are written against rayon's
+//! prelude idiom, so swapping this path dependency for the real `rayon`
+//! on a networked machine compiles unchanged.
+//!
+//! Semantics match rayon where it matters for determinism: `op` runs
+//! exactly once per element, elements of one chunk run in slice order on
+//! one thread, and `for_each` returns only after every element has been
+//! processed (scoped threads join on scope exit). Panics in `op`
+//! propagate to the caller like rayon's.
+
+pub mod prelude {
+    pub use crate::IntoParallelRefMutIterator;
+}
+
+/// Rayon's `par_iter_mut` entry-point trait, reduced to mutable slices.
+pub trait IntoParallelRefMutIterator<'data> {
+    type Item: Send + 'data;
+    fn par_iter_mut(&'data mut self) -> ParIterMut<'data, Self::Item>;
+}
+
+impl<'data, T: Send + 'data> IntoParallelRefMutIterator<'data> for [T] {
+    type Item = T;
+    fn par_iter_mut(&'data mut self) -> ParIterMut<'data, T> {
+        ParIterMut { slice: self }
+    }
+}
+
+impl<'data, T: Send + 'data> IntoParallelRefMutIterator<'data> for Vec<T> {
+    type Item = T;
+    fn par_iter_mut(&'data mut self) -> ParIterMut<'data, T> {
+        ParIterMut {
+            slice: self.as_mut_slice(),
+        }
+    }
+}
+
+/// Parallel mutable iterator over a slice (the shim's only shape).
+pub struct ParIterMut<'data, T: Send> {
+    slice: &'data mut [T],
+}
+
+impl<'data, T: Send> ParIterMut<'data, T> {
+    /// Run `op` once per element, chunked across `available_parallelism`
+    /// scoped threads. Single-element (or single-core) inputs run inline.
+    pub fn for_each<F>(self, op: F)
+    where
+        F: Fn(&mut T) + Send + Sync,
+    {
+        let len = self.slice.len();
+        if len == 0 {
+            return;
+        }
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(len);
+        if threads <= 1 {
+            for item in self.slice {
+                op(item);
+            }
+            return;
+        }
+        let chunk = len.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for part in self.slice.chunks_mut(chunk) {
+                let op = &op;
+                scope.spawn(move || {
+                    for item in part {
+                        op(item);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prelude::*;
+
+    #[test]
+    fn visits_every_element_exactly_once() {
+        let mut v: Vec<u64> = (0..1000).collect();
+        v.par_iter_mut().for_each(|x| *x += 1);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u64 + 1));
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let mut empty: Vec<u64> = Vec::new();
+        empty.par_iter_mut().for_each(|_| unreachable!());
+        let mut one = [7u64];
+        one[..].par_iter_mut().for_each(|x| *x *= 2);
+        assert_eq!(one[0], 14);
+    }
+
+    #[test]
+    fn runs_on_slices_too() {
+        let mut v = [1u32, 2, 3, 4, 5];
+        v.as_mut_slice().par_iter_mut().for_each(|x| *x *= 10);
+        assert_eq!(v, [10, 20, 30, 40, 50]);
+    }
+}

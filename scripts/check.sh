@@ -35,13 +35,22 @@ if [[ $fast -eq 0 ]]; then
   PALLAS_TEST_SEED=1 cargo test -q --release equivalence
   PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release equivalence
 
+  # Feature matrix: the rayon parallel dirty-tier sweep must compile and
+  # stay bit-identical to the serial loop (the determinism test runs under
+  # both configurations).
+  echo "==> cargo test -q --features parallel"
+  cargo test -q --features parallel
+
   # Bench smoke: compile + run the bench binaries so they cannot bit-rot.
   # Output files are disabled (-) so committed BENCH_*.json results are
   # only ever replaced by deliberate full runs.
-  echo "==> cargo bench --bench replan -- --quick (smoke)"
-  FASTSPLIT_REPLAN_OUT=- cargo bench --bench replan -- --quick
+  echo "==> cargo bench --bench replan -- --smoke"
+  FASTSPLIT_REPLAN_OUT=- FASTSPLIT_REPLAN4_OUT=- cargo bench --bench replan -- --smoke
   echo "==> cargo bench --bench fleet -- --smoke"
   FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- cargo bench --bench fleet -- --smoke
+  echo "==> bench smoke with --features parallel"
+  FASTSPLIT_REPLAN_OUT=- FASTSPLIT_REPLAN4_OUT=- cargo bench --bench replan --features parallel -- --smoke
+  FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- cargo bench --bench fleet --features parallel -- --smoke
 fi
 
 echo "OK"
