@@ -1,0 +1,233 @@
+//! Benchmark: joint fleet partitioning under shared server capacity —
+//! `JointPlanner::plan` epochs over 10/100-device GoogLeNet fleets at a
+//! sweep of capacities, against the dedicated-server `FleetPlanner` epoch
+//! as the baseline. The congested columns pay the makespan bisection ×
+//! Dinkelbach price probes on top of the λ=1 pass; every probe must ride
+//! the incremental (flow-reusing) path, asserted via the planner's own
+//! counters before the numbers are trusted.
+//!
+//! ```sh
+//! cargo bench --bench joint [-- filter] [--quick] [--smoke]
+//! ```
+//!
+//! Correctness gates before timing: (1) on an exhaustively enumerable
+//! 3-device fleet the joint makespan equals the brute-force oracle over
+//! all cut combinations (`assert_fleet_cost_equal`); (2) with infinite
+//! capacity the joint planner is bit-identical to the fleet engine,
+//! stats included. A full run writes `BENCH_PR5.json` (override with
+//! `FASTSPLIT_JOINT_OUT`, disable with `FASTSPLIT_JOINT_OUT=-`);
+//! `--smoke` is the CI fast mode: small fleets, tiny windows, no JSON.
+
+use fastsplit::partition::{
+    oracle_fleet_makespan, FleetPlanner, FleetSpec, JointPlanner, Link, PlanRequest, Problem,
+};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use fastsplit::util::bench::{BenchConfig, Bencher};
+use fastsplit::util::json::Json;
+use fastsplit::util::prop::{assert_fleet_cost_equal, fading_walk};
+use fastsplit::util::rng::Rng;
+use std::time::Duration;
+
+const MODEL: &str = "googlenet";
+
+fn costs_for(model: &str, device: &DeviceProfile) -> CostGraph {
+    let m = fastsplit::models::by_name(model).unwrap();
+    CostGraph::build(
+        &m,
+        device,
+        &DeviceProfile::rtx_a6000(),
+        &TrainCfg::default(),
+    )
+}
+
+fn spec_for(model: &str, devices: usize) -> FleetSpec {
+    let fleet = DeviceProfile::fleet_of(devices);
+    FleetSpec::from_fleet(&fleet, |d| costs_for(model, d))
+}
+
+/// Deterministic per-(tier, epoch) link, mirroring `benches/fleet.rs`.
+fn epoch_link(tier: usize, epoch: u64) -> Link {
+    let phase = (epoch % 13 + 1) as f64;
+    Link {
+        up_bps: 2e5 * (1.0 + tier as f64) * phase,
+        down_bps: 8e5 * (1.0 + tier as f64) * phase,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = if smoke {
+        Bencher::with_config(BenchConfig {
+            measure_time: Duration::from_millis(40),
+            warmup_time: Duration::from_millis(10),
+            max_samples: 200,
+        })
+    } else {
+        Bencher::from_env()
+    };
+
+    // Gate 1: oracle pin on an exhaustively enumerable 3-device fleet.
+    {
+        let spec = spec_for("block-residual", 3);
+        let mut rng = Rng::new(0x10_1A7);
+        for capacity in [0.6, 1.2, 2.0] {
+            let mut joint = JointPlanner::with_capacity(spec_for("block-residual", 3), capacity);
+            let links: Vec<Link> = (0..3)
+                .map(|_| Link {
+                    up_bps: rng.range(1e5, 1e7),
+                    down_bps: rng.range(1e5, 1e7),
+                })
+                .collect();
+            let requests: Vec<PlanRequest> = (0..3)
+                .map(|d| PlanRequest {
+                    device: d,
+                    tier: spec.tier_of(d),
+                    link: links[d],
+                })
+                .collect();
+            let _ = joint.plan(&requests);
+            let problems: Vec<Problem> = (0..3)
+                .map(|d| Problem::new(spec.tier_costs(spec.tier_of(d)), links[d]))
+                .collect();
+            let oracle = oracle_fleet_makespan(&problems, capacity);
+            assert_fleet_cost_equal(
+                joint.makespan().unwrap(),
+                oracle,
+                &format!("bench gate capacity {capacity}"),
+            );
+        }
+    }
+
+    // Gate 2: ∞-capacity bit-identity against the dedicated fleet engine.
+    {
+        let mut fleet = FleetPlanner::new(spec_for(MODEL, 20));
+        let mut joint = JointPlanner::with_capacity(spec_for(MODEL, 20), f64::INFINITY);
+        for epoch in 0..3u64 {
+            let reqs = fleet.spec().requests(|t| epoch_link(t, epoch));
+            let want = fleet.plan(&reqs);
+            let got = joint.plan(&reqs);
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(g.partition.device_set, w.partition.device_set);
+                assert_eq!(g.partition.delay.to_bits(), w.partition.delay.to_bits());
+            }
+        }
+        assert_eq!(joint.stats(), fleet.stats(), "∞-capacity counters diverged");
+    }
+
+    let fleet_sizes: &[usize] = if smoke { &[10] } else { &[10, 100] };
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in fleet_sizes {
+        // Capacity sweep: dedicated baseline (∞, delegates to the fleet
+        // engine), lightly congested, and heavily congested.
+        let sweeps: Vec<(&str, f64)> = vec![
+            ("dedicated", f64::INFINITY),
+            ("loose", n as f64 * 0.5),
+            ("tight", (n as f64 * 0.08).max(0.5)),
+        ];
+        let mut sweep_results: Vec<(String, f64, Option<f64>, u64, u64, u64, f64)> = Vec::new();
+        for (label, capacity) in sweeps {
+            let mut planner = JointPlanner::with_capacity(spec_for(MODEL, n), capacity);
+            let num_tiers = planner.spec().num_tiers();
+            // σ-drift per epoch: every tier dirty every iteration — the
+            // dynamic-edge case the warm joint re-solve targets.
+            let mut rng = Rng::new(0x9E11 ^ n as u64);
+            let mut tier_links: Vec<Link> =
+                (0..num_tiers).map(|t| epoch_link(t, 0)).collect();
+            let before = b.results().len();
+            b.bench(&format!("joint/{MODEL}/{n}dev/epoch-{label}"), || {
+                for l in tier_links.iter_mut() {
+                    *l = fading_walk(&mut rng, *l, 1, 0.95, 1.05)[0];
+                }
+                let reqs = planner.spec().requests(|t| tier_links[t]);
+                planner.plan(&reqs)
+            });
+            let mean = (b.results().len() > before).then(|| b.results()[before].summary.mean);
+            let s = planner.stats();
+            if capacity.is_finite() {
+                assert!(
+                    s.price_iterations > 0 && s.joint_resolves > 0,
+                    "{label}: congested sweep never ran the price loop"
+                );
+                assert!(
+                    s.incremental_solves > 0,
+                    "{label}: price probes must reuse flow"
+                );
+            } else {
+                assert_eq!(s.joint_resolves, 0, "dedicated sweep must not price");
+            }
+            if let Some(mean) = mean {
+                let plans = s.plans.max(1);
+                println!(
+                    "joint/{n}dev/{label}: {mean:.3e}s/epoch, {:.1} probes/epoch, \
+                     {:.1} price iters/epoch, makespan {:.3}s",
+                    s.joint_resolves as f64 / plans as f64,
+                    s.price_iterations as f64 / plans as f64,
+                    planner.makespan().unwrap_or(0.0),
+                );
+                sweep_results.push((
+                    label.to_string(),
+                    capacity,
+                    Some(mean),
+                    s.joint_resolves,
+                    s.price_iterations,
+                    plans,
+                    planner.makespan().unwrap_or(0.0),
+                ));
+            }
+        }
+        for (label, capacity, mean, probes, iters, plans, makespan) in sweep_results {
+            if let Some(mean) = mean {
+                rows.push(Json::obj(vec![
+                    ("devices", Json::num(n as f64)),
+                    ("capacity_label", Json::str(label)),
+                    (
+                        "server_capacity",
+                        if capacity.is_finite() {
+                            Json::num(capacity)
+                        } else {
+                            Json::str("inf")
+                        },
+                    ),
+                    ("epoch_mean_s", Json::num(mean)),
+                    (
+                        "price_iterations_per_epoch",
+                        Json::num(iters as f64 / plans as f64),
+                    ),
+                    (
+                        "joint_resolves_per_epoch",
+                        Json::num(probes as f64 / plans as f64),
+                    ),
+                    ("last_makespan_s", Json::num(makespan)),
+                ]));
+            }
+        }
+    }
+    b.finish();
+
+    if smoke {
+        println!("smoke mode: skipping BENCH_PR5.json");
+        return;
+    }
+    let out = std::env::var("FASTSPLIT_JOINT_OUT").unwrap_or_else(|_| "BENCH_PR5.json".into());
+    if out != "-" && !rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("joint")),
+            ("measured", Json::Bool(true)),
+            (
+                "note",
+                Json::str(
+                    "JointPlanner::plan epoch decisions over 10/100-device googlenet fleets \
+                     under σ-drifting per-tier links, at a server-capacity sweep (dedicated ∞ \
+                     baseline vs loosely/heavily congested); joint makespans oracle-gated on a \
+                     3-device block-residual fleet and ∞-capacity pinned bit-identical to \
+                     FleetPlanner before timing; price probes FleetStats-verified to reuse flow",
+                ),
+            ),
+            ("results", Json::Arr(rows)),
+        ]);
+        match std::fs::write(&out, doc.pretty() + "\n") {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
+    }
+}

@@ -10,7 +10,7 @@
 use fastsplit::models;
 use fastsplit::net::{Band, ChannelCondition, EdgeNetwork, NetConfig};
 use fastsplit::partition::{
-    general_partition, FleetPlanner, FleetSpec, PartitionPlanner, Problem,
+    general_partition, FleetPlanner, FleetSpec, JointPlanner, PartitionPlanner, Problem,
 };
 use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
 use fastsplit::sim::{SimConfig, Trainer};
@@ -164,6 +164,42 @@ fn main() {
             fmt_secs(total / (fleet_epochs * n) as f64),
             stats.refreshes,
             fleet_epochs,
+        );
+    }
+
+    // Joint partitioning under a shared, finite server: the same fleet
+    // epoch, but the server's throughput is a budget the devices compete
+    // for. As capacity shrinks, the congestion price loop pushes layers
+    // back onto the devices and the optimal fleet makespan grows — every
+    // price probe riding the warm incremental re-solve path.
+    println!("\njoint fleet partitioning (GoogLeNet, 20 devices, shared server capacity sweep)");
+    let devices = DeviceProfile::fleet_of(20);
+    let tier_links: Vec<_> = (0..4)
+        .map(|t| net.sample_link(0, (100 + t) as f64).to_link())
+        .collect();
+    for capacity in [f64::INFINITY, 8.0, 3.0, 1.0] {
+        let spec = FleetSpec::from_fleet(&devices, |d| {
+            CostGraph::build(&model, d, &server, &TrainCfg::default())
+        });
+        let mut joint = JointPlanner::with_capacity(spec, capacity);
+        let requests = joint.spec().requests(|tier| tier_links[tier]);
+        let t0 = Instant::now();
+        let decisions = joint.plan(&requests);
+        let elapsed = t0.elapsed().as_secs_f64();
+        let device_layers: usize = decisions.iter().map(|d| d.partition.device_layers()).sum();
+        let stats = joint.stats();
+        println!(
+            "  capacity {:>8}: makespan {}, {} total device layers, {} price iters / {} probes, {} per epoch",
+            if capacity.is_infinite() {
+                "inf".to_string()
+            } else {
+                format!("{capacity}")
+            },
+            fmt_secs(joint.makespan().unwrap_or(0.0)),
+            device_layers,
+            stats.price_iterations,
+            stats.joint_resolves,
+            fmt_secs(elapsed),
         );
     }
 }

@@ -4,7 +4,7 @@
 
 use super::costmodel::{partition_to_cut, stage_cost_graph};
 use crate::net::{EdgeNetwork, NetConfig};
-use crate::partition::{FleetPlanner, FleetSpec, FleetStats, PlanRequest, Problem};
+use crate::partition::{FleetSpec, FleetStats, JointPlanner, PlanRequest, Problem};
 use crate::profiles::{DeviceProfile, TrainCfg};
 use crate::runtime::data::Synthetic;
 use crate::runtime::SplitTrainer;
@@ -21,6 +21,11 @@ pub struct CoordinatorConfig {
     pub lr: f32,
     pub epochs: usize,
     pub seed: u64,
+    /// Shared server capacity in concurrent full-throughput
+    /// device-equivalents (see `partition::joint`). The default ∞ keeps
+    /// the planner bit-identical to the dedicated fleet engine; a finite
+    /// value makes every epoch decision congestion-aware.
+    pub server_capacity: f64,
 }
 
 impl Default for CoordinatorConfig {
@@ -39,6 +44,7 @@ impl Default for CoordinatorConfig {
             lr: 0.05,
             epochs: 10,
             seed: 7,
+            server_capacity: f64::INFINITY,
         }
     }
 }
@@ -55,8 +61,14 @@ pub struct EpochReport {
     pub mean_loss: f64,
     /// Held-out batch accuracy after the epoch (real numerics).
     pub accuracy: f64,
-    /// Eq. (7) simulated epoch delay.
+    /// Eq. (7) simulated epoch delay. Under a finite `server_capacity`
+    /// this is the load-dependent shared-server delay (see
+    /// `partition::joint`).
     pub sim_delay: f64,
+    /// The dedicated Eq. (7) decomposition of the chosen cut; on a
+    /// congested finite-capacity epoch its components sum to the cut's
+    /// dedicated delay, not to `sim_delay` — the gap is the shared-server
+    /// queueing share.
     pub breakdown: DelayBreakdown,
     /// Wall-clock of the partition decision (the paper's Table I metric).
     /// This is the fleet facade's actual per-epoch cost: a refresh + solve
@@ -78,11 +90,14 @@ pub struct Coordinator {
     trainer: SplitTrainer,
     net: EdgeNetwork,
     fleet: Vec<DeviceProfile>,
-    /// The fleet planning facade: per-tier stage cost graphs and
+    /// The joint planning facade: per-tier stage cost graphs and
     /// transformed networks, deduplicated and built once at construction
     /// (the model and the training config are fixed for the run). Each
-    /// epoch's decision is a single [`FleetPlanner::plan`] call.
-    planner: FleetPlanner,
+    /// epoch's decision is a single [`JointPlanner::plan`] call — with the
+    /// default infinite `server_capacity` that is bit-identical to the
+    /// plain fleet engine; a finite capacity makes the decision
+    /// congestion-aware.
+    planner: JointPlanner,
     data: Synthetic,
     eval_batch: crate::runtime::data::Batch,
     sim_time: f64,
@@ -100,7 +115,7 @@ impl Coordinator {
         let spec = FleetSpec::from_fleet(&fleet, |d| {
             stage_cost_graph(trainer.manifest(), d, &server, &cfg.train)
         });
-        let planner = FleetPlanner::new(spec);
+        let planner = JointPlanner::with_capacity(spec, cfg.server_capacity);
         let net = EdgeNetwork::new(cfg.net.clone());
         Ok(Coordinator {
             cfg,
@@ -124,10 +139,11 @@ impl Coordinator {
         &self.fleet
     }
 
-    /// Solver counters of the fleet planning facade: decision provenance
+    /// Solver counters of the joint planning facade: decision provenance
     /// (refresh/solve counts, reduced-vs-full solve DAG sizes — the stage
     /// graph is a chain, so here `reduced == full` and every decision is an
-    /// O(L) scan; mirrors [`crate::sim::Trainer::planner_stats`]).
+    /// O(L) scan — plus the shared-capacity price-loop counters; mirrors
+    /// [`crate::sim::Trainer::planner_stats`]).
     pub fn planner_stats(&self) -> FleetStats {
         self.planner.stats()
     }
@@ -143,16 +159,42 @@ impl Coordinator {
         let tier = self.planner.spec().tier_of(device);
         let tier_name = self.planner.spec().tier_name(tier);
 
-        // 2. Decide the partition through the fleet facade: the tier's
-        // transformed network is already built, so the timed region is
-        // exactly the per-epoch work (capacity refresh + warm solve for a
-        // dirty tier) — the paper's Table I decision metric.
+        // 2. Decide the partition through the planning facade. Under a
+        // finite server capacity the epoch is planned for the WHOLE fleet
+        // (every device's current link sampled into one coupled batch —
+        // the server contention only exists fleet-wide; a single-device
+        // request could never congest a capacity ≥ 1); with the default
+        // ∞ capacity the single-request fast path is bit-identical to the
+        // plain fleet engine. Link sampling is channel simulation, so it
+        // runs before the timer: the timed region is exactly the per-epoch
+        // decision work (capacity refresh + warm solve per dirty tier,
+        // plus the price loop when congested) — the paper's Table I
+        // decision metric.
+        let requests: Vec<PlanRequest> = if self.cfg.server_capacity.is_finite() {
+            (0..self.planner.spec().num_devices())
+                .map(|d| {
+                    let l = if d == device {
+                        link
+                    } else {
+                        self.net.sample_link(d, self.sim_time).to_link()
+                    };
+                    PlanRequest {
+                        device: d,
+                        tier: self.planner.spec().tier_of(d),
+                        link: l,
+                    }
+                })
+                .collect()
+        } else {
+            vec![PlanRequest { device, tier, link }]
+        };
         let t0 = Instant::now();
         let decision = self
             .planner
-            .plan(&[PlanRequest { device, tier, link }])
-            .pop()
-            .expect("one decision per request");
+            .plan(&requests)
+            .into_iter()
+            .find(|d| d.device == device)
+            .expect("one decision per device");
         let decision_time = t0.elapsed().as_secs_f64();
         let decision_refreshed = decision.stats.refreshed;
         let partition = decision.partition;

@@ -5,13 +5,17 @@ use super::common::{cost_graph, time_median};
 use crate::models::FULL_MODELS;
 use crate::partition::blockwise::Planner;
 use crate::partition::{
-    blockwise_partition, general_partition, FleetPlanner, FleetSpec, Link, Problem,
+    blockwise_partition, general_partition, FleetPlanner, FleetSpec, JointPlanner, Link, Problem,
 };
 use crate::profiles::DeviceProfile;
 use crate::util::table::Table;
 
 /// Devices in the fleet-epoch column (4 deduplicated Jetson tiers).
 const FLEET_DEVICES: usize = 100;
+
+/// Shared server capacity of the joint-epoch column: well below the fleet
+/// size, so every epoch runs the congestion price loop.
+const JOINT_CAPACITY: f64 = 8.0;
 
 pub fn run(reps: usize) -> String {
     let mut t = Table::new(&[
@@ -20,6 +24,7 @@ pub fn run(reps: usize) -> String {
         "block-wise (s)",
         "warm replan (s)",
         "fleet-100 epoch (s)",
+        "joint-100 epoch (s)",
         "train delay/iter (s)",
         "ratio (delay/decision)",
     ]);
@@ -53,6 +58,21 @@ pub fn run(reps: usize) -> String {
                 .requests(|tier| Link::symmetric(1e6 * (1.0 + (epoch + tier as u64) as f64)));
             std::hint::black_box(fleet.plan(&requests));
         });
+        // Joint shared-server epoch: the same 100-device fleet coupled
+        // through a finite server capacity — each epoch pays the makespan
+        // bisection × warm price probes on top of the λ=1 pass.
+        let mut joint = JointPlanner::with_capacity(
+            FleetSpec::from_fleet(&devices, |d| cost_graph(model, d)),
+            JOINT_CAPACITY,
+        );
+        let mut joint_e = 0u64;
+        let joint_epoch = time_median(reps, || {
+            joint_e += 1;
+            let requests = joint
+                .spec()
+                .requests(|tier| Link::symmetric(1e6 * (1.0 + (joint_e + tier as u64) as f64)));
+            std::hint::black_box(joint.plan(&requests));
+        });
         // Per-iteration training delay: Eq. (7) for the optimal partition,
         // divided by N_loc local iterations.
         let part = blockwise_partition(&p);
@@ -63,6 +83,7 @@ pub fn run(reps: usize) -> String {
             format!("{bw:.2e}"),
             format!("{warm:.2e}"),
             format!("{fleet_epoch:.2e}"),
+            format!("{joint_epoch:.2e}"),
             format!("{per_iter:.2}"),
             format!("{:.1e}", per_iter / bw.max(1e-12)),
         ]);
@@ -70,7 +91,9 @@ pub fn run(reps: usize) -> String {
     format!(
         "Table I: running time vs training delay per iteration ({reps} reps)\n{}\n\
          (decision time is {} orders of magnitude below the training delay;\n\
-          the fleet column is one batched epoch decision for {FLEET_DEVICES} devices)\n",
+          the fleet column is one batched epoch decision for {FLEET_DEVICES} devices,\n\
+          the joint column the same epoch coupled through a shared server of\n\
+          capacity {JOINT_CAPACITY} device-equivalents)\n",
         t.render(),
         "several"
     )

@@ -218,6 +218,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         lr: args.get_f64("lr", 0.05) as f32,
         epochs: args.get_usize("epochs", 10),
         seed: args.get_u64("seed", 7),
+        server_capacity: args.get_f64("server-capacity", f64::INFINITY),
     };
     let mut coord = Coordinator::new(cfg.clone())?;
     println!(

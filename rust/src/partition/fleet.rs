@@ -14,15 +14,16 @@
 //!
 //! Every forward-edge capacity of the Alg. 2 transformed network is affine
 //! in the round-trip byte cost `σ = 1/R_up + 1/R_down`
-//! ([`crate::partition::Link::sigma`]):
+//! ([`crate::partition::Link::sigma`]) and in the joint planner's server
+//! congestion price `λ` (1 = dedicated server; see `partition::joint`):
 //!
 //! ```text
-//!   cap(e) = base(e) + bw_scale(e) · σ          with, per edge class:
-//!   server-exec  (s  → v')   base = N_loc·ξ_S(v)   scale = 0      (∞ if pinned input)
-//!   device-exec  (v' → t)    base = N_loc·ξ_D(v)   scale = k_v
-//!   propagation  (u  → v')   base = 0              scale = N_loc·a_u
-//!   aux transmit (v' → v)    base = 0              scale = N_loc·a_v
-//!   closure      (reverse)   base = ∞              scale = 0
+//!   cap(e) = base(e) + bw_scale(e)·σ + srv_base(e)·λ   with, per edge class:
+//!   server-exec  (s  → v')   srv_base = N_loc·ξ_S(v)  scale = 0  (base = ∞ if pinned input)
+//!   device-exec  (v' → t)    base = N_loc·ξ_D(v)      scale = k_v
+//!   propagation  (u  → v')   base = 0                 scale = N_loc·a_u
+//!   aux transmit (v' → v)    base = 0                 scale = N_loc·a_v
+//!   closure      (reverse)   base = ∞                 scale = 0
 //! ```
 //!
 //! Only the device-exec `base` term depends on the tier (ξ_D varies with the
@@ -74,18 +75,19 @@
 //!
 //! # Incremental (flow-reusing) re-solves
 //!
-//! Between two solves of one tier only σ changes (the spec — DAG, bytes,
-//! server costs, ξ_D — is fixed at construction), so consecutive flow
-//! networks differ only in capacities. With [`FleetOptions::incremental`]
-//! on (the default), a tier that already holds a solved flow re-solves
-//! through [`crate::maxflow::incremental`]: the refresh keeps the carried
-//! flow per edge ([`FlowNetwork::update_edge_capacity`]), conservation is
+//! Between two solves of one tier only σ — and, for the joint planner's
+//! price probes, λ — changes (the spec — DAG, bytes, server costs, ξ_D —
+//! is fixed at construction), so consecutive flow networks differ only in
+//! capacities. With [`FleetOptions::incremental`] on (the default), a
+//! tier that already holds a solved flow re-solves through
+//! [`crate::maxflow::incremental`]: the refresh keeps the carried flow
+//! per edge ([`FlowNetwork::update_edge_capacity`]), conservation is
 //! repaired at the few arcs whose new capacity undercut their flow, and
 //! Dinic merely augments the repaired residual — typically zero or one
 //! BFS phase on a small σ drift instead of a from-scratch run. The
-//! per-tier `last_sigma` marks whether the network carries a reusable
-//! flow; any repair failure falls back to the cold refresh + solve, so
-//! correctness never depends on the repair pass. Like the block
+//! per-tier `has_flow` flag marks whether the network carries a
+//! reusable flow; any repair failure falls back to the cold refresh +
+//! solve, so correctness never depends on the repair pass. Like the block
 //! reduction, the incremental path is pinned **cost-equivalent** (a
 //! different maximum flow may expose a different co-optimal cut);
 //! incremental **off** keeps the engine bit-identical to the PR-1 cold
@@ -105,7 +107,7 @@
 //! decisions and stats — pinned by the determinism test below.
 
 use super::blockwise::Reduction;
-use super::general::linear_scan_partition;
+use super::general::linear_scan_partition_priced;
 use super::types::{Link, Partition, Problem};
 use crate::maxflow::{dinic_with, DinicScratch, FlowNetwork, IncrementalScratch, MinCut};
 use crate::profiles::{CostGraph, DeviceProfile};
@@ -116,10 +118,21 @@ use crate::profiles::{CostGraph, DeviceProfile};
 pub(crate) struct NetShape {
     /// Tier-independent part of each forward edge's capacity. Device-exec
     /// edges (ids `2v+1`) hold `0.0` here; their tier term lives in the
-    /// per-tier `exec_base` vector.
+    /// per-tier `exec_base` vector. Server-exec edges (ids `2v`) hold
+    /// `0.0` too (or `∞` for pinned inputs); their load-dependent term
+    /// lives in `srv_base`.
     base: Vec<f64>,
     /// Coefficient of `σ = 1/R_up + 1/R_down` in each capacity.
     bw_scale: Vec<f64>,
+    /// Coefficient of the server congestion price `λ` (the joint planner's
+    /// load multiplier on server FLOPs): `N_loc·ξ_S(v)` on layer v's
+    /// server-exec edge, `0.0` everywhere else. At the dedicated-server
+    /// price `λ = 1` the three-term capacity
+    /// `base + bw_scale·σ + srv_base·λ` is bit-identical to the historical
+    /// two-term form (`x·1.0 = x` and `y + 0.0 = y` exactly, all terms
+    /// non-negative), which is what keeps every λ=1 engine configuration
+    /// byte-for-byte unchanged.
+    srv_base: Vec<f64>,
     /// exec[v] = flow vertex carrying layer v's execution semantics.
     exec: Vec<usize>,
     source: usize,
@@ -163,17 +176,21 @@ impl NetShape {
         let mut net = FlowNetwork::with_capacity(next, num_edges);
         let mut base = Vec::with_capacity(num_edges);
         let mut bw_scale = Vec::with_capacity(num_edges);
+        let mut srv_base = vec![0.0; num_edges];
 
         for v in 0..n {
             // Server execution edge (s -> exec(v)), Eq. (10). Pinned inputs
-            // (raw data) may never move to the server: infinite weight.
-            let w = if pin_inputs && c.dag.in_degree(v) == 0 {
-                f64::INFINITY
-            } else {
-                c.n_loc * c.xi_s[v]
-            };
+            // (raw data) may never move to the server: infinite weight
+            // (price-independent — `srv_base` stays 0 so no finite λ can
+            // alter it). The finite N_loc·ξ_S weight goes into `srv_base`
+            // so the joint planner's congestion price scales it.
             net.add_edge(source, exec[v], 0.0);
-            base.push(w);
+            if pin_inputs && c.dag.in_degree(v) == 0 {
+                base.push(f64::INFINITY);
+            } else {
+                base.push(0.0);
+                srv_base[2 * v] = c.n_loc * c.xi_s[v];
+            }
             bw_scale.push(0.0);
             // Device execution edge (exec(v) -> t), Eq. (9) + the one-off
             // model up/download of the layer's parameters. The N_loc·ξ_D
@@ -219,6 +236,7 @@ impl NetShape {
         let shape = NetShape {
             base,
             bw_scale,
+            srv_base,
             exec,
             source,
             sink,
@@ -234,14 +252,26 @@ impl NetShape {
     }
 }
 
-/// Re-capacitate every edge of `net` for round-trip cost `sigma` and tier
-/// compute `exec_base`, clearing all routed flow: one O(E) pass + the O(L)
-/// device-exec overwrite, no allocation. Invariant: after this call the
-/// network state is indistinguishable from a cold build — every forward arc
-/// holds its full capacity, every residual twin holds zero.
-fn refresh_capacities(net: &mut FlowNetwork, shape: &NetShape, exec_base: &[f64], sigma: f64) {
+/// Re-capacitate every edge of `net` for round-trip cost `sigma`, server
+/// congestion price `lambda` (1.0 = dedicated server, the non-joint
+/// engines' fixed value) and tier compute `exec_base`, clearing all routed
+/// flow: one O(E) pass + the O(L) device-exec overwrite, no allocation.
+/// Invariant: after this call the network state is indistinguishable from a
+/// cold build — every forward arc holds its full capacity, every residual
+/// twin holds zero. At `lambda == 1.0` the written capacities are
+/// bit-identical to the historical σ-only refresh (see [`NetShape`]).
+fn refresh_capacities(
+    net: &mut FlowNetwork,
+    shape: &NetShape,
+    exec_base: &[f64],
+    sigma: f64,
+    lambda: f64,
+) {
     for k in 0..shape.base.len() {
-        net.set_edge_capacity(k, shape.base[k] + shape.bw_scale[k] * sigma);
+        net.set_edge_capacity(
+            k,
+            shape.base[k] + shape.bw_scale[k] * sigma + shape.srv_base[k] * lambda,
+        );
     }
     // Device-exec edges (ids 2v+1) carry the only tier-dependent term.
     for (v, &xd) in exec_base.iter().enumerate() {
@@ -262,6 +292,7 @@ fn refresh_capacities_preserving(
     shape: &NetShape,
     exec_base: &[f64],
     sigma: f64,
+    lambda: f64,
     inc: &mut IncrementalScratch,
 ) {
     inc.begin();
@@ -273,7 +304,7 @@ fn refresh_capacities_preserving(
         let target = if k < layer_pairs && k & 1 == 1 {
             exec_base[k / 2] + shape.bw_scale[k] * sigma
         } else {
-            shape.base[k] + shape.bw_scale[k] * sigma
+            shape.base[k] + shape.bw_scale[k] * sigma + shape.srv_base[k] * lambda
         };
         let violated = net.update_edge_capacity(k, target);
         inc.record(k, violated);
@@ -303,9 +334,9 @@ impl TransformedNet {
     }
 
     /// One O(E) capacity refresh for the given link (see
-    /// [`refresh_capacities`]).
+    /// [`refresh_capacities`]), at the dedicated-server price λ = 1.
     pub(crate) fn refresh(&mut self, link: Link) {
-        refresh_capacities(&mut self.net, &self.shape, &self.exec_base, link.sigma());
+        refresh_capacities(&mut self.net, &self.shape, &self.exec_base, link.sigma(), 1.0);
     }
 
     /// Solve min s-t cut on the current capacities.
@@ -399,6 +430,7 @@ fn tier_inputs<'a>(
 /// coordinator and the simulator both build it with
 /// [`FleetSpec::from_fleet`], which replaces their previously duplicated
 /// dedup loops.
+#[derive(Clone)]
 pub struct FleetSpec {
     tiers: Vec<(&'static str, CostGraph)>,
     tier_of_device: Vec<usize>,
@@ -603,6 +635,16 @@ pub struct FleetStats {
     pub blocks_detected: usize,
     /// Blocks that passed the Theorem 2 test and were abstracted.
     pub blocks_abstracted: usize,
+    /// Makespan-target probes of the joint planner's price loop (outer
+    /// bisection iterations over the shared-server congestion level).
+    /// Always 0 for a plain [`FleetPlanner`] and for a
+    /// [`super::joint::JointPlanner`] with infinite server capacity —
+    /// part of the ∞-capacity bit-identity contract.
+    pub price_iterations: u64,
+    /// Priced per-tier re-solves (λ probes) the joint loop triggered on
+    /// top of the λ=1 epoch pass. Each is also counted in `refreshes`/
+    /// `flow_solves` (or `linear_scans`) by the tier that served it.
+    pub joint_resolves: u64,
 }
 
 impl FleetStats {
@@ -622,16 +664,19 @@ struct TierState {
     exec_base: Vec<f64>,
     scratch: DinicScratch,
     inc: IncrementalScratch,
-    /// The σ the network's capacities (and its routed flow) were last
-    /// solved for. `Some` marks the network as carrying a reusable
-    /// maximum flow — the precondition of the incremental re-solve path.
-    /// Only σ can change between a tier's solves (the spec is fixed at
-    /// construction), so this is also the structural-change guard: the
-    /// facade never reuses flow across anything but a σ refresh.
-    last_sigma: Option<f64>,
+    /// True once the network carries a solved maximum flow — the
+    /// precondition of the incremental re-solve path. No payload is
+    /// needed as a validity check: only σ and the server congestion price
+    /// λ can change between a tier's solves (the spec is fixed at
+    /// construction), and the flow-preserving refresh re-targets *every*
+    /// capacity, so any carried flow is reusable against any next (σ, λ).
+    has_flow: bool,
     /// The link of the tier's cached solve and its decision. A request
     /// with the same link is served from here without touching the
-    /// network; any other link marks the tier dirty.
+    /// network; any other link marks the tier dirty. Only the λ=1 plan
+    /// paths ever write it (priced probes and take-style solves return
+    /// their decision without caching), so every entry is a dedicated
+    /// λ=1 decision.
     solved: Option<(Link, Partition)>,
     refreshes: u64,
     flow_solves: u64,
@@ -641,16 +686,23 @@ struct TierState {
     augment_rounds: u64,
 }
 
-/// Refresh + solve one tier for `link` and cache the decision. When the
-/// fleet reduction is active, `solve_costs` is the tier's *reduced* cost
-/// graph and `expand` carries the full→reduced mapping plus the full graph:
-/// the solved device set is expanded back to full layers and the cached
-/// partition's delay is Eq. (7) on the full graph. With
-/// [`FleetOptions::incremental`] on and a previous flow in the tier's
-/// network, the solve routes through the flow-reusing refresh + repair +
-/// residual augmentation, falling back to the cold refresh + Dinic run if
-/// the repair pass dead-ends. Free function over split borrows so a rayon
-/// `par_iter_mut` over tiers can adopt it unchanged.
+/// Refresh + solve one tier for `link` at server congestion price `lambda`
+/// and cache the decision. `lambda` scales the server-exec capacities
+/// (`λ·N_loc·ξ_S`): 1.0 is the dedicated-server problem every non-joint
+/// caller solves; the joint planner probes λ > 1 to model a shared,
+/// congested server (the cached [`Partition`]'s delay stays the *unpriced*
+/// Eq. (7) value — the joint layer re-derives its load-dependent terms
+/// itself). When the fleet reduction is active, `solve_costs` is the
+/// tier's *reduced* cost graph and `expand` carries the full→reduced
+/// mapping plus the full graph: the solved device set is expanded back to
+/// full layers and the cached partition's delay is Eq. (7) on the full
+/// graph. With [`FleetOptions::incremental`] on and a previous flow in the
+/// tier's network, the solve routes through the flow-reusing refresh +
+/// repair + residual augmentation — for σ refreshes *and* λ probes alike,
+/// which is what makes each joint price probe a warm refresh — falling
+/// back to the cold refresh + Dinic run if the repair pass dead-ends. Free
+/// function over split borrows so a rayon `par_iter_mut` over tiers can
+/// adopt it unchanged.
 fn solve_tier(
     shape: Option<&NetShape>,
     solve_costs: &CostGraph,
@@ -658,7 +710,8 @@ fn solve_tier(
     options: FleetOptions,
     tier: &mut TierState,
     link: Link,
-) {
+    lambda: f64,
+) -> Partition {
     let FleetOptions {
         pin_inputs,
         closure_edges,
@@ -669,14 +722,14 @@ fn solve_tier(
         exec_base,
         scratch,
         inc,
-        last_sigma,
-        solved,
+        has_flow,
         refreshes,
         flow_solves,
         linear_scans,
         incremental_solves,
         repair_pushes,
         augment_rounds,
+        ..
     } = tier;
     // Problem::with_pin validates the link (positive rates), exactly like
     // the cold path — a dead uplink must panic, not produce NaN capacities
@@ -685,17 +738,18 @@ fn solve_tier(
     let solved_partition = match (shape, net.as_mut()) {
         (None, None) => {
             *linear_scans += 1;
-            linear_scan_partition(&problem)
+            linear_scan_partition_priced(&problem, lambda)
         }
         (Some(shape), Some(net)) => {
             *refreshes += 1;
             *flow_solves += 1;
             let sigma = link.sigma();
-            // Flow reuse is sound only across pure σ refreshes of a net
-            // that holds a solved flow; `last_sigma` certifies both.
+            // Flow reuse is sound only across pure capacity ((σ, λ))
+            // refreshes of a net that holds a solved flow; `has_flow`
+            // certifies the latter, the engine's fixed spec the former.
             let mut cut = None;
-            if options.incremental && last_sigma.is_some() {
-                refresh_capacities_preserving(net, shape, exec_base, sigma, inc);
+            if options.incremental && *has_flow {
+                refresh_capacities_preserving(net, shape, exec_base, sigma, lambda, inc);
                 if let Some((c, rs)) = inc.resolve(net, shape.source, shape.sink, scratch) {
                     *incremental_solves += 1;
                     *repair_pushes += rs.repair_pushes;
@@ -707,10 +761,10 @@ fn solve_tier(
                 // all flow, so the fallback solve is exact regardless.
             }
             let cut = cut.unwrap_or_else(|| {
-                refresh_capacities(net, shape, exec_base, sigma);
+                refresh_capacities(net, shape, exec_base, sigma, lambda);
                 dinic_with(net, shape.source, shape.sink, scratch)
             });
-            *last_sigma = Some(sigma);
+            *has_flow = true;
             let device_set: Vec<bool> = shape.exec.iter().map(|&e| cut.source_side[e]).collect();
             // Without closure edges the cut need not be a lower set (that
             // is the point of ablA), so only assert under the default
@@ -738,7 +792,7 @@ fn solve_tier(
             full_problem.partition(device_set)
         }
     };
-    *solved = Some((link, partition));
+    partition
 }
 
 /// One tier's slice of an epoch batch: its mutable solver state, the
@@ -782,7 +836,8 @@ fn run_tier_job(
         let (link, _) = &job.groups[g];
         let clean = matches!(&job.tier.solved, Some((l, _)) if l == link);
         if !clean {
-            solve_tier(shape, solve_costs, expand, options, job.tier, *link);
+            let partition = solve_tier(shape, solve_costs, expand, options, job.tier, *link, 1.0);
+            job.tier.solved = Some((*link, partition));
         }
         let partition = job
             .tier
@@ -891,7 +946,7 @@ impl FleetPlanner {
                     exec_base: NetShape::exec_base(solve_costs),
                     scratch: DinicScratch::default(),
                     inc: IncrementalScratch::default(),
-                    last_sigma: None,
+                    has_flow: false,
                     solved: None,
                     refreshes: 0,
                     flow_solves: 0,
@@ -946,7 +1001,16 @@ impl FleetPlanner {
             let tier = &mut self.tiers[r.tier];
             let clean = matches!(&tier.solved, Some((l, _)) if *l == r.link);
             if !clean {
-                solve_tier(self.shape.as_ref(), solve_costs, expand, self.options, tier, r.link);
+                let partition = solve_tier(
+                    self.shape.as_ref(),
+                    solve_costs,
+                    expand,
+                    self.options,
+                    tier,
+                    r.link,
+                    1.0,
+                );
+                tier.solved = Some((r.link, partition));
             }
             let partition = tier.solved.as_ref().expect("tier just solved").1.clone();
             return vec![PlanDecision {
@@ -1044,16 +1108,15 @@ impl FleetPlanner {
         }
     }
 
-    /// Unconditional refresh + solve of one tier, moving the decision out
-    /// instead of cloning it into the tier cache: the
-    /// [`super::PartitionPlanner`] per-call hot path, which re-solves every
-    /// call anyway (so a cached copy would be discarded unused) and whose
-    /// PR-1 contract is one O(E) refresh + one Dinic run + only the
-    /// returned device-set allocation. With [`FleetOptions::incremental`]
-    /// on, the solve still reuses the previous call's flow (the skipped
-    /// cache holds decisions, not flow), which is what `benches/replan.rs`
-    /// times as the incremental per-epoch path. Leaves the tier with no
-    /// cached decision.
+    /// Unconditional refresh + solve of one tier, returning the decision
+    /// without touching the tier cache: the [`super::PartitionPlanner`]
+    /// per-call hot path, which re-solves every call anyway (so a cached
+    /// copy would be discarded unused) and whose PR-1 contract is one
+    /// O(E) refresh + one Dinic run + only the returned device-set
+    /// allocation. With [`FleetOptions::incremental`] on, the solve still
+    /// reuses the previous call's flow (the skipped cache holds decisions,
+    /// not flow), which is what `benches/replan.rs` times as the
+    /// incremental per-epoch path.
     pub fn take_solve(&mut self, tier: usize, link: Link) -> Partition {
         assert!(tier < self.spec.num_tiers(), "unknown tier {tier}");
         assert!(
@@ -1064,8 +1127,61 @@ impl FleetPlanner {
         self.requests += 1;
         let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, tier);
         let t = &mut self.tiers[tier];
-        solve_tier(self.shape.as_ref(), solve_costs, expand, self.options, t, link);
-        t.solved.take().expect("tier just solved").1
+        solve_tier(
+            self.shape.as_ref(),
+            solve_costs,
+            expand,
+            self.options,
+            t,
+            link,
+            1.0,
+        )
+    }
+
+    /// Unconditional refresh + solve of one tier at server congestion
+    /// price `lambda` — the joint planner's probe entry point. The priced
+    /// solve minimizes `A(cut) + λ·W(cut)` (Eq. (7) with the server FLOPs
+    /// term scaled by λ); the returned [`Partition`]'s delay is the
+    /// *unpriced* Eq. (7) value for that cut. Rides the same incremental
+    /// flow-reuse path as σ refreshes (consecutive probes differ only in
+    /// capacities), so a Dinkelbach/bisection price loop pays a warm
+    /// refresh per probe, not a cold Dinic run. Never touches the tier's
+    /// λ=1 decision cache (a previously planned decision stays valid and
+    /// servable — the probe only advances the flow state) and does not
+    /// count as a served plan (`refreshes`/`flow_solves`/
+    /// `incremental_solves` still move — the joint stats surface them).
+    ///
+    /// λ ≠ 1 is rejected on a reduced engine: Theorem 2's abstraction
+    /// argument assumes the server is never slower than the device per
+    /// layer, which a congestion price can invert — a λ-optimal cut may
+    /// then split a block the reduced DAG cannot split. Priced callers
+    /// hold an unreduced engine for probing (see `partition::joint`).
+    pub(crate) fn priced_solve(&mut self, tier: usize, link: Link, lambda: f64) -> Partition {
+        assert!(tier < self.spec.num_tiers(), "unknown tier {tier}");
+        assert!(
+            link.up_bps > 0.0 && link.down_bps > 0.0,
+            "rates must be positive"
+        );
+        assert!(
+            lambda.is_finite() && lambda > 0.0,
+            "congestion price must be positive and finite"
+        );
+        assert!(
+            lambda == 1.0 || !self.is_reduced(),
+            "priced solves (λ ≠ 1) require an unreduced engine \
+             (the Theorem 2 reduction is only valid at the dedicated price)"
+        );
+        let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, tier);
+        let t = &mut self.tiers[tier];
+        solve_tier(
+            self.shape.as_ref(),
+            solve_costs,
+            expand,
+            self.options,
+            t,
+            link,
+            lambda,
+        )
     }
 
     /// Aggregate solver counters across all tiers.
@@ -1107,6 +1223,15 @@ impl FleetPlanner {
     /// `None` on the linear fast path (chain solve DAGs never build one).
     pub fn flow_size(&self) -> Option<(usize, usize)> {
         self.shape.as_ref().map(|s| (s.vertices, s.edges))
+    }
+
+    /// True iff this engine solves on a Theorem 2 *reduced* DAG. The
+    /// reduction's validity argument assumes the dedicated λ = 1 cost
+    /// model (a block member is never cheaper on the device), so a priced
+    /// caller (`partition::joint`) must route its λ ≠ 1 probes through an
+    /// unreduced engine whenever this is true.
+    pub(crate) fn is_reduced(&self) -> bool {
+        self.reduction.is_some()
     }
 }
 
@@ -1673,6 +1798,60 @@ mod tests {
         assert_eq!(s.incremental_solves, 0);
         assert_eq!(s.repair_pushes, 0);
         assert_eq!(s.augment_rounds, 0);
+    }
+
+    /// A joint price probe (λ ≠ 1) never touches the λ=1 decision cache:
+    /// the probe's priced cut is returned by value only, and the cached
+    /// dedicated decision stays servable bit-exactly afterwards — while
+    /// the probe itself reuses the tier's flow (capacity-only refresh).
+    /// Probes require an unreduced engine (Theorem 2 is a λ=1 argument —
+    /// see `priced_solve`).
+    #[test]
+    fn priced_probes_do_not_pollute_the_plan_cache() {
+        let mut fleet = FleetPlanner::with_options(
+            spec_for("googlenet", 1),
+            FleetOptions {
+                block_reduction: false,
+                ..FleetOptions::default()
+            },
+        );
+        let link = Link::symmetric(8e5);
+        let req = PlanRequest {
+            device: 0,
+            tier: 0,
+            link,
+        };
+        let a = fleet.plan(&[req]).pop().unwrap();
+        assert!(a.stats.refreshed);
+        // A congested price moves layers device-ward, never server-ward
+        // (λ scales the source-adjacent server-exec capacities, so the
+        // minimal min cut's source side can only grow).
+        let probed = fleet.priced_solve(0, link, 4.0);
+        assert!(probed.device_layers() >= a.partition.device_layers());
+        let b = fleet.plan(&[req]).pop().unwrap();
+        assert!(
+            !b.stats.refreshed,
+            "the cached λ=1 decision must survive the probe untouched"
+        );
+        assert_eq!(b.partition.device_set, a.partition.device_set);
+        assert_eq!(b.partition.delay.to_bits(), a.partition.delay.to_bits());
+        let s = fleet.stats();
+        assert_eq!(s.flow_solves, 2, "plan solve + probe solve only");
+        assert_eq!(
+            s.incremental_solves, 1,
+            "the probe must reuse the plan solve's flow"
+        );
+    }
+
+    /// The reduction guard: λ ≠ 1 probes on a reduced engine are a
+    /// correctness hazard (a priced optimum may split an abstracted
+    /// block), so the engine refuses them outright.
+    #[test]
+    #[should_panic(expected = "require an unreduced engine")]
+    fn priced_probes_reject_reduced_engines() {
+        let mut fleet = FleetPlanner::new(spec_for("googlenet", 1));
+        assert!(fleet.is_reduced(), "googlenet must reduce for this test");
+        let _ = fleet.priced_solve(0, Link::symmetric(8e5), 2.0);
     }
 
     #[test]

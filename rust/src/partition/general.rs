@@ -100,6 +100,19 @@ pub fn general_partition_with_options(problem: &Problem, closure_edges: bool) ->
 
 /// O(L) optimal scan for linear (chain) models: prefix cuts only.
 pub fn linear_scan_partition(problem: &Problem) -> Partition {
+    linear_scan_partition_priced(problem, 1.0)
+}
+
+/// [`linear_scan_partition`] under a server congestion price `lambda`:
+/// picks the prefix minimizing `A(cut) + λ·W(cut)` — Eq. (7) with the
+/// server-compute term scaled by λ, the chain-model half of the joint
+/// planner's priced probe (the flow half scales the server-exec
+/// capacities, see `partition::fleet`). At `lambda == 1.0` the scanned
+/// objective is bit-identical to the unpriced scan (`λ·x = x` exactly),
+/// so the plain entry point above is a zero-cost wrapper. The returned
+/// [`Partition`] always carries the *unpriced* Eq. (7) delay of the
+/// chosen prefix.
+pub fn linear_scan_partition_priced(problem: &Problem, lambda: f64) -> Partition {
     let c = problem.costs;
     let order = c.dag.topo_order().expect("acyclic");
     let n = c.len();
@@ -113,7 +126,7 @@ pub fn linear_scan_partition(problem: &Problem) -> Partition {
     let mut best_delay = if problem.pin_inputs {
         f64::INFINITY
     } else {
-        c.n_loc * server_compute
+        c.n_loc * (lambda * server_compute)
     };
     let mut best_prefix = if problem.pin_inputs { 1 } else { 0 };
 
@@ -128,7 +141,7 @@ pub fn linear_scan_partition(problem: &Problem) -> Partition {
         } else {
             0.0
         };
-        let delay = c.n_loc * (device_compute + server_compute + boundary * sigma)
+        let delay = c.n_loc * (device_compute + lambda * server_compute + boundary * sigma)
             + device_params * sigma;
         if delay < best_delay {
             best_delay = delay;
@@ -227,6 +240,34 @@ mod tests {
         let run = general_partition(&p);
         assert_eq!(run.device_layers(), cg.len());
         assert!((run.delay - p.device_only().delay).abs() < 1e-6 * run.delay);
+    }
+
+    /// The priced scan: λ = 1 is bit-identical to the unpriced scan, and
+    /// growing congestion prices only ever move the chain cut device-ward
+    /// (the joint planner's monotonicity relies on this).
+    #[test]
+    fn priced_scan_is_unpriced_at_unit_price_and_shifts_deviceward() {
+        let cg = cg("lenet5");
+        let p = Problem::new(&cg, Link::symmetric(2e6));
+        let unpriced = linear_scan_partition(&p);
+        let unit = linear_scan_partition_priced(&p, 1.0);
+        assert_eq!(unpriced.device_set, unit.device_set);
+        assert_eq!(unpriced.delay.to_bits(), unit.delay.to_bits());
+        let mut prev = unit.device_layers();
+        for lambda in [1.5, 3.0, 10.0, 1e4, 1e12] {
+            let priced = linear_scan_partition_priced(&p, lambda);
+            assert!(p.is_feasible(&priced.device_set));
+            assert!(
+                priced.device_layers() >= prev,
+                "λ={lambda} moved the cut server-ward"
+            );
+            prev = priced.device_layers();
+            // The reported delay stays the unpriced Eq. (7) value.
+            assert_eq!(
+                priced.delay.to_bits(),
+                p.delay(&priced.device_set).to_bits()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,1300 @@
+//! Joint fleet partitioning under shared, finite server capacity.
+//!
+//! The paper (and every engine below [`super::fleet`]) solves each device's
+//! split against a *dedicated* server: Eq. (7)'s server-compute term
+//! `T_{S,C}` assumes the full profiled throughput. In a real fleet the
+//! server is shared — give device `d` a throughput share `φ_d ∈ (0, 1]`
+//! and its server work `W_d` (see [`Problem::delay_terms`]) is served in
+//! `W_d/φ_d`, with the shares bounded by the server's capacity
+//! `Σ_d φ_d ≤ C` (`C` in concurrent full-throughput device-equivalents).
+//! Cut decisions are thereby coupled across devices: pushing one device's
+//! layers to the server eats capacity every other device wants. The joint
+//! problem solved here is the fleet **makespan** minimization
+//!
+//! ```text
+//!   min over cuts x_d and shares φ_d of  max_d  A_d(x_d) + W_d(x_d)/φ_d
+//!   s.t.  φ_d ∈ (0, 1],  Σ_d φ_d ≤ C
+//! ```
+//!
+//! # Exact decomposition: makespan bisection × per-device price probes
+//!
+//! For a candidate makespan `T`, device `d` needs share
+//! `φ_d = W_d/(T − A_d)` (0 when `W_d = 0`), so `T` is achievable iff
+//! every device has a cut with `A + W ≤ T` and
+//!
+//! ```text
+//!   Σ_d  h_d(T) ≤ C,   h_d(T) = min over cuts {W/(T − A) : A + W ≤ T}
+//! ```
+//!
+//! `Σ h_d` is continuous and non-increasing in `T`, so the optimal
+//! makespan is found by **bisection** over `T` (the fixed-point/bisection
+//! loop of the price iteration). Each `h_d(T)` is a linear-fractional
+//! program over the finite cut set and is solved **exactly** by Dinkelbach
+//! iteration: minimizing the ratio `W/(T − A)` reduces to repeatedly
+//! minimizing `A + λ·W` at the congestion price `λ = (T − A)/W` of the
+//! incumbent — which is precisely the paper's min-cut problem with the
+//! server FLOPs scaled by `λ` ([`FleetPlanner::priced_solve`]). The ratio
+//! iterates decrease strictly and the cut set is finite, so the loop
+//! terminates at the true minimum; since the bisection then needs only
+//! ULP-converged feasibility thresholds, the joint optimum matches the
+//! brute-force oracle ([`oracle_fleet_makespan`]) to within the
+//! `CUT_COST_ULPS` harness tolerance — the headline test of this module.
+//!
+//! Every price probe re-solves a tier whose flow network differs from the
+//! previous probe **only in capacities** (σ and/or λ), so probes ride the
+//! PR-4 incremental path: flow-preserving refresh → conservation repair →
+//! residual augmentation. A whole joint epoch is one cold solve per tier
+//! plus warm refreshes — `FleetStats::{price_iterations, joint_resolves,
+//! incremental_solves}` prove it. One carve-out keeps the probes exact:
+//! the Theorem 2 block reduction is a **λ = 1 theorem** (its exchange
+//! argument assumes a layer is never cheaper on the device than on the
+//! server, which a congestion price can invert, so a λ-optimal cut may
+//! split an abstracted block). When the main engine solves a reduced DAG,
+//! the planner therefore lazily builds an **unreduced sibling engine** on
+//! the first congested epoch and routes every λ probe through it —
+//! dedicated λ = 1 epochs keep their reduced-scale solves, probes keep
+//! full-DAG expressiveness, and both engines' counters are folded into
+//! [`JointPlanner::stats`].
+//!
+//! # Share allocation and reported delays
+//!
+//! With the final cuts fixed, shares are set to the minimal **congestion
+//! level** `T_c`: the smallest level with
+//! `Σ_d min(1, W_d/(max(T_c, A_d+W_d) − A_d)) ≤ C` (pure arithmetic
+//! bisection, [`fleet_makespan_for_cuts`]). Each decision's
+//! [`Partition::delay`] is the device's *load-dependent* delay
+//! `max(A + W, T_c)` (`A` alone for zero-server-work cuts) — not the
+//! dedicated-server Eq. (7) value — and the fleet makespan is their
+//! maximum. Cut selection is **group-local** (each group takes its own
+//! share-ratio minimizer at the optimal target): deterministic and
+//! monotone in the capacity, at the cost that a non-bottleneck device may
+//! keep a zero-share all-device cut while server budget idles — the
+//! makespan is optimal either way; see the ROADMAP follow-up on Pareto
+//! share redistribution. When the server can give every session a full
+//! share (`#{W_d > 0} ≤ C`, in particular whenever `C = ∞`), the joint
+//! plan **degenerates to the dedicated engine**: [`JointPlanner::plan`]
+//! returns [`FleetPlanner::plan`]'s decisions verbatim — bit-identical,
+//! counters included — which is the pinned ∞-capacity contract.
+
+use super::fleet::{
+    DecisionStats, FleetOptions, FleetPlanner, FleetSpec, FleetStats, PlanDecision, PlanRequest,
+};
+use super::types::{Link, Partition, Problem};
+use crate::graph::enumerate_lower_sets;
+
+/// Construction-time switches of the joint engine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JointOptions {
+    /// Shared server capacity in concurrent full-throughput
+    /// device-equivalents: the share vector of one epoch's sessions must
+    /// sum to at most this. `f64::INFINITY` (the default) means a
+    /// dedicated server per device — the engine then delegates to
+    /// [`FleetPlanner`] bit-identically.
+    pub server_capacity: f64,
+    /// Switches of the wrapped per-tier engine ([`FleetOptions`]).
+    pub fleet: FleetOptions,
+}
+
+impl Default for JointOptions {
+    fn default() -> JointOptions {
+        JointOptions {
+            server_capacity: f64::INFINITY,
+            fleet: FleetOptions::default(),
+        }
+    }
+}
+
+impl JointOptions {
+    /// Default engine switches at the given shared server capacity.
+    pub fn with_capacity(server_capacity: f64) -> JointOptions {
+        JointOptions {
+            server_capacity,
+            ..JointOptions::default()
+        }
+    }
+}
+
+/// Required total server share for per-cut terms `(A, W, sessions)` when
+/// every session's delay is capped at `max(level, A + W)`: `W/(level − A)`
+/// per session beyond its dedicated time, a full share (1) at or below it,
+/// nothing for zero-server-work cuts. Non-increasing and continuous in
+/// `level`.
+fn required_shares(terms: &[(f64, f64, usize)], level: f64) -> f64 {
+    terms
+        .iter()
+        .map(|&(a, w, n)| {
+            if w <= 0.0 {
+                0.0
+            } else if level <= a + w {
+                n as f64
+            } else {
+                n as f64 * (w / (level - a))
+            }
+        })
+        .sum()
+}
+
+/// Minimal congestion level `T_c` whose share demand fits `capacity`
+/// (0 when dedicated shares already fit). Pure arithmetic bisection,
+/// converged to the ULP.
+fn congestion_level(terms: &[(f64, f64, usize)], capacity: f64) -> f64 {
+    if required_shares(terms, 0.0) <= capacity {
+        return 0.0;
+    }
+    let mut hi = terms
+        .iter()
+        .map(|&(a, w, _)| a + w)
+        .fold(f64::MIN_POSITIVE, f64::max);
+    while required_shares(terms, hi) > capacity {
+        hi *= 2.0;
+    }
+    let mut lo = 0.0;
+    for _ in 0..600 {
+        let mid = 0.5 * (lo + hi);
+        if mid <= lo || mid >= hi {
+            break;
+        }
+        if required_shares(terms, mid) <= capacity {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+/// Optimal fleet makespan for **fixed** cuts: per-cut Eq. (7) terms
+/// `(A, W, sessions)` sharing a server of the given capacity, under the
+/// optimal share allocation (see the module docs). This is the objective
+/// both [`JointPlanner`] and the brute-force oracle score combinations
+/// with — sharing one implementation keeps the oracle pin honest about
+/// everything except the search itself.
+pub fn fleet_makespan_for_cuts(terms: &[(f64, f64, usize)], capacity: f64) -> f64 {
+    assert!(capacity > 0.0, "server capacity must be positive");
+    let dedicated = terms.iter().map(|&(a, w, _)| a + w).fold(0.0, f64::max);
+    dedicated.max(congestion_level(terms, capacity))
+}
+
+/// Brute-force oracle for tiny fleets: exhaustively enumerate every
+/// feasible cut (lower set, inputs pinned per each problem) **combination**
+/// across the devices and return the minimal fleet makespan under
+/// [`fleet_makespan_for_cuts`]. Exponential in fleet size and lower-set
+/// counts — callers must keep fleets at 2–3 devices over small models (the
+/// product of per-device cut counts is asserted below). This is the ground
+/// truth `JointPlanner` is pinned against.
+pub fn oracle_fleet_makespan(problems: &[Problem<'_>], capacity: f64) -> f64 {
+    assert!(!problems.is_empty(), "oracle needs at least one device");
+    assert!(capacity > 0.0, "server capacity must be positive");
+    let per_device: Vec<Vec<(f64, f64)>> = problems
+        .iter()
+        .map(|p| {
+            let inputs: Vec<usize> = (0..p.costs.len())
+                .filter(|&v| p.costs.dag.in_degree(v) == 0)
+                .collect();
+            let mut cuts = Vec::new();
+            enumerate_lower_sets(&p.costs.dag, |mask| {
+                if p.pin_inputs && inputs.iter().any(|&v| !mask[v]) {
+                    return;
+                }
+                cuts.push(p.delay_terms(mask));
+            });
+            assert!(!cuts.is_empty(), "no feasible cut for a device");
+            cuts
+        })
+        .collect();
+    let combos = per_device
+        .iter()
+        .fold(1u64, |acc, c| acc.saturating_mul(c.len() as u64));
+    assert!(
+        combos <= 5_000_000,
+        "oracle fleet too large: {combos} cut combinations"
+    );
+
+    let mut idx = vec![0usize; per_device.len()];
+    let mut terms: Vec<(f64, f64, usize)> = vec![(0.0, 0.0, 1); per_device.len()];
+    let mut best = f64::INFINITY;
+    loop {
+        let mut dedicated: f64 = 0.0;
+        for (d, &i) in idx.iter().enumerate() {
+            let (a, w) = per_device[d][i];
+            terms[d] = (a, w, 1);
+            dedicated = dedicated.max(a + w);
+        }
+        // The makespan never beats the slowest dedicated time, so combos
+        // whose dedicated bound already loses skip the share bisection —
+        // this prune is what keeps the exhaustive sweep affordable.
+        if dedicated < best {
+            let makespan = dedicated.max(congestion_level(&terms, capacity));
+            if makespan < best {
+                best = makespan;
+            }
+        }
+        // Odometer over the cartesian product of per-device cuts.
+        let mut d = 0;
+        loop {
+            if d == per_device.len() {
+                return best;
+            }
+            idx[d] += 1;
+            if idx[d] < per_device[d].len() {
+                break;
+            }
+            idx[d] = 0;
+            d += 1;
+        }
+    }
+}
+
+/// Result of one [`min_share_ratio`] evaluation: the minimal share ratio
+/// and the `(A, W)` terms + device set of the cut achieving it.
+struct ProbeResult {
+    ratio: f64,
+    a: f64,
+    w: f64,
+    /// `None` = the λ=1 decision of the epoch's base pass.
+    cut: Option<Vec<bool>>,
+}
+
+/// One distinct (tier, link) of an epoch batch: its member request
+/// indices, the λ=1 (dedicated) optimum's terms, and the latest price
+/// probe's result.
+struct Group {
+    tier: usize,
+    link: Link,
+    /// Request indices served by this group, in batch order.
+    members: Vec<usize>,
+    /// `(A, W)` of the dedicated-server (λ=1) optimal cut.
+    base: (f64, f64),
+    /// `A` of the all-on-device cut — the zero-share fallback every
+    /// target above it can always take.
+    device_only_a: f64,
+    /// Latest [`min_share_ratio`] result.
+    probe: ProbeResult,
+}
+
+/// `h_g(T)`: the minimal server-share ratio `W/(T − A)` over this group's
+/// feasible cuts (`A + W ≤ T`), solved exactly by Dinkelbach price
+/// iteration over warm [`FleetPlanner::priced_solve`] probes (see the
+/// module docs). Updates `g.probe` with the achieving cut and returns the
+/// ratio. Deterministic and group-local: the iterate sequence depends only
+/// on the group's own `(link, λ)` probes, never on other groups.
+fn min_share_ratio(
+    fleet: &mut FleetPlanner,
+    pin_inputs: bool,
+    g: &mut Group,
+    t: f64,
+    joint_resolves: &mut u64,
+) -> f64 {
+    let (base_a, base_w) = g.base;
+    if base_w <= 0.0 {
+        g.probe = ProbeResult {
+            ratio: 0.0,
+            a: base_a,
+            w: base_w,
+            cut: None,
+        };
+        return 0.0;
+    }
+    // The base cut minimizes A + W, so it is feasible at every target the
+    // outer bisection probes (t ≥ max over groups of the base A + W).
+    let mut best = ProbeResult {
+        ratio: base_w / (t - base_a),
+        a: base_a,
+        w: base_w,
+        cut: None,
+    };
+    // Warm start from the previous evaluation's cut when it is still
+    // feasible at the new target — consecutive bisection probes move T a
+    // little, so the incumbent usually needs zero or one refinement.
+    if let Some(set) = g.probe.cut.as_ref() {
+        let (pa, pw) = (g.probe.a, g.probe.w);
+        let ratio = if pw <= 0.0 {
+            (pa <= t).then_some(0.0)
+        } else {
+            (pa + pw <= t).then(|| pw / (t - pa))
+        };
+        if let Some(r) = ratio {
+            if r < best.ratio {
+                best = ProbeResult {
+                    ratio: r,
+                    a: pa,
+                    w: pw,
+                    cut: Some(set.clone()),
+                };
+            }
+        }
+    }
+    for _ in 0..48 {
+        if best.ratio <= 0.0 {
+            break;
+        }
+        // λ = 1/θ of the incumbent ratio; clamped at the dedicated price
+        // (float noise in t − A could push θ a hair above 1).
+        let lambda = (1.0 / best.ratio).max(1.0);
+        let p = fleet.priced_solve(g.tier, g.link, lambda);
+        *joint_resolves += 1;
+        let problem = Problem::with_pin(fleet.spec().tier_costs(g.tier), g.link, pin_inputs);
+        let (a2, w2) = problem.delay_terms(&p.device_set);
+        let theta2 = if w2 <= 0.0 {
+            0.0
+        } else {
+            let headroom = t - a2;
+            if headroom <= 0.0 {
+                // Float-pathological probe; the incumbent stands.
+                break;
+            }
+            w2 / headroom
+        };
+        if theta2 < best.ratio * (1.0 - 1e-13) {
+            best = ProbeResult {
+                ratio: theta2,
+                a: a2,
+                w: w2,
+                cut: Some(p.device_set),
+            };
+        } else {
+            // Dinkelbach fixed point: the priced optimum no longer
+            // improves the ratio — `best` is the exact minimum. When the
+            // incumbent is still the λ=1 base cut (possibly from a
+            // *reduced* solve), adopt the ratio-equal probe cut instead:
+            // it came from this probe engine, so every reported congested
+            // cut shares one solver family and the λ-nesting (cut never
+            // moves server-ward under more congestion) holds uniformly.
+            if best.cut.is_none() && theta2 <= best.ratio * (1.0 + 1e-12) {
+                best = ProbeResult {
+                    ratio: theta2,
+                    a: a2,
+                    w: w2,
+                    cut: Some(p.device_set),
+                };
+            }
+            break;
+        }
+    }
+    // A zero-share cut is always available once the target admits the
+    // all-on-device delay; it dominates any positive ratio (and guards the
+    // iteration cap above from ever leaving a positive ratio standing
+    // where 0 is reachable — the upper bisection bracket relies on this).
+    if best.ratio > 0.0 && g.device_only_a <= t {
+        let n = fleet.spec().tier_costs(g.tier).len();
+        best = ProbeResult {
+            ratio: 0.0,
+            a: g.device_only_a,
+            w: 0.0,
+            cut: Some(vec![true; n]),
+        };
+    }
+    let ratio = best.ratio;
+    g.probe = best;
+    ratio
+}
+
+/// The joint planning facade: wraps a [`FleetPlanner`] and couples its
+/// per-tier decisions through the shared server capacity. Keeps the
+/// request/response `plan(&[PlanRequest]) -> Vec<PlanDecision>` shape of
+/// the fleet engine; see the module docs for the solved problem and the
+/// degeneracy contracts.
+pub struct JointPlanner {
+    fleet: FleetPlanner,
+    /// The λ-probe engine: an **unreduced** clone of the fleet engine,
+    /// built lazily on the first congested epoch and only when the main
+    /// engine solves a Theorem 2 reduced DAG. The reduction's validity
+    /// argument assumes the dedicated λ = 1 cost model (a block member is
+    /// never cheaper on the device than on the server), which a
+    /// congestion price λ > 1 can invert — a λ-optimal cut may split an
+    /// abstracted block, so probes must run on the full DAG to stay
+    /// exact. `None` while unneeded (unreduced main engine, or no
+    /// congested epoch yet); probes then share the main engine.
+    probe: Option<FleetPlanner>,
+    options: JointOptions,
+    price_iterations: u64,
+    joint_resolves: u64,
+    /// Fleet makespan of the latest non-empty epoch.
+    last_makespan: Option<f64>,
+    /// Congestion level `T_c` of the latest epoch (`None` when every
+    /// session got a dedicated share).
+    last_congestion: Option<f64>,
+}
+
+impl JointPlanner {
+    /// Build for a fleet and explicit joint options.
+    pub fn new(spec: FleetSpec, options: JointOptions) -> JointPlanner {
+        assert!(
+            options.server_capacity > 0.0,
+            "server capacity must be positive"
+        );
+        JointPlanner {
+            fleet: FleetPlanner::with_options(spec, options.fleet),
+            probe: None,
+            options,
+            price_iterations: 0,
+            joint_resolves: 0,
+            last_makespan: None,
+            last_congestion: None,
+        }
+    }
+
+    /// Build with the default engine switches at the given capacity.
+    pub fn with_capacity(spec: FleetSpec, server_capacity: f64) -> JointPlanner {
+        JointPlanner::new(spec, JointOptions::with_capacity(server_capacity))
+    }
+
+    /// Update the shared server capacity for subsequent epochs (the
+    /// server scaling up or down at runtime). Capacity is not baked into
+    /// any flow network — it only gates the price loop — so the per-tier
+    /// solver state (and its reusable flows) carries over untouched.
+    pub fn set_server_capacity(&mut self, server_capacity: f64) {
+        assert!(server_capacity > 0.0, "server capacity must be positive");
+        self.options.server_capacity = server_capacity;
+    }
+
+    /// Serve one epoch jointly: one decision per request, in request
+    /// order, with duplicate (tier, link) requests served as bit-exact
+    /// copies of their group's decision. Infinite capacity (or enough
+    /// capacity for a dedicated share per server-using session) returns
+    /// the wrapped [`FleetPlanner::plan`] decisions verbatim; otherwise
+    /// the makespan bisection runs and every decision's delay is the
+    /// load-dependent `max(A + W, T_c)` (see the module docs).
+    pub fn plan(&mut self, requests: &[PlanRequest]) -> Vec<PlanDecision> {
+        let capacity = self.options.server_capacity;
+        if capacity.is_infinite() {
+            // Dedicated server per device: delegate bit-identically —
+            // decisions AND counters (the ∞-capacity pin).
+            let decisions = self.fleet.plan(requests);
+            self.last_makespan = decisions
+                .iter()
+                .map(|d| d.partition.delay)
+                .fold(None, |m: Option<f64>, d| Some(m.map_or(d, |m| m.max(d))));
+            self.last_congestion = None;
+            return decisions;
+        }
+
+        // λ=1 base pass: per-device dedicated optima. Also the epoch's
+        // answer whenever the capacity covers a full share per session.
+        let base = self.fleet.plan(requests);
+        if requests.is_empty() {
+            self.last_makespan = None;
+            self.last_congestion = None;
+            return base;
+        }
+
+        // Group requests per distinct (tier, link) — members share (A, W)
+        // curves, so they share a cut and a share ratio.
+        let pin_inputs = self.fleet.options().pin_inputs;
+        let mut groups: Vec<Group> = Vec::new();
+        let mut group_of: std::collections::HashMap<(usize, u64, u64), usize> =
+            std::collections::HashMap::new();
+        for (i, r) in requests.iter().enumerate() {
+            let key = (r.tier, r.link.up_bps.to_bits(), r.link.down_bps.to_bits());
+            let g = *group_of.entry(key).or_insert_with(|| {
+                let costs = self.fleet.spec().tier_costs(r.tier);
+                let problem = Problem::with_pin(costs, r.link, pin_inputs);
+                let (a, w) = problem.delay_terms(&base[i].partition.device_set);
+                let all_on_device = vec![true; costs.len()];
+                let device_only_a = problem.delay_terms(&all_on_device).0;
+                groups.push(Group {
+                    tier: r.tier,
+                    link: r.link,
+                    members: Vec::new(),
+                    base: (a, w),
+                    device_only_a,
+                    probe: ProbeResult {
+                        ratio: f64::INFINITY,
+                        a: 0.0,
+                        w: 0.0,
+                        cut: None,
+                    },
+                });
+                groups.len() - 1
+            });
+            groups[g].members.push(i);
+        }
+        // Canonical group order: probe sequences and share-demand sums run
+        // over this list, and each group's price iteration is group-local,
+        // so sorting here makes the whole joint solve independent of the
+        // request order (pinned by the batched-bit-identity test).
+        groups.sort_by_key(|g| (g.tier, g.link.up_bps.to_bits(), g.link.down_bps.to_bits()));
+
+        // Uncongested epoch: a full share for every server-using session
+        // fits, so the dedicated decisions are jointly optimal — return
+        // them untouched (delays stay the plain Eq. (7) values).
+        let dedicated_shares: f64 = groups
+            .iter()
+            .filter(|g| g.base.1 > 0.0)
+            .map(|g| g.members.len() as f64)
+            .sum();
+        if dedicated_shares <= capacity {
+            self.last_makespan = Some(
+                base.iter()
+                    .map(|d| d.partition.delay)
+                    .fold(0.0, f64::max),
+            );
+            self.last_congestion = None;
+            return base;
+        }
+
+        // Congested epoch ahead: probes at λ ≠ 1 need the full DAG, so a
+        // reduced main engine gets an unreduced sibling for them (built
+        // once, reused — and never built at all if no epoch ever
+        // congests). See the `probe` field docs.
+        if self.probe.is_none() && self.fleet.is_reduced() {
+            self.probe = Some(FleetPlanner::with_options(
+                self.fleet.spec().clone(),
+                FleetOptions {
+                    block_reduction: false,
+                    ..self.options.fleet
+                },
+            ));
+        }
+
+        // Makespan bisection. Lower bracket: no device can beat its own
+        // dedicated optimum, so T* ≥ max over groups of base A + W. Upper
+        // bracket: at the worst all-on-device delay every group can take a
+        // zero-share cut, so the demand is 0 ≤ C.
+        let t_lo = groups
+            .iter()
+            .map(|g| g.base.0 + g.base.1)
+            .fold(0.0, f64::max);
+        let t_hi = groups
+            .iter()
+            .map(|g| g.device_only_a)
+            .fold(t_lo, f64::max);
+        let mut lo = t_lo;
+        let mut hi = t_hi;
+        // Whether the group probes are currently positioned at `hi` (the
+        // feasible end), so the final re-evaluation below can be skipped.
+        let mut probes_at_hi = false;
+        if self.probe_feasible(&mut groups, t_lo) {
+            hi = t_lo;
+            probes_at_hi = true;
+        } else {
+            for _ in 0..120 {
+                let mid = 0.5 * (lo + hi);
+                if mid <= lo || mid >= hi {
+                    break;
+                }
+                if self.probe_feasible(&mut groups, mid) {
+                    hi = mid;
+                    probes_at_hi = true;
+                } else {
+                    lo = mid;
+                    probes_at_hi = false;
+                }
+            }
+        }
+        // Final evaluation at the feasible end, unless the last probe
+        // already ran there. (`hi` starts at the worst all-on-device
+        // delay, where every group's zero-share cut is admissible, so the
+        // feasible end always exists.)
+        if !probes_at_hi {
+            let still_feasible = self.probe_feasible(&mut groups, hi);
+            debug_assert!(still_feasible, "bisection kept `hi` feasible throughout");
+            let _ = still_feasible;
+        }
+
+        // Fix the cuts, set shares at the minimal congestion level, and
+        // report load-dependent delays. The per-group cut is the
+        // group-LOCAL share-ratio minimizer at the optimal target — a
+        // deliberate trade: a non-bottleneck device may land on a
+        // zero-share (all-device) cut even when idle server budget could
+        // have served it faster, but keeping the selection group-local is
+        // what makes it deterministic and monotone in the capacity (a
+        // budget-coupled "give idle shares back" pass can flip a cut
+        // *server-ward* as capacity shrinks — see the ROADMAP follow-up
+        // on Pareto share redistribution). The fleet makespan is optimal
+        // either way; only non-binding devices' slack is left unused.
+        let terms: Vec<(f64, f64, usize)> = groups
+            .iter()
+            .map(|g| (g.probe.a, g.probe.w, g.members.len()))
+            .collect();
+        let t_c = congestion_level(&terms, capacity);
+        let dedicated = terms.iter().map(|&(a, w, _)| a + w).fold(0.0, f64::max);
+        let makespan = dedicated.max(t_c);
+        self.last_makespan = Some(makespan);
+        self.last_congestion = Some(t_c);
+
+        let mut decisions: Vec<Option<PlanDecision>> = (0..requests.len()).map(|_| None).collect();
+        for g in &groups {
+            let (a, w) = (g.probe.a, g.probe.w);
+            let device_set = g
+                .probe
+                .cut
+                .clone()
+                .unwrap_or_else(|| base[g.members[0]].partition.device_set.clone());
+            let delay = if w <= 0.0 { a } else { (a + w).max(t_c) };
+            for (j, &i) in g.members.iter().enumerate() {
+                let partition = Partition {
+                    device_set: device_set.clone(),
+                    delay,
+                };
+                decisions[i] = Some(PlanDecision {
+                    device: requests[i].device,
+                    tier: requests[i].tier,
+                    cut_layer: partition.cut_layer(),
+                    partition,
+                    // Only the group's first request carries refreshed=true
+                    // (mirrors the fleet facade's duplicate handling).
+                    stats: DecisionStats { refreshed: j == 0 },
+                });
+            }
+        }
+        decisions
+            .into_iter()
+            .map(|d| d.expect("every request belongs to a group"))
+            .collect()
+    }
+
+    /// One feasibility probe of the makespan bisection: can every group
+    /// meet target `t` with total share demand within capacity? Updates
+    /// every group's `probe` via [`min_share_ratio`] (counted in
+    /// `price_iterations`; the priced solves it triggers in
+    /// `joint_resolves`).
+    fn probe_feasible(&mut self, groups: &mut [Group], t: f64) -> bool {
+        self.price_iterations += 1;
+        let pin_inputs = self.options.fleet.pin_inputs;
+        let capacity = self.options.server_capacity;
+        // Probes run on the unreduced sibling when the main engine is
+        // reduced (split borrow keeps both engines reachable).
+        let JointPlanner {
+            fleet,
+            probe,
+            joint_resolves,
+            ..
+        } = &mut *self;
+        let engine = probe.as_mut().unwrap_or(fleet);
+        let mut demand = 0.0;
+        for g in groups.iter_mut() {
+            let ratio = min_share_ratio(engine, pin_inputs, g, t, joint_resolves);
+            demand += g.members.len() as f64 * ratio;
+        }
+        demand <= capacity
+    }
+
+    /// Fleet makespan of the latest non-empty epoch: the maximum
+    /// load-dependent delay across its sessions (equal to the dedicated
+    /// maximum whenever the epoch was uncongested).
+    pub fn makespan(&self) -> Option<f64> {
+        self.last_makespan
+    }
+
+    /// Congestion level `T_c` of the latest epoch: the common delay
+    /// congested sessions were equalized at, `None` when every session got
+    /// a dedicated share (also for every ∞-capacity epoch).
+    pub fn congestion(&self) -> Option<f64> {
+        self.last_congestion
+    }
+
+    /// Aggregate solver counters: the wrapped fleet engine's
+    /// [`FleetStats`] plus this planner's `price_iterations` /
+    /// `joint_resolves` (both 0 under infinite capacity — the bit-identity
+    /// pin covers the full struct). When the unreduced λ-probe engine
+    /// exists, its solve/refresh/incremental counters are folded in (its
+    /// `plans`/`requests` are always 0 — probes are not served plans);
+    /// the DAG-size and block fields keep reporting the *main* engine.
+    pub fn stats(&self) -> FleetStats {
+        let mut s = self.fleet.stats();
+        if let Some(p) = &self.probe {
+            let ps = p.stats();
+            s.refreshes += ps.refreshes;
+            s.flow_solves += ps.flow_solves;
+            s.linear_scans += ps.linear_scans;
+            s.incremental_solves += ps.incremental_solves;
+            s.repair_pushes += ps.repair_pushes;
+            s.augment_rounds += ps.augment_rounds;
+        }
+        s.price_iterations = self.price_iterations;
+        s.joint_resolves = self.joint_resolves;
+        s
+    }
+
+    /// The switches this planner was built with.
+    pub fn options(&self) -> JointOptions {
+        self.options
+    }
+
+    /// The fleet this planner serves.
+    pub fn spec(&self) -> &FleetSpec {
+        self.fleet.spec()
+    }
+
+    /// Drop every tier's cached λ=1 decision (see
+    /// [`FleetPlanner::invalidate`]).
+    pub fn invalidate(&mut self) {
+        self.fleet.invalidate();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{count_lower_sets, Dag};
+    use crate::models;
+    use crate::partition::baselines::brute_force_partition;
+    use crate::partition::PartitionPlanner;
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+    use crate::util::prop::{
+        assert_cut_cost_equal, assert_fleet_cost_equal, for_all, joint_fading_walk,
+        random_layer_dag, random_link, zoo_matrix,
+    };
+    use crate::util::rng::Rng;
+
+    fn costs_for(model: &str, device: &DeviceProfile) -> CostGraph {
+        let m = models::by_name(model).unwrap();
+        CostGraph::build(&m, device, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+    }
+
+    fn spec_for(model: &str, devices: usize) -> FleetSpec {
+        let m = models::by_name(model).unwrap();
+        FleetSpec::from_fleet(&DeviceProfile::fleet_of(devices), |d| {
+            CostGraph::build(&m, d, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+        })
+    }
+
+    /// Share-allocation arithmetic on hand-solvable instances.
+    #[test]
+    fn makespan_for_cuts_equalizes_the_shared_server() {
+        // Two pure-server sessions (A = 0, W = 1) on capacity 1: half a
+        // share each, both finish at T = 2.
+        let t = fleet_makespan_for_cuts(&[(0.0, 1.0, 1), (0.0, 1.0, 1)], 1.0);
+        assert!((t - 2.0).abs() < 1e-9, "t = {t}");
+        // Session multiplicity folds in: 4 sessions of (0, 1) -> T = 4.
+        let t = fleet_makespan_for_cuts(&[(0.0, 1.0, 4)], 1.0);
+        assert!((t - 4.0).abs() < 1e-9, "t = {t}");
+        // Capacity 2 gives both sessions a dedicated share: T = 1.
+        let t = fleet_makespan_for_cuts(&[(0.0, 1.0, 2)], 2.0);
+        assert!((t - 1.0).abs() < 1e-12, "t = {t}");
+        // Zero-server-work sessions need no share and only bound via A.
+        let t = fleet_makespan_for_cuts(&[(3.0, 0.0, 5), (0.0, 1.0, 1)], 1.0);
+        assert!((t - 3.0).abs() < 1e-9, "t = {t}");
+        // Asymmetric closed form: 1/(T-1) + 2/T = 1 -> T = 2 + sqrt(2).
+        let t = fleet_makespan_for_cuts(&[(1.0, 1.0, 1), (0.0, 2.0, 1)], 1.0);
+        assert!((t - (2.0 + 2f64.sqrt())).abs() < 1e-9, "t = {t}");
+    }
+
+    /// The oracle on a single device with abundant capacity is the plain
+    /// brute-force optimum of Eq. (7).
+    #[test]
+    fn oracle_degenerates_to_brute_force_on_one_device() {
+        let c = costs_for("block-residual", &DeviceProfile::jetson_tx2());
+        let p = Problem::new(&c, Link::symmetric(1e6));
+        let bf = brute_force_partition(&p);
+        let oracle = oracle_fleet_makespan(&[p.clone()], 1e9);
+        assert!(
+            (oracle - bf.delay).abs() <= 1e-9 * (1.0 + bf.delay),
+            "oracle {oracle} vs brute force {bf}",
+            bf = bf.delay
+        );
+    }
+
+    /// The headline pin: on every exhaustively enumerable small fleet —
+    /// 2-3 devices over the small zoo models, mixed tiers, random links,
+    /// a ladder of capacities from heavily congested to nearly dedicated —
+    /// `JointPlanner`'s fleet makespan equals the brute-force oracle's
+    /// optimum over all cut combinations, within `CUT_COST_ULPS`. Swept
+    /// over the seeded `zoo_matrix` lanes (cells of large models skip —
+    /// their lower-set counts are not enumerable).
+    #[test]
+    fn joint_matches_brute_force_oracle_on_small_fleets() {
+        zoo_matrix("joint-vs-oracle", |case, rng| {
+            // Cheap size gate first: counting lower sets *enumerates* them,
+            // so it must never run on the big branchy models (their counts
+            // are astronomical). The small zoo — the chains and the three
+            // single-block nets — all sit under this vertex bound.
+            if case.costs.len() > 48 {
+                return;
+            }
+            let per_device = count_lower_sets(&case.costs.dag);
+            if per_device > 512 {
+                return; // not exhaustively enumerable at fleet scale
+            }
+            // 3 devices when the combination count stays cheap, else 2.
+            let devices = if per_device.saturating_pow(3) <= 50_000 { 3 } else { 2 };
+            let m = models::by_name(case.model).unwrap();
+            let others = [
+                DeviceProfile::jetson_tx1(),
+                DeviceProfile::jetson_agx_orin(),
+            ];
+            let mut tiers = vec![("cell", case.costs.clone())];
+            for (i, d) in others.iter().take(devices - 1).enumerate() {
+                let name: &'static str = ["other-a", "other-b"][i];
+                tiers.push((
+                    name,
+                    CostGraph::build(&m, d, &DeviceProfile::rtx_a6000(), &TrainCfg::default()),
+                ));
+            }
+            let tier_of_device = (0..devices).collect::<Vec<_>>();
+            for capacity in [0.5, 1.0, 1.8] {
+                let spec = FleetSpec::new(tiers.clone(), tier_of_device.clone());
+                let mut joint = JointPlanner::with_capacity(spec, capacity);
+                for epoch in 0..2 {
+                    let links: Vec<Link> = (0..devices).map(|_| random_link(rng)).collect();
+                    let requests: Vec<PlanRequest> = (0..devices)
+                        .map(|d| PlanRequest {
+                            device: d,
+                            tier: d,
+                            link: links[d],
+                        })
+                        .collect();
+                    let decisions = joint.plan(&requests);
+                    let makespan = joint.makespan().expect("non-empty epoch");
+                    let problems: Vec<Problem> = (0..devices)
+                        .map(|d| Problem::new(joint.spec().tier_costs(d), links[d]))
+                        .collect();
+                    let oracle = oracle_fleet_makespan(&problems, capacity);
+                    assert_fleet_cost_equal(
+                        makespan,
+                        oracle,
+                        &format!(
+                            "{}/{} devices={devices} capacity={capacity} epoch={epoch}",
+                            case.model, case.tier
+                        ),
+                    );
+                    // Every decision is feasible and within the makespan.
+                    for (d, dec) in decisions.iter().enumerate() {
+                        assert!(problems[d].is_feasible(&dec.partition.device_set));
+                        assert!(
+                            dec.partition.delay <= makespan * (1.0 + 1e-9),
+                            "device {d} delay {} above makespan {makespan}",
+                            dec.partition.delay
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    /// The oracle pin again, on random layer DAGs with strictly positive
+    /// random costs (two compute tiers, three devices) — structure the zoo
+    /// does not cover.
+    #[test]
+    fn joint_matches_oracle_on_random_dags() {
+        for_all("joint-oracle-random-dags", 12, |rng| {
+            let n = 3 + rng.index(5);
+            let edges = random_layer_dag(rng, n, 0.25);
+            let mut dag = Dag::new();
+            for i in 0..n {
+                dag.add_node(format!("v{i}"));
+            }
+            for (u, v) in edges {
+                dag.add_edge(u, v, 0.0);
+            }
+            if count_lower_sets(&dag).saturating_pow(3) > 50_000 {
+                return;
+            }
+            let xi_s: Vec<f64> = (0..n).map(|_| rng.range(1e-3, 5e-2)).collect();
+            let base = CostGraph {
+                xi_d: xi_s.iter().map(|&s| s * rng.range(1.5, 20.0)).collect(),
+                xi_s,
+                act_bytes: (0..n).map(|_| rng.range(1e3, 1e6)).collect(),
+                param_bytes: (0..n).map(|_| rng.range(1.0, 1e5)).collect(),
+                n_loc: rng.range(1.0, 8.0).round(),
+                dag,
+            };
+            let mut faster = base.clone();
+            faster.xi_d = base.xi_d.iter().map(|&x| x * 0.35).collect();
+            let spec = FleetSpec::new(vec![("slow", base), ("fast", faster)], vec![0, 1, 0]);
+            let capacity = rng.range(0.3, 2.5);
+            let mut joint = JointPlanner::with_capacity(spec, capacity);
+            let links: Vec<Link> = (0..3)
+                .map(|_| Link {
+                    up_bps: rng.range(1e4, 1e8),
+                    down_bps: rng.range(1e4, 1e8),
+                })
+                .collect();
+            let requests: Vec<PlanRequest> = (0..3)
+                .map(|d| PlanRequest {
+                    device: d,
+                    tier: joint.spec().tier_of(d),
+                    link: links[d],
+                })
+                .collect();
+            let _ = joint.plan(&requests);
+            let problems: Vec<Problem> = (0..3)
+                .map(|d| Problem::new(joint.spec().tier_costs(joint.spec().tier_of(d)), links[d]))
+                .collect();
+            let oracle = oracle_fleet_makespan(&problems, capacity);
+            assert_fleet_cost_equal(
+                joint.makespan().unwrap(),
+                oracle,
+                &format!("random dag n={n} capacity={capacity}"),
+            );
+        });
+    }
+
+    /// The ∞-capacity degenerate pin: decisions AND the full `FleetStats`
+    /// struct (price counters included) are bit-identical to a plain
+    /// `FleetPlanner` fed the same epochs.
+    #[test]
+    fn infinite_capacity_is_bit_identical_to_fleet_planner() {
+        for model in ["googlenet", "block-residual", "lenet5"] {
+            let mut fleet = FleetPlanner::new(spec_for(model, 6));
+            let mut joint = JointPlanner::new(spec_for(model, 6), JointOptions::default());
+            for epoch in 0..4u64 {
+                let reqs = fleet.spec().requests(|t| Link {
+                    up_bps: 2e5 * (1.0 + t as f64) * (1.0 + 0.31 * epoch as f64),
+                    down_bps: 7e5 * (1.0 + t as f64) * (1.0 + 0.17 * epoch as f64),
+                });
+                let want = fleet.plan(&reqs);
+                let got = joint.plan(&reqs);
+                assert_eq!(want.len(), got.len());
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(g.device, w.device, "{model}");
+                    assert_eq!(g.tier, w.tier, "{model}");
+                    assert_eq!(g.cut_layer, w.cut_layer, "{model}");
+                    assert_eq!(g.partition.device_set, w.partition.device_set, "{model}");
+                    assert_eq!(
+                        g.partition.delay.to_bits(),
+                        w.partition.delay.to_bits(),
+                        "{model}"
+                    );
+                    assert_eq!(g.stats.refreshed, w.stats.refreshed, "{model}");
+                }
+            }
+            assert_eq!(joint.stats(), fleet.stats(), "{model}: counters diverged");
+            assert_eq!(joint.stats().price_iterations, 0, "{model}");
+            assert_eq!(joint.stats().joint_resolves, 0, "{model}");
+            assert!(joint.congestion().is_none(), "{model}");
+        }
+    }
+
+    /// The single-device degenerate pin, across the whole zoo matrix: a
+    /// one-device fleet with a full share available (capacity 1) decides
+    /// exactly like the dedicated per-device engine (`PartitionPlanner`,
+    /// cost-equal — the joint facade defaults to the reduced engine), and
+    /// its makespan is that decision's Eq. (7) delay.
+    #[test]
+    fn single_device_fleet_matches_partition_planner() {
+        zoo_matrix("joint-single-device", |case, rng| {
+            let mut joint =
+                JointPlanner::with_capacity(FleetSpec::single(case.costs.clone()), 1.0);
+            let mut reference = PartitionPlanner::new(&case.costs);
+            for _ in 0..4 {
+                let link = random_link(rng);
+                let d = joint
+                    .plan(&[PlanRequest {
+                        device: 0,
+                        tier: 0,
+                        link,
+                    }])
+                    .pop()
+                    .unwrap();
+                let want = reference.partition(link);
+                let problem = Problem::new(&case.costs, link);
+                assert_cut_cost_equal(&problem, &d.partition, &want);
+                assert_fleet_cost_equal(
+                    joint.makespan().unwrap(),
+                    d.partition.delay,
+                    &format!("{}/{}", case.model, case.tier),
+                );
+                assert!(joint.congestion().is_none(), "capacity 1 covers 1 device");
+            }
+            assert_eq!(joint.stats().price_iterations, 0);
+        });
+    }
+
+    /// The seeded σ/capacity fuzz lane (runs under the fixed-seed CI
+    /// equivalence lanes): a joint fading walk drifts every tier's link
+    /// and the shared capacity together; every warm joint re-solve must be
+    /// cost-equal to a cold planner solving the same epoch from scratch,
+    /// and the warm planner's counters must prove the probes reused flow —
+    /// every flow solve after each tier's first is incremental.
+    #[test]
+    fn joint_walk_warm_cold_equivalence() {
+        let num_devices = 4;
+        let mut warm = JointPlanner::with_capacity(spec_for("googlenet", num_devices), 1.2);
+        let num_tiers = warm.spec().num_tiers();
+        assert_eq!(num_tiers, 4);
+        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0x101A7);
+        let start = Link {
+            up_bps: 3e5,
+            down_bps: 9e5,
+        };
+        let walk = joint_fading_walk(&mut rng, start, 1.2, 16, 0.88, 1.13);
+        let mut congested_steps = 0;
+        for (step, &(link, capacity)) in walk.iter().enumerate() {
+            let reqs: Vec<PlanRequest> = (0..num_devices)
+                .map(|d| {
+                    let t = warm.spec().tier_of(d);
+                    PlanRequest {
+                        device: d,
+                        tier: t,
+                        link: Link {
+                            up_bps: link.up_bps * (1.0 + 0.4 * t as f64),
+                            down_bps: link.down_bps * (1.0 + 0.25 * t as f64),
+                        },
+                    }
+                })
+                .collect();
+            warm.set_server_capacity(capacity);
+            let warm_decisions = warm.plan(&reqs);
+            let warm_makespan = warm.makespan().unwrap();
+
+            let mut cold = JointPlanner::with_capacity(spec_for("googlenet", num_devices), capacity);
+            let _ = cold.plan(&reqs);
+            assert_fleet_cost_equal(
+                warm_makespan,
+                cold.makespan().unwrap(),
+                &format!("walk step {step} capacity {capacity}"),
+            );
+            for (r, d) in reqs.iter().zip(&warm_decisions) {
+                let problem = Problem::new(warm.spec().tier_costs(r.tier), r.link);
+                assert!(problem.is_feasible(&d.partition.device_set), "step {step}");
+                assert!(
+                    d.partition.delay <= warm_makespan * (1.0 + 1e-9),
+                    "step {step}: device delay above the fleet makespan"
+                );
+            }
+            if warm.congestion().is_some() {
+                congested_steps += 1;
+            }
+        }
+        let s = warm.stats();
+        assert!(congested_steps > 0, "walk never congested the server");
+        assert!(s.price_iterations > 0, "no makespan bisection ran");
+        assert!(s.joint_resolves > 0, "no price probe ran");
+        // Cold solves are exactly the per-(engine, tier) firsts: the λ=1
+        // engine's four tiers plus at most four firsts of the lazily built
+        // unreduced λ-probe engine. Everything else — later epochs' λ=1
+        // solves and every probe — must reuse the previous flow.
+        let cold = s.flow_solves - s.incremental_solves;
+        assert!(
+            cold > num_tiers as u64 && cold <= 2 * num_tiers as u64,
+            "expected one cold solve per (engine, tier) first, got {cold} \
+             cold of {} total",
+            s.flow_solves
+        );
+        assert!(s.repair_pushes > 0, "capacity-shrinking probes must repair");
+    }
+
+    /// Monotonicity across the capacity ladder, zoo models: shrinking the
+    /// shared capacity never lowers the optimal fleet makespan, never
+    /// shrinks any device's layer set, and never grows any device's server
+    /// work — congestion only ever pushes layers device-ward. The engine
+    /// runs unreduced so every reported cut (dedicated λ=1 and priced
+    /// alike) is a minimal min cut of one solver family — the GGT nesting
+    /// that grounds the cut-direction half of the property; reduced
+    /// engines may pick differently tie-broken *co-optimal* cuts at the
+    /// uncongested↔congested seam (the cost-side invariants are engine-
+    /// independent and stay pinned by the oracle + equivalence suites).
+    #[test]
+    fn shrinking_capacity_is_monotone_on_zoo_models() {
+        for model in ["googlenet", "block-residual", "lenet5"] {
+            let link_of = |t: usize| Link {
+                up_bps: 4e5 * (1.0 + 0.6 * t as f64),
+                down_bps: 1.2e6 * (1.0 + 0.4 * t as f64),
+            };
+            let mut prev_makespan = 0.0f64;
+            let mut prev_layers: Option<Vec<usize>> = None;
+            let mut prev_server_work: Option<Vec<f64>> = None;
+            for capacity in [f64::INFINITY, 3.0, 2.0, 1.2, 0.7, 0.35] {
+                let options = JointOptions {
+                    server_capacity: capacity,
+                    fleet: FleetOptions {
+                        block_reduction: false,
+                        ..FleetOptions::default()
+                    },
+                };
+                let mut joint = JointPlanner::new(spec_for(model, 6), options);
+                let reqs = joint.spec().requests(link_of);
+                let decisions = joint.plan(&reqs);
+                let makespan = joint.makespan().unwrap();
+                assert!(
+                    makespan >= prev_makespan * (1.0 - 1e-9),
+                    "{model}: makespan fell from {prev_makespan} to {makespan} \
+                     when capacity shrank to {capacity}"
+                );
+                prev_makespan = makespan;
+                let layers: Vec<usize> = decisions
+                    .iter()
+                    .map(|d| d.partition.device_layers())
+                    .collect();
+                let server_work: Vec<f64> = reqs
+                    .iter()
+                    .zip(&decisions)
+                    .map(|(r, d)| {
+                        let p = Problem::new(joint.spec().tier_costs(r.tier), r.link);
+                        p.delay_terms(&d.partition.device_set).1
+                    })
+                    .collect();
+                if let (Some(pl), Some(pw)) = (&prev_layers, &prev_server_work) {
+                    for d in 0..decisions.len() {
+                        // Two cuts with zero server work are interchangeable
+                        // for the shared server (only zero-cost layers can
+                        // differ between them), so the layer-count direction
+                        // is only meaningful outside that tie.
+                        if !(server_work[d] <= 0.0 && pw[d] <= 0.0) {
+                            assert!(
+                                layers[d] >= pl[d],
+                                "{model} device {d}: cut moved server-ward \
+                                 ({} -> {} device layers) as capacity shrank to {capacity}",
+                                pl[d],
+                                layers[d]
+                            );
+                        }
+                        assert!(
+                            server_work[d] <= pw[d] * (1.0 + 1e-9) + 1e-12,
+                            "{model} device {d}: server work grew under congestion"
+                        );
+                    }
+                }
+                prev_layers = Some(layers);
+                prev_server_work = Some(server_work);
+            }
+        }
+    }
+
+    /// Monotonicity on random DAGs with strictly positive random costs
+    /// (no co-optimal ties to hide behind).
+    #[test]
+    fn shrinking_capacity_is_monotone_on_random_dags() {
+        for_all("joint-capacity-monotone", 16, |rng| {
+            let n = 4 + rng.index(14);
+            let edges = random_layer_dag(rng, n, 0.3);
+            let mut dag = Dag::new();
+            for i in 0..n {
+                dag.add_node(format!("v{i}"));
+            }
+            for (u, v) in edges {
+                dag.add_edge(u, v, 0.0);
+            }
+            let xi_s: Vec<f64> = (0..n).map(|_| rng.range(1e-4, 5e-2)).collect();
+            let costs = CostGraph {
+                xi_d: xi_s.iter().map(|&s| s * rng.range(1.5, 20.0)).collect(),
+                xi_s,
+                act_bytes: (0..n).map(|_| rng.range(1e3, 1e7)).collect(),
+                param_bytes: (0..n).map(|_| rng.range(1.0, 1e6)).collect(),
+                n_loc: rng.range(1.0, 10.0).round(),
+                dag,
+            };
+            let links: Vec<Link> = (0..4)
+                .map(|_| Link {
+                    up_bps: rng.range(1e4, 1e8),
+                    down_bps: rng.range(1e4, 1e8),
+                })
+                .collect();
+            let mut prev_makespan = 0.0f64;
+            let mut prev_layers: Option<Vec<usize>> = None;
+            for capacity in [4.0, 1.5, 0.8, 0.3] {
+                let spec = FleetSpec::new(
+                    vec![("only", costs.clone())],
+                    vec![0; 4],
+                );
+                // Unreduced engine for the same single-solver-family
+                // nesting reason as the zoo ladder above.
+                let options = JointOptions {
+                    server_capacity: capacity,
+                    fleet: FleetOptions {
+                        block_reduction: false,
+                        ..FleetOptions::default()
+                    },
+                };
+                let mut joint = JointPlanner::new(spec, options);
+                let reqs: Vec<PlanRequest> = (0..4)
+                    .map(|d| PlanRequest {
+                        device: d,
+                        tier: 0,
+                        link: links[d],
+                    })
+                    .collect();
+                let decisions = joint.plan(&reqs);
+                let makespan = joint.makespan().unwrap();
+                assert!(makespan >= prev_makespan * (1.0 - 1e-9));
+                prev_makespan = makespan;
+                let layers: Vec<usize> = decisions
+                    .iter()
+                    .map(|d| d.partition.device_layers())
+                    .collect();
+                if let Some(pl) = &prev_layers {
+                    for d in 0..4 {
+                        assert!(
+                            layers[d] >= pl[d],
+                            "device {d}: cut moved server-ward as capacity shrank to {capacity}"
+                        );
+                    }
+                }
+                prev_layers = Some(layers);
+            }
+        });
+    }
+
+    /// The parallel-sweep determinism pin, extended to joint plans: the
+    /// joint solve canonicalizes its group order, and every price probe is
+    /// group-local, so a batch and its reversal produce bit-identical
+    /// per-device decisions and makespans — under the serial sweep and
+    /// (since the wrapped λ=1 pass is pinned feature-on ≡ feature-off)
+    /// under `--features parallel`, where CI runs this test again.
+    #[test]
+    fn joint_batched_plan_is_bit_identical_across_request_orders() {
+        for capacity in [1.3, 0.6] {
+            let mut a = JointPlanner::with_capacity(spec_for("googlenet", 8), capacity);
+            let mut b = JointPlanner::with_capacity(spec_for("googlenet", 8), capacity);
+            for epoch in 0..3u64 {
+                let reqs = a.spec().requests(|t| Link {
+                    up_bps: 2e5 * (1.0 + t as f64) * (1.0 + 0.41 * epoch as f64),
+                    down_bps: 8e5 * (1.0 + t as f64) * (1.0 + 0.23 * epoch as f64),
+                });
+                let mut reversed = reqs.clone();
+                reversed.reverse();
+                let da = a.plan(&reqs);
+                let db = b.plan(&reversed);
+                assert_eq!(
+                    a.makespan().unwrap().to_bits(),
+                    b.makespan().unwrap().to_bits(),
+                    "epoch {epoch}: makespan depends on request order"
+                );
+                for (r, d) in reqs.iter().zip(&da) {
+                    let other = db
+                        .iter()
+                        .find(|x| x.device == r.device)
+                        .expect("same devices");
+                    assert_eq!(d.partition.device_set, other.partition.device_set);
+                    assert_eq!(
+                        d.partition.delay.to_bits(),
+                        other.partition.delay.to_bits()
+                    );
+                    assert_eq!(d.cut_layer, other.cut_layer);
+                }
+            }
+        }
+    }
+
+    /// Duplicate (tier, link) requests in a joint batch are bit-exact
+    /// copies of their group's decision, with only the first marked as
+    /// freshly solved — mirrors the fleet facade's cache contract.
+    #[test]
+    fn duplicate_requests_share_their_group_decision() {
+        let mut joint = JointPlanner::with_capacity(spec_for("googlenet", 4), 0.8);
+        let link = Link::symmetric(5e5);
+        let reqs: Vec<PlanRequest> = (0..4)
+            .map(|d| PlanRequest {
+                device: d,
+                tier: 0,
+                link,
+            })
+            .collect();
+        let decisions = joint.plan(&reqs);
+        assert!(decisions[0].stats.refreshed);
+        for d in &decisions[1..] {
+            assert!(!d.stats.refreshed, "duplicate served from the group");
+            assert_eq!(d.partition.device_set, decisions[0].partition.device_set);
+            assert_eq!(
+                d.partition.delay.to_bits(),
+                decisions[0].partition.delay.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop_epoch() {
+        let mut joint = JointPlanner::with_capacity(spec_for("block-residual", 4), 2.0);
+        assert!(joint.plan(&[]).is_empty());
+        assert!(joint.makespan().is_none());
+        assert_eq!(joint.stats().joint_resolves, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "server capacity must be positive")]
+    fn rejects_non_positive_capacity() {
+        let _ = JointPlanner::with_capacity(spec_for("lenet5", 2), 0.0);
+    }
+}

@@ -27,6 +27,13 @@
 //!   abstraction (Eqs. 17-20), then Alg. 2 on the reduced DAG;
 //!   `blockwise::Planner` is the one-tier wrapper over the fleet engine
 //!   with reduction on.
+//! * [`joint`] — joint fleet partitioning under **shared** server capacity:
+//!   [`JointPlanner`] wraps the fleet engine, couples per-tier cuts through
+//!   a congestion-priced server term (λ-scaled server FLOPs), and solves
+//!   the fleet-makespan problem exactly via makespan bisection ×
+//!   per-device Dinkelbach price probes — each probe a warm incremental
+//!   re-solve. Pinned against a brute-force cut-combination oracle;
+//!   infinite capacity degenerates bit-identically to [`FleetPlanner`].
 //! * [`baselines`] — brute force (lower-set enumeration), regression [21],
 //!   OSS [17], device-only, central.
 
@@ -34,6 +41,7 @@ pub mod types;
 pub mod weights;
 pub mod general;
 pub mod fleet;
+pub mod joint;
 pub mod planner;
 pub mod blocks;
 pub mod blockwise;
@@ -44,6 +52,7 @@ pub use fleet::{
     DecisionStats, FleetOptions, FleetPlanner, FleetSpec, FleetStats, PlanDecision, PlanRequest,
 };
 pub use general::general_partition;
+pub use joint::{fleet_makespan_for_cuts, oracle_fleet_makespan, JointOptions, JointPlanner};
 pub use planner::PartitionPlanner;
 pub use types::{Link, Partition, Problem};
 

@@ -140,6 +140,52 @@ impl<'a> Problem<'a> {
             + model_down
     }
 
+    /// Split Eq. (7) into the two terms the shared-server joint problem
+    /// couples: `(A, W)` with `W = N_loc·T_{S,C}` (the server-compute work,
+    /// the part that contends for shared server throughput — a server
+    /// running at share `φ` of its profiled rate serves it in `W/φ`) and
+    /// `A = T(c) − W` (device compute + all transmission, unaffected by
+    /// server load). Computed term-by-term rather than by subtraction so
+    /// the planner and the brute-force oracle agree to the last ULP;
+    /// `A + W` equals [`Problem::delay`] up to summation-order rounding
+    /// (within the `CUT_COST_ULPS` tolerance of the equivalence harness).
+    ///
+    /// NOTE: this accumulation loop intentionally mirrors
+    /// [`Problem::delay`] above and `sim::breakdown::DelayBreakdown::of`
+    /// — a cost-model change (e.g. charging boundary bytes per edge
+    /// instead of per source vertex) must be applied to all three.
+    pub fn delay_terms(&self, device_set: &[bool]) -> (f64, f64) {
+        let c = self.costs;
+        assert_eq!(device_set.len(), c.len());
+        let mut compute_device = 0.0;
+        let mut compute_server = 0.0;
+        let mut boundary_bytes = 0.0;
+        let mut device_param_bytes = 0.0;
+        for v in 0..c.len() {
+            if device_set[v] {
+                compute_device += c.xi_d[v];
+                device_param_bytes += c.param_bytes[v];
+                let crosses = c
+                    .dag
+                    .out_edges(v)
+                    .iter()
+                    .any(|&e| !device_set[c.dag.edge(e).to]);
+                if crosses {
+                    boundary_bytes += c.act_bytes[v];
+                }
+            } else {
+                compute_server += c.xi_s[v];
+            }
+        }
+        let smashed_up = boundary_bytes / self.link.up_bps;
+        let grad_down = boundary_bytes / self.link.down_bps;
+        let model_up = device_param_bytes / self.link.up_bps;
+        let model_down = device_param_bytes / self.link.down_bps;
+        let a = c.n_loc * (compute_device + smashed_up + grad_down) + model_up + model_down;
+        let w = c.n_loc * compute_server;
+        (a, w)
+    }
+
     /// Wrap a device set into a [`Partition`] with its evaluated delay.
     pub fn partition(&self, device_set: Vec<bool>) -> Partition {
         let delay = self.delay(&device_set);
@@ -299,6 +345,35 @@ mod tests {
         // both children AND add on server side -> server compute.
         let server: f64 = cg.xi_s[1] + cg.xi_s[2] + cg.xi_s[3];
         assert!((t - (128.0 + server)).abs() < 1e-9, "t={t}");
+    }
+
+    /// `delay_terms` splits Eq. (7) into the shared-server coupling terms:
+    /// A + W re-sums to the delay (up to association rounding), W is
+    /// exactly the server-compute share, and the all-device cut keeps
+    /// W = 0.
+    #[test]
+    fn delay_terms_split_matches_delay() {
+        let cg = lenet_problem();
+        let p = Problem::new(&cg, Link::symmetric(1e6));
+        for k in 0..=cg.len() {
+            let mut mask = vec![false; cg.len()];
+            for v in 0..k {
+                mask[v] = true;
+            }
+            let (a, w) = p.delay_terms(&mask);
+            let delay = p.delay(&mask);
+            assert!(
+                (a + w - delay).abs() <= 1e-12 * (1.0 + delay.abs()),
+                "prefix {k}: A+W = {} vs delay {delay}",
+                a + w
+            );
+            let server: f64 = (k..cg.len()).map(|v| cg.xi_s[v]).sum();
+            assert!((w - cg.n_loc * server).abs() <= 1e-12 * (1.0 + w));
+            assert!(a >= 0.0 && w >= 0.0);
+        }
+        let all = vec![true; cg.len()];
+        let (_, w_dev_only) = p.delay_terms(&all);
+        assert_eq!(w_dev_only, 0.0);
     }
 
     #[test]

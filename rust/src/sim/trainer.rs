@@ -7,7 +7,7 @@ use super::convergence::{Dataset, LearningCurve};
 use crate::models;
 use crate::net::{EdgeNetwork, NetConfig};
 use crate::partition::baselines::{evaluate_static, oss_partition};
-use crate::partition::{FleetPlanner, FleetSpec, FleetStats, Link, PlanRequest, Problem};
+use crate::partition::{FleetSpec, FleetStats, JointPlanner, Link, PlanRequest, Problem};
 use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
 use crate::util::rng::Rng;
 use std::time::Instant;
@@ -18,10 +18,14 @@ pub struct SimConfig {
     pub model: String,
     pub net: NetConfig,
     pub train: TrainCfg,
-    /// One of `proposed`, `general`, `oss`, `regression`, `device-only`,
-    /// `central`.
+    /// One of `proposed`, `proposed-joint`, `general`, `oss`, `regression`,
+    /// `device-only`, `central`.
     pub method: String,
     pub seed: u64,
+    /// Shared server capacity in concurrent full-throughput
+    /// device-equivalents — only the `proposed-joint` method reads it
+    /// (∞, the default, degenerates to the dedicated `proposed` engine).
+    pub server_capacity: f64,
 }
 
 impl Default for SimConfig {
@@ -32,6 +36,7 @@ impl Default for SimConfig {
             train: TrainCfg::default(),
             method: "proposed".into(),
             seed: 7,
+            server_capacity: f64::INFINITY,
         }
     }
 }
@@ -43,7 +48,10 @@ pub struct EpochRecord {
     pub device: usize,
     pub device_tier: &'static str,
     pub link: Link,
-    /// Eq. (7) epoch delay in (simulated) seconds.
+    /// Eq. (7) epoch delay in (simulated) seconds. For the
+    /// `proposed-joint` method this is the device's *load-dependent* delay
+    /// under the shared server (see `partition::joint`), not the
+    /// dedicated-server value.
     pub delay: f64,
     /// Wall-clock time the partition decision took (real seconds). For the
     /// "proposed" method this is the `FleetPlanner` facade's actual cost:
@@ -55,6 +63,11 @@ pub struct EpochRecord {
     /// served the tier's bit-identical cached decision).
     pub decision_refreshed: bool,
     pub device_layers: usize,
+    /// The dedicated Eq. (7) decomposition of the chosen cut. For
+    /// `proposed-joint` on a congested epoch its components sum to the
+    /// cut's dedicated delay `A + W`, not to the recorded `delay` above —
+    /// the gap `delay − (A + W)` is the shared-server queueing share,
+    /// which has no per-term decomposition.
     pub breakdown: DelayBreakdown,
 }
 
@@ -74,10 +87,15 @@ pub struct Trainer {
     cfg: SimConfig,
     net: EdgeNetwork,
     fleet: Vec<DeviceProfile>,
-    /// The fleet planning facade ("proposed" method): deduplicated per-tier
-    /// cost graphs + transformed networks, built once; the per-epoch
-    /// decision is one `plan` call (Sec. III-A's loop).
-    planner: FleetPlanner,
+    /// The planning facade behind "proposed" and "proposed-joint":
+    /// deduplicated per-tier cost graphs + transformed networks, built
+    /// once; the per-epoch decision is one `plan` call (Sec. III-A's
+    /// loop). For "proposed" the capacity is ∞, so the joint facade
+    /// delegates to the plain fleet engine bit-identically; for
+    /// "proposed-joint" the epoch decision covers the whole fleet at once
+    /// — cuts coupled through `cfg.server_capacity` — and the recorded
+    /// delay is the selected device's load-dependent delay.
+    planner: JointPlanner,
     /// OSS static partition: ONE fixed cut for the whole system ([17]
     /// optimizes a single static split), chosen for the median device tier
     /// at nominal rates on the first epoch.
@@ -97,7 +115,15 @@ impl Trainer {
         };
         let spec =
             FleetSpec::from_fleet(&fleet, |d| CostGraph::build(&model, d, &server, &cfg.train));
-        let planner = FleetPlanner::new(spec);
+        // One planning stack for every method: the joint facade at ∞
+        // capacity is bit-identical to the plain fleet engine, so only
+        // "proposed-joint" reads the configured finite capacity.
+        let capacity = if cfg.method == "proposed-joint" {
+            cfg.server_capacity
+        } else {
+            f64::INFINITY
+        };
+        let planner = JointPlanner::with_capacity(spec, capacity);
         let net = EdgeNetwork::new(cfg.net.clone());
         Trainer {
             cfg,
@@ -122,11 +148,49 @@ impl Trainer {
         let link = self.net.sample_link(device, self.sim_time).to_link();
         let tier_name = self.planner.spec().tier_name(tier);
 
+        // Joint epochs cover the whole fleet, so every device's current
+        // link is sampled up front — channel simulation, not decision
+        // work, so it stays outside the timed region below. At infinite
+        // capacity the coupled batch would decide identically to the
+        // single-request fast path (the ∞ delegation), so it is skipped —
+        // mirrors the Coordinator's `is_finite` gate.
+        let joint_requests: Option<Vec<PlanRequest>> =
+            (self.cfg.method == "proposed-joint" && self.cfg.server_capacity.is_finite()).then(|| {
+                (0..self.planner.spec().num_devices())
+                    .map(|d| {
+                        let l = if d == device {
+                            link
+                        } else {
+                            self.net.sample_link(d, self.sim_time).to_link()
+                        };
+                        PlanRequest {
+                            device: d,
+                            tier: self.planner.spec().tier_of(d),
+                            link: l,
+                        }
+                    })
+                    .collect()
+            });
+
         // "proposed" needs `&mut self.planner`, so the shared `Problem`
         // (which borrows the tier's cost graph out of the planner's spec)
         // can only be built in the non-mutating branch.
         let t0 = Instant::now();
-        let (partition, decision_refreshed) = if self.cfg.method == "proposed" {
+        let (partition, decision_refreshed) = if let Some(requests) = &joint_requests {
+            // Joint epoch: the fleet competes for the shared server; the
+            // cuts are decided in one coupled plan and the record tracks
+            // the selected device's load-dependent delay.
+            let decision = self
+                .planner
+                .plan(requests)
+                .into_iter()
+                .find(|d| d.device == device)
+                .expect("one decision per device");
+            (decision.partition, decision.stats.refreshed)
+        } else if self.cfg.method == "proposed" || self.cfg.method == "proposed-joint" {
+            // Single-request fast path — also serves "proposed-joint" at
+            // infinite capacity, where the planner delegates to the plain
+            // fleet engine bit-identically.
             let decision = self
                 .planner
                 .plan(&[PlanRequest { device, tier, link }])
@@ -203,10 +267,13 @@ impl Trainer {
     }
 
     /// Solver counters of the fleet planning facade behind the "proposed"
-    /// method. The `reduced_*` vs `full_*` fields prove block-structured
-    /// models decide epochs on the Theorem 2 reduced DAG (the Table I
-    /// decision-time metric measures blockwise-scale solves, not full-DAG
-    /// ones — see the regression test below).
+    /// method — or, when the scenario runs "proposed-joint", of the joint
+    /// facade (whose `price_iterations`/`joint_resolves` expose the
+    /// shared-capacity price loop). The `reduced_*` vs `full_*` fields
+    /// prove block-structured models decide epochs on the Theorem 2
+    /// reduced DAG (the Table I decision-time metric measures
+    /// blockwise-scale solves, not full-DAG ones — see the regression test
+    /// below).
     pub fn planner_stats(&self) -> FleetStats {
         self.planner.stats()
     }
@@ -313,6 +380,35 @@ mod tests {
                 s.full_edges
             );
         }
+    }
+
+    /// The "proposed-joint" method row: a tight shared server must run the
+    /// price loop (congestion counters move) and can only slow epochs down
+    /// relative to what its own dedicated-server decisions would cost —
+    /// while ∞ capacity never prices at all.
+    #[test]
+    fn proposed_joint_prices_the_shared_server() {
+        let mut cfg = quick_cfg("proposed-joint");
+        cfg.model = "googlenet".into();
+        cfg.server_capacity = 0.4;
+        let mut t = Trainer::new(cfg);
+        let r = t.run_epochs(6);
+        assert_eq!(r.records.len(), 6);
+        let s = t.planner_stats();
+        assert_eq!(s.plans, 6, "one joint plan per epoch");
+        assert_eq!(s.requests, 6 * 4, "each plan covers the whole fleet");
+        assert!(
+            s.price_iterations > 0 && s.joint_resolves > 0,
+            "capacity 0.4 over 4 devices must congest at least one epoch"
+        );
+
+        let mut cfg = quick_cfg("proposed-joint");
+        cfg.server_capacity = f64::INFINITY;
+        let mut t = Trainer::new(cfg);
+        let _ = t.run_epochs(4);
+        let s = t.planner_stats();
+        assert_eq!(s.price_iterations, 0);
+        assert_eq!(s.joint_resolves, 0);
     }
 
     #[test]

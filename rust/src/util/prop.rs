@@ -178,6 +178,54 @@ pub fn assert_cut_cost_equal(problem: &Problem, a: &Partition, b: &Partition) {
     );
 }
 
+/// Assert two fleet makespans of the same joint problem are equal within
+/// the [`CUT_COST_ULPS`] tolerance — the fleet-level sibling of
+/// [`assert_cut_cost_equal`], used to pin `partition::joint::JointPlanner`
+/// to the brute-force oracle's optimum and warm joint re-solves to cold
+/// ones. Co-optimal fleet plans may pick different cut combinations (and
+/// the two sides bisect their makespans independently), so the pinned
+/// property is the optimal *value*, converged to ULP scale on both sides.
+pub fn assert_fleet_cost_equal(a: f64, b: f64, context: &str) {
+    assert!(
+        a.is_finite() && b.is_finite(),
+        "non-finite fleet makespan ({context}): {a} vs {b}"
+    );
+    let tol = CUT_COST_ULPS * f64::EPSILON * (1.0 + a.abs().max(b.abs()));
+    assert!(
+        (a - b).abs() <= tol,
+        "fleet makespans differ ({context}): {a} vs {b} \
+         (|delta| = {:.3e}, tol = {tol:.3e})",
+        (a - b).abs(),
+    );
+}
+
+/// The joint sibling of [`fading_walk`]: drift a link's rates **and** a
+/// shared server capacity together. Each step multiplies both rates by
+/// factors from `[factor_lo, factor_hi)` exactly as [`fading_walk`] does,
+/// then multiplies the capacity by its own factor from the same range,
+/// clamped to `[0.05, 64.0]` device-equivalents — low enough to congest
+/// small fleets, high enough to de-congest them, so a two-sided walk
+/// exercises both joint regimes and the transitions between them. Shared
+/// by the joint σ/capacity fuzz lane and `benches/joint.rs`.
+pub fn joint_fading_walk(
+    rng: &mut Rng,
+    start: Link,
+    start_capacity: f64,
+    steps: usize,
+    factor_lo: f64,
+    factor_hi: f64,
+) -> Vec<(Link, f64)> {
+    let links = fading_walk(rng, start, steps, factor_lo, factor_hi);
+    let mut capacity = start_capacity;
+    links
+        .into_iter()
+        .map(|link| {
+            capacity = (capacity * rng.range(factor_lo, factor_hi)).clamp(0.05, 64.0);
+            (link, capacity)
+        })
+        .collect()
+}
+
 /// One (model, device-tier) cell of the shared generator matrix.
 pub struct ZooCase {
     pub model: &'static str,
@@ -295,6 +343,34 @@ mod tests {
                     "consecutive links must differ"
                 );
                 prev = l;
+            }
+        });
+    }
+
+    #[test]
+    fn fleet_cost_equal_accepts_ulp_noise_and_rejects_gaps() {
+        assert_fleet_cost_equal(1.0, 1.0 + 1e-13, "ulp-scale noise");
+        let gap = std::panic::catch_unwind(|| assert_fleet_cost_equal(1.0, 1.01, "gap"));
+        assert!(gap.is_err(), "a 1% makespan gap must not compare equal");
+        let inf = std::panic::catch_unwind(|| {
+            assert_fleet_cost_equal(f64::INFINITY, f64::INFINITY, "inf")
+        });
+        assert!(inf.is_err(), "non-finite makespans must be rejected");
+    }
+
+    #[test]
+    fn joint_fading_walk_drifts_both_axes_within_bounds() {
+        for_all("joint-walk", 8, |rng| {
+            let start = Link {
+                up_bps: 1e6,
+                down_bps: 2e6,
+            };
+            let walk = joint_fading_walk(rng, start, 1.0, 24, 0.85, 1.2);
+            assert_eq!(walk.len(), 24);
+            for (l, c) in walk {
+                assert!((0.05..=64.0).contains(&c), "capacity {c} out of bounds");
+                assert!(l.up_bps >= 1e4 && l.up_bps <= 1e9);
+                assert!(l.down_bps >= 1e4 && l.down_bps <= 1e9);
             }
         });
     }

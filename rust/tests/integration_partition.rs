@@ -161,3 +161,60 @@ fn n_loc_scales_iteration_terms_only() {
         "d1={d1} d10={d10}"
     );
 }
+
+/// Cross-module joint planning: for every zoo model, a 4-tier fleet under a
+/// shrinking shared server stays within the provable makespan envelope —
+/// at least the slowest dedicated optimum, at most the worst all-on-device
+/// delay — grows monotonically as capacity shrinks, and produces feasible,
+/// within-makespan decisions throughout.
+#[test]
+fn every_model_plans_jointly_under_shared_capacity() {
+    use fastsplit::partition::{FleetSpec, JointPlanner};
+
+    for model_name in models::MODEL_NAMES {
+        let model = models::by_name(model_name).unwrap();
+        let server = DeviceProfile::rtx_a6000();
+        let all = tiers();
+        let link_of = |t: usize| Link::symmetric(8e5 * (1.0 + t as f64));
+        let mut prev = 0.0f64;
+        for capacity in [f64::INFINITY, 2.0, 0.8] {
+            let spec = FleetSpec::from_fleet(&all, |d| {
+                CostGraph::build(&model, d, &server, &TrainCfg::default())
+            });
+            let mut joint = JointPlanner::with_capacity(spec, capacity);
+            let reqs = joint.spec().requests(link_of);
+            let decisions = joint.plan(&reqs);
+            let makespan = joint.makespan().expect("non-empty epoch");
+            // Envelope: every device can always fall back to all-on-device.
+            let worst_device_only = reqs
+                .iter()
+                .map(|r| {
+                    let costs = joint.spec().tier_costs(r.tier);
+                    let p = Problem::new(costs, r.link);
+                    p.device_only().delay
+                })
+                .fold(0.0, f64::max);
+            assert!(
+                makespan <= worst_device_only * (1.0 + 1e-9),
+                "{model_name} capacity {capacity}: makespan {makespan} above the \
+                 all-on-device envelope {worst_device_only}"
+            );
+            assert!(
+                makespan >= prev * (1.0 - 1e-9),
+                "{model_name}: makespan fell as capacity shrank to {capacity}"
+            );
+            prev = makespan;
+            for (r, d) in reqs.iter().zip(&decisions) {
+                let p = Problem::new(joint.spec().tier_costs(r.tier), r.link);
+                assert!(
+                    p.is_feasible(&d.partition.device_set),
+                    "{model_name} capacity {capacity}: infeasible joint cut"
+                );
+                assert!(
+                    d.partition.delay <= makespan * (1.0 + 1e-9),
+                    "{model_name} capacity {capacity}: decision above the makespan"
+                );
+            }
+        }
+    }
+}

@@ -48,9 +48,12 @@ if [[ $fast -eq 0 ]]; then
   FASTSPLIT_REPLAN_OUT=- FASTSPLIT_REPLAN4_OUT=- cargo bench --bench replan -- --smoke
   echo "==> cargo bench --bench fleet -- --smoke"
   FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- cargo bench --bench fleet -- --smoke
+  echo "==> cargo bench --bench joint -- --smoke"
+  FASTSPLIT_JOINT_OUT=- cargo bench --bench joint -- --smoke
   echo "==> bench smoke with --features parallel"
   FASTSPLIT_REPLAN_OUT=- FASTSPLIT_REPLAN4_OUT=- cargo bench --bench replan --features parallel -- --smoke
   FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- cargo bench --bench fleet --features parallel -- --smoke
+  FASTSPLIT_JOINT_OUT=- cargo bench --bench joint --features parallel -- --smoke
 fi
 
 echo "OK"
