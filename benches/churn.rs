@@ -1,0 +1,165 @@
+//! Benchmark: churn-tolerant planning service throughput (PR 6) — epochs
+//! per second of the [`PlannerService`] epoch loop (membership deltas →
+//! link reports → one `plan_epoch` call) under 0% / 1% / 10% churn, where
+//! the churn rate is both the per-epoch leave probability of each active
+//! device and the per-epoch stale-report probability (withheld reports
+//! degrade to the last-good decision under the strict staleness bound).
+//!
+//! ```sh
+//! cargo bench --bench churn [-- filter] [--quick] [--smoke]
+//! ```
+//!
+//! Writes epochs/sec and degraded-decision rates to `BENCH_PR6.json`
+//! (override with `FASTSPLIT_CHURN_OUT`, disable with
+//! `FASTSPLIT_CHURN_OUT=-`) so the perf trajectory is tracked in-repo
+//! (see PERF.md). `--smoke` is the CI fast mode: one model, no JSON.
+
+use fastsplit::models;
+use fastsplit::partition::{
+    FleetSpec, JointOptions, Link, PlannerService, ServiceOptions, SpecDelta,
+};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use fastsplit::util::bench::{BenchConfig, Bencher};
+use fastsplit::util::json::Json;
+use fastsplit::util::rng::Rng;
+use std::time::Duration;
+
+const MODELS: &[&str] = &["googlenet", "block-residual"];
+const DEVICES: usize = 8;
+
+/// (label, per-epoch leave probability == stale-report probability).
+const CHURN_LEVELS: &[(&str, f64)] = &[("0pct", 0.0), ("1pct", 0.01), ("10pct", 0.10)];
+
+fn spec(model: &str) -> FleetSpec {
+    let m = models::by_name(model).unwrap();
+    let server = DeviceProfile::rtx_a6000();
+    let fleet = DeviceProfile::fleet_of(DEVICES);
+    FleetSpec::from_fleet(&fleet, |d| {
+        CostGraph::build(&m, d, &server, &TrainCfg::default())
+    })
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = if smoke {
+        Bencher::with_config(BenchConfig {
+            measure_time: Duration::from_millis(40),
+            warmup_time: Duration::from_millis(10),
+            max_samples: 200,
+        })
+    } else {
+        Bencher::from_env()
+    };
+    let mut rows: Vec<Json> = Vec::new();
+
+    let models: &[&str] = if smoke { &["googlenet"] } else { MODELS };
+    for model in models {
+        for (mi, &(label, p)) in CHURN_LEVELS.iter().enumerate() {
+            let mut service = PlannerService::new(
+                spec(model),
+                ServiceOptions {
+                    staleness_bound: 0,
+                    solve_budget: u64::MAX,
+                    joint: JointOptions::default(),
+                },
+            );
+            let mut rng = Rng::new(0xC4A05 ^ ((mi as u64) << 16));
+            // Per-device fading walk of the reported/true uplink rate.
+            let mut rates: Vec<f64> = (0..DEVICES).map(|_| rng.range(1e5, 1e6)).collect();
+            let mut tick: u64 = 0;
+            let mut decisions: u64 = 0;
+
+            let before = b.results().len();
+            b.bench(&format!("churn/{model}/{label}"), || {
+                // Membership churn: active devices leave with probability
+                // p (never emptying the fleet); departed slots re-join on
+                // a random tier with probability 1/2.
+                let n = service.spec().num_devices();
+                if tick > 0 {
+                    for d in 0..n {
+                        if service.spec().tier_of_opt(d).is_some() {
+                            if rng.chance(p) && service.spec().active_devices() > 1 {
+                                service.apply_delta(&SpecDelta::RemoveDevice { device: d });
+                            }
+                        } else if rng.chance(0.5) {
+                            let tier = rng.index(service.spec().num_tiers());
+                            service.apply_delta(&SpecDelta::AddDevice { device: d, tier });
+                        }
+                    }
+                }
+                // Link reports: each active device's rate takes a ±10%
+                // fading step; the report is withheld with probability p
+                // (except on a device's first decided epoch, which must
+                // bootstrap).
+                for d in 0..n {
+                    if service.spec().tier_of_opt(d).is_none() {
+                        continue;
+                    }
+                    rates[d] = (rates[d] * rng.range(0.9, 1.1)).clamp(1e4, 1e9);
+                    let first = service.last_good(d).is_none();
+                    if tick == 0 || first || !rng.chance(p) {
+                        let link = Link {
+                            up_bps: rates[d],
+                            down_bps: rates[d] * 2.0,
+                        };
+                        service.report(d, link, tick);
+                    }
+                }
+                let out = service.plan_epoch(tick);
+                decisions += out.len() as u64;
+                tick += 1;
+                out
+            });
+            if b.results().len() == before {
+                continue; // `-- filter` skipped this case
+            }
+            let mean = b.results()[before].summary.mean;
+            let epochs_per_sec = 1.0 / mean.max(1e-12);
+            let s = service.stats();
+            let degraded_rate = s.degraded_decisions as f64 / decisions.max(1) as f64;
+            println!(
+                "churn/{model}/{label}: {epochs_per_sec:.0} epochs/s, \
+                 degraded {:.2}% of {decisions} decisions",
+                degraded_rate * 100.0
+            );
+            rows.push(Json::obj(vec![
+                ("model", Json::str(*model)),
+                ("churn", Json::num(p)),
+                ("devices", Json::num(DEVICES as f64)),
+                ("mean_epoch_s", Json::num(mean)),
+                ("epochs_per_sec", Json::num(epochs_per_sec)),
+                ("decisions", Json::num(decisions as f64)),
+                ("degraded_rate", Json::num(degraded_rate)),
+                ("degraded_stale", Json::num(service.degraded_stale() as f64)),
+                ("degraded_budget", Json::num(service.degraded_budget() as f64)),
+                ("spec_deltas", Json::num(s.spec_deltas as f64)),
+            ]));
+        }
+    }
+    b.finish();
+
+    if smoke {
+        println!("smoke mode: skipping BENCH_PR6.json");
+        return;
+    }
+    let out = std::env::var("FASTSPLIT_CHURN_OUT").unwrap_or_else(|_| "BENCH_PR6.json".into());
+    if out != "-" && !rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("churn")),
+            ("measured", Json::Bool(true)),
+            (
+                "note",
+                Json::str(
+                    "PlannerService epoch loop (deltas + reports + plan_epoch) over an \
+                     8-device fleet; churn level = per-epoch leave prob = stale-report \
+                     prob, strict staleness bound (0), re-joins at prob 1/2",
+                ),
+            ),
+            ("results", Json::Arr(rows)),
+        ]);
+        match std::fs::write(&out, doc.pretty() + "\n") {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
+    }
+}

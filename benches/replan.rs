@@ -219,6 +219,10 @@ fn main() {
                 gs.flow_solves - 1,
                 "{model}/{kind}: a non-first solve fell back to cold"
             );
+            assert_eq!(
+                gs.fallback_cold_solves, 0,
+                "{model}/{kind}: the incremental repair dead-ended (fallback_cold_solves)"
+            );
 
             let before = b.results().len();
             let mut i = 0;
@@ -275,6 +279,10 @@ fn main() {
                     (
                         "augment_rounds_per_solve",
                         Json::num(s.augment_rounds as f64 / solves),
+                    ),
+                    (
+                        "fallback_cold_solves",
+                        Json::num(s.fallback_cold_solves as f64),
                     ),
                 ]));
             }

@@ -4,7 +4,10 @@
 
 use super::costmodel::{partition_to_cut, stage_cost_graph};
 use crate::net::{EdgeNetwork, NetConfig};
-use crate::partition::{FleetSpec, FleetStats, JointPlanner, PlanRequest, Problem};
+use crate::partition::{
+    DecisionProvenance, FleetSpec, FleetStats, JointOptions, PlannerService, Problem,
+    ServiceOptions,
+};
 use crate::profiles::{DeviceProfile, TrainCfg};
 use crate::runtime::data::Synthetic;
 use crate::runtime::SplitTrainer;
@@ -78,6 +81,10 @@ pub struct EpochReport {
     /// True iff the decision ran a fresh solve (false only when the facade
     /// served the tier's bit-identical cached decision).
     pub decision_refreshed: bool,
+    /// Where the decision came from (`Fresh`/`Cached` in this fault-free
+    /// loop — every report is current-tick, so the service's degraded-mode
+    /// policy never triggers; see `partition::service`).
+    pub provenance: DecisionProvenance,
     /// Real bytes that crossed the simulated wire this epoch.
     pub wire_bytes: u64,
     /// Real wall-clock of the epoch's PJRT execution.
@@ -90,14 +97,18 @@ pub struct Coordinator {
     trainer: SplitTrainer,
     net: EdgeNetwork,
     fleet: Vec<DeviceProfile>,
-    /// The joint planning facade: per-tier stage cost graphs and
-    /// transformed networks, deduplicated and built once at construction
-    /// (the model and the training config are fixed for the run). Each
-    /// epoch's decision is a single [`JointPlanner::plan`] call — with the
-    /// default infinite `server_capacity` that is bit-identical to the
-    /// plain fleet engine; a finite capacity makes the decision
-    /// congestion-aware.
-    planner: JointPlanner,
+    /// The planning service: the churn-tolerant epoch loop over the joint
+    /// facade (per-tier stage cost graphs and transformed networks,
+    /// deduplicated and built once — the model and the training config are
+    /// fixed for the run). The leader reports every device's sampled link
+    /// at the epoch tick and plans the epoch in one
+    /// [`PlannerService::plan_epoch`] call — with the default infinite
+    /// `server_capacity` the underlying plan is bit-identical to the plain
+    /// fleet engine; a finite capacity makes it congestion-aware. The
+    /// strict staleness bound (0) means any device whose report ever goes
+    /// missing would be served its last-good decision marked `Degraded`
+    /// instead of crashing the loop.
+    service: PlannerService,
     data: Synthetic,
     eval_batch: crate::runtime::data::Batch,
     sim_time: f64,
@@ -115,14 +126,21 @@ impl Coordinator {
         let spec = FleetSpec::from_fleet(&fleet, |d| {
             stage_cost_graph(trainer.manifest(), d, &server, &cfg.train)
         });
-        let planner = JointPlanner::with_capacity(spec, cfg.server_capacity);
+        let service = PlannerService::new(
+            spec,
+            ServiceOptions {
+                staleness_bound: 0,
+                solve_budget: u64::MAX,
+                joint: JointOptions::with_capacity(cfg.server_capacity),
+            },
+        );
         let net = EdgeNetwork::new(cfg.net.clone());
         Ok(Coordinator {
             cfg,
             trainer,
             net,
             fleet,
-            planner,
+            service,
             data,
             eval_batch,
             sim_time: 0.0,
@@ -145,7 +163,7 @@ impl Coordinator {
     /// O(L) scan — plus the shared-capacity price-loop counters; mirrors
     /// [`crate::sim::Trainer::planner_stats`]).
     pub fn planner_stats(&self) -> FleetStats {
-        self.planner.stats()
+        self.service.stats()
     }
 
     /// Run one epoch of the Sec. III-A loop.
@@ -153,53 +171,45 @@ impl Coordinator {
         let epoch = self.epoch;
         self.epoch += 1;
 
-        // 1. Collect network + device information.
+        // 1. Collect network + device information: every device's current
+        // link is sampled and reported to the planning service at the
+        // epoch tick (channel simulation, so it stays outside the timed
+        // region below). All reports are current-tick, so nothing is stale
+        // and the service plans everyone fresh — under a finite server
+        // capacity that is the coupled whole-fleet batch (the server
+        // contention only exists fleet-wide); with the default ∞ capacity
+        // each tier is a warm refresh + solve, bit-identical to the plain
+        // fleet engine.
         let device = self.net.select_device(self.sim_time);
-        let link = self.net.sample_link(device, self.sim_time).to_link();
-        let tier = self.planner.spec().tier_of(device);
-        let tier_name = self.planner.spec().tier_name(tier);
+        let tier = self.service.spec().tier_of(device);
+        let tier_name = self.service.spec().tier_name(tier);
+        let mut link = None;
+        for d in 0..self.service.spec().num_devices() {
+            let l = self.net.sample_link(d, self.sim_time).to_link();
+            if d == device {
+                link = Some(l);
+            }
+            self.service.report(d, l, epoch as u64);
+        }
+        let link = link.expect("selected device is in the fleet");
 
-        // 2. Decide the partition through the planning facade. Under a
-        // finite server capacity the epoch is planned for the WHOLE fleet
-        // (every device's current link sampled into one coupled batch —
-        // the server contention only exists fleet-wide; a single-device
-        // request could never congest a capacity ≥ 1); with the default
-        // ∞ capacity the single-request fast path is bit-identical to the
-        // plain fleet engine. Link sampling is channel simulation, so it
-        // runs before the timer: the timed region is exactly the per-epoch
-        // decision work (capacity refresh + warm solve per dirty tier,
-        // plus the price loop when congested) — the paper's Table I
-        // decision metric.
-        let requests: Vec<PlanRequest> = if self.cfg.server_capacity.is_finite() {
-            (0..self.planner.spec().num_devices())
-                .map(|d| {
-                    let l = if d == device {
-                        link
-                    } else {
-                        self.net.sample_link(d, self.sim_time).to_link()
-                    };
-                    PlanRequest {
-                        device: d,
-                        tier: self.planner.spec().tier_of(d),
-                        link: l,
-                    }
-                })
-                .collect()
-        } else {
-            vec![PlanRequest { device, tier, link }]
-        };
+        // 2. Decide the partition through the service's epoch loop. The
+        // timed region is exactly the per-epoch decision work (capacity
+        // refresh + warm solve per dirty tier, plus the price loop when
+        // congested) — the paper's Table I decision metric.
         let t0 = Instant::now();
         let decision = self
-            .planner
-            .plan(&requests)
+            .service
+            .plan_epoch(epoch as u64)
             .into_iter()
             .find(|d| d.device == device)
             .expect("one decision per device");
         let decision_time = t0.elapsed().as_secs_f64();
         let decision_refreshed = decision.stats.refreshed;
+        let provenance = decision.provenance;
         let partition = decision.partition;
         let cut = partition_to_cut(&partition);
-        let problem = Problem::new(self.planner.spec().tier_costs(tier), link);
+        let problem = Problem::new(self.service.spec().tier_costs(tier), link);
         let breakdown = DelayBreakdown::of(&problem, &partition.device_set);
 
         // 3. Execute N_loc real local iterations at the chosen cut.
@@ -229,6 +239,7 @@ impl Coordinator {
             breakdown,
             decision_time,
             decision_refreshed,
+            provenance,
             wire_bytes,
             wall_time,
         })

@@ -424,16 +424,86 @@ fn tier_inputs<'a>(
     }
 }
 
+/// One churn event against a live fleet: the planner-as-a-service delta
+/// vocabulary (PR 6). Deltas patch the [`FleetSpec`] — and, through
+/// [`FleetPlanner::apply`], the planner's per-tier SoA state — in place:
+/// untouched tiers keep their warm flows and cached decisions, a retired
+/// tier's state is archived behind a TTL (see [`FleetOptions::retire_ttl`])
+/// so late requests get a deterministic [`DecisionProvenance::Retired`]
+/// answer instead of a panic.
+#[derive(Clone, Debug)]
+pub enum SpecDelta {
+    /// A new device tier joins the fleet. The cost graph must share the
+    /// fleet's SoA shape (same model + server; only ξ_D may differ) —
+    /// checked by the same `assert_shared_shape` as construction.
+    AddTier {
+        name: &'static str,
+        costs: CostGraph,
+    },
+    /// A tier leaves the fleet. Its devices are detached (become departed)
+    /// and the planner archives the tier's last-good decision behind a TTL.
+    /// Tier indices are stable: the slot stays, marked retired.
+    RetireTier { tier: usize },
+    /// A device joins (or re-joins) the fleet on an active tier. `device`
+    /// is the caller-scoped slot: out-of-range slots grow the mapping,
+    /// in-range slots must currently be departed.
+    AddDevice { device: usize, tier: usize },
+    /// A device leaves the fleet; its slot stays (stable indices) but maps
+    /// to no tier until a re-join.
+    RemoveDevice { device: usize },
+    /// A device moves between two active tiers (e.g. a hardware swap or a
+    /// profile re-measurement reassigning it).
+    MigrateDevice { device: usize, tier: usize },
+}
+
+/// Where a served decision came from — the churn-tolerant service layer's
+/// provenance contract (PR 6). Every decision is *feasible* regardless of
+/// provenance (cut feasibility is link-independent; see RESILIENCE.md);
+/// provenance tells the caller how fresh its cost is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecisionProvenance {
+    /// Solved this epoch against the request's link.
+    Fresh,
+    /// Served bit-exact from the tier's warm cache (same link as the
+    /// cached solve — earlier in the batch or a previous epoch).
+    Cached,
+    /// Served by the degraded-mode policy of `partition::service`: the
+    /// last-good decision, because the input was stale or the solve
+    /// budget ran out. Cost is within the stale-σ envelope (PERF.md PR 6).
+    Degraded(DegradedReason),
+    /// The request named a retired tier; the answer is the tier's archived
+    /// last-good cut (within the retire TTL) or the device-only fallback.
+    Retired,
+}
+
+/// Why the service degraded a decision instead of re-planning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradedReason {
+    /// The device's link report was older than the staleness bound.
+    StaleLink,
+    /// The per-epoch solve budget was exhausted before this device's
+    /// group could be re-planned.
+    BudgetExceeded,
+}
+
 /// A fleet of devices deduplicated into tiers: one [`CostGraph`] per tier
 /// (same model + server, per-tier device compute) and the device → tier
 /// mapping. This is the construction-time input of [`FleetPlanner`]; the
 /// coordinator and the simulator both build it with
 /// [`FleetSpec::from_fleet`], which replaces their previously duplicated
-/// dedup loops.
+/// dedup loops. Post-construction the spec is live: [`FleetSpec::apply`]
+/// patches it with churn events ([`SpecDelta`]) under two stability
+/// invariants — tier indices never move (a retired tier keeps its slot)
+/// and device slots never move (a departed device keeps its slot, mapped
+/// to no tier).
 #[derive(Clone)]
 pub struct FleetSpec {
     tiers: Vec<(&'static str, CostGraph)>,
-    tier_of_device: Vec<usize>,
+    /// Per tier: true once the tier left the fleet (slot retained).
+    retired: Vec<bool>,
+    /// Per device slot: `Some(tier)` while the device is in the fleet,
+    /// `None` after it departs (slot retained for stable ids).
+    tier_of_device: Vec<Option<usize>>,
 }
 
 impl FleetSpec {
@@ -445,8 +515,9 @@ impl FleetSpec {
             "device mapped to unknown tier"
         );
         FleetSpec {
+            retired: vec![false; tiers.len()],
             tiers,
-            tier_of_device,
+            tier_of_device: tier_of_device.into_iter().map(Some).collect(),
         }
     }
 
@@ -480,13 +551,32 @@ impl FleetSpec {
         self.tiers.len()
     }
 
+    /// Device *slots*, including departed devices (slots are stable ids —
+    /// see [`FleetSpec::active_devices`] for the live count).
     pub fn num_devices(&self) -> usize {
         self.tier_of_device.len()
     }
 
-    /// Tier index of a device.
+    /// Devices currently in the fleet.
+    pub fn active_devices(&self) -> usize {
+        self.tier_of_device.iter().filter(|t| t.is_some()).count()
+    }
+
+    /// Tier index of a device; panics if the device has departed (use
+    /// [`FleetSpec::tier_of_opt`] when churn is in play).
     pub fn tier_of(&self, device: usize) -> usize {
         self.tier_of_device[device]
+            .unwrap_or_else(|| panic!("device {device} has departed the fleet"))
+    }
+
+    /// Tier index of a device, `None` once it departed.
+    pub fn tier_of_opt(&self, device: usize) -> Option<usize> {
+        self.tier_of_device.get(device).copied().flatten()
+    }
+
+    /// True once `tier` left the fleet (its slot is retained).
+    pub fn tier_retired(&self, tier: usize) -> bool {
+        self.retired[tier]
     }
 
     pub fn tier_name(&self, tier: usize) -> &'static str {
@@ -497,20 +587,75 @@ impl FleetSpec {
         &self.tiers[tier].1
     }
 
-    /// One [`PlanRequest`] per device of the fleet, each carrying its
-    /// tier's link — the per-tier broadcast channel-state pattern of a
+    /// One [`PlanRequest`] per *active* device of the fleet, each carrying
+    /// its tier's link — the per-tier broadcast channel-state pattern of a
     /// fleet epoch (shared by the coordinator demo, the Table I fleet
-    /// column, and `benches/fleet.rs`).
+    /// column, and `benches/fleet.rs`). Departed device slots are skipped.
     pub fn requests(&self, link_of_tier: impl Fn(usize) -> Link) -> Vec<PlanRequest> {
         self.tier_of_device
             .iter()
             .enumerate()
-            .map(|(device, &tier)| PlanRequest {
-                device,
-                tier,
-                link: link_of_tier(tier),
+            .filter_map(|(device, &tier)| {
+                tier.map(|tier| PlanRequest {
+                    device,
+                    tier,
+                    link: link_of_tier(tier),
+                })
             })
             .collect()
+    }
+
+    /// Patch the spec with one churn event. Panics on malformed deltas
+    /// (unknown tier, double-retire, adding over a live slot, removing a
+    /// departed device, targeting a retired tier) — churn is a stream of
+    /// facts about the fleet, and a contradictory fact is a caller bug,
+    /// not a state to absorb silently.
+    pub fn apply(&mut self, delta: &SpecDelta) {
+        match delta {
+            SpecDelta::AddTier { name, costs } => {
+                self.tiers.push((name, costs.clone()));
+                self.retired.push(false);
+            }
+            SpecDelta::RetireTier { tier } => {
+                assert!(*tier < self.tiers.len(), "retire of unknown tier {tier}");
+                assert!(!self.retired[*tier], "tier {tier} already retired");
+                self.retired[*tier] = true;
+                // Detach the tier's devices: they depart with their tier.
+                for slot in &mut self.tier_of_device {
+                    if *slot == Some(*tier) {
+                        *slot = None;
+                    }
+                }
+            }
+            SpecDelta::AddDevice { device, tier } => {
+                assert!(*tier < self.tiers.len(), "join to unknown tier {tier}");
+                assert!(!self.retired[*tier], "join to retired tier {tier}");
+                if *device >= self.tier_of_device.len() {
+                    self.tier_of_device.resize(*device + 1, None);
+                }
+                assert!(
+                    self.tier_of_device[*device].is_none(),
+                    "device {device} is already in the fleet"
+                );
+                self.tier_of_device[*device] = Some(*tier);
+            }
+            SpecDelta::RemoveDevice { device } => {
+                assert!(
+                    self.tier_of_opt(*device).is_some(),
+                    "device {device} is not in the fleet"
+                );
+                self.tier_of_device[*device] = None;
+            }
+            SpecDelta::MigrateDevice { device, tier } => {
+                assert!(*tier < self.tiers.len(), "migrate to unknown tier {tier}");
+                assert!(!self.retired[*tier], "migrate to retired tier {tier}");
+                assert!(
+                    self.tier_of_opt(*device).is_some(),
+                    "device {device} is not in the fleet"
+                );
+                self.tier_of_device[*device] = Some(*tier);
+            }
+        }
     }
 }
 
@@ -541,6 +686,13 @@ pub struct FleetOptions {
     /// tier's previous solve (cost-equivalent decisions); off = the PR-1
     /// bit-identical cold-refresh path.
     pub incremental: bool,
+    /// How many `plan` epochs a retired tier's archived last-good decision
+    /// stays servable. Within the TTL a late request for the tier is
+    /// answered with the archived cut re-evaluated at the request's link
+    /// (always feasible — cut feasibility is link-independent); past it
+    /// the archive is dropped and the deterministic device-only fallback
+    /// is served instead. Both are [`DecisionProvenance::Retired`].
+    pub retire_ttl: u64,
 }
 
 impl Default for FleetOptions {
@@ -550,6 +702,7 @@ impl Default for FleetOptions {
             closure_edges: true,
             block_reduction: true,
             incremental: true,
+            retire_ttl: 64,
         }
     }
 }
@@ -588,6 +741,9 @@ pub struct PlanDecision {
     /// for chain models) — see [`Partition::cut_layer`].
     pub cut_layer: Option<usize>,
     pub stats: DecisionStats,
+    /// Where this decision came from (fresh solve, warm cache, degraded
+    /// fallback, retired-tier archive) — the PR-6 service contract.
+    pub provenance: DecisionProvenance,
 }
 
 /// Aggregate solver counters (see the module docs' batched-refresh
@@ -645,6 +801,23 @@ pub struct FleetStats {
     /// top of the λ=1 epoch pass. Each is also counted in `refreshes`/
     /// `flow_solves` (or `linear_scans`) by the tier that served it.
     pub joint_resolves: u64,
+    /// Incremental repair attempts that dead-ended and fell back to a
+    /// cold refresh + Dinic run. Always `<= flow_solves -
+    /// incremental_solves`; 0 when [`FleetOptions::incremental`] is off
+    /// or every repair succeeded. Each fallback's cold solve is already
+    /// in `flow_solves` — this counter only says the warm path was tried
+    /// and lost (the PR-4 `None` dead-end that was previously invisible).
+    pub fallback_cold_solves: u64,
+    /// [`SpecDelta`] events applied through [`FleetPlanner::apply`].
+    pub spec_deltas: u64,
+    /// Decisions served with [`DecisionProvenance::Retired`] (late
+    /// requests for a retired tier).
+    pub retired_decisions: u64,
+    /// Decisions the service layer served with
+    /// [`DecisionProvenance::Degraded`] (stale input or budget overrun;
+    /// counted here so one [`FleetStats`] carries the whole provenance
+    /// story — see `partition::service`).
+    pub degraded_decisions: u64,
 }
 
 impl FleetStats {
@@ -684,6 +857,48 @@ struct TierState {
     incremental_solves: u64,
     repair_pushes: u64,
     augment_rounds: u64,
+    fallback_cold_solves: u64,
+}
+
+/// A retired tier's archived remains: the last-good decision behind a TTL
+/// plus the tier's lifetime counters (so [`FleetPlanner::stats`] stays
+/// monotone across a retirement). The network, scratch and SoA vectors are
+/// freed — a retired tier never solves again.
+#[derive(Default)]
+struct RetiredTier {
+    /// The tier's cached decision at retirement; dropped once `ttl`
+    /// reaches zero. Served to late requests re-evaluated at the
+    /// request's link (cut feasibility is link-independent).
+    last: Option<(Link, Partition)>,
+    /// Remaining `plan` epochs the archive stays servable.
+    ttl: u64,
+    refreshes: u64,
+    flow_solves: u64,
+    linear_scans: u64,
+    incremental_solves: u64,
+    repair_pushes: u64,
+    augment_rounds: u64,
+    fallback_cold_solves: u64,
+}
+
+/// A tier slot of the planner: live solver state, or the archived remains
+/// of a retired tier (slots are stable — tier indices never move).
+enum TierEntry {
+    Active(TierState),
+    Retired(RetiredTier),
+}
+
+impl TierEntry {
+    fn active_mut(&mut self) -> Option<&mut TierState> {
+        match self {
+            TierEntry::Active(t) => Some(t),
+            TierEntry::Retired(_) => None,
+        }
+    }
+
+    fn is_retired(&self) -> bool {
+        matches!(self, TierEntry::Retired(_))
+    }
 }
 
 /// Refresh + solve one tier for `link` at server congestion price `lambda`
@@ -729,6 +944,7 @@ fn solve_tier(
         incremental_solves,
         repair_pushes,
         augment_rounds,
+        fallback_cold_solves,
         ..
     } = tier;
     // Problem::with_pin validates the link (positive rates), exactly like
@@ -748,7 +964,9 @@ fn solve_tier(
             // refreshes of a net that holds a solved flow; `has_flow`
             // certifies the latter, the engine's fixed spec the former.
             let mut cut = None;
+            let mut attempted_repair = false;
             if options.incremental && *has_flow {
+                attempted_repair = true;
                 refresh_capacities_preserving(net, shape, exec_base, sigma, lambda, inc);
                 if let Some((c, rs)) = inc.resolve(net, shape.source, shape.sink, scratch) {
                     *incremental_solves += 1;
@@ -761,6 +979,9 @@ fn solve_tier(
                 // all flow, so the fallback solve is exact regardless.
             }
             let cut = cut.unwrap_or_else(|| {
+                if attempted_repair {
+                    *fallback_cold_solves += 1;
+                }
                 refresh_capacities(net, shape, exec_base, sigma, lambda);
                 dinic_with(net, shape.source, shape.sink, scratch)
             });
@@ -864,7 +1085,11 @@ pub struct FleetPlanner {
     /// when that DAG is a chain (every tier then takes the O(L) linear-scan
     /// fast path — e.g. ResNet/GPT-2 fleets, whose reduced DAGs are chains).
     shape: Option<NetShape>,
-    tiers: Vec<TierState>,
+    /// The frozen zero-capacity prototype network ([`NetShape::build`]),
+    /// kept so [`SpecDelta::AddTier`] can clone a fresh tier network
+    /// without rebuilding the shape; `None` on the linear fast path.
+    proto: Option<FlowNetwork>,
+    tiers: Vec<TierEntry>,
     /// (vertices, edges) of the full model DAG.
     full_dag: (usize, usize),
     /// (vertices, edges) of the DAG the solver actually runs on.
@@ -873,6 +1098,9 @@ pub struct FleetPlanner {
     blocks_abstracted: usize,
     plans: u64,
     requests: u64,
+    spec_deltas: u64,
+    retired_decisions: u64,
+    degraded_decisions: u64,
 }
 
 impl FleetPlanner {
@@ -941,7 +1169,7 @@ impl FleetPlanner {
                 let solve_costs = reduction
                     .as_ref()
                     .map_or(&spec.tiers[t].1, |r| &r.reduced[t]);
-                TierState {
+                TierEntry::Active(TierState {
                     net: proto.clone(),
                     exec_base: NetShape::exec_base(solve_costs),
                     scratch: DinicScratch::default(),
@@ -954,7 +1182,8 @@ impl FleetPlanner {
                     incremental_solves: 0,
                     repair_pushes: 0,
                     augment_rounds: 0,
-                }
+                    fallback_cold_solves: 0,
+                })
             })
             .collect();
         FleetPlanner {
@@ -962,6 +1191,7 @@ impl FleetPlanner {
             options,
             reduction,
             shape,
+            proto,
             tiers,
             full_dag,
             solve_dag,
@@ -969,6 +1199,9 @@ impl FleetPlanner {
             blocks_abstracted,
             plans: 0,
             requests: 0,
+            spec_deltas: 0,
+            retired_decisions: 0,
+            degraded_decisions: 0,
         }
     }
 
@@ -979,6 +1212,7 @@ impl FleetPlanner {
     pub fn plan(&mut self, requests: &[PlanRequest]) -> Vec<PlanDecision> {
         self.plans += 1;
         self.requests += requests.len() as u64;
+        self.tick_retired_ttls();
         for r in requests {
             assert!(
                 r.tier < self.spec.num_tiers(),
@@ -997,8 +1231,22 @@ impl FleetPlanner {
         // stays allocation-free apart from the returned decision itself —
         // the PR-1 contract.
         if let [r] = requests {
+            if self.tiers[r.tier].is_retired() {
+                self.retired_decisions += 1;
+                let partition = self.retired_partition(r.tier, r.link);
+                return vec![PlanDecision {
+                    device: r.device,
+                    tier: r.tier,
+                    cut_layer: partition.cut_layer(),
+                    partition,
+                    stats: DecisionStats { refreshed: false },
+                    provenance: DecisionProvenance::Retired,
+                }];
+            }
             let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, r.tier);
-            let tier = &mut self.tiers[r.tier];
+            let tier = self.tiers[r.tier]
+                .active_mut()
+                .expect("retired handled above");
             let clean = matches!(&tier.solved, Some((l, _)) if *l == r.link);
             if !clean {
                 let partition = solve_tier(
@@ -1019,6 +1267,11 @@ impl FleetPlanner {
                 cut_layer: partition.cut_layer(),
                 partition,
                 stats: DecisionStats { refreshed: !clean },
+                provenance: if clean {
+                    DecisionProvenance::Cached
+                } else {
+                    DecisionProvenance::Fresh
+                },
             }];
         }
 
@@ -1037,6 +1290,25 @@ impl FleetPlanner {
             by_tier[r.tier][g].1.push(i);
         }
 
+        // Answer retired tiers' groups up front (sequentially — a retired
+        // answer is a cache read + one Eq. (7) evaluation, no solver), so
+        // the job sweep below only ever sees live tiers.
+        let mut results: Vec<Option<(Partition, bool, DecisionProvenance)>> =
+            vec![None; requests.len()];
+        for (t, groups) in by_tier.iter().enumerate() {
+            if groups.is_empty() || !self.tiers[t].is_retired() {
+                continue;
+            }
+            for (link, idxs) in groups {
+                let partition = self.retired_partition(t, *link);
+                self.retired_decisions += idxs.len() as u64;
+                for &i in idxs {
+                    results[i] =
+                        Some((partition.clone(), false, DecisionProvenance::Retired));
+                }
+            }
+        }
+
         // Per-tier solve sweep over explicit jobs. Tiers are independent
         // (each TierState owns its network + scratch and reads only the
         // shared shape/spec), so the jobs run serially or — behind the
@@ -1052,11 +1324,13 @@ impl FleetPlanner {
             .iter_mut()
             .zip(by_tier.iter())
             .enumerate()
-            .map(|(t, (tier, groups))| TierJob {
-                t,
-                tier,
-                groups,
-                out: vec![None; groups.len()],
+            .filter_map(|(t, (entry, groups))| {
+                entry.active_mut().map(|tier| TierJob {
+                    t,
+                    tier,
+                    groups,
+                    out: vec![None; groups.len()],
+                })
             })
             .collect();
         let run = |job: &mut TierJob| {
@@ -1072,13 +1346,18 @@ impl FleetPlanner {
         }
 
         // Serial fan-out of the per-group decisions, in request order.
-        let mut results: Vec<Option<(Partition, bool)>> = vec![None; requests.len()];
         for job in &jobs {
             for (g, (_, idxs)) in job.groups.iter().enumerate() {
                 let (partition, fresh) = job.out[g].as_ref().expect("every group is solved");
                 for (j, &i) in idxs.iter().enumerate() {
                     // Only the group's first request carries refreshed=true.
-                    results[i] = Some((partition.clone(), *fresh && j == 0));
+                    let refreshed = *fresh && j == 0;
+                    let provenance = if refreshed {
+                        DecisionProvenance::Fresh
+                    } else {
+                        DecisionProvenance::Cached
+                    };
+                    results[i] = Some((partition.clone(), refreshed, provenance));
                 }
             }
         }
@@ -1087,16 +1366,139 @@ impl FleetPlanner {
             .iter()
             .zip(results)
             .map(|(r, res)| {
-                let (partition, refreshed) = res.expect("every request is solved above");
+                let (partition, refreshed, provenance) =
+                    res.expect("every request is solved above");
                 PlanDecision {
                     device: r.device,
                     tier: r.tier,
                     cut_layer: partition.cut_layer(),
                     partition,
                     stats: DecisionStats { refreshed },
+                    provenance,
                 }
             })
             .collect()
+    }
+
+    /// Advance every retired tier's TTL by one epoch, dropping archives
+    /// that expired. Called once per [`FleetPlanner::plan`]; an archive
+    /// retired with `retire_ttl = n` stays servable for exactly the next
+    /// `n` plan epochs (the drop happens on epoch `n + 1`'s entry).
+    fn tick_retired_ttls(&mut self) {
+        for entry in &mut self.tiers {
+            if let TierEntry::Retired(r) = entry {
+                if r.ttl == 0 {
+                    r.last = None;
+                } else {
+                    r.ttl -= 1;
+                }
+            }
+        }
+    }
+
+    /// The deterministic answer for a late request against a retired tier:
+    /// the archived last-good cut re-evaluated at the request's link while
+    /// the TTL holds, the device-only fallback after (or if the tier never
+    /// solved). Both are feasible — the device-only set trivially, the
+    /// archived cut because cut feasibility is link-independent.
+    fn retired_partition(&mut self, tier: usize, link: Link) -> Partition {
+        let problem = Problem::with_pin(&self.spec.tiers[tier].1, link, self.options.pin_inputs);
+        let archived = match &self.tiers[tier] {
+            TierEntry::Retired(r) => r.last.as_ref().map(|(_, p)| p.device_set.clone()),
+            TierEntry::Active(_) => unreachable!("retired_partition on a live tier"),
+        };
+        match archived {
+            Some(device_set) => problem.partition(device_set),
+            None => problem.device_only(),
+        }
+    }
+
+    /// Apply one churn event to the live planner: patch the spec and the
+    /// per-tier SoA state in place. Untouched tiers keep their warm flows
+    /// and cached decisions (pinned by [`FleetStats`] counters in the
+    /// churn suite); device-level deltas touch no solver state at all
+    /// (the tier map is request routing, not solver input).
+    pub fn apply(&mut self, delta: &SpecDelta) {
+        self.spec_deltas += 1;
+        match delta {
+            SpecDelta::AddTier { name, costs } => {
+                assert_shared_shape(&self.spec.tiers[0].1, costs, name);
+                // Extend the fleet-wide reduction with the tier's reduced
+                // graph (ξ_D re-derived through the shared mapping, same
+                // as construction), then clone a zero-capacity network
+                // off the stored prototype.
+                if let Some(r) = &mut self.reduction {
+                    let reduced = retarget_xi_d(&r.reduced[0], &r.to_reduced, costs);
+                    r.reduced.push(reduced);
+                }
+                let exec_base = match &self.reduction {
+                    Some(r) => NetShape::exec_base(r.reduced.last().expect("just pushed")),
+                    None => NetShape::exec_base(costs),
+                };
+                self.tiers.push(TierEntry::Active(TierState {
+                    net: self.proto.clone(),
+                    exec_base,
+                    scratch: DinicScratch::default(),
+                    inc: IncrementalScratch::default(),
+                    has_flow: false,
+                    solved: None,
+                    refreshes: 0,
+                    flow_solves: 0,
+                    linear_scans: 0,
+                    incremental_solves: 0,
+                    repair_pushes: 0,
+                    augment_rounds: 0,
+                    fallback_cold_solves: 0,
+                }));
+                self.spec.apply(delta);
+            }
+            SpecDelta::RetireTier { tier } => {
+                assert!(*tier < self.tiers.len(), "retire of unknown tier {tier}");
+                let old = std::mem::replace(
+                    &mut self.tiers[*tier],
+                    TierEntry::Retired(RetiredTier::default()),
+                );
+                let state = match old {
+                    TierEntry::Active(s) => s,
+                    TierEntry::Retired(_) => panic!("tier {tier} already retired"),
+                };
+                // Archive the cached decision and the lifetime counters
+                // (stats stay monotone); free the network and scratch.
+                self.tiers[*tier] = TierEntry::Retired(RetiredTier {
+                    last: state.solved,
+                    ttl: self.options.retire_ttl,
+                    refreshes: state.refreshes,
+                    flow_solves: state.flow_solves,
+                    linear_scans: state.linear_scans,
+                    incremental_solves: state.incremental_solves,
+                    repair_pushes: state.repair_pushes,
+                    augment_rounds: state.augment_rounds,
+                    fallback_cold_solves: state.fallback_cold_solves,
+                });
+                self.spec.apply(delta);
+            }
+            // Device membership is pure request routing: no per-tier
+            // solver state to touch. The spec validates the delta.
+            SpecDelta::AddDevice { .. }
+            | SpecDelta::RemoveDevice { .. }
+            | SpecDelta::MigrateDevice { .. } => self.spec.apply(delta),
+        }
+    }
+
+    /// The link of a tier's warm cached decision (`None` for retired or
+    /// never-solved tiers) — the service layer's solve-budget estimator.
+    pub(crate) fn cached_link(&self, tier: usize) -> Option<Link> {
+        match &self.tiers[tier] {
+            TierEntry::Active(t) => t.solved.as_ref().map(|(l, _)| *l),
+            TierEntry::Retired(_) => None,
+        }
+    }
+
+    /// Record `n` degraded decisions served by the service layer on this
+    /// planner's behalf (so [`FleetStats`] carries the full provenance
+    /// accounting in one place).
+    pub(crate) fn note_degraded(&mut self, n: u64) {
+        self.degraded_decisions += n;
     }
 
     /// Drop every tier's cached decision, forcing the next request per tier
@@ -1104,7 +1506,9 @@ impl FleetPlanner {
     /// to benchmark the warm solve path rather than the cache lookup.
     pub fn invalidate(&mut self) {
         for t in &mut self.tiers {
-            t.solved = None;
+            if let TierEntry::Active(t) = t {
+                t.solved = None;
+            }
         }
     }
 
@@ -1126,7 +1530,9 @@ impl FleetPlanner {
         self.plans += 1;
         self.requests += 1;
         let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, tier);
-        let t = &mut self.tiers[tier];
+        let t = self.tiers[tier]
+            .active_mut()
+            .unwrap_or_else(|| panic!("take_solve on retired tier {tier}"));
         solve_tier(
             self.shape.as_ref(),
             solve_costs,
@@ -1172,7 +1578,9 @@ impl FleetPlanner {
              (the Theorem 2 reduction is only valid at the dedicated price)"
         );
         let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, tier);
-        let t = &mut self.tiers[tier];
+        let t = self.tiers[tier]
+            .active_mut()
+            .unwrap_or_else(|| panic!("priced_solve on retired tier {tier}"));
         solve_tier(
             self.shape.as_ref(),
             solve_costs,
@@ -1195,15 +1603,41 @@ impl FleetPlanner {
             reduced_edges: self.solve_dag.1,
             blocks_detected: self.blocks_detected,
             blocks_abstracted: self.blocks_abstracted,
+            spec_deltas: self.spec_deltas,
+            retired_decisions: self.retired_decisions,
+            degraded_decisions: self.degraded_decisions,
             ..FleetStats::default()
         };
-        for t in &self.tiers {
-            s.refreshes += t.refreshes;
-            s.flow_solves += t.flow_solves;
-            s.linear_scans += t.linear_scans;
-            s.incremental_solves += t.incremental_solves;
-            s.repair_pushes += t.repair_pushes;
-            s.augment_rounds += t.augment_rounds;
+        for entry in &self.tiers {
+            // Retired tiers keep their lifetime counters (archived at
+            // retirement), so the aggregate stays monotone across churn.
+            let (r, f, l, i, p, a, fb) = match entry {
+                TierEntry::Active(t) => (
+                    t.refreshes,
+                    t.flow_solves,
+                    t.linear_scans,
+                    t.incremental_solves,
+                    t.repair_pushes,
+                    t.augment_rounds,
+                    t.fallback_cold_solves,
+                ),
+                TierEntry::Retired(t) => (
+                    t.refreshes,
+                    t.flow_solves,
+                    t.linear_scans,
+                    t.incremental_solves,
+                    t.repair_pushes,
+                    t.augment_rounds,
+                    t.fallback_cold_solves,
+                ),
+            };
+            s.refreshes += r;
+            s.flow_solves += f;
+            s.linear_scans += l;
+            s.incremental_solves += i;
+            s.repair_pushes += p;
+            s.augment_rounds += a;
+            s.fallback_cold_solves += fb;
         }
         s
     }
@@ -1711,6 +2145,15 @@ mod tests {
             s.repair_pushes > 0,
             "σ-shrinking steps must exercise the repair pass"
         );
+        // The PR-4 dead-end fallback is now counted, not silent: on this
+        // walk every repair succeeds, and the warm/fallback split must
+        // account for every post-first solve exactly.
+        assert_eq!(s.fallback_cold_solves, 0, "no repair may dead-end here");
+        assert_eq!(
+            s.incremental_solves + s.fallback_cold_solves,
+            steps - 1,
+            "every warm solve either repaired or fell back — nothing silent"
+        );
     }
 
     /// The parallel-feature determinism pin: the batched sweep (rayon
@@ -1870,5 +2313,213 @@ mod tests {
             vec![0, 1],
         );
         let _ = FleetPlanner::new(spec);
+    }
+
+    /// S3 + tentpole: two deltas in one tick that cancel out must be a
+    /// no-op against the warm caches — identical spec, zero extra solves,
+    /// every decision served bit-exact from the tier caches.
+    #[test]
+    fn churn_cancel_out_deltas_are_noops_against_warm_caches() {
+        let mut fleet = FleetPlanner::new(spec_for("block-residual", 8));
+        let reqs = fleet
+            .spec()
+            .requests(|t| Link::symmetric(2e5 * (1.0 + t as f64)));
+        let before_decisions = fleet.plan(&reqs);
+        let before = fleet.stats();
+        let tier = fleet.spec().tier_of(3);
+        fleet.apply(&SpecDelta::RemoveDevice { device: 3 });
+        fleet.apply(&SpecDelta::AddDevice { device: 3, tier });
+        assert_eq!(fleet.spec().tier_of(3), tier);
+        assert_eq!(fleet.spec().active_devices(), 8);
+        let after_decisions = fleet.plan(&reqs);
+        let after = fleet.stats();
+        assert_eq!(
+            after.solves(),
+            before.solves(),
+            "cancel-out churn must not dirty any tier"
+        );
+        assert_eq!(after.refreshes, before.refreshes);
+        assert_eq!(after.spec_deltas, 2);
+        for (a, b) in before_decisions.iter().zip(&after_decisions) {
+            assert_eq!(a.partition.device_set, b.partition.device_set);
+            assert_eq!(a.partition.delay.to_bits(), b.partition.delay.to_bits());
+            assert_eq!(b.provenance, DecisionProvenance::Cached);
+        }
+    }
+
+    /// S3: a fleet whose every device left is a valid (if silent) fleet —
+    /// stable slots, no requests, no-op epochs.
+    #[test]
+    fn churn_empty_fleet_after_all_devices_leave() {
+        let mut fleet = FleetPlanner::new(spec_for("block-residual", 4));
+        for d in 0..4 {
+            fleet.apply(&SpecDelta::RemoveDevice { device: d });
+        }
+        assert_eq!(fleet.spec().active_devices(), 0);
+        assert_eq!(fleet.spec().num_devices(), 4, "slots are stable ids");
+        let reqs = fleet.spec().requests(|_| Link::symmetric(2e5));
+        assert!(reqs.is_empty(), "departed devices issue no requests");
+        assert!(fleet.plan(&reqs).is_empty());
+    }
+
+    /// S3: a device re-joining on a different tier routes to that tier's
+    /// solver and gets an optimal decision for its new hardware.
+    #[test]
+    fn churn_device_rejoins_on_a_different_tier() {
+        let mut fleet = FleetPlanner::new(spec_for("googlenet", 8));
+        let old_tier = fleet.spec().tier_of(5);
+        let new_tier = (old_tier + 1) % fleet.spec().num_tiers();
+        fleet.apply(&SpecDelta::RemoveDevice { device: 5 });
+        assert_eq!(fleet.spec().tier_of_opt(5), None);
+        fleet.apply(&SpecDelta::AddDevice {
+            device: 5,
+            tier: new_tier,
+        });
+        assert_eq!(fleet.spec().tier_of(5), new_tier);
+        let link = Link::symmetric(6e5);
+        let d = fleet
+            .plan(&[PlanRequest {
+                device: 5,
+                tier: new_tier,
+                link,
+            }])
+            .pop()
+            .unwrap();
+        let p = Problem::new(fleet.spec().tier_costs(new_tier), link);
+        let cold = general_partition(&p);
+        assert_cut_cost_equal(&p, &d.partition, &cold);
+    }
+
+    /// Tentpole: a retired tier answers late requests deterministically —
+    /// the archived last-good cut re-costed at the request's link while
+    /// the TTL holds, the device-only fallback after. Never a panic,
+    /// never an infeasible set, never a solver run.
+    #[test]
+    fn churn_retired_tier_serves_archived_cut_then_device_only() {
+        let mut fleet = FleetPlanner::with_options(
+            spec_for("googlenet", 8),
+            FleetOptions {
+                retire_ttl: 1,
+                ..FleetOptions::default()
+            },
+        );
+        let link = Link::symmetric(4e5);
+        let d0 = fleet
+            .plan(&[PlanRequest {
+                device: 1,
+                tier: 1,
+                link,
+            }])
+            .pop()
+            .unwrap();
+        let solves_before = fleet.stats().solves();
+        fleet.apply(&SpecDelta::RetireTier { tier: 1 });
+        assert!(fleet.spec().tier_retired(1));
+        assert_eq!(
+            fleet.spec().tier_of_opt(1),
+            None,
+            "tier-1 devices depart with their tier"
+        );
+        // Within the TTL: the archived cut, re-evaluated at the late
+        // request's (different) link.
+        let late = Link::symmetric(9e5);
+        let d1 = fleet
+            .plan(&[PlanRequest {
+                device: 1,
+                tier: 1,
+                link: late,
+            }])
+            .pop()
+            .unwrap();
+        assert_eq!(d1.provenance, DecisionProvenance::Retired);
+        assert!(!d1.stats.refreshed);
+        assert_eq!(d1.partition.device_set, d0.partition.device_set);
+        let problem = Problem::new(fleet.spec().tier_costs(1), late);
+        assert!(problem.is_feasible(&d1.partition.device_set));
+        assert_eq!(
+            d1.partition.delay.to_bits(),
+            problem
+                .partition(d0.partition.device_set.clone())
+                .delay
+                .to_bits(),
+            "archived cut must be re-costed at the request's link"
+        );
+        // Past the TTL: the deterministic device-only fallback.
+        let d2 = fleet
+            .plan(&[PlanRequest {
+                device: 1,
+                tier: 1,
+                link: late,
+            }])
+            .pop()
+            .unwrap();
+        assert_eq!(d2.provenance, DecisionProvenance::Retired);
+        assert!(
+            d2.partition.device_set.iter().all(|&on| on),
+            "expired archive falls back to device-only"
+        );
+        let s = fleet.stats();
+        assert_eq!(s.retired_decisions, 2);
+        assert_eq!(s.solves(), solves_before, "retired answers never solve");
+    }
+
+    /// Tentpole: a tier joining mid-run solves exactly like a tier built
+    /// at construction — same reduction retargeting, same prototype
+    /// network — and leaves the existing tiers' warm state untouched.
+    #[test]
+    fn churn_added_tier_matches_a_fresh_planner() {
+        let m = models::by_name("googlenet").unwrap();
+        let build = |d: &DeviceProfile| {
+            CostGraph::build(&m, d, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+        };
+        let spec = FleetSpec::new(
+            vec![
+                ("jetson-tx1", build(&DeviceProfile::jetson_tx1())),
+                ("jetson-tx2", build(&DeviceProfile::jetson_tx2())),
+            ],
+            vec![0, 1],
+        );
+        let mut fleet = FleetPlanner::new(spec);
+        let link0 = Link::symmetric(3e5);
+        let _ = fleet.plan(&[PlanRequest {
+            device: 0,
+            tier: 0,
+            link: link0,
+        }]);
+        let warm = fleet.stats();
+        let new_costs = build(&DeviceProfile::jetson_agx_orin());
+        fleet.apply(&SpecDelta::AddTier {
+            name: "jetson-agx-orin",
+            costs: new_costs.clone(),
+        });
+        fleet.apply(&SpecDelta::AddDevice { device: 2, tier: 2 });
+        assert_eq!(fleet.spec().num_tiers(), 3);
+        let link = Link::symmetric(7e5);
+        let d = fleet
+            .plan(&[PlanRequest {
+                device: 2,
+                tier: 2,
+                link,
+            }])
+            .pop()
+            .unwrap();
+        let p = Problem::new(&new_costs, link);
+        let cold = general_partition(&p);
+        assert_cut_cost_equal(&p, &d.partition, &cold);
+        let s = fleet.stats();
+        assert_eq!(
+            s.solves(),
+            warm.solves() + 1,
+            "the join must cost exactly the new tier's own solve"
+        );
+        assert_eq!(s.spec_deltas, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "already retired")]
+    fn churn_double_retire_panics() {
+        let mut fleet = FleetPlanner::new(spec_for("block-residual", 4));
+        fleet.apply(&SpecDelta::RetireTier { tier: 2 });
+        fleet.apply(&SpecDelta::RetireTier { tier: 2 });
     }
 }

@@ -77,7 +77,8 @@
 //! counters included — which is the pinned ∞-capacity contract.
 
 use super::fleet::{
-    DecisionStats, FleetOptions, FleetPlanner, FleetSpec, FleetStats, PlanDecision, PlanRequest,
+    DecisionProvenance, DecisionStats, FleetOptions, FleetPlanner, FleetSpec, FleetStats,
+    PlanDecision, PlanRequest, SpecDelta,
 };
 use super::types::{Link, Partition, Problem};
 use crate::graph::enumerate_lower_sets;
@@ -485,6 +486,14 @@ impl JointPlanner {
         let mut group_of: std::collections::HashMap<(usize, u64, u64), usize> =
             std::collections::HashMap::new();
         for (i, r) in requests.iter().enumerate() {
+            // Retired tiers never join the congestion coupling: their
+            // devices have departed, their base answer is the archived
+            // [`DecisionProvenance::Retired`] decision (served verbatim
+            // below), and probing them would need a solver that no longer
+            // exists.
+            if self.fleet.spec().tier_retired(r.tier) {
+                continue;
+            }
             let key = (r.tier, r.link.up_bps.to_bits(), r.link.down_bps.to_bits());
             let g = *group_of.entry(key).or_insert_with(|| {
                 let costs = self.fleet.spec().tier_costs(r.tier);
@@ -635,12 +644,22 @@ impl JointPlanner {
                     // Only the group's first request carries refreshed=true
                     // (mirrors the fleet facade's duplicate handling).
                     stats: DecisionStats { refreshed: j == 0 },
+                    provenance: if j == 0 {
+                        DecisionProvenance::Fresh
+                    } else {
+                        DecisionProvenance::Cached
+                    },
                 });
             }
         }
         decisions
             .into_iter()
-            .map(|d| d.expect("every request belongs to a group"))
+            .enumerate()
+            .map(|(i, d)| {
+                // Requests for retired tiers bypassed the grouping above;
+                // their answer is the base pass's archived decision.
+                d.unwrap_or_else(|| base[i].clone())
+            })
             .collect()
     }
 
@@ -701,10 +720,36 @@ impl JointPlanner {
             s.incremental_solves += ps.incremental_solves;
             s.repair_pushes += ps.repair_pushes;
             s.augment_rounds += ps.augment_rounds;
+            s.fallback_cold_solves += ps.fallback_cold_solves;
         }
         s.price_iterations = self.price_iterations;
         s.joint_resolves = self.joint_resolves;
         s
+    }
+
+    /// Apply one churn event to the live planner: forwarded to the main
+    /// fleet engine and — so the two stay one fleet — to the unreduced
+    /// λ-probe sibling if it has been built (its `spec_deltas` counter is
+    /// probe-local and never reported; [`JointPlanner::stats`] counts the
+    /// main engine's).
+    pub fn apply_delta(&mut self, delta: &SpecDelta) {
+        self.fleet.apply(delta);
+        if let Some(p) = &mut self.probe {
+            p.apply(delta);
+        }
+    }
+
+    /// The link of a tier's warm cached λ=1 decision (see
+    /// [`FleetPlanner::cached_link`]) — the service layer's solve-budget
+    /// estimator.
+    pub(crate) fn cached_link(&self, tier: usize) -> Option<Link> {
+        self.fleet.cached_link(tier)
+    }
+
+    /// Record `n` degraded decisions the service layer served on this
+    /// planner's behalf (surfaced via [`FleetStats::degraded_decisions`]).
+    pub(crate) fn note_degraded(&mut self, n: u64) {
+        self.fleet.note_degraded(n);
     }
 
     /// The switches this planner was built with.

@@ -34,6 +34,12 @@
 //!   per-device Dinkelbach price probes — each probe a warm incremental
 //!   re-solve. Pinned against a brute-force cut-combination oracle;
 //!   infinite capacity degenerates bit-identically to [`FleetPlanner`].
+//! * [`service`] — the churn-tolerant planning service (PR 6):
+//!   [`PlannerService`] wraps [`JointPlanner`] behind a link-report inbox
+//!   and a simulated-clock epoch loop, patches the live fleet with
+//!   [`SpecDelta`] churn events, and degrades to last-good decisions
+//!   (marked via [`DecisionProvenance`]) on stale reports or solve-budget
+//!   overruns — never emitting an infeasible decision (RESILIENCE.md).
 //! * [`baselines`] — brute force (lower-set enumeration), regression [21],
 //!   OSS [17], device-only, central.
 
@@ -43,14 +49,17 @@ pub mod general;
 pub mod fleet;
 pub mod joint;
 pub mod planner;
+pub mod service;
 pub mod blocks;
 pub mod blockwise;
 pub mod baselines;
 
 pub use blockwise::blockwise_partition;
 pub use fleet::{
-    DecisionStats, FleetOptions, FleetPlanner, FleetSpec, FleetStats, PlanDecision, PlanRequest,
+    DecisionProvenance, DecisionStats, DegradedReason, FleetOptions, FleetPlanner, FleetSpec,
+    FleetStats, PlanDecision, PlanRequest, SpecDelta,
 };
+pub use service::{PlannerService, ServiceOptions};
 pub use general::general_partition;
 pub use joint::{fleet_makespan_for_cuts, oracle_fleet_makespan, JointOptions, JointPlanner};
 pub use planner::PartitionPlanner;

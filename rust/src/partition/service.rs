@@ -1,0 +1,792 @@
+//! Churn-tolerant planning as a service: the degraded-mode epoch loop
+//! around [`JointPlanner`] (PR 6).
+//!
+//! The engines below this layer are exact and infallible *given* their
+//! inputs; a real edge deployment does not get that luxury. Link reports
+//! arrive late or not at all, the fleet churns mid-training
+//! ([`SpecDelta`]), and an epoch's decision must ship by a deadline even
+//! when the solver would want more time. [`PlannerService`] absorbs all
+//! three without ever emitting an infeasible decision:
+//!
+//! * **Simulated clock.** Every input carries a caller tick
+//!   ([`PlannerService::report`]) and every epoch names its own
+//!   ([`PlannerService::plan_epoch`]); no wall-clock is read anywhere, so
+//!   every degraded-path behavior is deterministic and replayable in
+//!   tests (the `ChurnScript` harness in `util::prop`).
+//! * **Staleness policy.** A device whose newest link report is older
+//!   than [`ServiceOptions::staleness_bound`] ticks is not re-planned
+//!   against that lie; it is served its last-good decision marked
+//!   [`DecisionProvenance::Degraded`]`(`[`DegradedReason::StaleLink`]`)`.
+//!   The fallback is always *feasible*: cut feasibility (lower-set +
+//!   pinned inputs) is link-independent, only the cost moves — and the
+//!   cost error is bounded by the stale-σ envelope (PERF.md PR 6: delay
+//!   is affine in σ for a fixed cut, so serving the σ-stale optimum costs
+//!   at most `(B_served + B_opt)·|Δσ|` over the true optimum, with `B`
+//!   the cut's transmitted bytes). A device that has *never* been planned
+//!   is bootstrapped with its stale link instead (a decision must exist),
+//!   still marked degraded. Recovery is automatic: the next fresh report
+//!   re-plans.
+//! * **Solve-budget deadline.** [`ServiceOptions::solve_budget`] caps the
+//!   dirty `(tier, link)` groups an epoch may re-solve (the unit of
+//!   planner work — the batched-refresh invariant of `partition::fleet`).
+//!   Cache-clean groups are free; groups containing a never-planned
+//!   device are exempt (a first decision cannot be deferred); everything
+//!   past the cap is served last-good marked
+//!   [`DegradedReason::BudgetExceeded`]. The walk order is the canonical
+//!   `(tier, link)` sort, so budget exhaustion is deterministic too.
+//! * **No cache poisoning.** Degraded serving never touches the planner:
+//!   warm flows, tier decision caches and counters only move when a
+//!   fresh solve is actually admitted — pinned by the churn suite's
+//!   replay-equivalence property (RESILIENCE.md): after any event
+//!   stream ending in spec S, a full fresh-report epoch produces
+//!   decisions bit-identical to a planner built cold at S.
+//!
+//! All provenance is accounted in one place: the wrapped planner's
+//! [`FleetStats`] (`degraded_decisions`, `retired_decisions`,
+//! `spec_deltas`) plus the service's own per-reason counters.
+
+use super::fleet::{
+    DecisionProvenance, DegradedReason, FleetSpec, FleetStats, PlanDecision, PlanRequest,
+    SpecDelta,
+};
+use super::joint::{JointOptions, JointPlanner};
+use super::types::Link;
+
+/// Construction-time policy of the service layer. The default is the
+/// transparent configuration — no staleness bound, no budget — under
+/// which [`PlannerService::plan_epoch`] is a pass-through batch plan.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceOptions {
+    /// A link report older than this many ticks (strictly) is stale.
+    /// `0` means only reports from the current tick are trusted;
+    /// `u64::MAX` (default) trusts any report forever.
+    pub staleness_bound: u64,
+    /// Dirty `(tier, link)` solve groups an epoch may admit before
+    /// degrading the rest to last-good. `u64::MAX` (default) = no
+    /// deadline.
+    pub solve_budget: u64,
+    /// Switches of the wrapped [`JointPlanner`].
+    pub joint: JointOptions,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> ServiceOptions {
+        ServiceOptions {
+            staleness_bound: u64::MAX,
+            solve_budget: u64::MAX,
+            joint: JointOptions::default(),
+        }
+    }
+}
+
+/// The per-device lane an epoch sorts each slot into (see
+/// [`PlannerService::plan_epoch`]).
+enum Lane {
+    /// Fresh report (or stale-bootstrap): goes into the planner batch.
+    /// `stale` marks the bootstrap case — solved now, but against a
+    /// stale link, so the emitted provenance is degraded.
+    Plan { link: Link, stale: bool },
+    /// Stale report with a cached decision: served last-good.
+    Serve,
+    /// Budget-denied solve group member: served last-good.
+    Deferred,
+    /// Departed, or no report ever received: no decision this epoch.
+    Silent,
+}
+
+/// The churn-tolerant planning service: a [`JointPlanner`] behind a
+/// report inbox, a staleness/deadline policy, and per-device last-good
+/// decision caches. See the module docs for the contracts.
+pub struct PlannerService {
+    planner: JointPlanner,
+    options: ServiceOptions,
+    /// Newest link report per device slot: `(link, tick)`.
+    reports: Vec<Option<(Link, u64)>>,
+    /// Last decision the planner produced per device slot — the degraded
+    /// fallback. Cleared when the device departs or migrates tiers.
+    last_good: Vec<Option<PlanDecision>>,
+    /// The service's simulated clock (the newest `plan_epoch` tick).
+    now: u64,
+    degraded_stale: u64,
+    degraded_budget: u64,
+}
+
+impl PlannerService {
+    /// A service over a fresh planner for `spec`.
+    pub fn new(spec: FleetSpec, options: ServiceOptions) -> PlannerService {
+        let n = spec.num_devices();
+        PlannerService {
+            planner: JointPlanner::new(spec, options.joint),
+            options,
+            reports: vec![None; n],
+            last_good: vec![None; n],
+            now: 0,
+            degraded_stale: 0,
+            degraded_budget: 0,
+        }
+    }
+
+    /// Record a device's link report at caller tick `tick`. Newer reports
+    /// replace older ones; an out-of-order (older-tick) report is dropped
+    /// — the inbox keeps the freshest fact only.
+    pub fn report(&mut self, device: usize, link: Link, tick: u64) {
+        assert!(
+            link.up_bps > 0.0 && link.down_bps > 0.0,
+            "rates must be positive"
+        );
+        assert!(
+            device < self.reports.len(),
+            "report for unknown device slot {device}"
+        );
+        if let Some((_, have)) = self.reports[device] {
+            if tick < have {
+                return;
+            }
+        }
+        self.reports[device] = Some((link, tick));
+    }
+
+    /// Apply one churn event: forwarded to the planner (spec + SoA state)
+    /// and mirrored onto the service's per-device caches — departing
+    /// devices lose their report and last-good entries (a re-join must
+    /// not inherit a predecessor's state), a migrated device keeps its
+    /// report (the link is the device's, not the tier's) but drops its
+    /// last-good decision (that belonged to the old tier).
+    pub fn apply_delta(&mut self, delta: &SpecDelta) {
+        // Devices a retirement detaches, snapshotted before the spec moves.
+        let clear: Vec<usize> = match delta {
+            SpecDelta::RetireTier { tier } => (0..self.planner.spec().num_devices())
+                .filter(|&d| self.planner.spec().tier_of_opt(d) == Some(*tier))
+                .collect(),
+            SpecDelta::RemoveDevice { device } => vec![*device],
+            _ => Vec::new(),
+        };
+        self.planner.apply_delta(delta);
+        let n = self.planner.spec().num_devices();
+        self.reports.resize(n, None);
+        self.last_good.resize(n, None);
+        for d in clear {
+            self.reports[d] = None;
+            self.last_good[d] = None;
+        }
+        if let SpecDelta::MigrateDevice { device, .. } = delta {
+            self.last_good[*device] = None;
+        }
+    }
+
+    /// Serve one epoch at service tick `now` (monotone): one decision per
+    /// active, ever-reported device, in device-slot order. Fresh-reported
+    /// devices are batched through one [`JointPlanner::plan`] call (the
+    /// joint coupling sees the whole epoch at once); stale or
+    /// budget-denied devices are served their last-good decision with a
+    /// [`DecisionProvenance::Degraded`] marking and zero planner traffic.
+    pub fn plan_epoch(&mut self, now: u64) -> Vec<PlanDecision> {
+        assert!(now >= self.now, "the service clock is monotone");
+        self.now = now;
+
+        // Lane classification, device-slot order.
+        let n = self.planner.spec().num_devices();
+        debug_assert_eq!(self.reports.len(), n);
+        let mut lanes: Vec<Lane> = Vec::with_capacity(n);
+        for d in 0..n {
+            let lane = match (self.planner.spec().tier_of_opt(d), self.reports[d]) {
+                (None, _) | (Some(_), None) => Lane::Silent,
+                (Some(_), Some((link, tick))) => {
+                    let stale = now.saturating_sub(tick) > self.options.staleness_bound;
+                    if !stale {
+                        Lane::Plan { link, stale: false }
+                    } else if self.last_good[d].is_some() {
+                        Lane::Serve
+                    } else {
+                        // Stale but never decided: a decision must exist,
+                        // so bootstrap-solve against the stale link.
+                        Lane::Plan { link, stale: true }
+                    }
+                }
+            };
+            lanes.push(lane);
+        }
+
+        // Deadline walk: charge one budget unit per dirty (tier, link)
+        // group, in canonical group order. Cache-clean groups are free;
+        // groups carrying a first-ever decision are exempt from denial
+        // (but still charged).
+        let mut groups: Vec<((usize, u64, u64), Link, Vec<usize>, bool)> = Vec::new();
+        let mut group_of: std::collections::HashMap<(usize, u64, u64), usize> =
+            std::collections::HashMap::new();
+        for (d, lane) in lanes.iter().enumerate() {
+            if let Lane::Plan { link, .. } = lane {
+                let tier = self.planner.spec().tier_of(d);
+                let key = (tier, link.up_bps.to_bits(), link.down_bps.to_bits());
+                let g = *group_of.entry(key).or_insert_with(|| {
+                    groups.push((key, *link, Vec::new(), false));
+                    groups.len() - 1
+                });
+                groups[g].2.push(d);
+                if self.last_good[d].is_none() {
+                    groups[g].3 = true;
+                }
+            }
+        }
+        groups.sort_by_key(|(key, ..)| *key);
+        let mut used = 0u64;
+        for (key, link, members, exempt) in &groups {
+            let cost: u64 = if self.planner.cached_link(key.0) == Some(*link) {
+                0
+            } else {
+                1
+            };
+            if cost == 0 || *exempt || used.saturating_add(cost) <= self.options.solve_budget {
+                used = used.saturating_add(cost);
+            } else {
+                for &d in members {
+                    lanes[d] = Lane::Deferred;
+                }
+            }
+        }
+
+        // One batched plan call for every admitted device, slot order.
+        let mut reqs: Vec<PlanRequest> = Vec::new();
+        for (d, lane) in lanes.iter().enumerate() {
+            if let Lane::Plan { link, .. } = lane {
+                reqs.push(PlanRequest {
+                    device: d,
+                    tier: self.planner.spec().tier_of(d),
+                    link: *link,
+                });
+            }
+        }
+        let planned = if reqs.is_empty() {
+            Vec::new()
+        } else {
+            self.planner.plan(&reqs)
+        };
+
+        // Assemble the epoch's answers in device-slot order; degraded
+        // lanes clone last-good and never touch the planner.
+        let mut degraded = 0u64;
+        let mut out: Vec<PlanDecision> = Vec::with_capacity(reqs.len());
+        let mut planned_iter = planned.into_iter();
+        for (d, lane) in lanes.iter().enumerate() {
+            match lane {
+                Lane::Silent => {}
+                Lane::Plan { stale, .. } => {
+                    let decision = planned_iter.next().expect("one decision per request");
+                    debug_assert_eq!(decision.device, d);
+                    self.last_good[d] = Some(decision.clone());
+                    let mut decision = decision;
+                    if *stale {
+                        decision.provenance =
+                            DecisionProvenance::Degraded(DegradedReason::StaleLink);
+                        degraded += 1;
+                        self.degraded_stale += 1;
+                    }
+                    out.push(decision);
+                }
+                Lane::Serve => {
+                    let mut decision = self.last_good[d]
+                        .clone()
+                        .expect("Serve lane requires a cached decision");
+                    decision.stats.refreshed = false;
+                    decision.provenance = DecisionProvenance::Degraded(DegradedReason::StaleLink);
+                    degraded += 1;
+                    self.degraded_stale += 1;
+                    out.push(decision);
+                }
+                Lane::Deferred => {
+                    let mut decision = self.last_good[d]
+                        .clone()
+                        .expect("budget deferral requires a cached decision");
+                    decision.stats.refreshed = false;
+                    decision.provenance =
+                        DecisionProvenance::Degraded(DegradedReason::BudgetExceeded);
+                    degraded += 1;
+                    self.degraded_budget += 1;
+                    out.push(decision);
+                }
+            }
+        }
+        self.planner.note_degraded(degraded);
+        out
+    }
+
+    /// The wrapped planner (read access: makespan, congestion, spec).
+    pub fn planner(&self) -> &JointPlanner {
+        &self.planner
+    }
+
+    /// Direct mutable access to the wrapped planner — the pass-through
+    /// path for callers that manage their own epoch loop (e.g. the
+    /// simulator's non-churn scenarios) and only want the service for
+    /// churn bookkeeping. Bypasses every policy above.
+    pub fn planner_mut(&mut self) -> &mut JointPlanner {
+        &mut self.planner
+    }
+
+    /// The fleet this service plans for.
+    pub fn spec(&self) -> &FleetSpec {
+        self.planner.spec()
+    }
+
+    /// The wrapped planner's counters (degraded/retired decisions and
+    /// spec deltas included — see [`FleetStats`]).
+    pub fn stats(&self) -> FleetStats {
+        self.planner.stats()
+    }
+
+    /// The policy this service was built with.
+    pub fn options(&self) -> ServiceOptions {
+        self.options
+    }
+
+    /// Decisions degraded for staleness so far.
+    pub fn degraded_stale(&self) -> u64 {
+        self.degraded_stale
+    }
+
+    /// Decisions degraded for budget exhaustion so far.
+    pub fn degraded_budget(&self) -> u64 {
+        self.degraded_budget
+    }
+
+    /// The last planner decision cached for a device, if any.
+    pub fn last_good(&self, device: usize) -> Option<&PlanDecision> {
+        self.last_good.get(device).and_then(|d| d.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::partition::fleet::{FleetOptions, FleetPlanner};
+    use crate::partition::general::general_partition;
+    use crate::partition::types::Problem;
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+    use crate::util::prop::{assert_cut_cost_equal, assert_stale_sigma_envelope, churn_script};
+    use crate::util::rng::Rng;
+
+    const REPLAY_MODELS: [&str; 3] = ["googlenet", "block-residual", "block-inception"];
+
+    fn spec_for(model: &str, devices: usize) -> FleetSpec {
+        let m = models::by_name(model).unwrap();
+        FleetSpec::from_fleet(&DeviceProfile::fleet_of(devices), |d| {
+            CostGraph::build(&m, d, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+        })
+    }
+
+    fn assert_decisions_bit_identical(a: &[PlanDecision], b: &[PlanDecision], context: &str) {
+        assert_eq!(a.len(), b.len(), "{context}: decision counts differ");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.device, y.device, "{context}");
+            assert_eq!(x.tier, y.tier, "{context}");
+            assert_eq!(x.cut_layer, y.cut_layer, "{context}");
+            assert_eq!(x.partition.device_set, y.partition.device_set, "{context}");
+            assert_eq!(
+                x.partition.delay.to_bits(),
+                y.partition.delay.to_bits(),
+                "{context}"
+            );
+        }
+    }
+
+    /// The planner-side solve accounting the replay pin checks against: in
+    /// one epoch the fleet solves each dirty `(tier, link)` group once, in
+    /// canonical `(tier, link-bits)` order, and leaves the tier's warm
+    /// cache at the group processed last. Returns the epoch's solve count
+    /// and updates `tier_cache` exactly as the planner would.
+    fn expected_epoch_solves(
+        spec: &FleetSpec,
+        latest: &[Option<Link>],
+        tier_cache: &mut [Option<Link>],
+    ) -> u64 {
+        let mut groups: Vec<(usize, u64, u64, Link)> = (0..spec.num_devices())
+            .filter_map(|d| {
+                let tier = spec.tier_of_opt(d)?;
+                let link = latest[d]?;
+                Some((tier, link.up_bps.to_bits(), link.down_bps.to_bits(), link))
+            })
+            .collect();
+        groups.sort_by_key(|&(t, u, dn, _)| (t, u, dn));
+        groups.dedup_by_key(|&mut (t, u, dn, _)| (t, u, dn));
+        let mut solves = 0;
+        for &(tier, _, _, link) in &groups {
+            if tier_cache[tier] != Some(link) {
+                solves += 1;
+                tier_cache[tier] = Some(link);
+            }
+        }
+        solves
+    }
+
+    /// With the default (transparent) options the service is a
+    /// pass-through: every epoch's decisions are bit-identical to calling
+    /// the planner directly with the same batch.
+    #[test]
+    fn churn_transparent_service_is_a_pass_through() {
+        let spec = spec_for("googlenet", 6);
+        let mut service = PlannerService::new(spec.clone(), ServiceOptions::default());
+        let mut direct = JointPlanner::new(spec, JointOptions::default());
+        for epoch in 0..4u64 {
+            let reqs = direct.spec().requests(|t| Link {
+                up_bps: 2e5 * (1.0 + t as f64) * (1.0 + 0.31 * epoch as f64),
+                down_bps: 8e5 * (1.0 + t as f64) * (1.0 + 0.17 * epoch as f64),
+            });
+            for r in &reqs {
+                service.report(r.device, r.link, epoch);
+            }
+            let got = service.plan_epoch(epoch);
+            let want = direct.plan(&reqs);
+            assert_decisions_bit_identical(&got, &want, "pass-through epoch");
+            assert!(got
+                .iter()
+                .all(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_))));
+        }
+        assert_eq!(service.stats().degraded_decisions, 0);
+        assert_eq!(service.degraded_stale() + service.degraded_budget(), 0);
+    }
+
+    /// Staleness policy: a withheld report degrades the device to its
+    /// last-good decision (feasible, zero planner traffic); the next
+    /// fresh report recovers it. The degraded epoch must not poison the
+    /// warm caches — recovery solves exactly like an uninterrupted run.
+    #[test]
+    fn churn_stale_reports_degrade_then_recover() {
+        let spec = spec_for("googlenet", 4);
+        let mut service = PlannerService::new(
+            spec,
+            ServiceOptions {
+                staleness_bound: 0,
+                ..ServiceOptions::default()
+            },
+        );
+        let fresh = Link::symmetric(5e5);
+        for d in 0..4 {
+            service.report(d, fresh, 0);
+        }
+        let e0 = service.plan_epoch(0);
+        assert_eq!(e0.len(), 4);
+        let solves_after_e0 = service.stats().solves();
+
+        // Epoch 1: device 2's report is withheld → degraded last-good.
+        let drifted = Link::symmetric(3e5);
+        for d in [0usize, 1, 3] {
+            service.report(d, drifted, 1);
+        }
+        let e1 = service.plan_epoch(1);
+        assert_eq!(e1.len(), 4);
+        let stale_d = e1.iter().find(|d| d.device == 2).unwrap();
+        assert_eq!(
+            stale_d.provenance,
+            DecisionProvenance::Degraded(DegradedReason::StaleLink)
+        );
+        assert_eq!(
+            stale_d.partition.device_set,
+            e0.iter()
+                .find(|d| d.device == 2)
+                .unwrap()
+                .partition
+                .device_set,
+            "the degraded decision is the cached one"
+        );
+        let tier = service.spec().tier_of(2);
+        let costs = service.spec().tier_costs(tier).clone();
+        let problem = Problem::new(&costs, drifted);
+        assert!(
+            problem.is_feasible(&stale_d.partition.device_set),
+            "degraded decisions stay feasible under the true link"
+        );
+        assert_eq!(service.stats().degraded_decisions, 1);
+        assert_eq!(service.degraded_stale(), 1);
+
+        // Epoch 2: the report returns → fresh re-plan, no residue: the
+        // recovered cost matches a cold reference solve.
+        for d in 0..4 {
+            service.report(d, drifted, 2);
+        }
+        let e2 = service.plan_epoch(2);
+        assert!(e2
+            .iter()
+            .all(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_))));
+        let rec = e2.iter().find(|d| d.device == 2).unwrap();
+        let cold = general_partition(&problem);
+        assert_cut_cost_equal(&problem, &rec.partition, &cold);
+        assert!(
+            service.stats().solves() > solves_after_e0,
+            "recovery re-plans on the fresh report"
+        );
+    }
+
+    /// Deadline policy: with a one-group budget, the canonical walk
+    /// admits the first dirty group and degrades the rest to last-good,
+    /// marked `BudgetExceeded`; a later epoch catches the deferred tiers
+    /// up while clean tiers stay free.
+    #[test]
+    fn churn_budget_exhaustion_degrades_deterministically() {
+        let spec = spec_for("googlenet", 4);
+        assert!(spec.num_tiers() >= 2, "needs several tiers to starve");
+        let mut service = PlannerService::new(
+            spec,
+            ServiceOptions {
+                solve_budget: 1,
+                ..ServiceOptions::default()
+            },
+        );
+        // Epoch 0: every tier's first decision is bootstrap-exempt, so
+        // all solve even past the budget.
+        let l0 = Link::symmetric(4e5);
+        for d in 0..4 {
+            service.report(d, l0, 0);
+        }
+        let e0 = service.plan_epoch(0);
+        assert_eq!(e0.len(), 4);
+        assert!(e0
+            .iter()
+            .all(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_))));
+
+        // Epoch 1: every tier dirty again; only tier 0's group fits the
+        // budget — the rest serve last-good.
+        let l1 = Link::symmetric(7e5);
+        for d in 0..4 {
+            service.report(d, l1, 1);
+        }
+        let e1 = service.plan_epoch(1);
+        for d in &e1 {
+            if d.tier == 0 {
+                assert!(!matches!(d.provenance, DecisionProvenance::Degraded(_)));
+            } else {
+                assert_eq!(
+                    d.provenance,
+                    DecisionProvenance::Degraded(DegradedReason::BudgetExceeded)
+                );
+                let cached = e0.iter().find(|p| p.device == d.device).unwrap();
+                assert_eq!(d.partition.device_set, cached.partition.device_set);
+            }
+        }
+        assert_eq!(service.degraded_budget(), 3);
+
+        // Epoch 2: same reports — tier 0 is cache-clean (free) and the
+        // budget admits the next deferred tier.
+        let e2 = service.plan_epoch(2);
+        let fresh_tiers: Vec<usize> = e2
+            .iter()
+            .filter(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_)))
+            .map(|d| d.tier)
+            .collect();
+        assert!(fresh_tiers.contains(&0), "clean tier 0 serves for free");
+        assert!(fresh_tiers.contains(&1), "the budget admits tier 1 next");
+    }
+
+    /// The headline replay-equivalence pin (RESILIENCE.md), bit-identity
+    /// lane: replay a seeded churn script through the service under
+    /// `FleetOptions::bit_identical()`; after a final full fresh-report
+    /// epoch, decisions must be bit-identical to a planner built cold at
+    /// the final spec S, and the planner must have solved exactly the
+    /// dirty (tier, link) transitions the replay implies — untouched
+    /// (tier, link) pairs contribute zero extra solves.
+    #[test]
+    fn churn_replay_is_bit_identical_to_a_fresh_planner() {
+        let base = crate::util::rng::test_seed();
+        for (i, model) in REPLAY_MODELS.iter().enumerate() {
+            let mut rng = Rng::new(base ^ (0xC1A0 + ((i as u64 + 1) << 40)));
+            let spec = spec_for(model, 6);
+            let num_tiers = spec.num_tiers();
+            let script = churn_script(&mut rng, num_tiers, 6, 10, 0.35, 0.3);
+            let options = ServiceOptions {
+                // Bit-identity lane: no reduction, no incremental reuse
+                // (both are only cost-equivalent), dedicated server.
+                joint: JointOptions {
+                    fleet: FleetOptions::bit_identical(),
+                    ..JointOptions::default()
+                },
+                ..ServiceOptions::default()
+            };
+            let mut service = PlannerService::new(spec, options);
+            // Mirror of the service's lane model: the latest report per
+            // slot and the per-tier warm-cache link, driving the exact
+            // solve-count pin via `expected_epoch_solves`.
+            let mut latest: Vec<Option<Link>> = vec![None; 6];
+            let mut tier_cache: Vec<Option<Link>> = vec![None; num_tiers];
+            let mut expected_solves = 0u64;
+            for (tick, step) in script.ticks.iter().enumerate() {
+                for ev in &step.events {
+                    let delta = ev.to_delta();
+                    if let SpecDelta::RemoveDevice { device } = &delta {
+                        latest[*device] = None;
+                    }
+                    service.apply_delta(&delta);
+                }
+                for &(d, link) in &step.reports {
+                    service.report(d, link, tick as u64);
+                    latest[d] = Some(link);
+                }
+                let decisions = service.plan_epoch(tick as u64);
+                expected_solves += expected_epoch_solves(service.spec(), &latest, &mut tier_cache);
+                // The transparent policy never degrades, and every
+                // decision stays feasible mid-churn.
+                for d in &decisions {
+                    assert!(
+                        !matches!(d.provenance, DecisionProvenance::Degraded(_)),
+                        "{model}: transparent lane must not degrade"
+                    );
+                    let problem =
+                        Problem::new(service.spec().tier_costs(d.tier), step.true_links[d.device]);
+                    assert!(
+                        problem.is_feasible(&d.partition.device_set),
+                        "{model}: infeasible decision under churn"
+                    );
+                }
+            }
+
+            // Final full fresh-report epoch at the end-state spec S.
+            let final_tick = script.ticks.len() as u64;
+            let last_true = &script.ticks.last().unwrap().true_links;
+            let mut reqs: Vec<PlanRequest> = Vec::new();
+            for d in 0..service.spec().num_devices() {
+                if let Some(tier) = service.spec().tier_of_opt(d) {
+                    service.report(d, last_true[d], final_tick);
+                    latest[d] = Some(last_true[d]);
+                    reqs.push(PlanRequest {
+                        device: d,
+                        tier,
+                        link: last_true[d],
+                    });
+                }
+            }
+            let replayed = service.plan_epoch(final_tick);
+            expected_solves += expected_epoch_solves(service.spec(), &latest, &mut tier_cache);
+            assert_eq!(
+                service.stats().solves(),
+                expected_solves,
+                "{model}: untouched (tier, link) pairs must not re-solve"
+            );
+
+            // A planner built cold at S answers the same epoch
+            // bit-identically.
+            let mut fresh =
+                FleetPlanner::with_options(service.spec().clone(), FleetOptions::bit_identical());
+            let want = fresh.plan(&reqs);
+            assert_decisions_bit_identical(&replayed, &want, model);
+        }
+    }
+
+    /// The cost lane of the replay pin: under the full fast configuration
+    /// (reduction + incremental on) every degraded decision stays
+    /// feasible and its cost against the *true* link is within the
+    /// stale-σ envelope of the true optimum.
+    #[test]
+    fn churn_degraded_costs_stay_within_the_stale_sigma_envelope() {
+        let base = crate::util::rng::test_seed();
+        for (i, model) in REPLAY_MODELS.iter().enumerate() {
+            let mut rng = Rng::new(base ^ (0x57A1E + ((i as u64 + 1) << 40)));
+            let spec = spec_for(model, 6);
+            let num_tiers = spec.num_tiers();
+            let script = churn_script(&mut rng, num_tiers, 6, 12, 0.2, 0.45);
+            let mut service = PlannerService::new(
+                spec,
+                ServiceOptions {
+                    staleness_bound: 0,
+                    ..ServiceOptions::default()
+                },
+            );
+            // The link each device's cached decision was solved at — the
+            // σ_stale of its envelope. Migrations drop the cache (new
+            // tier), departures drop everything.
+            let mut solved_at: Vec<Option<Link>> = vec![None; 6];
+            let mut last_report: Vec<Option<Link>> = vec![None; 6];
+            for (tick, step) in script.ticks.iter().enumerate() {
+                for ev in &step.events {
+                    let delta = ev.to_delta();
+                    match &delta {
+                        SpecDelta::RemoveDevice { device } => {
+                            solved_at[*device] = None;
+                            last_report[*device] = None;
+                        }
+                        SpecDelta::MigrateDevice { device, .. } => solved_at[*device] = None,
+                        _ => {}
+                    }
+                    service.apply_delta(&delta);
+                }
+                for &(d, link) in &step.reports {
+                    service.report(d, link, tick as u64);
+                    last_report[d] = Some(link);
+                }
+                let decisions = service.plan_epoch(tick as u64);
+                for d in &decisions {
+                    let true_link = step.true_links[d.device];
+                    let costs = service.spec().tier_costs(d.tier);
+                    let problem = Problem::new(costs, true_link);
+                    assert!(
+                        problem.is_feasible(&d.partition.device_set),
+                        "{model}: decision infeasible under churn"
+                    );
+                    if matches!(d.provenance, DecisionProvenance::Degraded(_)) {
+                        // A stale bootstrap solves this epoch at the old
+                        // report; a served cache was solved earlier.
+                        if solved_at[d.device].is_none() {
+                            solved_at[d.device] = last_report[d.device];
+                        }
+                        let stale = solved_at[d.device].expect("degraded implies a prior solve");
+                        assert_stale_sigma_envelope(
+                            costs,
+                            true,
+                            true_link,
+                            stale,
+                            &d.partition.device_set,
+                        );
+                    } else {
+                        solved_at[d.device] = last_report[d.device];
+                    }
+                }
+            }
+            let s = service.stats();
+            assert_eq!(
+                s.degraded_decisions,
+                service.degraded_stale() + service.degraded_budget(),
+                "{model}: provenance accounting is consistent"
+            );
+            assert!(
+                service.degraded_stale() > 0,
+                "{model}: the script must exercise staleness"
+            );
+        }
+    }
+
+    /// Churn events flow through the service into the planner: a leave
+    /// silences the device, a re-join on another tier plans on that tier
+    /// without inheriting the old incarnation's caches.
+    #[test]
+    fn churn_deltas_route_through_the_service() {
+        let spec = spec_for("block-residual", 4);
+        let mut service = PlannerService::new(spec, ServiceOptions::default());
+        let link = Link::symmetric(5e5);
+        for d in 0..4 {
+            service.report(d, link, 0);
+        }
+        assert_eq!(service.plan_epoch(0).len(), 4);
+
+        service.apply_delta(&SpecDelta::RemoveDevice { device: 1 });
+        let e1 = service.plan_epoch(1);
+        assert_eq!(e1.len(), 3, "a departed device gets no decision");
+        assert!(e1.iter().all(|d| d.device != 1));
+
+        // Re-join on a different tier (device 1 lived on tier 1 before).
+        service.apply_delta(&SpecDelta::AddDevice { device: 1, tier: 2 });
+        assert!(
+            service.last_good(1).is_none(),
+            "a re-join must not inherit the old incarnation's cache"
+        );
+        let e2 = service.plan_epoch(2);
+        assert!(
+            e2.iter().all(|d| d.device != 1),
+            "re-joined but not yet reported → silent"
+        );
+        service.report(1, link, 3);
+        let e3 = service.plan_epoch(3);
+        let rejoined = e3.iter().find(|d| d.device == 1).unwrap();
+        assert_eq!(rejoined.tier, 2);
+        let problem = Problem::new(service.spec().tier_costs(2), link);
+        let cold = general_partition(&problem);
+        assert_cut_cost_equal(&problem, &rejoined.partition, &cold);
+    }
+}

@@ -13,4 +13,4 @@ pub mod breakdown;
 
 pub use breakdown::DelayBreakdown;
 pub use convergence::{Dataset, LearningCurve};
-pub use trainer::{SimConfig, SimResult, Trainer};
+pub use trainer::{ChurnCfg, DeviceId, SimConfig, SimResult, Trainer};

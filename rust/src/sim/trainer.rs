@@ -7,10 +7,44 @@ use super::convergence::{Dataset, LearningCurve};
 use crate::models;
 use crate::net::{EdgeNetwork, NetConfig};
 use crate::partition::baselines::{evaluate_static, oss_partition};
-use crate::partition::{FleetSpec, FleetStats, JointPlanner, Link, PlanRequest, Problem};
+use crate::partition::{
+    DecisionProvenance, FleetSpec, FleetStats, JointOptions, Link, PlanRequest, PlannerService,
+    Problem, ServiceOptions, SpecDelta,
+};
 use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
 use crate::util::rng::Rng;
 use std::time::Instant;
+
+/// Churn faults injected by [`Trainer::run_churn_epochs`] (all disabled by
+/// default, in which case that scenario reduces to a service-routed
+/// [`Trainer::run_epochs`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnCfg {
+    /// Per-epoch probability that an active device leaves the fleet.
+    pub leave_prob: f64,
+    /// Per-epoch probability that a departed device re-joins (as a new
+    /// incarnation: fresh [`DeviceId`], random tier).
+    pub rejoin_prob: f64,
+    /// Per-epoch probability that an active device's link report is
+    /// withheld (the service serves its last-good decision, marked
+    /// [`DecisionProvenance::Degraded`], once the report goes stale).
+    pub stale_prob: f64,
+    /// Staleness bound handed to the planning service
+    /// (`ServiceOptions::staleness_bound`); `u64::MAX` disables the
+    /// degraded-mode policy entirely.
+    pub staleness_bound: u64,
+}
+
+impl Default for ChurnCfg {
+    fn default() -> Self {
+        ChurnCfg {
+            leave_prob: 0.0,
+            rejoin_prob: 0.0,
+            stale_prob: 0.0,
+            staleness_bound: u64::MAX,
+        }
+    }
+}
 
 /// Simulation configuration for one scenario run.
 #[derive(Clone, Debug)]
@@ -26,6 +60,9 @@ pub struct SimConfig {
     /// device-equivalents — only the `proposed-joint` method reads it
     /// (∞, the default, degenerates to the dedicated `proposed` engine).
     pub server_capacity: f64,
+    /// Fault injection for [`Trainer::run_churn_epochs`] (disabled by
+    /// default; the classic scenarios ignore it).
+    pub churn: ChurnCfg,
 }
 
 impl Default for SimConfig {
@@ -37,15 +74,26 @@ impl Default for SimConfig {
             method: "proposed".into(),
             seed: 7,
             server_capacity: f64::INFINITY,
+            churn: ChurnCfg::default(),
         }
     }
 }
+
+/// Stable identity of one device *incarnation*. Slot indices are reused
+/// when a device re-joins after a departure; the `DeviceId` is not —
+/// records keep meaning "this physical participant" across churn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub u64);
 
 /// Record of one simulated epoch.
 #[derive(Clone, Debug)]
 pub struct EpochRecord {
     pub epoch: usize,
+    /// Device *slot* index (reused across churn; see [`DeviceId`]).
     pub device: usize,
+    /// Stable identity of the device incarnation the record is about —
+    /// survives slot reuse when the fleet churns mid-run.
+    pub device_id: DeviceId,
     pub device_tier: &'static str,
     pub link: Link,
     /// Eq. (7) epoch delay in (simulated) seconds. For the
@@ -62,6 +110,9 @@ pub struct EpochRecord {
     /// methods, which have no cache; false only when the fleet facade
     /// served the tier's bit-identical cached decision).
     pub decision_refreshed: bool,
+    /// Where the decision came from — fresh solve, warm cache, or the
+    /// churn service's degraded fallback (baselines report `Fresh`).
+    pub provenance: DecisionProvenance,
     pub device_layers: usize,
     /// The dedicated Eq. (7) decomposition of the chosen cut. For
     /// `proposed-joint` on a congested epoch its components sum to the
@@ -80,6 +131,10 @@ pub struct SimResult {
     /// Mean wall-clock of the partition decisions that ran a fresh solve
     /// (cache-hit epochs are excluded; see `summarize`).
     pub mean_decision_time: f64,
+    /// Recorded epochs whose decision was served by the churn service's
+    /// degraded fallback ([`DecisionProvenance::Degraded`]); always 0 for
+    /// the classic (churn-free) scenarios.
+    pub degraded_decisions: u64,
 }
 
 /// The simulator: a fleet of heterogeneous devices + one server + network.
@@ -87,15 +142,24 @@ pub struct Trainer {
     cfg: SimConfig,
     net: EdgeNetwork,
     fleet: Vec<DeviceProfile>,
-    /// The planning facade behind "proposed" and "proposed-joint":
-    /// deduplicated per-tier cost graphs + transformed networks, built
-    /// once; the per-epoch decision is one `plan` call (Sec. III-A's
-    /// loop). For "proposed" the capacity is ∞, so the joint facade
-    /// delegates to the plain fleet engine bit-identically; for
-    /// "proposed-joint" the epoch decision covers the whole fleet at once
-    /// — cuts coupled through `cfg.server_capacity` — and the recorded
-    /// delay is the selected device's load-dependent delay.
-    planner: JointPlanner,
+    /// The planning stack behind "proposed" and "proposed-joint": the
+    /// churn-tolerant service wrapping the joint facade over deduplicated
+    /// per-tier cost graphs + transformed networks, built once. The
+    /// classic scenarios call straight through to the planner
+    /// (`service.planner_mut()` — a transparent pass-through that keeps
+    /// the pinned planner-stats counters unchanged); only
+    /// [`Trainer::run_churn_epochs`] engages the service's report inbox
+    /// and degraded-mode epoch loop. For "proposed" the capacity is ∞, so
+    /// the joint facade delegates to the plain fleet engine
+    /// bit-identically; for "proposed-joint" the epoch decision covers
+    /// the whole fleet at once — cuts coupled through
+    /// `cfg.server_capacity` — and the recorded delay is the selected
+    /// device's load-dependent delay.
+    service: PlannerService,
+    /// Stable per-slot incarnation ids (see [`DeviceId`]); re-joins mint
+    /// fresh ids from `next_device_id`.
+    device_ids: Vec<DeviceId>,
+    next_device_id: u64,
     /// OSS static partition: ONE fixed cut for the whole system ([17]
     /// optimizes a single static split), chosen for the median device tier
     /// at nominal rates on the first epoch.
@@ -123,13 +187,23 @@ impl Trainer {
         } else {
             f64::INFINITY
         };
-        let planner = JointPlanner::with_capacity(spec, capacity);
+        let num_devices = spec.num_devices();
+        let service = PlannerService::new(
+            spec,
+            ServiceOptions {
+                staleness_bound: cfg.churn.staleness_bound,
+                solve_budget: u64::MAX,
+                joint: JointOptions::with_capacity(capacity),
+            },
+        );
         let net = EdgeNetwork::new(cfg.net.clone());
         Trainer {
             cfg,
             net,
             fleet,
-            planner,
+            service,
+            device_ids: (0..num_devices as u64).map(DeviceId).collect(),
+            next_device_id: num_devices as u64,
             oss_fixed: None,
             sim_time: 0.0,
         }
@@ -144,9 +218,9 @@ impl Trainer {
     /// delay (Sec. III-A).
     pub fn run_epoch(&mut self, epoch: usize) -> EpochRecord {
         let device = self.net.select_device(self.sim_time);
-        let tier = self.planner.spec().tier_of(device);
+        let tier = self.service.spec().tier_of(device);
         let link = self.net.sample_link(device, self.sim_time).to_link();
-        let tier_name = self.planner.spec().tier_name(tier);
+        let tier_name = self.service.spec().tier_name(tier);
 
         // Joint epochs cover the whole fleet, so every device's current
         // link is sampled up front — channel simulation, not decision
@@ -156,7 +230,7 @@ impl Trainer {
         // mirrors the Coordinator's `is_finite` gate.
         let joint_requests: Option<Vec<PlanRequest>> =
             (self.cfg.method == "proposed-joint" && self.cfg.server_capacity.is_finite()).then(|| {
-                (0..self.planner.spec().num_devices())
+                (0..self.service.spec().num_devices())
                     .map(|d| {
                         let l = if d == device {
                             link
@@ -165,7 +239,7 @@ impl Trainer {
                         };
                         PlanRequest {
                             device: d,
-                            tier: self.planner.spec().tier_of(d),
+                            tier: self.service.spec().tier_of(d),
                             link: l,
                         }
                     })
@@ -176,36 +250,46 @@ impl Trainer {
         // (which borrows the tier's cost graph out of the planner's spec)
         // can only be built in the non-mutating branch.
         let t0 = Instant::now();
-        let (partition, decision_refreshed) = if let Some(requests) = &joint_requests {
+        let (partition, decision_refreshed, provenance) = if let Some(requests) = &joint_requests {
             // Joint epoch: the fleet competes for the shared server; the
             // cuts are decided in one coupled plan and the record tracks
             // the selected device's load-dependent delay.
             let decision = self
-                .planner
+                .service
+                .planner_mut()
                 .plan(requests)
                 .into_iter()
                 .find(|d| d.device == device)
                 .expect("one decision per device");
-            (decision.partition, decision.stats.refreshed)
+            (
+                decision.partition,
+                decision.stats.refreshed,
+                decision.provenance,
+            )
         } else if self.cfg.method == "proposed" || self.cfg.method == "proposed-joint" {
             // Single-request fast path — also serves "proposed-joint" at
             // infinite capacity, where the planner delegates to the plain
             // fleet engine bit-identically.
             let decision = self
-                .planner
+                .service
+                .planner_mut()
                 .plan(&[PlanRequest { device, tier, link }])
                 .pop()
                 .expect("one decision per request");
-            (decision.partition, decision.stats.refreshed)
+            (
+                decision.partition,
+                decision.stats.refreshed,
+                decision.provenance,
+            )
         } else {
-            let problem = Problem::new(self.planner.spec().tier_costs(tier), link);
+            let problem = Problem::new(self.service.spec().tier_costs(tier), link);
             let partition = match self.cfg.method.as_str() {
                 "oss" => {
                     if self.oss_fixed.is_none() {
                         // One static cut for the fleet: median tier, nominal
                         // link.
                         let nominal = self.net.nominal_link(256);
-                        let spec = self.planner.spec();
+                        let spec = self.service.spec();
                         let median_tier = spec.tier_costs(spec.num_tiers() / 2);
                         let fixed = oss_partition(&Problem::new(median_tier, nominal));
                         self.oss_fixed = Some(fixed.device_set);
@@ -218,20 +302,22 @@ impl Trainer {
                 }
                 method => crate::partition::baselines::partition_by_method(method, &problem, link),
             };
-            (partition, true)
+            (partition, true, DecisionProvenance::Fresh)
         };
         let decision_time = t0.elapsed().as_secs_f64();
 
-        let problem = Problem::new(self.planner.spec().tier_costs(tier), link);
+        let problem = Problem::new(self.service.spec().tier_costs(tier), link);
         let breakdown = DelayBreakdown::of(&problem, &partition.device_set);
         let record = EpochRecord {
             epoch,
             device,
+            device_id: self.device_ids[device],
             device_tier: tier_name,
             link,
             delay: partition.delay,
             decision_time,
             decision_refreshed,
+            provenance,
             device_layers: partition.device_layers(),
             breakdown,
         };
@@ -242,6 +328,95 @@ impl Trainer {
     /// Run a fixed number of epochs (Fig. 11/12/16 style).
     pub fn run_epochs(&mut self, epochs: usize) -> SimResult {
         let records: Vec<EpochRecord> = (0..epochs).map(|e| self.run_epoch(e)).collect();
+        summarize(records)
+    }
+
+    /// Run a churn-enabled scenario through the planning service's epoch
+    /// loop: per epoch the membership churns ([`ChurnCfg::leave_prob`] /
+    /// [`ChurnCfg::rejoin_prob`] — a re-join is a new incarnation with a
+    /// fresh [`DeviceId`]), every active device's true link is sampled,
+    /// and its *report* is withheld with [`ChurnCfg::stale_prob`] (the
+    /// service degrades stale devices to their last-good decision per
+    /// [`ChurnCfg::staleness_bound`]). Epoch 0 is fault-free so every
+    /// device decides at least once. Each epoch records the scheduler's
+    /// selected device when it received a decision, else the first decided
+    /// device; epochs where every device is silent record nothing.
+    ///
+    /// Bit-replayable for a fixed seed: unlike [`Trainer::run_epoch`], the
+    /// simulated clock advances by the Eq. (7) epoch delay only — folding
+    /// the wall-clock decision time in (it is still *recorded*) would leak
+    /// real time into the fading trajectories and break the churn
+    /// harness's determinism contract (RESILIENCE.md).
+    pub fn run_churn_epochs(&mut self, epochs: usize) -> SimResult {
+        let churn = self.cfg.churn;
+        let mut rng = Rng::new(self.cfg.seed ^ 0xC4021);
+        let mut records = Vec::new();
+        for epoch in 0..epochs {
+            let n = self.service.spec().num_devices();
+            if epoch > 0 {
+                for d in 0..n {
+                    if self.service.spec().tier_of_opt(d).is_some() {
+                        if rng.chance(churn.leave_prob) && self.service.spec().active_devices() > 1
+                        {
+                            self.service.apply_delta(&SpecDelta::RemoveDevice { device: d });
+                        }
+                    } else if rng.chance(churn.rejoin_prob) {
+                        let tier = rng.index(self.service.spec().num_tiers());
+                        self.service
+                            .apply_delta(&SpecDelta::AddDevice { device: d, tier });
+                        self.device_ids[d] = DeviceId(self.next_device_id);
+                        self.next_device_id += 1;
+                    }
+                }
+            }
+            // Channel simulation: every active device's true link is
+            // sampled once; the report is withheld with `stale_prob`,
+            // except on a device's first decided epoch (no cache to
+            // degrade to yet — the service would bootstrap against the
+            // stale link anyway, so report it fresh instead).
+            let mut true_links: Vec<Option<Link>> = vec![None; n];
+            for d in 0..n {
+                if self.service.spec().tier_of_opt(d).is_none() {
+                    continue;
+                }
+                let link = self.net.sample_link(d, self.sim_time).to_link();
+                true_links[d] = Some(link);
+                let first = self.service.last_good(d).is_none();
+                if epoch == 0 || first || !rng.chance(churn.stale_prob) {
+                    self.service.report(d, link, epoch as u64);
+                }
+            }
+            let t0 = Instant::now();
+            let decisions = self.service.plan_epoch(epoch as u64);
+            let decision_time = t0.elapsed().as_secs_f64();
+            if decisions.is_empty() {
+                continue;
+            }
+            let scheduled = self.net.select_device(self.sim_time);
+            let decision = decisions
+                .iter()
+                .find(|x| x.device == scheduled)
+                .unwrap_or(&decisions[0]);
+            let device = decision.device;
+            let tier = decision.tier;
+            let link = true_links[device].expect("decided devices are active");
+            let problem = Problem::new(self.service.spec().tier_costs(tier), link);
+            let breakdown = DelayBreakdown::of(&problem, &decision.partition.device_set);
+            records.push(EpochRecord {
+                epoch,
+                device,
+                device_id: self.device_ids[device],
+                device_tier: self.service.spec().tier_name(tier),
+                link,
+                delay: decision.partition.delay,
+                decision_time,
+                decision_refreshed: decision.stats.refreshed,
+                provenance: decision.provenance,
+                device_layers: decision.partition.device_layers(),
+                breakdown,
+            });
+            self.sim_time += decision.partition.delay;
+        }
         summarize(records)
     }
 
@@ -275,7 +450,18 @@ impl Trainer {
     /// blockwise-scale solves, not full-DAG ones — see the regression test
     /// below).
     pub fn planner_stats(&self) -> FleetStats {
-        self.planner.stats()
+        self.service.stats()
+    }
+
+    /// The planning service behind the scenario (for churn-test
+    /// introspection: last-good cache, degraded counters, live spec).
+    pub fn service(&self) -> &PlannerService {
+        &self.service
+    }
+
+    /// Current per-slot device incarnation ids (see [`DeviceId`]).
+    pub fn device_ids(&self) -> &[DeviceId] {
+        &self.device_ids
     }
 }
 
@@ -298,11 +484,16 @@ fn summarize(records: Vec<EpochRecord>) -> SimResult {
     } else {
         solved.iter().sum::<f64>() / solved.len() as f64
     };
+    let degraded_decisions = records
+        .iter()
+        .filter(|r| matches!(r.provenance, DecisionProvenance::Degraded(_)))
+        .count() as u64;
     SimResult {
         records,
         total_delay,
         mean_epoch_delay,
         mean_decision_time,
+        degraded_decisions,
     }
 }
 
@@ -432,6 +623,104 @@ mod tests {
             r.mean_decision_time < 0.5,
             "decision {}s",
             r.mean_decision_time
+        );
+    }
+
+    /// Fault-free churn runs are just the service-routed epoch loop: every
+    /// epoch records a decision, nothing degrades, and the run is
+    /// reproducible bit-for-bit from the seed.
+    #[test]
+    fn churn_scenario_without_faults_never_degrades() {
+        let mut cfg = quick_cfg("proposed");
+        cfg.model = "googlenet".into();
+        let mut t = Trainer::new(cfg);
+        let r = t.run_churn_epochs(8);
+        assert_eq!(r.records.len(), 8);
+        assert_eq!(r.degraded_decisions, 0);
+        assert_eq!(t.service().degraded_stale(), 0);
+        assert_eq!(t.service().degraded_budget(), 0);
+        assert!(r
+            .records
+            .iter()
+            .all(|x| !matches!(x.provenance, DecisionProvenance::Degraded(_))));
+    }
+
+    #[test]
+    fn churn_runs_are_deterministic_for_a_fixed_seed() {
+        let run = || {
+            let mut cfg = quick_cfg("proposed");
+            cfg.churn = ChurnCfg {
+                leave_prob: 0.2,
+                rejoin_prob: 0.7,
+                stale_prob: 0.3,
+                staleness_bound: 0,
+            };
+            let mut t = Trainer::new(cfg);
+            let r = t.run_churn_epochs(20);
+            let delays: Vec<u64> = r.records.iter().map(|x| x.delay.to_bits()).collect();
+            let ids: Vec<DeviceId> = t.device_ids().to_vec();
+            (delays, ids, r.degraded_decisions)
+        };
+        assert_eq!(run(), run());
+    }
+
+    /// Withheld reports under a zero staleness bound must produce degraded
+    /// decisions, and the per-run accounting has to line up: the service's
+    /// counters partition its FleetStats total, and the records only ever
+    /// see a subset of it (one record per epoch).
+    #[test]
+    fn churn_stale_reports_are_counted_consistently() {
+        let mut cfg = quick_cfg("proposed");
+        cfg.model = "googlenet".into();
+        cfg.churn = ChurnCfg {
+            leave_prob: 0.0,
+            rejoin_prob: 0.0,
+            stale_prob: 0.5,
+            staleness_bound: 0,
+        };
+        let mut t = Trainer::new(cfg);
+        let r = t.run_churn_epochs(20);
+        assert_eq!(r.records.len(), 20, "no membership churn, so every epoch decides");
+        let s = t.service().stats();
+        assert!(t.service().degraded_stale() > 0, "stale_prob 0.5 over 20 epochs must degrade");
+        assert_eq!(
+            s.degraded_decisions,
+            t.service().degraded_stale() + t.service().degraded_budget()
+        );
+        assert!(r.degraded_decisions <= s.degraded_decisions);
+        // Every degraded record was served from the last-good cache, not a
+        // fresh solve.
+        assert!(r
+            .records
+            .iter()
+            .filter(|x| matches!(x.provenance, DecisionProvenance::Degraded(_)))
+            .all(|x| !x.decision_refreshed));
+    }
+
+    /// Slot reuse across churn must not alias identities: every re-join is
+    /// a fresh incarnation, so the live id set stays duplicate-free and
+    /// grows past the initial fleet once devices cycle.
+    #[test]
+    fn churn_rejoins_mint_fresh_device_ids() {
+        let mut cfg = quick_cfg("proposed");
+        cfg.churn = ChurnCfg {
+            leave_prob: 0.5,
+            rejoin_prob: 0.9,
+            stale_prob: 0.0,
+            staleness_bound: u64::MAX,
+        };
+        let n = cfg.net.num_devices;
+        let mut t = Trainer::new(cfg);
+        let _ = t.run_churn_epochs(30);
+        assert!(t.service().spec().active_devices() >= 1, "fleet never empties");
+        let ids = t.device_ids().to_vec();
+        let mut sorted = ids.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len(), "device ids must stay unique");
+        assert!(
+            ids.iter().any(|id| id.0 >= n as u64),
+            "heavy churn over 30 epochs must have minted at least one new incarnation"
         );
     }
 

@@ -14,6 +14,8 @@
 
 use super::rng::Rng;
 use crate::models;
+use crate::partition::fleet::SpecDelta;
+use crate::partition::general::general_partition;
 use crate::partition::types::{Link, Partition, Problem};
 use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
 
@@ -275,6 +277,167 @@ pub fn zoo_matrix<F: FnMut(&ZooCase, &mut Rng)>(name: &str, mut prop: F) {
     }
 }
 
+/// One churn fault a [`ChurnScript`] injects into a planning epoch — the
+/// device-membership subset of [`SpecDelta`] (tier add/retire are
+/// rarer operator actions, covered by direct unit tests instead of the
+/// random walk).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// A device (re-)joins the fleet on an active tier.
+    Join { device: usize, tier: usize },
+    /// A device drops out of the fleet.
+    Leave { device: usize },
+    /// A device moves to a different tier (hardware swap / re-profile).
+    Migrate { device: usize, tier: usize },
+}
+
+impl ChurnEvent {
+    /// The [`SpecDelta`] this event patches the fleet with.
+    pub fn to_delta(&self) -> SpecDelta {
+        match *self {
+            ChurnEvent::Join { device, tier } => SpecDelta::AddDevice { device, tier },
+            ChurnEvent::Leave { device } => SpecDelta::RemoveDevice { device },
+            ChurnEvent::Migrate { device, tier } => SpecDelta::MigrateDevice { device, tier },
+        }
+    }
+}
+
+/// One tick of a [`ChurnScript`]: the churn events to apply *before* the
+/// tick's reports, the link reports that actually arrive (withheld
+/// reports model the stale/drop faults — a joined device that has not yet
+/// reported is the drop case), and the per-slot ground-truth links for
+/// feasibility/envelope checks.
+#[derive(Clone, Debug)]
+pub struct ChurnTick {
+    pub events: Vec<ChurnEvent>,
+    /// `(device, link)` reports delivered this tick; always truthful
+    /// (staleness comes from *withholding* later reports, not lying).
+    pub reports: Vec<(usize, Link)>,
+    /// Ground-truth link per device slot at this tick (length
+    /// `max_devices`; departed slots keep drifting, ready for a re-join).
+    pub true_links: Vec<Link>,
+}
+
+/// A replayable fault-injection script for the churn-tolerant planning
+/// service: seeded membership churn + report withholding over a per-device
+/// fading walk. Deterministic for a fixed RNG, so `PALLAS_TEST_SEED`
+/// replays the whole scenario (the PR-6 harness contract, RESILIENCE.md).
+#[derive(Clone, Debug)]
+pub struct ChurnScript {
+    pub ticks: Vec<ChurnTick>,
+}
+
+/// Generate a seeded [`ChurnScript`]: `max_devices` slots (all active at
+/// start, slot `d` on tier `d % num_tiers`), each tick drifting every
+/// slot's link by ±10% (clamped to the suites' 1e4..1e9 B/s regime), then
+/// churning each slot with probability `churn_prob` (active slots leave or
+/// migrate, departed slots re-join on a random tier — the fleet never
+/// empties) and withholding each active slot's report with probability
+/// `stale_prob`.
+pub fn churn_script(
+    rng: &mut Rng,
+    num_tiers: usize,
+    max_devices: usize,
+    ticks: usize,
+    churn_prob: f64,
+    stale_prob: f64,
+) -> ChurnScript {
+    assert!(num_tiers >= 1 && max_devices >= 1);
+    let mut tier_of: Vec<Option<usize>> = (0..max_devices).map(|d| Some(d % num_tiers)).collect();
+    let mut links: Vec<Link> = (0..max_devices)
+        .map(|_| Link {
+            up_bps: rng.range(1e5, 1e6),
+            down_bps: rng.range(1e5, 1e6),
+        })
+        .collect();
+    let mut out = Vec::with_capacity(ticks);
+    for _ in 0..ticks {
+        for l in &mut links {
+            l.up_bps = (l.up_bps * rng.range(0.9, 1.1)).clamp(1e4, 1e9);
+            l.down_bps = (l.down_bps * rng.range(0.9, 1.1)).clamp(1e4, 1e9);
+        }
+        let mut events = Vec::new();
+        for d in 0..max_devices {
+            if !rng.chance(churn_prob) {
+                continue;
+            }
+            match tier_of[d] {
+                Some(cur) => {
+                    let active = tier_of.iter().filter(|t| t.is_some()).count();
+                    if rng.chance(0.5) && active > 1 {
+                        events.push(ChurnEvent::Leave { device: d });
+                        tier_of[d] = None;
+                    } else if num_tiers > 1 {
+                        let tier = (cur + 1 + rng.index(num_tiers - 1)) % num_tiers;
+                        events.push(ChurnEvent::Migrate { device: d, tier });
+                        tier_of[d] = Some(tier);
+                    }
+                }
+                None => {
+                    let tier = rng.index(num_tiers);
+                    events.push(ChurnEvent::Join { device: d, tier });
+                    tier_of[d] = Some(tier);
+                }
+            }
+        }
+        let mut reports = Vec::new();
+        for d in 0..max_devices {
+            if tier_of[d].is_some() && !rng.chance(stale_prob) {
+                reports.push((d, links[d]));
+            }
+        }
+        out.push(ChurnTick {
+            events,
+            reports,
+            true_links: links.clone(),
+        });
+    }
+    ChurnScript { ticks: out }
+}
+
+/// Assert the stale-σ envelope of a degraded decision (the PR-6 cost
+/// contract; derivation in PERF.md "PR 6"): for a fixed cut `x`, Eq. (7)
+/// delay is affine in σ = 1/R_up + 1/R_down — `T(x, σ) = C(x) + B(x)·σ`
+/// with `B(x) ≥ 0` the cut's transmitted bytes. If `served` was optimal at
+/// `stale_link` (it was the planner's answer there), then under the true
+/// link
+///
+/// ```text
+/// T(served, σ_true) ≤ T(opt, σ_true) + (B_served + B_opt)·|σ_true − σ_stale|
+/// ```
+///
+/// where `opt` is the true-link optimum. Both `B·|Δσ|` swings are
+/// evaluated directly on the link pair (no slope division), and the
+/// comparison carries the usual [`CUT_COST_ULPS`] rounding allowance.
+pub fn assert_stale_sigma_envelope(
+    costs: &CostGraph,
+    pin_inputs: bool,
+    true_link: Link,
+    stale_link: Link,
+    served: &[bool],
+) {
+    let fresh = Problem::with_pin(costs, true_link, pin_inputs);
+    let stale = Problem::with_pin(costs, stale_link, pin_inputs);
+    assert!(
+        fresh.is_feasible(served),
+        "served cut infeasible under the true link: {served:?}"
+    );
+    let opt = general_partition(&fresh);
+    let served_true = fresh.delay(served);
+    let swing_served = (served_true - stale.delay(served)).abs();
+    let swing_opt = (fresh.delay(&opt.device_set) - stale.delay(&opt.device_set)).abs();
+    let bound = opt.delay + swing_served + swing_opt;
+    let tol = CUT_COST_ULPS * f64::EPSILON * (1.0 + served_true.abs().max(bound.abs()));
+    assert!(
+        served_true <= bound + tol,
+        "stale-σ envelope violated: served T = {served_true}, optimal T = {}, \
+         bound = {bound} (σ_true = {:.3e}, σ_stale = {:.3e})",
+        opt.delay,
+        true_link.sigma(),
+        stale_link.sigma(),
+    );
+}
+
 fn fnv(s: &str) -> u64 {
     s.bytes()
         .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
@@ -417,5 +580,74 @@ mod tests {
             assert_cut_cost_equal(&p, &all, &one);
         }));
         assert!(gap.is_err(), "distinct cut costs must not compare equal");
+    }
+
+    #[test]
+    fn churn_script_respects_membership_invariants() {
+        for_all("churn-script-shape", 16, |rng| {
+            let num_tiers = 1 + rng.index(4);
+            let max_devices = 1 + rng.index(8);
+            let script = churn_script(rng, num_tiers, max_devices, 12, 0.5, 0.4);
+            assert_eq!(script.ticks.len(), 12);
+            let mut tier_of: Vec<Option<usize>> =
+                (0..max_devices).map(|d| Some(d % num_tiers)).collect();
+            for step in &script.ticks {
+                assert_eq!(step.true_links.len(), max_devices);
+                for l in &step.true_links {
+                    assert!(l.up_bps >= 1e4 && l.up_bps <= 1e9);
+                    assert!(l.down_bps >= 1e4 && l.down_bps <= 1e9);
+                }
+                for ev in &step.events {
+                    // Events are valid against the tracked membership —
+                    // join only on empty slots, leave/migrate only on
+                    // occupied ones, tiers in range.
+                    match *ev {
+                        ChurnEvent::Join { device, tier } => {
+                            assert!(tier_of[device].is_none(), "join on an occupied slot");
+                            assert!(tier < num_tiers);
+                            tier_of[device] = Some(tier);
+                        }
+                        ChurnEvent::Leave { device } => {
+                            assert!(tier_of[device].is_some(), "leave from an empty slot");
+                            tier_of[device] = None;
+                        }
+                        ChurnEvent::Migrate { device, tier } => {
+                            assert!(tier < num_tiers);
+                            let cur = tier_of[device].expect("migrate from an empty slot");
+                            assert_ne!(cur, tier, "migrate must change tiers");
+                            tier_of[device] = Some(tier);
+                        }
+                    }
+                }
+                assert!(
+                    tier_of.iter().any(|t| t.is_some()),
+                    "the fleet must never empty"
+                );
+                for &(d, link) in &step.reports {
+                    assert!(tier_of[d].is_some(), "departed devices must not report");
+                    assert_eq!(link, step.true_links[d], "reports are truthful");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn stale_sigma_envelope_holds_for_stale_optimal_cuts() {
+        let m = models::by_name("googlenet").unwrap();
+        let costs = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        for_all("stale-sigma-envelope", 24, |rng| {
+            let true_link = random_link(rng);
+            let stale_link = random_link(rng);
+            // Any cut optimal at the stale link satisfies the envelope at
+            // the true link — including the degenerate stale == true case.
+            let served = general_partition(&Problem::new(&costs, stale_link));
+            assert_stale_sigma_envelope(&costs, true, true_link, stale_link, &served.device_set);
+            assert_stale_sigma_envelope(&costs, true, true_link, true_link, &served.device_set);
+        });
     }
 }

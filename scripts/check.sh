@@ -35,11 +35,25 @@ if [[ $fast -eq 0 ]]; then
   PALLAS_TEST_SEED=1 cargo test -q --release equivalence
   PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release equivalence
 
+  # Chaos lane (PR 6): the churn-replay suite — seeded fault injection
+  # (join/leave/migrate/stale over fading walks) pinned bit-identical to a
+  # fresh planner at the final spec, with every degraded decision feasible
+  # inside the stale-σ envelope. The property must hold for any seed; two
+  # fixed seeds widen the generator matrix, and the suite runs in both
+  # feature configs (serial here, parallel below).
+  echo "==> churn-replay suite under two fixed seeds"
+  PALLAS_TEST_SEED=1 cargo test -q --release churn
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release churn
+
   # Feature matrix: the rayon parallel dirty-tier sweep must compile and
   # stay bit-identical to the serial loop (the determinism test runs under
   # both configurations).
   echo "==> cargo test -q --features parallel"
   cargo test -q --features parallel
+
+  echo "==> churn-replay suite under two fixed seeds (features parallel)"
+  PALLAS_TEST_SEED=1 cargo test -q --release --features parallel churn
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel churn
 
   # Bench smoke: compile + run the bench binaries so they cannot bit-rot.
   # Output files are disabled (-) so committed BENCH_*.json results are
@@ -50,10 +64,13 @@ if [[ $fast -eq 0 ]]; then
   FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- cargo bench --bench fleet -- --smoke
   echo "==> cargo bench --bench joint -- --smoke"
   FASTSPLIT_JOINT_OUT=- cargo bench --bench joint -- --smoke
+  echo "==> cargo bench --bench churn -- --smoke"
+  FASTSPLIT_CHURN_OUT=- cargo bench --bench churn -- --smoke
   echo "==> bench smoke with --features parallel"
   FASTSPLIT_REPLAN_OUT=- FASTSPLIT_REPLAN4_OUT=- cargo bench --bench replan --features parallel -- --smoke
   FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- cargo bench --bench fleet --features parallel -- --smoke
   FASTSPLIT_JOINT_OUT=- cargo bench --bench joint --features parallel -- --smoke
+  FASTSPLIT_CHURN_OUT=- cargo bench --bench churn --features parallel -- --smoke
 fi
 
 echo "OK"
