@@ -14,6 +14,7 @@
 //! `FASTSPLIT_CHURN_OUT=-`) so the perf trajectory is tracked in-repo
 //! (see PERF.md). `--smoke` is the CI fast mode: one model, no JSON.
 
+use fastsplit::daemon::metrics::{render_prometheus, service_metrics};
 use fastsplit::models;
 use fastsplit::partition::{
     FleetSpec, JointOptions, Link, PlannerService, ServiceOptions, SpecDelta,
@@ -51,6 +52,7 @@ fn main() {
         Bencher::from_env()
     };
     let mut rows: Vec<Json> = Vec::new();
+    let mut last_scrape: Option<(String, String)> = None;
 
     let models: &[&str] = if smoke { &["googlenet"] } else { MODELS };
     for model in models {
@@ -105,7 +107,7 @@ fn main() {
                         service.report(d, link, tick);
                     }
                 }
-                let out = service.plan_epoch(tick);
+                let out = service.plan_epoch(tick).expect("bench clock is monotone");
                 decisions += out.len() as u64;
                 tick += 1;
                 out
@@ -134,9 +136,20 @@ fn main() {
                 ("degraded_budget", Json::num(service.degraded_budget() as f64)),
                 ("spec_deltas", Json::num(s.spec_deltas as f64)),
             ]));
+            last_scrape = Some((
+                format!("churn/{model}/{label}"),
+                render_prometheus(&service_metrics(&service)),
+            ));
         }
     }
     b.finish();
+
+    // The scrape a daemon metrics endpoint would serve for the last case —
+    // the PERF.md recipe greps counters straight out of the bench log.
+    if let Some((case, scrape)) = &last_scrape {
+        println!("--- metrics scrape after {case} ---");
+        print!("{scrape}");
+    }
 
     if smoke {
         println!("smoke mode: skipping BENCH_PR6.json");

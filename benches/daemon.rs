@@ -1,0 +1,253 @@
+//! Benchmark: planner daemon loop (PR 7) — ingest throughput of the
+//! coalescing event channel and end-to-end tick latency of the
+//! wheel-scheduled epoch loop (churn deltas + link reports → pump →
+//! planned epoch) under 0% / 1% / 10% churn, with report leases armed.
+//!
+//! ```sh
+//! cargo bench --bench daemon [-- filter] [--quick] [--smoke]
+//! ```
+//!
+//! Writes ticks/sec, ingest events/sec and degraded-decision rates to
+//! `BENCH_PR7.json` (override with `FASTSPLIT_DAEMON_OUT`, disable with
+//! `FASTSPLIT_DAEMON_OUT=-`) so the perf trajectory is tracked in-repo
+//! (see PERF.md). `--smoke` is the CI fast mode: one model, no JSON.
+
+use fastsplit::daemon::{DaemonConfig, DaemonEvent, PlannerDaemon, SimClock};
+use fastsplit::models;
+use fastsplit::partition::{
+    DecisionProvenance, FleetSpec, JointOptions, Link, ServiceOptions, SpecDelta,
+};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use fastsplit::util::bench::{BenchConfig, Bencher};
+use fastsplit::util::json::Json;
+use fastsplit::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const MODELS: &[&str] = &["googlenet", "block-residual"];
+const DEVICES: usize = 8;
+
+/// (label, per-tick leave probability == withheld-report probability).
+const CHURN_LEVELS: &[(&str, f64)] = &[("0pct", 0.0), ("1pct", 0.01), ("10pct", 0.10)];
+
+/// Reports handed to the ingest channel per iteration of the ingest bench.
+const INGEST_BATCH: usize = 64;
+
+fn spec(model: &str) -> FleetSpec {
+    let m = models::by_name(model).unwrap();
+    let server = DeviceProfile::rtx_a6000();
+    let fleet = DeviceProfile::fleet_of(DEVICES);
+    FleetSpec::from_fleet(&fleet, |d| {
+        CostGraph::build(&m, d, &server, &TrainCfg::default())
+    })
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = if smoke {
+        Bencher::with_config(BenchConfig {
+            measure_time: Duration::from_millis(40),
+            warmup_time: Duration::from_millis(10),
+            max_samples: 200,
+        })
+    } else {
+        Bencher::from_env()
+    };
+    let mut rows: Vec<Json> = Vec::new();
+
+    let models: &[&str] = if smoke { &["googlenet"] } else { MODELS };
+
+    // Ingest throughput: a batch of reports down the channel, synced by a
+    // pump round-trip (the wheel is idle — nothing fires — so the reply
+    // bounds exactly channel + coalescing work).
+    for model in models {
+        let clock = SimClock::new(0);
+        let daemon = PlannerDaemon::spawn(
+            spec(model),
+            DaemonConfig {
+                replan_every: 1 << 40, // never fires during the bench
+                ..DaemonConfig::default()
+            },
+            Arc::new(clock.clone()),
+        );
+        let sender = daemon.sender();
+        let mut rng = Rng::new(0xDAE7 ^ 1);
+        let mut rates: Vec<f64> = (0..DEVICES).map(|_| rng.range(1e5, 1e6)).collect();
+
+        let before = b.results().len();
+        b.bench(&format!("daemon/ingest/{model}"), || {
+            for i in 0..INGEST_BATCH {
+                let d = i % DEVICES;
+                rates[d] = (rates[d] * rng.range(0.9, 1.1)).clamp(1e4, 1e9);
+                sender.send(DaemonEvent::Report {
+                    device: d,
+                    link: Link {
+                        up_bps: rates[d],
+                        down_bps: rates[d] * 2.0,
+                    },
+                    tick: 0,
+                });
+            }
+            daemon.pump()
+        });
+        if b.results().len() > before {
+            let mean = b.results()[before].summary.mean;
+            let events_per_sec = INGEST_BATCH as f64 / mean.max(1e-12);
+            println!("daemon/ingest/{model}: {events_per_sec:.0} events/s");
+            rows.push(Json::obj(vec![
+                ("case", Json::str("ingest")),
+                ("model", Json::str(*model)),
+                ("devices", Json::num(DEVICES as f64)),
+                ("batch", Json::num(INGEST_BATCH as f64)),
+                ("mean_batch_s", Json::num(mean)),
+                ("events_per_sec", Json::num(events_per_sec)),
+            ]));
+        }
+        daemon.shutdown();
+    }
+
+    // Tick latency: one full daemon tick — churn deltas + reports down
+    // the channel, the clock advances, a pump fires the scheduled re-plan
+    // (and any lease expiries) and plans the epoch.
+    for model in models {
+        for (mi, &(label, p)) in CHURN_LEVELS.iter().enumerate() {
+            let clock = SimClock::new(0);
+            let daemon = PlannerDaemon::spawn(
+                spec(model),
+                DaemonConfig {
+                    replan_every: 1,
+                    lease_ttl: Some(4),
+                    service: ServiceOptions {
+                        staleness_bound: 0,
+                        solve_budget: u64::MAX,
+                        joint: JointOptions::default(),
+                    },
+                    ..DaemonConfig::default()
+                },
+                Arc::new(clock.clone()),
+            );
+            let sender = daemon.sender();
+            let mut rng = Rng::new(0xDAE7 ^ ((mi as u64) << 16));
+            let mut rates: Vec<f64> = (0..DEVICES).map(|_| rng.range(1e5, 1e6)).collect();
+            // Local membership mirror so generated deltas stay valid
+            // without a spec round-trip per event.
+            let mut active = vec![true; DEVICES];
+            let mut bootstrapped = vec![false; DEVICES];
+            let mut tick: u64 = 0;
+            let mut decisions: u64 = 0;
+            let mut degraded: u64 = 0;
+
+            let before = b.results().len();
+            b.bench(&format!("daemon/tick/{model}/{label}"), || {
+                tick += 1;
+                clock.set(tick);
+                // Membership churn: active devices leave with probability
+                // p (never emptying the fleet); departed slots re-join on
+                // a random tier with probability 1/2.
+                for d in 0..DEVICES {
+                    if active[d] {
+                        if rng.chance(p) && active.iter().filter(|&&a| a).count() > 1 {
+                            sender.send(DaemonEvent::Delta(SpecDelta::RemoveDevice {
+                                device: d,
+                            }));
+                            active[d] = false;
+                            bootstrapped[d] = false;
+                        }
+                    } else if rng.chance(0.5) {
+                        let tier = rng.index(4);
+                        sender.send(DaemonEvent::Delta(SpecDelta::AddDevice {
+                            device: d,
+                            tier,
+                        }));
+                        active[d] = true;
+                    }
+                }
+                // Link reports: ±10% fading walk, withheld with
+                // probability p (except a device's bootstrap epoch).
+                for d in 0..DEVICES {
+                    if !active[d] {
+                        continue;
+                    }
+                    rates[d] = (rates[d] * rng.range(0.9, 1.1)).clamp(1e4, 1e9);
+                    if !bootstrapped[d] || !rng.chance(p) {
+                        sender.send(DaemonEvent::Report {
+                            device: d,
+                            link: Link {
+                                up_bps: rates[d],
+                                down_bps: rates[d] * 2.0,
+                            },
+                            tick,
+                        });
+                        bootstrapped[d] = true;
+                    }
+                }
+                let report = daemon.pump();
+                for epoch in &report.epochs {
+                    decisions += epoch.decisions.len() as u64;
+                    degraded += epoch
+                        .decisions
+                        .iter()
+                        .filter(|d| matches!(d.provenance, DecisionProvenance::Degraded(_)))
+                        .count() as u64;
+                }
+                report
+            });
+            if b.results().len() == before {
+                daemon.shutdown();
+                continue; // `-- filter` skipped this case
+            }
+            let mean = b.results()[before].summary.mean;
+            let ticks_per_sec = 1.0 / mean.max(1e-12);
+            let counters = daemon.counters();
+            let degraded_rate = degraded as f64 / decisions.max(1) as f64;
+            println!(
+                "daemon/tick/{model}/{label}: {ticks_per_sec:.0} ticks/s, \
+                 degraded {:.2}% of {decisions} decisions, \
+                 {} lease expiries",
+                degraded_rate * 100.0,
+                counters.lease_expiries,
+            );
+            rows.push(Json::obj(vec![
+                ("case", Json::str("tick")),
+                ("model", Json::str(*model)),
+                ("churn", Json::num(p)),
+                ("devices", Json::num(DEVICES as f64)),
+                ("mean_tick_s", Json::num(mean)),
+                ("ticks_per_sec", Json::num(ticks_per_sec)),
+                ("decisions", Json::num(decisions as f64)),
+                ("degraded_rate", Json::num(degraded_rate)),
+                ("events_ingested", Json::num(counters.events_ingested as f64)),
+                ("coalesced_deltas", Json::num(counters.coalesced_deltas as f64)),
+                ("lease_expiries", Json::num(counters.lease_expiries as f64)),
+            ]));
+            daemon.shutdown();
+        }
+    }
+    b.finish();
+
+    if smoke {
+        println!("smoke mode: skipping BENCH_PR7.json");
+        return;
+    }
+    let out = std::env::var("FASTSPLIT_DAEMON_OUT").unwrap_or_else(|_| "BENCH_PR7.json".into());
+    if out != "-" && !rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("daemon")),
+            ("measured", Json::Bool(true)),
+            (
+                "note",
+                Json::str(
+                    "planner daemon over an 8-device fleet: ingest = reports/sec through \
+                     the coalescing channel (pump round-trip as the sync barrier); tick = \
+                     full daemon ticks/sec (churn deltas + reports + wheel-fired plan) with \
+                     replan_every=1, lease_ttl=4, strict staleness bound (0)",
+                ),
+            ),
+            ("results", Json::Arr(rows)),
+        ]);
+        match std::fs::write(&out, doc.pretty() + "\n") {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
+    }
+}

@@ -166,6 +166,14 @@ impl Coordinator {
         self.service.stats()
     }
 
+    /// The planner's Prometheus scrape (the [`crate::daemon::metrics`]
+    /// service families), ready for a metrics endpoint or a log dump.
+    pub fn render_prometheus(&self) -> String {
+        crate::daemon::metrics::render_prometheus(&crate::daemon::metrics::service_metrics(
+            &self.service,
+        ))
+    }
+
     /// Run one epoch of the Sec. III-A loop.
     pub fn run_epoch(&mut self) -> Result<EpochReport> {
         let epoch = self.epoch;
@@ -201,6 +209,7 @@ impl Coordinator {
         let decision = self
             .service
             .plan_epoch(epoch as u64)
+            .expect("the coordinator's epoch clock is monotone")
             .into_iter()
             .find(|d| d.device == device)
             .expect("one decision per device");

@@ -1,0 +1,79 @@
+//! The daemon's injected time source.
+//!
+//! Policy code in this crate never reads the wall clock (the PR-6
+//! simulated-clock rule); the daemon keeps that property by threading
+//! every time read through the [`Clock`] trait. Tests and the bench
+//! harness drive a [`SimClock`]; a production embedding would implement
+//! `Clock` over a monotonic hardware source. Ticks are opaque `u64`s —
+//! the epoch granularity of `PlannerService`, not nanoseconds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// An injected monotone tick source. `Send + Sync` because the daemon
+/// worker thread and its producers read it concurrently.
+pub trait Clock: Send + Sync {
+    /// The current tick. Implementations should be monotone; the daemon
+    /// additionally clamps (timer fires) or degrades (explicit plan
+    /// requests) when a source misbehaves, so a glitch cannot panic the
+    /// worker.
+    fn now(&self) -> u64;
+}
+
+/// The simulated clock: a shared atomic tick that tests and benches
+/// advance by hand. Clones share the same underlying tick.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    tick: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    /// A simulated clock starting at `start`.
+    pub fn new(start: u64) -> SimClock {
+        SimClock {
+            tick: Arc::new(AtomicU64::new(start)),
+        }
+    }
+
+    /// Advance the clock by `by` ticks.
+    pub fn advance(&self, by: u64) {
+        self.tick.fetch_add(by, Ordering::SeqCst);
+    }
+
+    /// Set the clock to an absolute tick — including backwards, which is
+    /// exactly how tests exercise the daemon's non-monotone-producer
+    /// degraded path.
+    pub fn set(&self, to: u64) {
+        self.tick.store(to, Ordering::SeqCst);
+    }
+
+    /// The current tick.
+    pub fn now(&self) -> u64 {
+        self.tick.load(Ordering::SeqCst)
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> u64 {
+        SimClock::now(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_clones_share_one_tick() {
+        let a = SimClock::new(7);
+        let b = a.clone();
+        assert_eq!(b.now(), 7);
+        a.advance(3);
+        assert_eq!(a.now(), 10);
+        assert_eq!(b.now(), 10);
+        b.set(2);
+        assert_eq!(a.now(), 2);
+        let dyn_clock: Arc<dyn Clock> = Arc::new(a);
+        assert_eq!(dyn_clock.now(), 2);
+    }
+}

@@ -1,0 +1,559 @@
+//! Event ingestion and inter-tick coalescing.
+//!
+//! Concurrent producers feed the daemon raw [`DaemonEvent`]s; between two
+//! plan ticks the [`Coalescer`] folds them into the *smallest equivalent
+//! batch*: an add+remove of the same device cancels outright, a delta
+//! chain per device collapses to at most two deltas, and link reports are
+//! last-writer-wins per device. The contract (RESILIENCE.md "Daemon
+//! contracts") is **replay equivalence**: applying the coalesced batch to
+//! a `PlannerService` leaves it in a state indistinguishable — decisions,
+//! caches, feasibility — from applying the raw stream, while
+//! `spec_deltas` counts at most (usually far fewer than) the raw events.
+//!
+//! To make that equivalence exact the coalescer *validates at the door*,
+//! against a pending-state mirror of the fleet spec: an event that the
+//! raw stream would reject (typed [`SpecError`]) or that can only produce
+//! divergent state (a report for a departed slot, which the service would
+//! hold for a future incarnation) is refused with an [`IngestError`] and
+//! counted by the daemon, never enqueued. Everything the coalescer
+//! accepts therefore replays cleanly.
+//!
+//! Emission order is canonical and deterministic: device deltas in slot
+//! order, reports after deltas in slot order; tier events are barriers
+//! (they flush pending device lanes first) because detaching a tier
+//! reorders around device deltas in ways coalescing must not hide.
+
+use std::collections::BTreeMap;
+
+use crate::partition::fleet::{FleetSpec, SpecDelta, SpecError};
+use crate::partition::types::Link;
+
+/// One raw event a producer hands the daemon.
+#[derive(Clone, Debug)]
+pub enum DaemonEvent {
+    /// A churn event against the fleet spec.
+    Delta(SpecDelta),
+    /// A device's link report at caller tick `tick`.
+    Report {
+        device: usize,
+        link: Link,
+        tick: u64,
+    },
+}
+
+/// One entry of a flushed coalesced batch, in canonical order.
+#[derive(Clone, Debug)]
+pub enum CoalescedItem {
+    /// A (possibly fused) churn event to apply.
+    Delta(SpecDelta),
+    /// The newest surviving report for a device.
+    Report {
+        device: usize,
+        link: Link,
+        tick: u64,
+    },
+}
+
+/// Why the coalescer refused an event at the door.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IngestError {
+    /// The delta is malformed against the pending fleet state.
+    Spec(SpecError),
+    /// A report named a slot that is departed (or out of range) in the
+    /// pending state — holding it for a future incarnation would diverge
+    /// from raw replay, so it is refused instead.
+    ReportForInactiveDevice { device: usize },
+    /// A report carried a non-positive rate (the service would panic).
+    NonPositiveRate { device: usize },
+}
+
+impl std::fmt::Display for IngestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IngestError::Spec(e) => write!(f, "{e}"),
+            IngestError::ReportForInactiveDevice { device } => {
+                write!(f, "report for inactive device slot {device}")
+            }
+            IngestError::NonPositiveRate { device } => {
+                write!(f, "non-positive link rate reported for device {device}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
+
+impl From<SpecError> for IngestError {
+    fn from(e: SpecError) -> IngestError {
+        IngestError::Spec(e)
+    }
+}
+
+/// Per-device pending state between barriers.
+struct DeviceLane {
+    /// The device's tier when the lane opened (pending state *before*
+    /// this batch touched it).
+    initial: Option<usize>,
+    /// A `RemoveDevice` happened in this batch.
+    removed: bool,
+    /// A `MigrateDevice` happened in this batch (without a removal).
+    migrated: bool,
+    /// Newest surviving report: last-writer-wins by tick, cleared by a
+    /// removal (the raw service clears its inbox on departure too).
+    report: Option<(Link, u64)>,
+}
+
+/// The inter-tick event folder. See the module docs for the contract.
+pub struct Coalescer {
+    /// Pending-state mirror: each slot's tier after every accepted event.
+    membership: Vec<Option<usize>>,
+    /// Pending retired flag per tier slot.
+    retired: Vec<bool>,
+    /// Open device lanes, keyed by slot (BTreeMap = canonical order).
+    lanes: BTreeMap<usize, DeviceLane>,
+    /// Flushed-but-unconsumed items (tier barriers emit into here).
+    items: Vec<CoalescedItem>,
+}
+
+impl Coalescer {
+    /// A coalescer whose pending-state mirror starts at `spec`.
+    pub fn new(spec: &FleetSpec) -> Coalescer {
+        Coalescer {
+            membership: (0..spec.num_devices()).map(|d| spec.tier_of_opt(d)).collect(),
+            retired: (0..spec.num_tiers()).map(|t| spec.tier_retired(t)).collect(),
+            lanes: BTreeMap::new(),
+            items: Vec::new(),
+        }
+    }
+
+    fn tier_ok(&self, tier: usize) -> Result<(), SpecError> {
+        if tier >= self.retired.len() {
+            Err(SpecError::UnknownTier { tier })
+        } else if self.retired[tier] {
+            Err(SpecError::RetiredTier { tier })
+        } else {
+            Ok(())
+        }
+    }
+
+    fn slot(&self, device: usize) -> Option<usize> {
+        self.membership.get(device).copied().flatten()
+    }
+
+    fn lane(&mut self, device: usize) -> &mut DeviceLane {
+        let initial = self.slot(device);
+        self.lanes.entry(device).or_insert(DeviceLane {
+            initial,
+            removed: false,
+            migrated: false,
+            report: None,
+        })
+    }
+
+    /// Accept one raw event into the pending batch, or refuse it with a
+    /// typed error (mirroring exactly what raw replay would reject).
+    pub fn push(&mut self, event: DaemonEvent) -> Result<(), IngestError> {
+        match event {
+            DaemonEvent::Delta(delta) => self.push_delta(delta).map_err(IngestError::from),
+            DaemonEvent::Report { device, link, tick } => {
+                if !(link.up_bps > 0.0 && link.down_bps > 0.0) {
+                    return Err(IngestError::NonPositiveRate { device });
+                }
+                if self.slot(device).is_none() {
+                    return Err(IngestError::ReportForInactiveDevice { device });
+                }
+                let lane = self.lane(device);
+                match lane.report {
+                    Some((_, have)) if tick < have => {} // older: dropped
+                    _ => lane.report = Some((link, tick)),
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn push_delta(&mut self, delta: SpecDelta) -> Result<(), SpecError> {
+        match delta {
+            SpecDelta::AddTier { .. } => {
+                // Tier events are barriers: device-lane coalescing must
+                // not move a delta across a tier-set change.
+                self.barrier();
+                self.retired.push(false);
+                self.items.push(CoalescedItem::Delta(delta));
+            }
+            SpecDelta::RetireTier { tier } => {
+                if tier >= self.retired.len() {
+                    return Err(SpecError::UnknownTier { tier });
+                }
+                if self.retired[tier] {
+                    return Err(SpecError::AlreadyRetired { tier });
+                }
+                self.barrier();
+                self.retired[tier] = true;
+                for slot in &mut self.membership {
+                    if *slot == Some(tier) {
+                        *slot = None;
+                    }
+                }
+                self.items.push(CoalescedItem::Delta(delta));
+            }
+            SpecDelta::AddDevice { device, tier } => {
+                self.tier_ok(tier)?;
+                if self.slot(device).is_some() {
+                    return Err(SpecError::DeviceAlreadyPresent { device });
+                }
+                self.lane(device);
+                if device >= self.membership.len() {
+                    self.membership.resize(device + 1, None);
+                }
+                self.membership[device] = Some(tier);
+            }
+            SpecDelta::RemoveDevice { device } => {
+                if self.slot(device).is_none() {
+                    return Err(SpecError::UnknownDevice { device });
+                }
+                let lane = self.lane(device);
+                lane.removed = true;
+                lane.report = None;
+                self.membership[device] = None;
+            }
+            SpecDelta::MigrateDevice { device, tier } => {
+                self.tier_ok(tier)?;
+                if self.slot(device).is_none() {
+                    return Err(SpecError::UnknownDevice { device });
+                }
+                self.lane(device).migrated = true;
+                self.membership[device] = Some(tier);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold every open device lane into canonical items: deltas in slot
+    /// order (at most two per device), then surviving reports in slot
+    /// order.
+    fn barrier(&mut self) {
+        let lanes = std::mem::take(&mut self.lanes);
+        let mut reports: Vec<(usize, Link, u64)> = Vec::new();
+        for (device, lane) in lanes {
+            let current = self.slot(device);
+            match (lane.initial, current) {
+                // Add + remove within one batch: cancels outright.
+                (None, None) => {}
+                (None, Some(tier)) => {
+                    self.items
+                        .push(CoalescedItem::Delta(SpecDelta::AddDevice { device, tier }));
+                }
+                (Some(_), None) => {
+                    debug_assert!(lane.removed, "only a removal departs a lane");
+                    self.items
+                        .push(CoalescedItem::Delta(SpecDelta::RemoveDevice { device }));
+                }
+                (Some(t0), Some(tier)) => {
+                    if lane.removed {
+                        // Remove then re-add: must NOT fuse to a migrate —
+                        // a re-join drops the old incarnation's caches, a
+                        // migrate keeps the report. Emit both.
+                        self.items
+                            .push(CoalescedItem::Delta(SpecDelta::RemoveDevice { device }));
+                        self.items
+                            .push(CoalescedItem::Delta(SpecDelta::AddDevice { device, tier }));
+                    } else if lane.migrated {
+                        // Emitted even when tier == t0: a migrate clears
+                        // the device's last-good cache, and a round-trip
+                        // A→B→A must still clear it under raw replay.
+                        self.items
+                            .push(CoalescedItem::Delta(SpecDelta::MigrateDevice {
+                                device,
+                                tier,
+                            }));
+                    } else {
+                        debug_assert_eq!(t0, tier, "an untouched lane cannot move tiers");
+                    }
+                }
+            }
+            if let Some((link, tick)) = lane.report {
+                debug_assert!(current.is_some(), "reports for departed slots are refused");
+                reports.push((device, link, tick));
+            }
+        }
+        for (device, link, tick) in reports {
+            self.items
+                .push(CoalescedItem::Report { device, link, tick });
+        }
+    }
+
+    /// Close the batch: fold the open lanes and hand back every pending
+    /// item in canonical order. The mirror keeps its state — the next
+    /// batch continues from here.
+    pub fn flush(&mut self) -> Vec<CoalescedItem> {
+        self.barrier();
+        std::mem::take(&mut self.items)
+    }
+
+    /// Raw events currently folded into the pending batch (open lanes
+    /// plus already-barriered items) — `0` means flush would be empty.
+    pub fn is_pending(&self) -> bool {
+        !self.lanes.is_empty() || !self.items.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+    use crate::util::rng::Rng;
+
+    fn spec_for(model: &str, devices: usize) -> FleetSpec {
+        let m = models::by_name(model).unwrap();
+        FleetSpec::from_fleet(&DeviceProfile::fleet_of(devices), |d| {
+            CostGraph::build(&m, d, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+        })
+    }
+
+    fn deltas(items: &[CoalescedItem]) -> Vec<String> {
+        items
+            .iter()
+            .filter_map(|i| match i {
+                CoalescedItem::Delta(d) => Some(format!("{d:?}")),
+                CoalescedItem::Report { .. } => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn add_then_remove_cancels_outright() {
+        let spec = spec_for("block-residual", 4);
+        let mut c = Coalescer::new(&spec);
+        c.push(DaemonEvent::Delta(SpecDelta::AddDevice { device: 9, tier: 0 }))
+            .unwrap();
+        c.push(DaemonEvent::Delta(SpecDelta::RemoveDevice { device: 9 }))
+            .unwrap();
+        assert!(c.flush().is_empty(), "add+remove is a no-op batch");
+        // And the inverse does NOT cancel: remove + re-add emits both
+        // (a re-join must not inherit the old incarnation's caches).
+        c.push(DaemonEvent::Delta(SpecDelta::RemoveDevice { device: 1 }))
+            .unwrap();
+        c.push(DaemonEvent::Delta(SpecDelta::AddDevice { device: 1, tier: 2 }))
+            .unwrap();
+        let out = deltas(&c.flush());
+        assert_eq!(out.len(), 2);
+        assert!(out[0].contains("RemoveDevice"));
+        assert!(out[1].contains("AddDevice"));
+    }
+
+    #[test]
+    fn migrate_chains_collapse_but_round_trips_still_emit() {
+        let spec = spec_for("block-residual", 4);
+        let mut c = Coalescer::new(&spec);
+        // Device 0 lives on tier 0: a chain 0→1→2→3 collapses to one
+        // migrate to the final tier.
+        for tier in [1usize, 2, 3] {
+            c.push(DaemonEvent::Delta(SpecDelta::MigrateDevice { device: 0, tier }))
+                .unwrap();
+        }
+        let out = deltas(&c.flush());
+        assert_eq!(out, vec!["MigrateDevice { device: 0, tier: 3 }"]);
+        // A round trip 3→1→3 still emits one migrate (the raw stream
+        // cleared the device's last-good cache; the batch must too).
+        c.push(DaemonEvent::Delta(SpecDelta::MigrateDevice { device: 0, tier: 1 }))
+            .unwrap();
+        c.push(DaemonEvent::Delta(SpecDelta::MigrateDevice { device: 0, tier: 3 }))
+            .unwrap();
+        let out = deltas(&c.flush());
+        assert_eq!(out, vec!["MigrateDevice { device: 0, tier: 3 }"]);
+    }
+
+    #[test]
+    fn reports_are_last_writer_wins_and_ordered_after_deltas() {
+        let spec = spec_for("block-residual", 4);
+        let mut c = Coalescer::new(&spec);
+        c.push(DaemonEvent::Report {
+            device: 2,
+            link: Link::symmetric(1e5),
+            tick: 4,
+        })
+        .unwrap();
+        c.push(DaemonEvent::Delta(SpecDelta::MigrateDevice { device: 2, tier: 0 }))
+            .unwrap();
+        c.push(DaemonEvent::Report {
+            device: 2,
+            link: Link::symmetric(3e5),
+            tick: 6,
+        })
+        .unwrap();
+        // An out-of-order older report is dropped, like the service inbox.
+        c.push(DaemonEvent::Report {
+            device: 2,
+            link: Link::symmetric(9e5),
+            tick: 5,
+        })
+        .unwrap();
+        let items = c.flush();
+        assert_eq!(items.len(), 2);
+        assert!(matches!(
+            items[0],
+            CoalescedItem::Delta(SpecDelta::MigrateDevice { device: 2, tier: 0 })
+        ));
+        match items[1] {
+            CoalescedItem::Report { device, link, tick } => {
+                assert_eq!(device, 2);
+                assert_eq!(tick, 6);
+                assert_eq!(link.up_bps, 3e5);
+            }
+            _ => panic!("report must follow the deltas"),
+        }
+    }
+
+    #[test]
+    fn removal_clears_the_pending_report() {
+        let spec = spec_for("block-residual", 4);
+        let mut c = Coalescer::new(&spec);
+        c.push(DaemonEvent::Report {
+            device: 1,
+            link: Link::symmetric(2e5),
+            tick: 1,
+        })
+        .unwrap();
+        c.push(DaemonEvent::Delta(SpecDelta::RemoveDevice { device: 1 }))
+            .unwrap();
+        let items = c.flush();
+        assert_eq!(items.len(), 1, "only the removal survives");
+        assert!(matches!(
+            items[0],
+            CoalescedItem::Delta(SpecDelta::RemoveDevice { device: 1 })
+        ));
+    }
+
+    #[test]
+    fn door_validation_mirrors_raw_replay() {
+        let spec = spec_for("block-residual", 4);
+        let mut c = Coalescer::new(&spec);
+        // Raw-invalid deltas are refused with the same typed errors.
+        assert_eq!(
+            c.push(DaemonEvent::Delta(SpecDelta::MigrateDevice { device: 9, tier: 0 })),
+            Err(IngestError::Spec(SpecError::UnknownDevice { device: 9 }))
+        );
+        assert_eq!(
+            c.push(DaemonEvent::Delta(SpecDelta::AddDevice { device: 1, tier: 0 })),
+            Err(IngestError::Spec(SpecError::DeviceAlreadyPresent { device: 1 }))
+        );
+        // Validation is against the *pending* state: remove 1, then the
+        // same add is acceptable; a second remove is not.
+        c.push(DaemonEvent::Delta(SpecDelta::RemoveDevice { device: 1 }))
+            .unwrap();
+        assert_eq!(
+            c.push(DaemonEvent::Delta(SpecDelta::RemoveDevice { device: 1 })),
+            Err(IngestError::Spec(SpecError::UnknownDevice { device: 1 }))
+        );
+        assert_eq!(
+            c.push(DaemonEvent::Report {
+                device: 1,
+                link: Link::symmetric(1e5),
+                tick: 0,
+            }),
+            Err(IngestError::ReportForInactiveDevice { device: 1 })
+        );
+        c.push(DaemonEvent::Delta(SpecDelta::AddDevice { device: 1, tier: 0 }))
+            .unwrap();
+        // Bad rates are refused at the door, not panicked on later.
+        assert_eq!(
+            c.push(DaemonEvent::Report {
+                device: 1,
+                link: Link {
+                    up_bps: 0.0,
+                    down_bps: 1e5,
+                },
+                tick: 0,
+            }),
+            Err(IngestError::NonPositiveRate { device: 1 })
+        );
+    }
+
+    #[test]
+    fn tier_events_are_barriers() {
+        let spec = spec_for("block-residual", 6);
+        let mut c = Coalescer::new(&spec);
+        // Device 0 migrates, then its tier retires: the migrate must be
+        // emitted before the retire (the retire detaches the device).
+        c.push(DaemonEvent::Delta(SpecDelta::MigrateDevice { device: 0, tier: 3 }))
+            .unwrap();
+        c.push(DaemonEvent::Delta(SpecDelta::RetireTier { tier: 3 }))
+            .unwrap();
+        let out = deltas(&c.flush());
+        assert_eq!(
+            out,
+            vec![
+                "MigrateDevice { device: 0, tier: 3 }".to_string(),
+                "RetireTier { tier: 3 }".to_string(),
+            ]
+        );
+        // And the mirror noticed the detachment: device 0 is gone, tier
+        // 3 rejects newcomers.
+        assert_eq!(
+            c.push(DaemonEvent::Delta(SpecDelta::MigrateDevice { device: 0, tier: 0 })),
+            Err(IngestError::Spec(SpecError::UnknownDevice { device: 0 }))
+        );
+        assert_eq!(
+            c.push(DaemonEvent::Delta(SpecDelta::AddDevice { device: 0, tier: 3 })),
+            Err(IngestError::Spec(SpecError::RetiredTier { tier: 3 }))
+        );
+    }
+
+    /// Seeded batch equivalence on the spec level: a random valid event
+    /// stream applied raw and applied coalesced end at the same
+    /// membership, with the coalesced delta count never exceeding (and
+    /// for this workload strictly under) the raw count.
+    #[test]
+    fn seeded_coalesced_batches_replay_to_the_raw_spec() {
+        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0xC0A1);
+        let spec = spec_for("block-residual", 6);
+        let mut raw = spec.clone();
+        let mut c = Coalescer::new(&spec);
+        let mut coalesced = spec.clone();
+        let mut raw_deltas = 0u64;
+        let mut batched_deltas = 0u64;
+        for _ in 0..40 {
+            // One inter-tick window of random-but-valid device churn.
+            for _ in 0..rng.below(8) {
+                let device = rng.below(8) as usize;
+                let delta = match raw.tier_of_opt(device) {
+                    None => SpecDelta::AddDevice {
+                        device,
+                        tier: rng.below(raw.num_tiers() as u64) as usize,
+                    },
+                    Some(_) if rng.chance(0.5) => SpecDelta::RemoveDevice { device },
+                    Some(_) => SpecDelta::MigrateDevice {
+                        device,
+                        tier: rng.below(raw.num_tiers() as u64) as usize,
+                    },
+                };
+                if raw.validate(&delta).is_err() {
+                    continue; // e.g. a retired target tier
+                }
+                raw.apply(&delta);
+                raw_deltas += 1;
+                c.push(DaemonEvent::Delta(delta)).unwrap();
+            }
+            for item in c.flush() {
+                if let CoalescedItem::Delta(d) = item {
+                    coalesced.apply(&d);
+                    batched_deltas += 1;
+                }
+            }
+            let same: Vec<Option<usize>> = (0..raw.num_devices())
+                .map(|d| raw.tier_of_opt(d))
+                .collect();
+            let got: Vec<Option<usize>> = (0..coalesced.num_devices())
+                .map(|d| coalesced.tier_of_opt(d))
+                .collect();
+            assert_eq!(got, same, "coalesced replay diverged from raw");
+        }
+        assert!(batched_deltas <= raw_deltas);
+        assert!(
+            batched_deltas < raw_deltas,
+            "this workload must make coalescing fire ({batched_deltas} vs {raw_deltas})"
+        );
+    }
+}

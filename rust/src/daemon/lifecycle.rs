@@ -1,0 +1,116 @@
+//! Graceful-drain primitives (the kumomta `kumo-server-lifecycle`
+//! shape): an [`ActivityTracker`] counts outstanding producer activities
+//! via RAII [`ActivityHandle`] guards, and shutdown waits for the count
+//! to reach zero before the daemon stops intake and drains its queues.
+//!
+//! The contract the daemon builds on top (`daemon::mod`): a producer
+//! holds a handle strictly while handing an event to the channel, so
+//! `wait_idle` returning means every event any producer has *started*
+//! sending is in the queue — the drain that follows loses nothing.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A shared counter of in-flight activities. Clones observe the same
+/// count.
+#[derive(Clone, Default)]
+pub struct ActivityTracker {
+    inner: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ActivityTracker {
+    /// A tracker with no outstanding activity.
+    pub fn new() -> ActivityTracker {
+        ActivityTracker::default()
+    }
+
+    /// Begin an activity: the count stays non-zero until the returned
+    /// guard (and all its clones) drop.
+    pub fn activity(&self) -> ActivityHandle {
+        let (count, _) = &*self.inner;
+        *count.lock().expect("activity lock poisoned") += 1;
+        ActivityHandle {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+
+    /// Outstanding activity guards right now.
+    pub fn outstanding(&self) -> usize {
+        let (count, _) = &*self.inner;
+        *count.lock().expect("activity lock poisoned")
+    }
+
+    /// Block until no activity is outstanding. Returns immediately when
+    /// the count is already zero.
+    pub fn wait_idle(&self) {
+        let (count, idle) = &*self.inner;
+        let mut n = count.lock().expect("activity lock poisoned");
+        while *n > 0 {
+            n = idle.wait(n).expect("activity lock poisoned");
+        }
+    }
+}
+
+/// RAII guard for one activity; cloning extends the activity, the last
+/// drop wakes [`ActivityTracker::wait_idle`] waiters.
+pub struct ActivityHandle {
+    inner: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl Clone for ActivityHandle {
+    fn clone(&self) -> ActivityHandle {
+        let (count, _) = &*self.inner;
+        *count.lock().expect("activity lock poisoned") += 1;
+        ActivityHandle {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl Drop for ActivityHandle {
+    fn drop(&mut self) {
+        let (count, idle) = &*self.inner;
+        let mut n = count.lock().expect("activity lock poisoned");
+        *n -= 1;
+        if *n == 0 {
+            idle.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn guards_count_and_release() {
+        let tracker = ActivityTracker::new();
+        assert_eq!(tracker.outstanding(), 0);
+        tracker.wait_idle(); // already idle: no block
+        let a = tracker.activity();
+        let b = a.clone();
+        assert_eq!(tracker.outstanding(), 2);
+        drop(a);
+        assert_eq!(tracker.outstanding(), 1);
+        drop(b);
+        assert_eq!(tracker.outstanding(), 0);
+        tracker.wait_idle();
+    }
+
+    #[test]
+    fn wait_idle_blocks_until_the_last_guard_drops() {
+        let tracker = ActivityTracker::new();
+        let guard = tracker.activity();
+        let waiter = {
+            let tracker = tracker.clone();
+            thread::spawn(move || {
+                tracker.wait_idle();
+                tracker.outstanding()
+            })
+        };
+        // The waiter cannot finish while the guard lives; dropping it
+        // releases the join.
+        drop(guard);
+        assert_eq!(waiter.join().expect("waiter panicked"), 0);
+    }
+}

@@ -1,0 +1,354 @@
+//! Pull-based metrics: snapshot the planning stack's counters into
+//! Prometheus text format (the kumomta `kumo-prometheus` shape, without
+//! the HTTP server — rendering is the daemon's job, transport is the
+//! embedder's).
+//!
+//! The scrape surface is a pure function of [`FleetStats`] and the
+//! service counters: no background aggregation, no atomics, no drift
+//! between what the planner counted and what the scrape says. The
+//! rendered text is **byte-stable** for a fixed state — metric order is
+//! struct-field order, names and HELP/TYPE lines are pinned by a golden
+//! test below so the format cannot drift silently under a scraper.
+
+use crate::partition::fleet::FleetStats;
+use crate::partition::service::PlannerService;
+
+/// Prometheus metric families this module emits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone counter (`_total` names).
+    Counter,
+    /// Point-in-time value.
+    Gauge,
+}
+
+/// One rendered metric: a name, its HELP line, kind and current value.
+#[derive(Clone, Copy, Debug)]
+pub struct Metric {
+    /// Prometheus metric name (`fastsplit_*`).
+    pub name: &'static str,
+    /// The `# HELP` line body.
+    pub help: &'static str,
+    /// Counter or gauge.
+    pub kind: MetricKind,
+    /// Current value (all the stack's counters are integral).
+    pub value: u64,
+}
+
+/// Render metrics in Prometheus text exposition format: per metric a
+/// `# HELP`, a `# TYPE` and one sample line. Deterministic: the output
+/// is a pure function of the input slice.
+pub fn render_prometheus(metrics: &[Metric]) -> String {
+    let mut out = String::new();
+    for m in metrics {
+        let kind = match m.kind {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+        };
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n",
+            name = m.name,
+            help = m.help,
+            kind = kind,
+            value = m.value,
+        ));
+    }
+    out
+}
+
+/// Snapshot a [`FleetStats`] into its metric family, in struct-field
+/// order (the golden test pins names and order).
+pub fn fleet_metrics(stats: &FleetStats) -> Vec<Metric> {
+    let counter = |name, help, value| Metric {
+        name,
+        help,
+        kind: MetricKind::Counter,
+        value,
+    };
+    let gauge = |name, help, value| Metric {
+        name,
+        help,
+        kind: MetricKind::Gauge,
+        value,
+    };
+    vec![
+        counter(
+            "fastsplit_plans_total",
+            "Batched plan calls served",
+            stats.plans,
+        ),
+        counter(
+            "fastsplit_requests_total",
+            "Plan requests across all plan calls",
+            stats.requests,
+        ),
+        counter(
+            "fastsplit_refreshes_total",
+            "O(E) capacity-refresh passes",
+            stats.refreshes,
+        ),
+        counter("fastsplit_flow_solves_total", "Dinic runs", stats.flow_solves),
+        counter(
+            "fastsplit_linear_scans_total",
+            "Linear-scan solves on chain solve DAGs",
+            stats.linear_scans,
+        ),
+        counter(
+            "fastsplit_incremental_solves_total",
+            "Flow solves that reused the previous flow",
+            stats.incremental_solves,
+        ),
+        counter(
+            "fastsplit_repair_pushes_total",
+            "Arc cancellations by incremental repair",
+            stats.repair_pushes,
+        ),
+        counter(
+            "fastsplit_augment_rounds_total",
+            "BFS phases of incremental augmentation",
+            stats.augment_rounds,
+        ),
+        gauge(
+            "fastsplit_full_dag_vertices",
+            "Vertices of the full model DAG",
+            stats.full_vertices as u64,
+        ),
+        gauge(
+            "fastsplit_full_dag_edges",
+            "Edges of the full model DAG",
+            stats.full_edges as u64,
+        ),
+        gauge(
+            "fastsplit_solve_dag_vertices",
+            "Vertices of the DAG the engine solves on",
+            stats.reduced_vertices as u64,
+        ),
+        gauge(
+            "fastsplit_solve_dag_edges",
+            "Edges of the DAG the engine solves on",
+            stats.reduced_edges as u64,
+        ),
+        gauge(
+            "fastsplit_blocks_detected",
+            "Blocks found by Alg. 3 detection",
+            stats.blocks_detected as u64,
+        ),
+        gauge(
+            "fastsplit_blocks_abstracted",
+            "Blocks abstracted under Theorem 2",
+            stats.blocks_abstracted as u64,
+        ),
+        counter(
+            "fastsplit_price_iterations_total",
+            "Joint-planner congestion price probes",
+            stats.price_iterations,
+        ),
+        counter(
+            "fastsplit_joint_resolves_total",
+            "Priced per-tier re-solves of the joint loop",
+            stats.joint_resolves,
+        ),
+        counter(
+            "fastsplit_fallback_cold_solves_total",
+            "Incremental repairs that fell back cold",
+            stats.fallback_cold_solves,
+        ),
+        counter(
+            "fastsplit_spec_deltas_total",
+            "Churn events applied to the fleet spec",
+            stats.spec_deltas,
+        ),
+        counter(
+            "fastsplit_retired_decisions_total",
+            "Decisions served from a retired tier archive",
+            stats.retired_decisions,
+        ),
+        counter(
+            "fastsplit_degraded_decisions_total",
+            "Decisions served with degraded provenance",
+            stats.degraded_decisions,
+        ),
+    ]
+}
+
+/// Snapshot a whole [`PlannerService`]: the wrapped planner's
+/// [`fleet_metrics`] plus the service layer's own counters and fleet
+/// shape gauges.
+pub fn service_metrics(service: &PlannerService) -> Vec<Metric> {
+    let mut out = fleet_metrics(&service.stats());
+    let spec = service.spec();
+    out.push(Metric {
+        name: "fastsplit_degraded_stale_total",
+        help: "Decisions degraded for stale or expired reports",
+        kind: MetricKind::Counter,
+        value: service.degraded_stale(),
+    });
+    out.push(Metric {
+        name: "fastsplit_degraded_budget_total",
+        help: "Decisions degraded for solve-budget exhaustion",
+        kind: MetricKind::Counter,
+        value: service.degraded_budget(),
+    });
+    out.push(Metric {
+        name: "fastsplit_service_clock",
+        help: "Newest epoch tick the service planned at",
+        kind: MetricKind::Gauge,
+        value: service.now(),
+    });
+    out.push(Metric {
+        name: "fastsplit_device_slots",
+        help: "Device slots the fleet spec tracks",
+        kind: MetricKind::Gauge,
+        value: spec.num_devices() as u64,
+    });
+    out.push(Metric {
+        name: "fastsplit_active_devices",
+        help: "Device slots currently mapped to a live tier",
+        kind: MetricKind::Gauge,
+        value: spec.active_devices() as u64,
+    });
+    out.push(Metric {
+        name: "fastsplit_tiers",
+        help: "Tier slots (live and retired) in the fleet spec",
+        kind: MetricKind::Gauge,
+        value: spec.num_tiers() as u64,
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::partition::fleet::{FleetSpec, SpecDelta};
+    use crate::partition::service::ServiceOptions;
+    use crate::partition::types::Link;
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+
+    /// The golden snapshot: names, HELP/TYPE lines, order and value
+    /// formatting are pinned byte-for-byte, so the scrape format cannot
+    /// drift without this diff lighting up.
+    #[test]
+    fn prometheus_rendering_matches_the_golden_snapshot() {
+        let stats = FleetStats {
+            plans: 1,
+            requests: 2,
+            refreshes: 3,
+            flow_solves: 4,
+            linear_scans: 5,
+            incremental_solves: 6,
+            repair_pushes: 7,
+            augment_rounds: 8,
+            full_vertices: 9,
+            full_edges: 10,
+            reduced_vertices: 11,
+            reduced_edges: 12,
+            blocks_detected: 13,
+            blocks_abstracted: 14,
+            price_iterations: 15,
+            joint_resolves: 16,
+            fallback_cold_solves: 17,
+            spec_deltas: 18,
+            retired_decisions: 19,
+            degraded_decisions: 20,
+        };
+        let golden = concat!(
+            "# HELP fastsplit_plans_total Batched plan calls served\n",
+            "# TYPE fastsplit_plans_total counter\n",
+            "fastsplit_plans_total 1\n",
+            "# HELP fastsplit_requests_total Plan requests across all plan calls\n",
+            "# TYPE fastsplit_requests_total counter\n",
+            "fastsplit_requests_total 2\n",
+            "# HELP fastsplit_refreshes_total O(E) capacity-refresh passes\n",
+            "# TYPE fastsplit_refreshes_total counter\n",
+            "fastsplit_refreshes_total 3\n",
+            "# HELP fastsplit_flow_solves_total Dinic runs\n",
+            "# TYPE fastsplit_flow_solves_total counter\n",
+            "fastsplit_flow_solves_total 4\n",
+            "# HELP fastsplit_linear_scans_total Linear-scan solves on chain solve DAGs\n",
+            "# TYPE fastsplit_linear_scans_total counter\n",
+            "fastsplit_linear_scans_total 5\n",
+            "# HELP fastsplit_incremental_solves_total Flow solves that reused the previous flow\n",
+            "# TYPE fastsplit_incremental_solves_total counter\n",
+            "fastsplit_incremental_solves_total 6\n",
+            "# HELP fastsplit_repair_pushes_total Arc cancellations by incremental repair\n",
+            "# TYPE fastsplit_repair_pushes_total counter\n",
+            "fastsplit_repair_pushes_total 7\n",
+            "# HELP fastsplit_augment_rounds_total BFS phases of incremental augmentation\n",
+            "# TYPE fastsplit_augment_rounds_total counter\n",
+            "fastsplit_augment_rounds_total 8\n",
+            "# HELP fastsplit_full_dag_vertices Vertices of the full model DAG\n",
+            "# TYPE fastsplit_full_dag_vertices gauge\n",
+            "fastsplit_full_dag_vertices 9\n",
+            "# HELP fastsplit_full_dag_edges Edges of the full model DAG\n",
+            "# TYPE fastsplit_full_dag_edges gauge\n",
+            "fastsplit_full_dag_edges 10\n",
+            "# HELP fastsplit_solve_dag_vertices Vertices of the DAG the engine solves on\n",
+            "# TYPE fastsplit_solve_dag_vertices gauge\n",
+            "fastsplit_solve_dag_vertices 11\n",
+            "# HELP fastsplit_solve_dag_edges Edges of the DAG the engine solves on\n",
+            "# TYPE fastsplit_solve_dag_edges gauge\n",
+            "fastsplit_solve_dag_edges 12\n",
+            "# HELP fastsplit_blocks_detected Blocks found by Alg. 3 detection\n",
+            "# TYPE fastsplit_blocks_detected gauge\n",
+            "fastsplit_blocks_detected 13\n",
+            "# HELP fastsplit_blocks_abstracted Blocks abstracted under Theorem 2\n",
+            "# TYPE fastsplit_blocks_abstracted gauge\n",
+            "fastsplit_blocks_abstracted 14\n",
+            "# HELP fastsplit_price_iterations_total Joint-planner congestion price probes\n",
+            "# TYPE fastsplit_price_iterations_total counter\n",
+            "fastsplit_price_iterations_total 15\n",
+            "# HELP fastsplit_joint_resolves_total Priced per-tier re-solves of the joint loop\n",
+            "# TYPE fastsplit_joint_resolves_total counter\n",
+            "fastsplit_joint_resolves_total 16\n",
+            "# HELP fastsplit_fallback_cold_solves_total Incremental repairs that fell back cold\n",
+            "# TYPE fastsplit_fallback_cold_solves_total counter\n",
+            "fastsplit_fallback_cold_solves_total 17\n",
+            "# HELP fastsplit_spec_deltas_total Churn events applied to the fleet spec\n",
+            "# TYPE fastsplit_spec_deltas_total counter\n",
+            "fastsplit_spec_deltas_total 18\n",
+            "# HELP fastsplit_retired_decisions_total Decisions served from a retired tier archive\n",
+            "# TYPE fastsplit_retired_decisions_total counter\n",
+            "fastsplit_retired_decisions_total 19\n",
+            "# HELP fastsplit_degraded_decisions_total Decisions served with degraded provenance\n",
+            "# TYPE fastsplit_degraded_decisions_total counter\n",
+            "fastsplit_degraded_decisions_total 20\n",
+        );
+        assert_eq!(render_prometheus(&fleet_metrics(&stats)), golden);
+    }
+
+    fn spec_for(model: &str, devices: usize) -> FleetSpec {
+        let m = models::by_name(model).unwrap();
+        FleetSpec::from_fleet(&DeviceProfile::fleet_of(devices), |d| {
+            CostGraph::build(&m, d, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+        })
+    }
+
+    /// Byte-stability over a real seeded run: two services driven through
+    /// the identical report/churn/epoch sequence render identical scrape
+    /// text, and the service tail carries the right values.
+    #[test]
+    fn service_scrape_is_byte_stable_for_a_fixed_run() {
+        let run = || {
+            let mut service =
+                PlannerService::new(spec_for("googlenet", 4), ServiceOptions::default());
+            for d in 0..4 {
+                service.report(d, Link::symmetric(5e5), 0);
+            }
+            service.plan_epoch(0).unwrap();
+            service.apply_delta(&SpecDelta::RemoveDevice { device: 3 });
+            service.expire_report(1);
+            service.plan_epoch(2).unwrap();
+            render_prometheus(&service_metrics(&service))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same run, same scrape bytes");
+        assert!(a.contains("fastsplit_service_clock 2\n"));
+        assert!(a.contains("fastsplit_device_slots 4\n"));
+        assert!(a.contains("fastsplit_active_devices 3\n"));
+        assert!(a.contains("fastsplit_spec_deltas_total 1\n"));
+        assert!(a.contains("fastsplit_degraded_stale_total 1\n"));
+        assert!(a.ends_with('\n'));
+    }
+}

@@ -1,0 +1,984 @@
+//! The planner daemon: `partition::service::PlannerService` as a
+//! long-lived system process (PR 7).
+//!
+//! PRs 1–6 built an exact, churn-tolerant planning *library* ticked by a
+//! simulator. This module gives it the daemon face the ROADMAP calls
+//! for, with std::thread + mpsc channels only (no async runtime —
+//! consistent with the vendored rayon-shim approach):
+//!
+//! * [`ingest`] — concurrent producers send [`DaemonEvent`]s down an
+//!   mpsc channel; a [`Coalescer`] folds them between plan ticks into
+//!   the smallest batch that replays bit-identically to the raw stream
+//!   (add+remove cancels, migrate chains collapse, reports are
+//!   last-writer-wins), validating at the door so a misbehaving producer
+//!   is counted and refused instead of crashing the loop.
+//! * [`timeq`] — a hashed [`TimerWheel`] (the kumomta `crates/timeq`
+//!   shape) schedules re-plan ticks, per-device report leases (expiry ⇒
+//!   the device plans as `Degraded(StaleLink)` *before* the staleness
+//!   bound would notice — lease beats bound) and retire-TTL expiries.
+//!   Time comes from an injected [`Clock`]; every test runs on
+//!   [`SimClock`] with zero wall-clock in policy code.
+//! * [`lifecycle`] — graceful drain: [`DaemonHandle::shutdown`] waits
+//!   for in-flight sends ([`ActivityTracker`] guards), stops intake,
+//!   flushes the coalesced backlog into the service *without planning*,
+//!   and hands back the final state — no event loss, no post-shutdown
+//!   solves (both pinned by the drain test).
+//! * [`metrics`] — the scrape surface: [`DaemonHandle::metrics`]
+//!   renders `FleetStats` + service + daemon counters as Prometheus
+//!   text, byte-stable under the golden test.
+//!
+//! Contracts are documented in RESILIENCE.md ("Daemon contracts"); the
+//! headline pin below replays seeded `ChurnScript`s through the daemon
+//! and a raw uncoalesced `PlannerService` side by side and demands
+//! bit-identical epochs with measurably fewer `spec_deltas`.
+
+pub mod clock;
+pub mod ingest;
+pub mod lifecycle;
+pub mod metrics;
+pub mod timeq;
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+
+use crate::partition::fleet::{
+    DecisionProvenance, DegradedReason, FleetSpec, FleetStats, PlanDecision, SpecDelta,
+};
+use crate::partition::service::{PlannerService, ServiceOptions};
+
+pub use clock::{Clock, SimClock};
+pub use ingest::{CoalescedItem, Coalescer, DaemonEvent, IngestError};
+pub use lifecycle::{ActivityHandle, ActivityTracker};
+pub use metrics::{fleet_metrics, render_prometheus, service_metrics, Metric, MetricKind};
+pub use timeq::{TimerId, TimerWheel};
+
+/// Construction-time policy of the daemon.
+#[derive(Clone, Copy, Debug)]
+pub struct DaemonConfig {
+    /// Schedule a re-plan every this many clock ticks (>= 1).
+    pub replan_every: u64,
+    /// Report lease: a device whose newest accepted report is older than
+    /// this many ticks is force-expired (planned as
+    /// `Degraded(StaleLink)`) without waiting for the service's
+    /// staleness bound. `None` (default) disables leases.
+    pub lease_ttl: Option<u64>,
+    /// Hash buckets of the timer wheel.
+    pub wheel_slots: usize,
+    /// Policy of the wrapped [`PlannerService`].
+    pub service: ServiceOptions,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> DaemonConfig {
+        DaemonConfig {
+            replan_every: 1,
+            lease_ttl: None,
+            wheel_slots: 256,
+            service: ServiceOptions::default(),
+        }
+    }
+}
+
+/// What a wheel entry means when it fires.
+#[derive(Clone, Copy, Debug)]
+enum TimerItem {
+    /// The scheduled re-plan for tick `at` (reschedules itself).
+    Replan { at: u64 },
+    /// Device `device`'s report lease ran out; stale unless a newer
+    /// report bumped the lease seq past `seq`.
+    Lease { device: usize, seq: u64 },
+    /// A retired tier's archive TTL ran out (wall ticks, not plan
+    /// epochs — see `FleetPlanner::expire_retired`).
+    RetireExpiry { tier: usize },
+}
+
+/// Daemon-level counters, alongside the planner's [`FleetStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DaemonCounters {
+    /// Raw events received (accepted + rejected).
+    pub events_ingested: u64,
+    /// Accepted churn deltas.
+    pub deltas_ingested: u64,
+    /// Accepted link reports.
+    pub reports_ingested: u64,
+    /// Events refused at the door ([`IngestError`]).
+    pub rejected_events: u64,
+    /// Deltas that survived coalescing and reached the service.
+    pub coalesced_deltas: u64,
+    /// Reports that survived coalescing and reached the service.
+    pub coalesced_reports: u64,
+    /// Timer-wheel entries fired (all kinds).
+    pub timer_fires: u64,
+    /// Scheduled re-plan ticks executed.
+    pub replan_ticks: u64,
+    /// Report leases that expired unrenewed.
+    pub lease_expiries: u64,
+    /// Retire-TTL expiries applied.
+    pub retire_expiries: u64,
+    /// Epochs degraded by a non-monotone clock read.
+    pub clock_errors: u64,
+}
+
+impl DaemonCounters {
+    /// The daemon counter family for the metrics scrape.
+    pub fn metrics(&self) -> Vec<Metric> {
+        let counter = |name, help, value| Metric {
+            name,
+            help,
+            kind: MetricKind::Counter,
+            value,
+        };
+        vec![
+            counter(
+                "fastsplit_daemon_events_ingested_total",
+                "Raw events received by the daemon",
+                self.events_ingested,
+            ),
+            counter(
+                "fastsplit_daemon_deltas_ingested_total",
+                "Churn deltas accepted at the door",
+                self.deltas_ingested,
+            ),
+            counter(
+                "fastsplit_daemon_reports_ingested_total",
+                "Link reports accepted at the door",
+                self.reports_ingested,
+            ),
+            counter(
+                "fastsplit_daemon_rejected_events_total",
+                "Events refused at the door",
+                self.rejected_events,
+            ),
+            counter(
+                "fastsplit_daemon_coalesced_deltas_total",
+                "Deltas surviving coalescing into the service",
+                self.coalesced_deltas,
+            ),
+            counter(
+                "fastsplit_daemon_coalesced_reports_total",
+                "Reports surviving coalescing into the service",
+                self.coalesced_reports,
+            ),
+            counter(
+                "fastsplit_daemon_timer_fires_total",
+                "Timer-wheel entries fired",
+                self.timer_fires,
+            ),
+            counter(
+                "fastsplit_daemon_replan_ticks_total",
+                "Scheduled re-plan ticks executed",
+                self.replan_ticks,
+            ),
+            counter(
+                "fastsplit_daemon_lease_expiries_total",
+                "Report leases expired unrenewed",
+                self.lease_expiries,
+            ),
+            counter(
+                "fastsplit_daemon_retire_expiries_total",
+                "Retire-TTL expiries applied",
+                self.retire_expiries,
+            ),
+            counter(
+                "fastsplit_daemon_clock_errors_total",
+                "Epochs degraded by non-monotone clock reads",
+                self.clock_errors,
+            ),
+        ]
+    }
+}
+
+/// One planned (or clock-degraded) epoch the daemon produced.
+#[derive(Clone, Debug)]
+pub struct EpochOutcome {
+    /// The tick the epoch was planned at (the requested tick when the
+    /// clock read was rejected).
+    pub tick: u64,
+    /// The epoch's decisions, device-slot order.
+    pub decisions: Vec<PlanDecision>,
+    /// True when the clock read was non-monotone and the epoch was
+    /// served entirely from last-good decisions.
+    pub clock_degraded: bool,
+}
+
+/// What one [`DaemonHandle::pump`] call did.
+#[derive(Clone, Debug, Default)]
+pub struct PumpReport {
+    /// Wheel entries fired by this pump.
+    pub timer_fires: u64,
+    /// Leases expired by this pump.
+    pub lease_expiries: u64,
+    /// Retire-TTL expiries applied by this pump.
+    pub retire_expiries: u64,
+    /// Epochs planned by this pump, in firing order.
+    pub epochs: Vec<EpochOutcome>,
+}
+
+/// The drained final state [`DaemonHandle::shutdown`] hands back.
+/// (No `Debug`: `FleetSpec` holds per-tier cost graphs.)
+#[derive(Clone)]
+pub struct DrainReport {
+    /// Coalesced deltas flushed into the service during drain.
+    pub flushed_deltas: u64,
+    /// Coalesced reports flushed into the service during drain.
+    pub flushed_reports: u64,
+    /// Last-good decisions per active device at shutdown (no solves are
+    /// run to produce these — the in-flight epoch is served from cache).
+    pub final_decisions: Vec<PlanDecision>,
+    /// The fleet spec after the final flush.
+    pub spec: FleetSpec,
+    /// The planner's final counters.
+    pub stats: FleetStats,
+    /// The final metrics scrape (service + daemon families).
+    pub metrics: String,
+    /// The daemon's final counters.
+    pub counters: DaemonCounters,
+}
+
+/// Requests the worker thread understands.
+// `Event` carries a `SpecDelta` (whose `AddTier` holds a `CostGraph`)
+// inline: boxing it would put an allocation on the per-event ingest hot
+// path to slim down the rare control-plane variants.
+#[allow(clippy::large_enum_variant)]
+enum Msg {
+    Event(DaemonEvent),
+    Pump(Sender<PumpReport>),
+    PlanNow(Sender<EpochOutcome>),
+    Metrics(Sender<String>),
+    Stats(Sender<FleetStats>),
+    Counters(Sender<DaemonCounters>),
+    Shutdown(Sender<DrainReport>),
+}
+
+/// A cloneable producer endpoint. Each send holds an activity guard for
+/// exactly the enqueue, so [`DaemonHandle::shutdown`]'s idle wait proves
+/// every started send is in the queue before the drain begins.
+#[derive(Clone)]
+pub struct EventSender {
+    tx: Sender<Msg>,
+    tracker: ActivityTracker,
+}
+
+impl EventSender {
+    /// Enqueue one event. Returns false once the daemon has shut down.
+    pub fn send(&self, event: DaemonEvent) -> bool {
+        let _guard = self.tracker.activity();
+        self.tx.send(Msg::Event(event)).is_ok()
+    }
+}
+
+/// The planner daemon. [`PlannerDaemon::spawn`] starts the worker
+/// thread; the returned [`DaemonHandle`] is the control plane.
+pub struct PlannerDaemon;
+
+impl PlannerDaemon {
+    /// Spawn the daemon over a fresh service for `spec`. The first
+    /// re-plan is scheduled `replan_every` ticks after the clock's
+    /// current reading.
+    pub fn spawn(spec: FleetSpec, config: DaemonConfig, clock: Arc<dyn Clock>) -> DaemonHandle {
+        assert!(config.replan_every >= 1, "replan_every must be positive");
+        let (tx, rx) = mpsc::channel();
+        let tracker = ActivityTracker::new();
+        let start = clock.now();
+        let mut wheel = TimerWheel::new(start, config.wheel_slots);
+        let first = start + config.replan_every;
+        wheel.insert(first, TimerItem::Replan { at: first });
+        let coalescer = Coalescer::new(&spec);
+        let worker = Worker {
+            service: PlannerService::new(spec, config.service),
+            coalescer,
+            wheel,
+            clock,
+            config,
+            counters: DaemonCounters::default(),
+            lease_seq: Vec::new(),
+            rx,
+        };
+        let thread = thread::Builder::new()
+            .name("fastsplit-planner".into())
+            .spawn(move || worker.run())
+            .expect("spawn the planner daemon thread");
+        DaemonHandle {
+            tx,
+            tracker,
+            thread: Some(thread),
+        }
+    }
+}
+
+/// Control plane of a running daemon. Dropping the handle shuts the
+/// worker down (best effort); [`DaemonHandle::shutdown`] is the graceful
+/// path that returns the drained state.
+pub struct DaemonHandle {
+    tx: Sender<Msg>,
+    tracker: ActivityTracker,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl DaemonHandle {
+    /// A cloneable producer endpoint for event ingestion.
+    pub fn sender(&self) -> EventSender {
+        EventSender {
+            tx: self.tx.clone(),
+            tracker: self.tracker.clone(),
+        }
+    }
+
+    /// Enqueue one event from the control plane.
+    pub fn send(&self, event: DaemonEvent) -> bool {
+        self.sender().send(event)
+    }
+
+    fn request<T>(&self, wrap: impl FnOnce(Sender<T>) -> Msg) -> T {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(wrap(reply)).expect("the daemon is running");
+        rx.recv().expect("the daemon replies")
+    }
+
+    /// Advance the timer wheel to the clock's current reading and run
+    /// everything that fires — scheduled re-plans included.
+    pub fn pump(&self) -> PumpReport {
+        self.request(Msg::Pump)
+    }
+
+    /// Flush the coalesced backlog and plan one epoch at the clock's
+    /// current reading, off the wheel's schedule. A non-monotone clock
+    /// reading degrades the epoch (see [`EpochOutcome::clock_degraded`])
+    /// instead of panicking.
+    pub fn plan_now(&self) -> EpochOutcome {
+        self.request(Msg::PlanNow)
+    }
+
+    /// Render the Prometheus scrape (service + daemon metric families).
+    pub fn metrics(&self) -> String {
+        self.request(Msg::Metrics)
+    }
+
+    /// The planner's counters.
+    pub fn stats(&self) -> FleetStats {
+        self.request(Msg::Stats)
+    }
+
+    /// The daemon's counters.
+    pub fn counters(&self) -> DaemonCounters {
+        self.request(Msg::Counters)
+    }
+
+    /// Graceful drain: wait for in-flight sends, stop intake, flush the
+    /// coalesced backlog into the service (no planning), and hand back
+    /// the final state. The worker thread is joined before returning.
+    pub fn shutdown(mut self) -> DrainReport {
+        self.tracker.wait_idle();
+        let report = self.request(Msg::Shutdown);
+        if let Some(thread) = self.thread.take() {
+            thread.join().expect("the daemon thread exits cleanly");
+        }
+        report
+    }
+}
+
+impl Drop for DaemonHandle {
+    fn drop(&mut self) {
+        if let Some(thread) = self.thread.take() {
+            let (reply, _rx) = mpsc::channel();
+            let _ = self.tx.send(Msg::Shutdown(reply));
+            let _ = thread.join();
+        }
+    }
+}
+
+/// The single worker thread owning the service, the coalescer and the
+/// wheel — no shared mutable state, every interaction is a message.
+struct Worker {
+    service: PlannerService,
+    coalescer: Coalescer,
+    wheel: TimerWheel<TimerItem>,
+    clock: Arc<dyn Clock>,
+    config: DaemonConfig,
+    counters: DaemonCounters,
+    /// Monotone per-device lease sequence; a lease entry only fires its
+    /// expiry if its seq is still the device's newest (renewal-beats-
+    /// expiry without wheel cancellation).
+    lease_seq: Vec<u64>,
+    rx: Receiver<Msg>,
+}
+
+impl Worker {
+    fn run(mut self) {
+        while let Ok(msg) = self.rx.recv() {
+            match msg {
+                Msg::Event(event) => self.ingest(event),
+                Msg::Pump(reply) => {
+                    let report = self.pump();
+                    let _ = reply.send(report);
+                }
+                Msg::PlanNow(reply) => {
+                    let outcome = self.plan_at(self.clock.now());
+                    let _ = reply.send(outcome);
+                }
+                Msg::Metrics(reply) => {
+                    let _ = reply.send(self.render());
+                }
+                Msg::Stats(reply) => {
+                    let _ = reply.send(self.service.stats());
+                }
+                Msg::Counters(reply) => {
+                    let _ = reply.send(self.counters);
+                }
+                Msg::Shutdown(reply) => {
+                    let report = self.drain();
+                    let _ = reply.send(report);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn ingest(&mut self, event: DaemonEvent) {
+        self.counters.events_ingested += 1;
+        let report_device = match &event {
+            DaemonEvent::Report { device, .. } => Some(*device),
+            DaemonEvent::Delta(_) => None,
+        };
+        match self.coalescer.push(event) {
+            Ok(()) => match report_device {
+                Some(device) => {
+                    self.counters.reports_ingested += 1;
+                    if let Some(ttl) = self.config.lease_ttl {
+                        if self.lease_seq.len() <= device {
+                            self.lease_seq.resize(device + 1, 0);
+                        }
+                        self.lease_seq[device] += 1;
+                        let seq = self.lease_seq[device];
+                        self.wheel
+                            .insert(self.clock.now() + ttl, TimerItem::Lease { device, seq });
+                    }
+                }
+                None => self.counters.deltas_ingested += 1,
+            },
+            Err(_) => self.counters.rejected_events += 1,
+        }
+    }
+
+    /// Advance the wheel to the clock and process fires until nothing
+    /// more is due — a re-plan rescheduled at an already-past deadline
+    /// (the clock jumped several periods) still runs within this pump.
+    fn pump(&mut self) -> PumpReport {
+        let mut report = PumpReport::default();
+        loop {
+            let now = self.clock.now().max(self.wheel.now());
+            let fired = self.wheel.advance(now);
+            if fired.is_empty() {
+                break;
+            }
+            for (_, item) in fired {
+                self.counters.timer_fires += 1;
+                report.timer_fires += 1;
+                match item {
+                    TimerItem::Replan { at } => {
+                        // Clamp a late fire forward to the service clock
+                        // so a jumped schedule cannot look non-monotone.
+                        let tick = at.max(self.service.now());
+                        let outcome = self.plan_at(tick);
+                        self.counters.replan_ticks += 1;
+                        report.epochs.push(outcome);
+                        let next = at + self.config.replan_every;
+                        self.wheel.insert(next, TimerItem::Replan { at: next });
+                    }
+                    TimerItem::Lease { device, seq } => {
+                        let renewed = self.lease_seq.get(device).copied().unwrap_or(0) != seq;
+                        let active = self.service.spec().tier_of_opt(device).is_some();
+                        if !renewed && active {
+                            self.service.expire_report(device);
+                            self.counters.lease_expiries += 1;
+                            report.lease_expiries += 1;
+                        }
+                    }
+                    TimerItem::RetireExpiry { tier } => {
+                        self.service.expire_retired(tier);
+                        self.counters.retire_expiries += 1;
+                        report.retire_expiries += 1;
+                    }
+                }
+            }
+        }
+        report
+    }
+
+    /// Flush the coalesced backlog into the service, scheduling the
+    /// retire-TTL expiry for every retirement that goes through.
+    fn flush_into_service(&mut self) -> (u64, u64) {
+        let items = self.coalescer.flush();
+        let (mut deltas, mut reports) = (0u64, 0u64);
+        for item in items {
+            match item {
+                CoalescedItem::Delta(delta) => {
+                    if let SpecDelta::RetireTier { tier } = &delta {
+                        let base = self.wheel.now().max(self.clock.now());
+                        let ttl = self.service.options().joint.fleet.retire_ttl;
+                        self.wheel
+                            .insert(base + ttl, TimerItem::RetireExpiry { tier: *tier });
+                    }
+                    self.service.apply_delta(&delta);
+                    deltas += 1;
+                }
+                CoalescedItem::Report { device, link, tick } => {
+                    self.service.report(device, link, tick);
+                    reports += 1;
+                }
+            }
+        }
+        self.counters.coalesced_deltas += deltas;
+        self.counters.coalesced_reports += reports;
+        (deltas, reports)
+    }
+
+    /// Flush, then plan one epoch at `tick`. A rejected (non-monotone)
+    /// tick serves the whole epoch from last-good decisions marked
+    /// `Degraded(StaleLink)` — the daemon never panics on a bad clock.
+    fn plan_at(&mut self, tick: u64) -> EpochOutcome {
+        self.flush_into_service();
+        match self.service.plan_epoch(tick) {
+            Ok(decisions) => EpochOutcome {
+                tick,
+                decisions,
+                clock_degraded: false,
+            },
+            Err(_) => {
+                self.counters.clock_errors += 1;
+                let decisions = self.last_good_decisions(true);
+                EpochOutcome {
+                    tick,
+                    decisions,
+                    clock_degraded: true,
+                }
+            }
+        }
+    }
+
+    /// Last-good decisions for every active device, slot order.
+    /// `degrade` re-marks them `Degraded(StaleLink)`; either way
+    /// `refreshed` is false (nothing was solved to produce these).
+    fn last_good_decisions(&self, degrade: bool) -> Vec<PlanDecision> {
+        let spec = self.service.spec();
+        let mut out = Vec::new();
+        for d in 0..spec.num_devices() {
+            if spec.tier_of_opt(d).is_none() {
+                continue;
+            }
+            if let Some(decision) = self.service.last_good(d) {
+                let mut decision = decision.clone();
+                decision.stats.refreshed = false;
+                if degrade {
+                    decision.provenance = DecisionProvenance::Degraded(DegradedReason::StaleLink);
+                }
+                out.push(decision);
+            }
+        }
+        out
+    }
+
+    fn render(&self) -> String {
+        let mut all = service_metrics(&self.service);
+        all.extend(self.counters.metrics());
+        render_prometheus(&all)
+    }
+
+    /// The drain: ingest whatever is already in the channel (shutdown
+    /// waited for in-flight sends first, so this is everything), flush
+    /// it into the service *without planning*, and snapshot the final
+    /// state. No solver work happens past this point.
+    fn drain(&mut self) -> DrainReport {
+        while let Ok(msg) = self.rx.try_recv() {
+            if let Msg::Event(event) = msg {
+                self.ingest(event);
+            }
+            // Other requests at drain time are dropped; their reply
+            // channels hang up and the caller sees the shutdown.
+        }
+        let (flushed_deltas, flushed_reports) = self.flush_into_service();
+        DrainReport {
+            flushed_deltas,
+            flushed_reports,
+            final_decisions: self.last_good_decisions(false),
+            spec: self.service.spec().clone(),
+            stats: self.service.stats(),
+            metrics: self.render(),
+            counters: self.counters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::partition::fleet::FleetOptions;
+    use crate::partition::joint::JointOptions;
+    use crate::partition::types::Link;
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+    use crate::util::prop::churn_script;
+    use crate::util::rng::Rng;
+
+    const REPLAY_MODELS: [&str; 3] = ["googlenet", "block-residual", "block-inception"];
+
+    fn spec_for(model: &str, devices: usize) -> FleetSpec {
+        let m = models::by_name(model).unwrap();
+        FleetSpec::from_fleet(&DeviceProfile::fleet_of(devices), |d| {
+            CostGraph::build(&m, d, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+        })
+    }
+
+    fn assert_decisions_bit_identical(a: &[PlanDecision], b: &[PlanDecision], context: &str) {
+        assert_eq!(a.len(), b.len(), "{context}: decision counts differ");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.device, y.device, "{context}");
+            assert_eq!(x.tier, y.tier, "{context}");
+            assert_eq!(x.cut_layer, y.cut_layer, "{context}");
+            assert_eq!(x.partition.device_set, y.partition.device_set, "{context}");
+            assert_eq!(
+                x.partition.delay.to_bits(),
+                y.partition.delay.to_bits(),
+                "{context}"
+            );
+        }
+    }
+
+    /// The headline pin (acceptance criterion): seeded churn streams fed
+    /// through the daemon — coalesced between ticks, planned on the
+    /// wheel's schedule — produce epochs bit-identical to a raw
+    /// uncoalesced `PlannerService` replay, while `spec_deltas` stays
+    /// measurably below the raw event count. An add+remove cancel pair
+    /// is injected every tick so coalescing provably fires on every
+    /// model and seed.
+    #[test]
+    fn daemon_coalesced_replay_is_bit_identical_to_the_raw_service() {
+        let base = crate::util::rng::test_seed();
+        const EVERY: u64 = 3;
+        const TICKS: usize = 12;
+        for (i, model) in REPLAY_MODELS.iter().enumerate() {
+            let mut rng = Rng::new(base ^ (0xDAE0 + ((i as u64 + 1) << 40)));
+            let spec = spec_for(model, 6);
+            let script = churn_script(&mut rng, spec.num_tiers(), 6, TICKS, 0.35, 0.3);
+            let options = ServiceOptions {
+                joint: JointOptions {
+                    fleet: FleetOptions::bit_identical(),
+                    ..JointOptions::default()
+                },
+                ..ServiceOptions::default()
+            };
+            let clock = SimClock::new(0);
+            let daemon = PlannerDaemon::spawn(
+                spec.clone(),
+                DaemonConfig {
+                    replan_every: EVERY,
+                    lease_ttl: None,
+                    service: options,
+                    ..DaemonConfig::default()
+                },
+                Arc::new(clock.clone()),
+            );
+            let sender = daemon.sender();
+            let mut reference = PlannerService::new(spec, options);
+            let mut raw_events = 0u64;
+            let mut daemon_epochs: Vec<EpochOutcome> = Vec::new();
+            let mut reference_epochs: Vec<(u64, Vec<PlanDecision>)> = Vec::new();
+            for (tick, step) in script.ticks.iter().enumerate() {
+                let tick = tick as u64;
+                clock.set(tick);
+                // A cancel pair on an unused slot: coalescing erases it,
+                // the raw stream pays two deltas for it.
+                for delta in [
+                    SpecDelta::AddDevice { device: 6, tier: 0 },
+                    SpecDelta::RemoveDevice { device: 6 },
+                ] {
+                    assert!(sender.send(DaemonEvent::Delta(delta.clone())));
+                    reference.apply_delta(&delta);
+                    raw_events += 1;
+                }
+                for ev in &step.events {
+                    let delta = ev.to_delta();
+                    assert!(sender.send(DaemonEvent::Delta(delta.clone())));
+                    reference.apply_delta(&delta);
+                    raw_events += 1;
+                }
+                for &(d, link) in &step.reports {
+                    assert!(sender.send(DaemonEvent::Report {
+                        device: d,
+                        link,
+                        tick,
+                    }));
+                    reference.report(d, link, tick);
+                }
+                let pump = daemon.pump();
+                daemon_epochs.extend(pump.epochs);
+                if tick > 0 && tick % EVERY == 0 {
+                    reference_epochs.push((tick, reference.plan_epoch(tick).unwrap()));
+                }
+            }
+            // The final scheduled epoch after the script.
+            let final_tick = TICKS as u64;
+            clock.set(final_tick);
+            let pump = daemon.pump();
+            daemon_epochs.extend(pump.epochs);
+            reference_epochs.push((final_tick, reference.plan_epoch(final_tick).unwrap()));
+
+            assert_eq!(
+                daemon_epochs.len(),
+                reference_epochs.len(),
+                "{model}: epoch schedules diverged"
+            );
+            for (got, (tick, want)) in daemon_epochs.iter().zip(&reference_epochs) {
+                assert_eq!(got.tick, *tick, "{model}: epoch ticks diverged");
+                assert!(!got.clock_degraded, "{model}: spurious clock degradation");
+                assert_decisions_bit_identical(
+                    &got.decisions,
+                    want,
+                    &format!("{model} epoch {tick}"),
+                );
+            }
+            let daemon_stats = daemon.stats();
+            assert!(
+                daemon_stats.spec_deltas < raw_events,
+                "{model}: coalescing must measurably fire \
+                 ({} applied vs {raw_events} raw)",
+                daemon_stats.spec_deltas,
+            );
+            assert_eq!(
+                daemon_stats.spec_deltas,
+                daemon.counters().coalesced_deltas,
+                "{model}: daemon and planner delta accounting agree"
+            );
+            daemon.shutdown();
+        }
+    }
+
+    /// The drain contract: shutdown stops intake, flushes every queued
+    /// event into the service without planning (no post-shutdown
+    /// solves), and serves the in-flight epoch from last-good decisions.
+    #[test]
+    fn daemon_drain_loses_no_events_and_runs_no_solves() {
+        let clock = SimClock::new(0);
+        let daemon = PlannerDaemon::spawn(
+            spec_for("googlenet", 4),
+            DaemonConfig {
+                replan_every: 10,
+                ..DaemonConfig::default()
+            },
+            Arc::new(clock.clone()),
+        );
+        let link = Link::symmetric(5e5);
+        for d in 0..4 {
+            assert!(daemon.send(DaemonEvent::Report {
+                device: d,
+                link,
+                tick: 0,
+            }));
+        }
+        let epoch = daemon.plan_now();
+        assert_eq!(epoch.decisions.len(), 4);
+        assert!(!epoch.clock_degraded);
+        let solves_before = daemon.stats().solves();
+
+        // Queue churn + a report + a cancel pair; none of it is planned
+        // (the next scheduled re-plan is far away), all of it must land.
+        let sender = daemon.sender();
+        clock.set(1);
+        for delta in [
+            SpecDelta::RemoveDevice { device: 1 },
+            SpecDelta::MigrateDevice { device: 2, tier: 0 },
+            SpecDelta::AddDevice { device: 9, tier: 0 },
+            SpecDelta::RemoveDevice { device: 9 },
+        ] {
+            assert!(sender.send(DaemonEvent::Delta(delta)));
+        }
+        assert!(sender.send(DaemonEvent::Report {
+            device: 0,
+            link: Link::symmetric(6e5),
+            tick: 1,
+        }));
+
+        let report = daemon.shutdown();
+        assert_eq!(
+            report.stats.solves(),
+            solves_before,
+            "drain must not run solves"
+        );
+        assert_eq!(report.flushed_deltas, 2, "cancel pair coalesced away");
+        assert_eq!(report.flushed_reports, 1, "the queued report landed");
+        assert_eq!(report.spec.tier_of_opt(1), None, "removal flushed");
+        assert_eq!(report.spec.tier_of_opt(2), Some(0), "migration flushed");
+        let served: Vec<usize> = report.final_decisions.iter().map(|d| d.device).collect();
+        assert!(served.contains(&0) && served.contains(&3));
+        assert!(!served.contains(&1), "departed device serves nothing");
+        assert!(
+            !served.contains(&2),
+            "a migrated device's last-good belonged to the old tier"
+        );
+        assert!(report
+            .metrics
+            .contains("fastsplit_daemon_events_ingested_total 9\n"));
+        assert!(report.metrics.contains("fastsplit_spec_deltas_total 2\n"));
+        assert_eq!(report.counters.coalesced_deltas, 2);
+
+        // Intake is closed: a pre-obtained sender sees the shutdown.
+        assert!(!sender.send(DaemonEvent::Delta(SpecDelta::RemoveDevice {
+            device: 0
+        })));
+    }
+
+    /// Lease-vs-staleness precedence: with an infinite staleness bound,
+    /// an unrenewed report lease alone degrades the device — and a
+    /// renewed lease never fires.
+    #[test]
+    fn daemon_lease_expiry_degrades_before_the_staleness_bound() {
+        let clock = SimClock::new(0);
+        let daemon = PlannerDaemon::spawn(
+            spec_for("googlenet", 4),
+            DaemonConfig {
+                replan_every: 1,
+                lease_ttl: Some(2),
+                ..DaemonConfig::default()
+            },
+            Arc::new(clock.clone()),
+        );
+        let link = Link::symmetric(5e5);
+        for d in 0..4 {
+            assert!(daemon.send(DaemonEvent::Report {
+                device: d,
+                link,
+                tick: 0,
+            }));
+        }
+        let mut degraded_by_tick: Vec<(u64, Vec<usize>)> = Vec::new();
+        for tick in 1..=4u64 {
+            clock.set(tick);
+            // Every device reports every tick except device 2, silent
+            // through ticks 1-2 and back at tick 3.
+            for d in 0..4 {
+                if d == 2 && (tick == 1 || tick == 2) {
+                    continue;
+                }
+                assert!(daemon.send(DaemonEvent::Report {
+                    device: d,
+                    link,
+                    tick,
+                }));
+            }
+            let pump = daemon.pump();
+            for epoch in pump.epochs {
+                let degraded: Vec<usize> = epoch
+                    .decisions
+                    .iter()
+                    .filter(|d| matches!(d.provenance, DecisionProvenance::Degraded(_)))
+                    .map(|d| d.device)
+                    .collect();
+                degraded_by_tick.push((epoch.tick, degraded));
+            }
+        }
+        assert_eq!(
+            degraded_by_tick,
+            vec![
+                (1, vec![]),
+                (2, vec![2]), // the lease (ttl 2, last report at 0) fired
+                (3, vec![]),  // the tick-3 report cleared the flag
+                (4, vec![]),
+            ],
+            "lease expiry must degrade exactly device 2 at exactly tick 2"
+        );
+        let counters = daemon.counters();
+        assert_eq!(counters.lease_expiries, 1, "renewed leases never fire");
+        daemon.shutdown();
+    }
+
+    /// A non-monotone clock read degrades the epoch (every active device
+    /// served last-good, marked stale) and recovers on the next sane
+    /// read — the daemon never panics on a producer's bad clock.
+    #[test]
+    fn daemon_clock_regression_degrades_and_recovers() {
+        let clock = SimClock::new(5);
+        let daemon = PlannerDaemon::spawn(
+            spec_for("googlenet", 4),
+            DaemonConfig {
+                replan_every: 100,
+                ..DaemonConfig::default()
+            },
+            Arc::new(clock.clone()),
+        );
+        let link = Link::symmetric(5e5);
+        for d in 0..4 {
+            assert!(daemon.send(DaemonEvent::Report {
+                device: d,
+                link,
+                tick: 5,
+            }));
+        }
+        let fresh = daemon.plan_now();
+        assert!(!fresh.clock_degraded);
+        assert_eq!(fresh.decisions.len(), 4);
+
+        clock.set(3); // the clock runs backwards
+        let degraded = daemon.plan_now();
+        assert!(degraded.clock_degraded);
+        assert_eq!(degraded.decisions.len(), 4);
+        assert!(degraded.decisions.iter().all(|d| matches!(
+            d.provenance,
+            DecisionProvenance::Degraded(DegradedReason::StaleLink)
+        )));
+        assert_eq!(daemon.counters().clock_errors, 1);
+
+        clock.set(6);
+        for d in 0..4 {
+            assert!(daemon.send(DaemonEvent::Report {
+                device: d,
+                link: Link::symmetric(6e5),
+                tick: 6,
+            }));
+        }
+        let recovered = daemon.plan_now();
+        assert!(!recovered.clock_degraded);
+        assert!(recovered
+            .decisions
+            .iter()
+            .all(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_))));
+        daemon.shutdown();
+    }
+
+    /// Retire-TTL expiries ride the wheel: a retirement schedules its
+    /// expiry at `retirement + retire_ttl` wall ticks, and pumping past
+    /// that deadline applies it exactly once.
+    #[test]
+    fn daemon_retire_ttl_expiry_fires_on_the_wheel() {
+        let clock = SimClock::new(0);
+        let daemon = PlannerDaemon::spawn(
+            spec_for("block-residual", 4),
+            DaemonConfig {
+                replan_every: 1000,
+                ..DaemonConfig::default()
+            },
+            Arc::new(clock.clone()),
+        );
+        let link = Link::symmetric(5e5);
+        for d in 0..4 {
+            assert!(daemon.send(DaemonEvent::Report {
+                device: d,
+                link,
+                tick: 0,
+            }));
+        }
+        assert_eq!(daemon.plan_now().decisions.len(), 4);
+        assert!(daemon.send(DaemonEvent::Delta(SpecDelta::RetireTier { tier: 3 })));
+        let flushed = daemon.plan_now();
+        assert_eq!(flushed.decisions.len(), 3, "tier 3's device detached");
+
+        // The default retire TTL is 64 wall ticks from the flush.
+        clock.set(63);
+        assert_eq!(daemon.pump().retire_expiries, 0, "one tick early");
+        clock.set(64);
+        let pump = daemon.pump();
+        assert_eq!(pump.retire_expiries, 1, "the expiry fires on time");
+        assert_eq!(daemon.counters().retire_expiries, 1);
+        daemon.shutdown();
+    }
+}

@@ -10,7 +10,9 @@
 //!   ([`partition`]), solving the optimal split-learning cut as a minimum
 //!   s-t cut via maximum flow ([`maxflow`]), the low-complexity block-wise
 //!   variant ([`partition::blockwise`]), an edge-network simulator
-//!   ([`net`]), the SL training-delay simulator ([`sim`]), and a leader
+//!   ([`net`]), the SL training-delay simulator ([`sim`]), a long-lived
+//!   planner daemon with coalescing ingest, timer-wheel scheduling,
+//!   graceful drain and a Prometheus scrape ([`daemon`]), and a leader
 //!   coordinator that re-partitions per epoch and drives real split
 //!   training through PJRT ([`coordinator`], [`runtime`]).
 //! * **L2 (python/compile/model.py)** — a split-trainable JAX model lowered
@@ -26,6 +28,7 @@ pub mod maxflow;
 pub mod models;
 pub mod profiles;
 pub mod partition;
+pub mod daemon;
 pub mod net;
 pub mod sim;
 pub mod runtime;

@@ -27,7 +27,8 @@ USAGE:
   fastsplit partition --model googlenet --method proposed --up-mbps 20 --down-mbps 80 \\
                       --device jetson-tx2 [--n-loc 10] [--batch 32]
   fastsplit simulate --model googlenet --method proposed --band mmwave \\
-                      --condition normal [--epochs 50] [--devices 20] [--rayleigh] [--seed 7]
+                      --condition normal [--epochs 50] [--devices 20] [--rayleigh] [--seed 7] \\
+                      [--metrics]
   fastsplit experiment --id fig7a|fig7b|fig8|fig9a|fig9b|tab1|fig11|fig12|fig13|tab2|fig14|fig15|fig16|ablA|ablB|all [--quick]
   fastsplit train [--epochs 10] [--n-loc 4] [--lr 0.05] [--artifacts artifacts] [--devices 4]
 ";
@@ -39,7 +40,7 @@ fn main() {
         std::process::exit(2);
     }
     let cmd = argv.remove(0);
-    let args = Args::parse(argv, &["quick", "rayleigh", "verbose"]);
+    let args = Args::parse(argv, &["quick", "rayleigh", "verbose", "metrics"]);
     let result = match cmd.as_str() {
         "models" => cmd_models(),
         "info" => cmd_info(&args),
@@ -183,6 +184,11 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 fmt_secs(r.delay)
             );
         }
+    }
+    if args.flag("metrics") {
+        // The planner's Prometheus scrape after the run — the same text a
+        // daemon metrics endpoint would serve.
+        print!("{}", trainer.render_prometheus());
     }
     Ok(())
 }

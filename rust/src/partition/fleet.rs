@@ -456,6 +456,46 @@ pub enum SpecDelta {
     MigrateDevice { device: usize, tier: usize },
 }
 
+/// A malformed churn event, rejected by [`FleetSpec::try_apply`] before
+/// any state moved (validation precedes every patch, so a rejected delta
+/// leaves the spec — and, through [`FleetPlanner::try_apply`], the
+/// planner — exactly as it was). The panicking [`FleetSpec::apply`] wraps
+/// this; daemon-facing callers route through the `try_` form so a
+/// misbehaving producer is counted and dropped instead of crashing the
+/// planning loop (see `crate::daemon::ingest`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpecError {
+    /// The delta names a tier index the spec does not have.
+    UnknownTier { tier: usize },
+    /// An `AddDevice`/`MigrateDevice` targets a tier that has retired.
+    RetiredTier { tier: usize },
+    /// A `RetireTier` names a tier that already retired.
+    AlreadyRetired { tier: usize },
+    /// A `RemoveDevice`/`MigrateDevice` names a slot that is not
+    /// currently in the fleet (out of range, or departed).
+    UnknownDevice { device: usize },
+    /// An `AddDevice` names a slot that is already live.
+    DeviceAlreadyPresent { device: usize },
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::UnknownTier { tier } => write!(f, "unknown tier {tier}"),
+            SpecError::RetiredTier { tier } => write!(f, "tier {tier} has retired"),
+            SpecError::AlreadyRetired { tier } => write!(f, "tier {tier} already retired"),
+            SpecError::UnknownDevice { device } => {
+                write!(f, "device {device} is not in the fleet")
+            }
+            SpecError::DeviceAlreadyPresent { device } => {
+                write!(f, "device {device} is already in the fleet")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
 /// Where a served decision came from — the churn-tolerant service layer's
 /// provenance contract (PR 6). Every decision is *feasible* regardless of
 /// provenance (cut feasibility is link-independent; see RESILIENCE.md);
@@ -605,20 +645,71 @@ impl FleetSpec {
             .collect()
     }
 
-    /// Patch the spec with one churn event. Panics on malformed deltas
-    /// (unknown tier, double-retire, adding over a live slot, removing a
-    /// departed device, targeting a retired tier) — churn is a stream of
-    /// facts about the fleet, and a contradictory fact is a caller bug,
-    /// not a state to absorb silently.
-    pub fn apply(&mut self, delta: &SpecDelta) {
+    /// Check one churn event against the current spec without applying
+    /// it: the shared gate of [`FleetSpec::try_apply`] and
+    /// [`FleetPlanner::try_apply`] (the planner must validate *before*
+    /// touching its per-tier state, so a rejected delta leaves the whole
+    /// stack untouched).
+    pub fn validate(&self, delta: &SpecDelta) -> Result<(), SpecError> {
+        let tier_ok = |tier: usize| {
+            if tier >= self.tiers.len() {
+                Err(SpecError::UnknownTier { tier })
+            } else if self.retired[tier] {
+                Err(SpecError::RetiredTier { tier })
+            } else {
+                Ok(())
+            }
+        };
+        match delta {
+            SpecDelta::AddTier { .. } => Ok(()),
+            SpecDelta::RetireTier { tier } => {
+                if *tier >= self.tiers.len() {
+                    Err(SpecError::UnknownTier { tier: *tier })
+                } else if self.retired[*tier] {
+                    Err(SpecError::AlreadyRetired { tier: *tier })
+                } else {
+                    Ok(())
+                }
+            }
+            SpecDelta::AddDevice { device, tier } => {
+                tier_ok(*tier)?;
+                if self.tier_of_opt(*device).is_some() {
+                    Err(SpecError::DeviceAlreadyPresent { device: *device })
+                } else {
+                    Ok(())
+                }
+            }
+            SpecDelta::RemoveDevice { device } => {
+                if self.tier_of_opt(*device).is_none() {
+                    Err(SpecError::UnknownDevice { device: *device })
+                } else {
+                    Ok(())
+                }
+            }
+            SpecDelta::MigrateDevice { device, tier } => {
+                tier_ok(*tier)?;
+                if self.tier_of_opt(*device).is_none() {
+                    Err(SpecError::UnknownDevice { device: *device })
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Patch the spec with one churn event, rejecting malformed deltas
+    /// (unknown tier or device, double-retire, adding over a live slot,
+    /// migrating a departed device or onto a retired tier) with a typed
+    /// [`SpecError`] *before* any state moves — a rejected delta is a
+    /// no-op.
+    pub fn try_apply(&mut self, delta: &SpecDelta) -> Result<(), SpecError> {
+        self.validate(delta)?;
         match delta {
             SpecDelta::AddTier { name, costs } => {
                 self.tiers.push((name, costs.clone()));
                 self.retired.push(false);
             }
             SpecDelta::RetireTier { tier } => {
-                assert!(*tier < self.tiers.len(), "retire of unknown tier {tier}");
-                assert!(!self.retired[*tier], "tier {tier} already retired");
                 self.retired[*tier] = true;
                 // Detach the tier's devices: they depart with their tier.
                 for slot in &mut self.tier_of_device {
@@ -628,33 +719,27 @@ impl FleetSpec {
                 }
             }
             SpecDelta::AddDevice { device, tier } => {
-                assert!(*tier < self.tiers.len(), "join to unknown tier {tier}");
-                assert!(!self.retired[*tier], "join to retired tier {tier}");
                 if *device >= self.tier_of_device.len() {
                     self.tier_of_device.resize(*device + 1, None);
                 }
-                assert!(
-                    self.tier_of_device[*device].is_none(),
-                    "device {device} is already in the fleet"
-                );
                 self.tier_of_device[*device] = Some(*tier);
             }
             SpecDelta::RemoveDevice { device } => {
-                assert!(
-                    self.tier_of_opt(*device).is_some(),
-                    "device {device} is not in the fleet"
-                );
                 self.tier_of_device[*device] = None;
             }
             SpecDelta::MigrateDevice { device, tier } => {
-                assert!(*tier < self.tiers.len(), "migrate to unknown tier {tier}");
-                assert!(!self.retired[*tier], "migrate to retired tier {tier}");
-                assert!(
-                    self.tier_of_opt(*device).is_some(),
-                    "device {device} is not in the fleet"
-                );
                 self.tier_of_device[*device] = Some(*tier);
             }
+        }
+        Ok(())
+    }
+
+    /// [`FleetSpec::try_apply`] for callers that treat churn as a stream
+    /// of facts about the fleet: a contradictory fact is a caller bug, so
+    /// this panics where `try_apply` returns the typed error.
+    pub fn apply(&mut self, delta: &SpecDelta) {
+        if let Err(e) = self.try_apply(delta) {
+            panic!("malformed churn event: {e}");
         }
     }
 }
@@ -1417,8 +1502,12 @@ impl FleetPlanner {
     /// per-tier SoA state in place. Untouched tiers keep their warm flows
     /// and cached decisions (pinned by [`FleetStats`] counters in the
     /// churn suite); device-level deltas touch no solver state at all
-    /// (the tier map is request routing, not solver input).
-    pub fn apply(&mut self, delta: &SpecDelta) {
+    /// (the tier map is request routing, not solver input). A malformed
+    /// delta is rejected with a typed [`SpecError`] *before* anything
+    /// moves — spec, tier states and the `spec_deltas` counter are all
+    /// untouched by a rejected event.
+    pub fn try_apply(&mut self, delta: &SpecDelta) -> Result<(), SpecError> {
+        self.spec.validate(delta)?;
         self.spec_deltas += 1;
         match delta {
             SpecDelta::AddTier { name, costs } => {
@@ -1453,14 +1542,13 @@ impl FleetPlanner {
                 self.spec.apply(delta);
             }
             SpecDelta::RetireTier { tier } => {
-                assert!(*tier < self.tiers.len(), "retire of unknown tier {tier}");
                 let old = std::mem::replace(
                     &mut self.tiers[*tier],
                     TierEntry::Retired(RetiredTier::default()),
                 );
                 let state = match old {
                     TierEntry::Active(s) => s,
-                    TierEntry::Retired(_) => panic!("tier {tier} already retired"),
+                    TierEntry::Retired(_) => unreachable!("double retire rejected by validate"),
                 };
                 // Archive the cached decision and the lifetime counters
                 // (stats stay monotone); free the network and scratch.
@@ -1478,10 +1566,33 @@ impl FleetPlanner {
                 self.spec.apply(delta);
             }
             // Device membership is pure request routing: no per-tier
-            // solver state to touch. The spec validates the delta.
+            // solver state to touch.
             SpecDelta::AddDevice { .. }
             | SpecDelta::RemoveDevice { .. }
             | SpecDelta::MigrateDevice { .. } => self.spec.apply(delta),
+        }
+        Ok(())
+    }
+
+    /// [`FleetPlanner::try_apply`] for callers that treat churn as a
+    /// stream of facts (a contradictory fact is a caller bug): panics
+    /// where `try_apply` returns the typed error.
+    pub fn apply(&mut self, delta: &SpecDelta) {
+        if let Err(e) = self.try_apply(delta) {
+            panic!("malformed churn event: {e}");
+        }
+    }
+
+    /// Immediately expire a retired tier's archived last-good decision:
+    /// the daemon's retire-TTL hook (`daemon::timeq` fires it at
+    /// `retirement + retire_ttl` wall ticks instead of counting `plan`
+    /// epochs). Late requests for the tier fall through to the
+    /// deterministic device-only answer from the next plan on. A no-op on
+    /// live or out-of-range tiers.
+    pub fn expire_retired(&mut self, tier: usize) {
+        if let Some(TierEntry::Retired(r)) = self.tiers.get_mut(tier) {
+            r.ttl = 0;
+            r.last = None;
         }
     }
 
@@ -2521,5 +2632,138 @@ mod tests {
         let mut fleet = FleetPlanner::new(spec_for("block-residual", 4));
         fleet.apply(&SpecDelta::RetireTier { tier: 2 });
         fleet.apply(&SpecDelta::RetireTier { tier: 2 });
+    }
+
+    /// Malformed deltas come back as typed `SpecError`s from `try_apply`,
+    /// and a rejected delta leaves the planner untouched — no half-patched
+    /// spec, no phantom `spec_deltas` tick.
+    #[test]
+    fn churn_malformed_deltas_rejected_with_typed_errors() {
+        let mut fleet = FleetPlanner::new(spec_for("block-residual", 4));
+        let before: Vec<Option<usize>> = (0..fleet.spec().num_devices())
+            .map(|d| fleet.spec().tier_of_opt(d))
+            .collect();
+        let deltas_before = fleet.stats().spec_deltas;
+
+        // Migrating a device that was never in the fleet.
+        assert_eq!(
+            fleet.try_apply(&SpecDelta::MigrateDevice { device: 9, tier: 0 }),
+            Err(SpecError::UnknownDevice { device: 9 })
+        );
+        // Migrating to a tier that does not exist.
+        assert_eq!(
+            fleet.try_apply(&SpecDelta::MigrateDevice { device: 1, tier: 7 }),
+            Err(SpecError::UnknownTier { tier: 7 })
+        );
+        // Removing an absent device, and adding over a live slot.
+        assert_eq!(
+            fleet.try_apply(&SpecDelta::RemoveDevice { device: 42 }),
+            Err(SpecError::UnknownDevice { device: 42 })
+        );
+        assert_eq!(
+            fleet.try_apply(&SpecDelta::AddDevice { device: 1, tier: 0 }),
+            Err(SpecError::DeviceAlreadyPresent { device: 1 })
+        );
+        // Adding a device on a tier that does not exist.
+        assert_eq!(
+            fleet.try_apply(&SpecDelta::AddDevice { device: 9, tier: 7 }),
+            Err(SpecError::UnknownTier { tier: 7 })
+        );
+
+        let after: Vec<Option<usize>> = (0..fleet.spec().num_devices())
+            .map(|d| fleet.spec().tier_of_opt(d))
+            .collect();
+        assert_eq!(after, before, "rejected deltas must not patch the spec");
+        assert_eq!(fleet.spec().num_tiers(), 4);
+        assert_eq!(fleet.stats().spec_deltas, deltas_before);
+
+        // The same requests still plan identically after the rejections.
+        let link = Link::symmetric(5e5);
+        let d = fleet
+            .plan(&[PlanRequest {
+                device: 1,
+                tier: fleet.spec().tier_of(1),
+                link,
+            }])
+            .pop()
+            .unwrap();
+        assert!(d.delay.is_finite());
+    }
+
+    /// Retired and departed slots are rejected as migration endpoints:
+    /// a `MigrateDevice` naming a retired destination tier or a departed
+    /// device is a typed error, not a silent patch.
+    #[test]
+    fn churn_migrate_rejects_retired_tier_and_departed_device() {
+        let mut fleet = FleetPlanner::new(spec_for("block-residual", 4));
+        fleet.apply(&SpecDelta::RetireTier { tier: 2 });
+        assert_eq!(
+            fleet.try_apply(&SpecDelta::MigrateDevice { device: 0, tier: 2 }),
+            Err(SpecError::RetiredTier { tier: 2 })
+        );
+        assert_eq!(
+            fleet.try_apply(&SpecDelta::AddDevice { device: 9, tier: 2 }),
+            Err(SpecError::RetiredTier { tier: 2 })
+        );
+        assert_eq!(
+            fleet.try_apply(&SpecDelta::RetireTier { tier: 2 }),
+            Err(SpecError::AlreadyRetired { tier: 2 })
+        );
+
+        fleet.apply(&SpecDelta::RemoveDevice { device: 1 });
+        assert_eq!(
+            fleet.try_apply(&SpecDelta::MigrateDevice { device: 1, tier: 0 }),
+            Err(SpecError::UnknownDevice { device: 1 }),
+            "a departed device is not a migration source"
+        );
+    }
+
+    /// `expire_retired` collapses a retired tier's TTL: the next request
+    /// for that tier skips the archived cut and goes straight to the
+    /// device-only fallback, exactly as if the TTL had run out naturally.
+    #[test]
+    fn churn_expire_retired_fast_forwards_the_ttl() {
+        let opts = FleetOptions {
+            retire_ttl: 8,
+            ..FleetOptions::default()
+        };
+        let mut natural = FleetPlanner::with_options(spec_for("block-residual", 4), opts);
+        let mut forced = FleetPlanner::with_options(spec_for("block-residual", 4), opts);
+        let link = Link::symmetric(5e5);
+        let req = [PlanRequest {
+            device: 2,
+            tier: 2,
+            link,
+        }];
+        // Warm the archived cut, then retire on both planners.
+        natural.plan(&req);
+        forced.plan(&req);
+        natural.apply(&SpecDelta::RetireTier { tier: 2 });
+        forced.apply(&SpecDelta::RetireTier { tier: 2 });
+
+        // Natural: burn the TTL down with archived serves. Forced: expire now.
+        for _ in 0..8 {
+            let d = natural.plan(&req).pop().unwrap();
+            assert!(matches!(d.provenance, DecisionProvenance::Retired));
+        }
+        forced.expire_retired(2);
+
+        let a = natural.plan(&req).pop().unwrap();
+        let b = forced.plan(&req).pop().unwrap();
+        assert_eq!(a.partition, b.partition, "post-TTL fallbacks must agree");
+        assert_eq!(a.delay.to_bits(), b.delay.to_bits());
+
+        // Expiring a live (or out-of-range) tier is a no-op.
+        forced.expire_retired(0);
+        forced.expire_retired(99);
+        let d = forced
+            .plan(&[PlanRequest {
+                device: 0,
+                tier: 0,
+                link,
+            }])
+            .pop()
+            .unwrap();
+        assert!(matches!(d.provenance, DecisionProvenance::Fresh));
     }
 }

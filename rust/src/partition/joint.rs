@@ -78,7 +78,7 @@
 
 use super::fleet::{
     DecisionProvenance, DecisionStats, FleetOptions, FleetPlanner, FleetSpec, FleetStats,
-    PlanDecision, PlanRequest, SpecDelta,
+    PlanDecision, PlanRequest, SpecDelta, SpecError,
 };
 use super::types::{Link, Partition, Problem};
 use crate::graph::enumerate_lower_sets;
@@ -731,11 +731,32 @@ impl JointPlanner {
     /// fleet engine and — so the two stay one fleet — to the unreduced
     /// λ-probe sibling if it has been built (its `spec_deltas` counter is
     /// probe-local and never reported; [`JointPlanner::stats`] counts the
-    /// main engine's).
-    pub fn apply_delta(&mut self, delta: &SpecDelta) {
-        self.fleet.apply(delta);
+    /// main engine's). A malformed delta is rejected with a typed
+    /// [`SpecError`] before either engine moves.
+    pub fn try_apply_delta(&mut self, delta: &SpecDelta) -> Result<(), SpecError> {
+        self.fleet.try_apply(delta)?;
         if let Some(p) = &mut self.probe {
-            p.apply(delta);
+            p.try_apply(delta)
+                .expect("probe sibling shares the fleet spec");
+        }
+        Ok(())
+    }
+
+    /// Panicking convenience over [`JointPlanner::try_apply_delta`] for
+    /// callers that treat a malformed delta as a bug.
+    pub fn apply_delta(&mut self, delta: &SpecDelta) {
+        if let Err(e) = self.try_apply_delta(delta) {
+            panic!("malformed churn event: {e}");
+        }
+    }
+
+    /// Immediately expire a retired tier's archived decision on both
+    /// engines (see [`FleetPlanner::expire_retired`] — the daemon's
+    /// retire-TTL hook).
+    pub fn expire_retired(&mut self, tier: usize) {
+        self.fleet.expire_retired(tier);
+        if let Some(p) = &mut self.probe {
+            p.expire_retired(tier);
         }
     }
 

@@ -57,9 +57,9 @@ pub mod baselines;
 pub use blockwise::blockwise_partition;
 pub use fleet::{
     DecisionProvenance, DecisionStats, DegradedReason, FleetOptions, FleetPlanner, FleetSpec,
-    FleetStats, PlanDecision, PlanRequest, SpecDelta,
+    FleetStats, PlanDecision, PlanRequest, SpecDelta, SpecError,
 };
-pub use service::{PlannerService, ServiceOptions};
+pub use service::{ClockError, PlannerService, ServiceOptions};
 pub use general::general_partition;
 pub use joint::{fleet_makespan_for_cuts, oracle_fleet_makespan, JointOptions, JointPlanner};
 pub use planner::PartitionPlanner;

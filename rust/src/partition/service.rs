@@ -47,10 +47,34 @@
 
 use super::fleet::{
     DecisionProvenance, DegradedReason, FleetSpec, FleetStats, PlanDecision, PlanRequest,
-    SpecDelta,
+    SpecDelta, SpecError,
 };
 use super::joint::{JointOptions, JointPlanner};
 use super::types::Link;
+
+/// A non-monotone epoch tick: the caller asked to plan at `now`, but the
+/// service clock already advanced to `latest`. A long-lived daemon treats
+/// this as a degradable input fault (serve last-good for the epoch), not
+/// a panic — see the `daemon` module.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClockError {
+    /// The tick the rejected `plan_epoch` call named.
+    pub now: u64,
+    /// The newest tick the service has already planned at.
+    pub latest: u64,
+}
+
+impl std::fmt::Display for ClockError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "epoch tick {} is behind the service clock {}",
+            self.now, self.latest
+        )
+    }
+}
+
+impl std::error::Error for ClockError {}
 
 /// Construction-time policy of the service layer. The default is the
 /// transparent configuration — no staleness bound, no budget — under
@@ -105,6 +129,11 @@ pub struct PlannerService {
     /// Last decision the planner produced per device slot — the degraded
     /// fallback. Cleared when the device departs or migrates tiers.
     last_good: Vec<Option<PlanDecision>>,
+    /// Per-slot forced-staleness flag: set by [`PlannerService::
+    /// expire_report`] (the daemon's lease-expiry hook), cleared by the
+    /// next accepted report. A flagged device is treated as stale this
+    /// epoch regardless of the staleness bound.
+    forced_stale: Vec<bool>,
     /// The service's simulated clock (the newest `plan_epoch` tick).
     now: u64,
     degraded_stale: u64,
@@ -120,6 +149,7 @@ impl PlannerService {
             options,
             reports: vec![None; n],
             last_good: vec![None; n],
+            forced_stale: vec![false; n],
             now: 0,
             degraded_stale: 0,
             degraded_budget: 0,
@@ -144,6 +174,19 @@ impl PlannerService {
             }
         }
         self.reports[device] = Some((link, tick));
+        self.forced_stale[device] = false;
+    }
+
+    /// Force a device's report stale *now*, ahead of the staleness bound:
+    /// the daemon's report-lease expiry hook (`daemon::timeq`). The next
+    /// epoch serves the device last-good marked
+    /// [`DegradedReason::StaleLink`] (or bootstrap-solves, still marked
+    /// degraded, if it was never planned); the next accepted report
+    /// clears the flag. A no-op on out-of-range slots.
+    pub fn expire_report(&mut self, device: usize) {
+        if let Some(f) = self.forced_stale.get_mut(device) {
+            *f = true;
+        }
     }
 
     /// Apply one churn event: forwarded to the planner (spec + SoA state)
@@ -151,8 +194,11 @@ impl PlannerService {
     /// devices lose their report and last-good entries (a re-join must
     /// not inherit a predecessor's state), a migrated device keeps its
     /// report (the link is the device's, not the tier's) but drops its
-    /// last-good decision (that belonged to the old tier).
-    pub fn apply_delta(&mut self, delta: &SpecDelta) {
+    /// last-good decision (that belonged to the old tier). A malformed
+    /// delta is rejected with a typed [`SpecError`] before anything —
+    /// planner or service caches — moves.
+    pub fn try_apply_delta(&mut self, delta: &SpecDelta) -> Result<(), SpecError> {
+        self.planner.spec().validate(delta)?;
         // Devices a retirement detaches, snapshotted before the spec moves.
         let clear: Vec<usize> = match delta {
             SpecDelta::RetireTier { tier } => (0..self.planner.spec().num_devices())
@@ -161,17 +207,37 @@ impl PlannerService {
             SpecDelta::RemoveDevice { device } => vec![*device],
             _ => Vec::new(),
         };
-        self.planner.apply_delta(delta);
+        self.planner
+            .try_apply_delta(delta)
+            .expect("validated above against the same spec");
         let n = self.planner.spec().num_devices();
         self.reports.resize(n, None);
         self.last_good.resize(n, None);
+        self.forced_stale.resize(n, false);
         for d in clear {
             self.reports[d] = None;
             self.last_good[d] = None;
+            self.forced_stale[d] = false;
         }
         if let SpecDelta::MigrateDevice { device, .. } = delta {
             self.last_good[*device] = None;
         }
+        Ok(())
+    }
+
+    /// Panicking convenience over [`PlannerService::try_apply_delta`] for
+    /// callers that treat a malformed delta as a bug.
+    pub fn apply_delta(&mut self, delta: &SpecDelta) {
+        if let Err(e) = self.try_apply_delta(delta) {
+            panic!("malformed churn event: {e}");
+        }
+    }
+
+    /// Immediately expire a retired tier's archived decision (see
+    /// [`super::fleet::FleetPlanner::expire_retired`] — the daemon's
+    /// retire-TTL hook).
+    pub fn expire_retired(&mut self, tier: usize) {
+        self.planner.expire_retired(tier);
     }
 
     /// Serve one epoch at service tick `now` (monotone): one decision per
@@ -180,8 +246,18 @@ impl PlannerService {
     /// joint coupling sees the whole epoch at once); stale or
     /// budget-denied devices are served their last-good decision with a
     /// [`DecisionProvenance::Degraded`] marking and zero planner traffic.
-    pub fn plan_epoch(&mut self, now: u64) -> Vec<PlanDecision> {
-        assert!(now >= self.now, "the service clock is monotone");
+    ///
+    /// A tick behind the service clock is rejected with a typed
+    /// [`ClockError`] and **no state change** — a misbehaving producer
+    /// degrades one epoch, it does not panic the daemon (the old
+    /// monotone-clock `assert!`).
+    pub fn plan_epoch(&mut self, now: u64) -> Result<Vec<PlanDecision>, ClockError> {
+        if now < self.now {
+            return Err(ClockError {
+                now,
+                latest: self.now,
+            });
+        }
         self.now = now;
 
         // Lane classification, device-slot order.
@@ -192,7 +268,8 @@ impl PlannerService {
             let lane = match (self.planner.spec().tier_of_opt(d), self.reports[d]) {
                 (None, _) | (Some(_), None) => Lane::Silent,
                 (Some(_), Some((link, tick))) => {
-                    let stale = now.saturating_sub(tick) > self.options.staleness_bound;
+                    let stale = self.forced_stale[d]
+                        || now.saturating_sub(tick) > self.options.staleness_bound;
                     if !stale {
                         Lane::Plan { link, stale: false }
                     } else if self.last_good[d].is_some() {
@@ -307,7 +384,12 @@ impl PlannerService {
             }
         }
         self.planner.note_degraded(degraded);
-        out
+        Ok(out)
+    }
+
+    /// The service's simulated clock: the newest `plan_epoch` tick.
+    pub fn now(&self) -> u64 {
+        self.now
     }
 
     /// The wrapped planner (read access: makespan, congestion, spec).
@@ -435,7 +517,7 @@ mod tests {
             for r in &reqs {
                 service.report(r.device, r.link, epoch);
             }
-            let got = service.plan_epoch(epoch);
+            let got = service.plan_epoch(epoch).unwrap();
             let want = direct.plan(&reqs);
             assert_decisions_bit_identical(&got, &want, "pass-through epoch");
             assert!(got
@@ -464,7 +546,7 @@ mod tests {
         for d in 0..4 {
             service.report(d, fresh, 0);
         }
-        let e0 = service.plan_epoch(0);
+        let e0 = service.plan_epoch(0).unwrap();
         assert_eq!(e0.len(), 4);
         let solves_after_e0 = service.stats().solves();
 
@@ -473,7 +555,7 @@ mod tests {
         for d in [0usize, 1, 3] {
             service.report(d, drifted, 1);
         }
-        let e1 = service.plan_epoch(1);
+        let e1 = service.plan_epoch(1).unwrap();
         assert_eq!(e1.len(), 4);
         let stale_d = e1.iter().find(|d| d.device == 2).unwrap();
         assert_eq!(
@@ -504,7 +586,7 @@ mod tests {
         for d in 0..4 {
             service.report(d, drifted, 2);
         }
-        let e2 = service.plan_epoch(2);
+        let e2 = service.plan_epoch(2).unwrap();
         assert!(e2
             .iter()
             .all(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_))));
@@ -538,7 +620,7 @@ mod tests {
         for d in 0..4 {
             service.report(d, l0, 0);
         }
-        let e0 = service.plan_epoch(0);
+        let e0 = service.plan_epoch(0).unwrap();
         assert_eq!(e0.len(), 4);
         assert!(e0
             .iter()
@@ -550,7 +632,7 @@ mod tests {
         for d in 0..4 {
             service.report(d, l1, 1);
         }
-        let e1 = service.plan_epoch(1);
+        let e1 = service.plan_epoch(1).unwrap();
         for d in &e1 {
             if d.tier == 0 {
                 assert!(!matches!(d.provenance, DecisionProvenance::Degraded(_)));
@@ -567,7 +649,7 @@ mod tests {
 
         // Epoch 2: same reports — tier 0 is cache-clean (free) and the
         // budget admits the next deferred tier.
-        let e2 = service.plan_epoch(2);
+        let e2 = service.plan_epoch(2).unwrap();
         let fresh_tiers: Vec<usize> = e2
             .iter()
             .filter(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_)))
@@ -620,7 +702,7 @@ mod tests {
                     service.report(d, link, tick as u64);
                     latest[d] = Some(link);
                 }
-                let decisions = service.plan_epoch(tick as u64);
+                let decisions = service.plan_epoch(tick as u64).unwrap();
                 expected_solves += expected_epoch_solves(service.spec(), &latest, &mut tier_cache);
                 // The transparent policy never degrades, and every
                 // decision stays feasible mid-churn.
@@ -653,7 +735,7 @@ mod tests {
                     });
                 }
             }
-            let replayed = service.plan_epoch(final_tick);
+            let replayed = service.plan_epoch(final_tick).unwrap();
             expected_solves += expected_epoch_solves(service.spec(), &latest, &mut tier_cache);
             assert_eq!(
                 service.stats().solves(),
@@ -711,7 +793,7 @@ mod tests {
                     service.report(d, link, tick as u64);
                     last_report[d] = Some(link);
                 }
-                let decisions = service.plan_epoch(tick as u64);
+                let decisions = service.plan_epoch(tick as u64).unwrap();
                 for d in &decisions {
                     let true_link = step.true_links[d.device];
                     let costs = service.spec().tier_costs(d.tier);
@@ -763,10 +845,10 @@ mod tests {
         for d in 0..4 {
             service.report(d, link, 0);
         }
-        assert_eq!(service.plan_epoch(0).len(), 4);
+        assert_eq!(service.plan_epoch(0).unwrap().len(), 4);
 
         service.apply_delta(&SpecDelta::RemoveDevice { device: 1 });
-        let e1 = service.plan_epoch(1);
+        let e1 = service.plan_epoch(1).unwrap();
         assert_eq!(e1.len(), 3, "a departed device gets no decision");
         assert!(e1.iter().all(|d| d.device != 1));
 
@@ -776,17 +858,92 @@ mod tests {
             service.last_good(1).is_none(),
             "a re-join must not inherit the old incarnation's cache"
         );
-        let e2 = service.plan_epoch(2);
+        let e2 = service.plan_epoch(2).unwrap();
         assert!(
             e2.iter().all(|d| d.device != 1),
             "re-joined but not yet reported → silent"
         );
         service.report(1, link, 3);
-        let e3 = service.plan_epoch(3);
+        let e3 = service.plan_epoch(3).unwrap();
         let rejoined = e3.iter().find(|d| d.device == 1).unwrap();
         assert_eq!(rejoined.tier, 2);
         let problem = Problem::new(service.spec().tier_costs(2), link);
         let cold = general_partition(&problem);
         assert_cut_cost_equal(&problem, &rejoined.partition, &cold);
+    }
+
+    /// A tick behind the service clock is a typed [`ClockError`], not a
+    /// panic — and it leaves no residue: the clock does not move, no
+    /// counter ticks, and a correct re-plan at the current tick is
+    /// bit-identical to the decisions served before the bad call.
+    #[test]
+    fn churn_non_monotone_tick_is_a_typed_error_without_residue() {
+        let spec = spec_for("googlenet", 4);
+        let mut service = PlannerService::new(spec, ServiceOptions::default());
+        let link = Link::symmetric(5e5);
+        for d in 0..4 {
+            service.report(d, link, 5);
+        }
+        let e5 = service.plan_epoch(5).unwrap();
+        assert_eq!(e5.len(), 4);
+        let solves = service.stats().solves();
+
+        let err = service.plan_epoch(3).unwrap_err();
+        assert_eq!(err, ClockError { now: 3, latest: 5 });
+        assert_eq!(err.to_string(), "epoch tick 3 is behind the service clock 5");
+        assert_eq!(service.now(), 5, "a rejected tick must not move the clock");
+        assert_eq!(service.stats().solves(), solves, "no planner traffic on Err");
+        assert_eq!(service.degraded_stale() + service.degraded_budget(), 0);
+
+        let again = service.plan_epoch(5).unwrap();
+        assert_decisions_bit_identical(&e5, &again, "replan after rejected tick");
+    }
+
+    /// Lease semantics: [`PlannerService::expire_report`] degrades a
+    /// device *before* the staleness bound would, and the next accepted
+    /// report clears the flag — lease expiry takes precedence over the
+    /// bound, recovery is report-driven.
+    #[test]
+    fn churn_expired_report_degrades_ahead_of_the_staleness_bound() {
+        let spec = spec_for("googlenet", 4);
+        // An infinite staleness bound: only the lease can degrade.
+        let mut service = PlannerService::new(spec, ServiceOptions::default());
+        let link = Link::symmetric(5e5);
+        for d in 0..4 {
+            service.report(d, link, 0);
+        }
+        let e0 = service.plan_epoch(0).unwrap();
+        assert_eq!(e0.len(), 4);
+
+        service.expire_report(2);
+        let e1 = service.plan_epoch(1).unwrap();
+        let leased = e1.iter().find(|d| d.device == 2).unwrap();
+        assert_eq!(
+            leased.provenance,
+            DecisionProvenance::Degraded(DegradedReason::StaleLink)
+        );
+        assert!(!leased.stats.refreshed, "served last-good, not re-solved");
+        assert!(
+            e1.iter()
+                .filter(|d| d.device != 2)
+                .all(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_))),
+            "the lease is per-device"
+        );
+        assert_eq!(service.degraded_stale(), 1);
+
+        // Still flagged next epoch — the flag outlives the expiry tick.
+        let e2 = service.plan_epoch(2).unwrap();
+        let leased = e2.iter().find(|d| d.device == 2).unwrap();
+        assert!(matches!(leased.provenance, DecisionProvenance::Degraded(_)));
+
+        // A fresh report clears the lease.
+        service.report(2, link, 3);
+        let e3 = service.plan_epoch(3).unwrap();
+        assert!(e3
+            .iter()
+            .all(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_))));
+
+        // Out-of-range expiry is a no-op, not a panic.
+        service.expire_report(99);
     }
 }

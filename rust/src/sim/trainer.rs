@@ -387,7 +387,10 @@ impl Trainer {
                 }
             }
             let t0 = Instant::now();
-            let decisions = self.service.plan_epoch(epoch as u64);
+            let decisions = self
+                .service
+                .plan_epoch(epoch as u64)
+                .expect("the simulator's epoch clock is monotone");
             let decision_time = t0.elapsed().as_secs_f64();
             if decisions.is_empty() {
                 continue;
@@ -457,6 +460,15 @@ impl Trainer {
     /// introspection: last-good cache, degraded counters, live spec).
     pub fn service(&self) -> &PlannerService {
         &self.service
+    }
+
+    /// The planner's Prometheus scrape (the [`crate::daemon::metrics`]
+    /// service families); `fastsplit simulate --metrics` dumps it after
+    /// a run, and `benches/churn.rs` prints it per case.
+    pub fn render_prometheus(&self) -> String {
+        crate::daemon::metrics::render_prometheus(&crate::daemon::metrics::service_metrics(
+            &self.service,
+        ))
     }
 
     /// Current per-slot device incarnation ids (see [`DeviceId`]).

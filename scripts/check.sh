@@ -45,6 +45,14 @@ if [[ $fast -eq 0 ]]; then
   PALLAS_TEST_SEED=1 cargo test -q --release churn
   PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release churn
 
+  # Daemon soak lane (PR 7): the planner-daemon suite — coalesced ingest
+  # replaying bit-identical to the raw uncoalesced service, timer-wheel
+  # scheduling/lease expiry, graceful drain, and the byte-stable metrics
+  # scrape — under the same two fixed seeds and both feature configs.
+  echo "==> daemon suite under two fixed seeds"
+  PALLAS_TEST_SEED=1 cargo test -q --release daemon
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release daemon
+
   # Feature matrix: the rayon parallel dirty-tier sweep must compile and
   # stay bit-identical to the serial loop (the determinism test runs under
   # both configurations).
@@ -54,6 +62,10 @@ if [[ $fast -eq 0 ]]; then
   echo "==> churn-replay suite under two fixed seeds (features parallel)"
   PALLAS_TEST_SEED=1 cargo test -q --release --features parallel churn
   PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel churn
+
+  echo "==> daemon suite under two fixed seeds (features parallel)"
+  PALLAS_TEST_SEED=1 cargo test -q --release --features parallel daemon
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel daemon
 
   # Bench smoke: compile + run the bench binaries so they cannot bit-rot.
   # Output files are disabled (-) so committed BENCH_*.json results are
@@ -66,11 +78,14 @@ if [[ $fast -eq 0 ]]; then
   FASTSPLIT_JOINT_OUT=- cargo bench --bench joint -- --smoke
   echo "==> cargo bench --bench churn -- --smoke"
   FASTSPLIT_CHURN_OUT=- cargo bench --bench churn -- --smoke
+  echo "==> cargo bench --bench daemon -- --smoke"
+  FASTSPLIT_DAEMON_OUT=- cargo bench --bench daemon -- --smoke
   echo "==> bench smoke with --features parallel"
   FASTSPLIT_REPLAN_OUT=- FASTSPLIT_REPLAN4_OUT=- cargo bench --bench replan --features parallel -- --smoke
   FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- cargo bench --bench fleet --features parallel -- --smoke
   FASTSPLIT_JOINT_OUT=- cargo bench --bench joint --features parallel -- --smoke
   FASTSPLIT_CHURN_OUT=- cargo bench --bench churn --features parallel -- --smoke
+  FASTSPLIT_DAEMON_OUT=- cargo bench --bench daemon --features parallel -- --smoke
 fi
 
 echo "OK"
