@@ -19,13 +19,16 @@
 //! `FASTSPLIT_FLEET_BLOCK_OUT`, disable either with `=-`) so the perf
 //! trajectory is tracked in-repo (see PERF.md).
 
-use fastsplit::partition::{FleetOptions, FleetPlanner, FleetSpec, Link, PartitionPlanner, Problem};
+use fastsplit::partition::{
+    FleetOptions, FleetPlanner, FleetSpec, Link, PartitionPlanner, PlanRequest, Problem,
+};
 use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
 use fastsplit::util::bench::{BenchConfig, Bencher};
 use fastsplit::util::json::Json;
 use fastsplit::util::prop::{assert_cut_cost_equal, fading_walk};
 use fastsplit::util::rng::Rng;
-use std::time::Duration;
+use fastsplit::util::stats::Summary;
+use std::time::{Duration, Instant};
 
 const MODEL: &str = "googlenet";
 
@@ -278,8 +281,80 @@ fn main() {
     }
     b.finish();
 
+    // Million-device scale lane (PR 8): one epoch decision for a fleet
+    // where every device reports a *distinct* jittered link, planned with
+    // σ-quantization collapsing the link set to log-spaced buckets. Timed
+    // manually per epoch (the decision path is seconds-scale at 10^6
+    // devices, so a handful of epoch samples beats a measurement window)
+    // and reported as p50/p99 epoch-decision latency.
+    let scale_devices: usize = if smoke { 10_000 } else { 1_000_000 };
+    let scale_epochs: usize = if smoke { 4 } else { 8 };
+    let buckets_per_decade: u32 = 8;
+    let scale_row = {
+        let devices = DeviceProfile::fleet_of(scale_devices);
+        let spec = FleetSpec::from_fleet(&devices, costs);
+        let num_tiers = spec.num_tiers();
+        let mut planner = FleetPlanner::with_options(
+            spec,
+            FleetOptions {
+                sigma_buckets_per_decade: buckets_per_decade,
+                ..FleetOptions::default()
+            },
+        );
+        let mut samples = Vec::with_capacity(scale_epochs);
+        for epoch in 0..scale_epochs as u64 {
+            // Distinct per-device links, drifting per epoch: a per-device
+            // jitter spread over ±10% around the tier's epoch link, so
+            // neighbours share a σ-bucket but almost no two links are
+            // bit-equal (the quantizer, not the exact-match cache, does
+            // the collapsing).
+            let reqs: Vec<PlanRequest> = (0..planner.spec().num_devices())
+                .map(|d| {
+                    let tier = planner.spec().tier_of(d);
+                    let base = epoch_link(tier, epoch);
+                    let jitter = 0.9 + 0.2 * (d as f64 / scale_devices as f64);
+                    PlanRequest {
+                        device: d,
+                        tier,
+                        link: Link {
+                            up_bps: base.up_bps * jitter,
+                            down_bps: base.down_bps * jitter,
+                        },
+                    }
+                })
+                .collect();
+            let t0 = Instant::now();
+            let decisions = planner.plan(&reqs);
+            samples.push(t0.elapsed().as_secs_f64());
+            assert_eq!(decisions.len(), reqs.len());
+        }
+        let s = Summary::of(&samples);
+        let stats = planner.stats();
+        assert!(
+            stats.quantized_requests > 0,
+            "the jittered links must collapse into sigma buckets"
+        );
+        println!(
+            "fleet/{MODEL}/{scale_devices}dev/epoch-quantized: mean {:.3e}s p50 {:.3e}s \
+             p99 {:.3e}s ({} epochs, {} buckets/decade, {} requests quantized, {} flow solves)",
+            s.mean, s.p50, s.p99, scale_epochs, buckets_per_decade, stats.quantized_requests,
+            stats.flow_solves,
+        );
+        Json::obj(vec![
+            ("devices", Json::num(scale_devices as f64)),
+            ("tiers", Json::num(num_tiers as f64)),
+            ("sigma_buckets_per_decade", Json::num(buckets_per_decade as f64)),
+            ("epochs", Json::num(scale_epochs as f64)),
+            ("epoch_mean_s", Json::num(s.mean)),
+            ("epoch_p50_s", Json::num(s.p50)),
+            ("epoch_p99_s", Json::num(s.p99)),
+            ("quantized_requests", Json::num(stats.quantized_requests as f64)),
+            ("flow_solves", Json::num(stats.flow_solves as f64)),
+        ])
+    };
+
     if smoke {
-        println!("smoke mode: skipping BENCH_PR2.json / BENCH_PR3.json");
+        println!("smoke mode: skipping BENCH_PR2.json / BENCH_PR3.json / BENCH_PR8.json");
         return;
     }
     let out = std::env::var("FASTSPLIT_FLEET_OUT").unwrap_or_else(|_| "BENCH_PR2.json".into());
@@ -319,6 +394,28 @@ fn main() {
                 ),
             ),
             ("results", Json::Arr(block_rows)),
+        ]);
+        match std::fs::write(&out, doc.pretty() + "\n") {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
+    }
+    let out = std::env::var("FASTSPLIT_FLEET_SCALE_OUT")
+        .unwrap_or_else(|_| "BENCH_PR8.json".into());
+    if out != "-" {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("fleet-scale")),
+            ("measured", Json::Bool(true)),
+            (
+                "note",
+                Json::str(
+                    "Million-device epoch decisions: every device reports a distinct jittered \
+                     link, sigma-quantization (8 buckets/decade) collapses the link set to \
+                     per-tier bucket representatives before the solve; p50/p99 are per-epoch \
+                     plan() latencies over the full batch",
+                ),
+            ),
+            ("results", Json::Arr(vec![scale_row])),
         ]);
         match std::fs::write(&out, doc.pretty() + "\n") {
             Ok(()) => println!("wrote {out}"),

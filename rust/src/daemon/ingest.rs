@@ -156,7 +156,7 @@ impl Coalescer {
         match event {
             DaemonEvent::Delta(delta) => self.push_delta(delta).map_err(IngestError::from),
             DaemonEvent::Report { device, link, tick } => {
-                if !(link.up_bps > 0.0 && link.down_bps > 0.0) {
+                if !link.is_valid() {
                     return Err(IngestError::NonPositiveRate { device });
                 }
                 if self.slot(device).is_none() {
@@ -464,6 +464,30 @@ mod tests {
                 link: Link {
                     up_bps: 0.0,
                     down_bps: 1e5,
+                },
+                tick: 0,
+            }),
+            Err(IngestError::NonPositiveRate { device: 1 })
+        );
+        // Non-finite rates too: NaN and infinity must not reach the
+        // planner's SoA refresh through the daemon door (PR 8).
+        assert_eq!(
+            c.push(DaemonEvent::Report {
+                device: 1,
+                link: Link {
+                    up_bps: f64::NAN,
+                    down_bps: 1e5,
+                },
+                tick: 0,
+            }),
+            Err(IngestError::NonPositiveRate { device: 1 })
+        );
+        assert_eq!(
+            c.push(DaemonEvent::Report {
+                device: 1,
+                link: Link {
+                    up_bps: 1e5,
+                    down_bps: f64::INFINITY,
                 },
                 tick: 0,
             }),

@@ -12,6 +12,7 @@
 
 use crate::partition::fleet::FleetStats;
 use crate::partition::service::PlannerService;
+use crate::partition::sharded::ShardedFleetPlanner;
 
 /// Prometheus metric families this module emits.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -168,7 +169,26 @@ pub fn fleet_metrics(stats: &FleetStats) -> Vec<Metric> {
             "Decisions served with degraded provenance",
             stats.degraded_decisions,
         ),
+        counter(
+            "fastsplit_quantized_requests_total",
+            "Plan requests snapped to a sigma-bucket representative",
+            stats.quantized_requests,
+        ),
     ]
+}
+
+/// Snapshot a [`ShardedFleetPlanner`]: its composed [`fleet_metrics`]
+/// plus the shard-layout gauge (shard counts are deployment shape, not a
+/// [`FleetStats`] counter — the flat-equality pins stay exact).
+pub fn sharded_metrics(planner: &ShardedFleetPlanner) -> Vec<Metric> {
+    let mut out = fleet_metrics(&planner.stats());
+    out.push(Metric {
+        name: "fastsplit_shards",
+        help: "Worker shards the tier set is partitioned across",
+        kind: MetricKind::Gauge,
+        value: planner.num_shards() as u64,
+    });
+    out
 }
 
 /// Snapshot a whole [`PlannerService`]: the wrapped planner's
@@ -213,6 +233,12 @@ pub fn service_metrics(service: &PlannerService) -> Vec<Metric> {
         kind: MetricKind::Gauge,
         value: spec.num_tiers() as u64,
     });
+    out.push(Metric {
+        name: "fastsplit_report_refusals_total",
+        help: "Link reports refused by input validation",
+        kind: MetricKind::Counter,
+        value: service.refused_reports(),
+    });
     out
 }
 
@@ -251,6 +277,7 @@ mod tests {
             spec_deltas: 18,
             retired_decisions: 19,
             degraded_decisions: 20,
+            quantized_requests: 21,
         };
         let golden = concat!(
             "# HELP fastsplit_plans_total Batched plan calls served\n",
@@ -313,6 +340,9 @@ mod tests {
             "# HELP fastsplit_degraded_decisions_total Decisions served with degraded provenance\n",
             "# TYPE fastsplit_degraded_decisions_total counter\n",
             "fastsplit_degraded_decisions_total 20\n",
+            "# HELP fastsplit_quantized_requests_total Plan requests snapped to a sigma-bucket representative\n",
+            "# TYPE fastsplit_quantized_requests_total counter\n",
+            "fastsplit_quantized_requests_total 21\n",
         );
         assert_eq!(render_prometheus(&fleet_metrics(&stats)), golden);
     }
@@ -349,6 +379,59 @@ mod tests {
         assert!(a.contains("fastsplit_active_devices 3\n"));
         assert!(a.contains("fastsplit_spec_deltas_total 1\n"));
         assert!(a.contains("fastsplit_degraded_stale_total 1\n"));
+        assert!(a.contains("fastsplit_report_refusals_total 0\n"));
         assert!(a.ends_with('\n'));
+    }
+
+    /// The service scrape counts refused reports (the typed-refusal path
+    /// of PR 8): a NaN-rate report bumps the tail counter, nothing else.
+    #[test]
+    fn service_scrape_counts_report_refusals() {
+        let mut service = PlannerService::new(spec_for("googlenet", 4), ServiceOptions::default());
+        for d in 0..4 {
+            service.report(d, Link::symmetric(5e5), 0);
+        }
+        let bad = Link {
+            up_bps: f64::NAN,
+            down_bps: 5e5,
+        };
+        assert!(service.try_report(1, bad, 1).is_err());
+        assert!(service.try_report(99, Link::symmetric(5e5), 1).is_err());
+        service.plan_epoch(1).unwrap();
+        let text = render_prometheus(&service_metrics(&service));
+        assert!(text.contains("fastsplit_report_refusals_total 2\n"));
+    }
+
+    /// The sharded scrape is the composed fleet family plus the shard
+    /// gauge, and with quantization on the new counter moves.
+    #[test]
+    fn sharded_scrape_reports_shards_and_quantized_requests() {
+        use crate::partition::fleet::{FleetOptions, PlanRequest};
+        use crate::partition::joint::JointOptions;
+        let options = JointOptions {
+            fleet: FleetOptions {
+                sigma_buckets_per_decade: 2,
+                ..FleetOptions::default()
+            },
+            ..JointOptions::default()
+        };
+        let mut planner = ShardedFleetPlanner::new(spec_for("googlenet", 8), 3, options);
+        let reqs: Vec<PlanRequest> = (0..8)
+            .map(|d| PlanRequest {
+                device: d,
+                tier: planner.spec().tier_of(d),
+                // Two nearby rates per device pair: same sigma-bucket, so
+                // the quantizer rewrites the non-canonical member.
+                link: Link::symmetric(5e5 * (1.0 + 0.01 * (d / 4) as f64)),
+            })
+            .collect();
+        planner.plan(&reqs);
+        let text = render_prometheus(&sharded_metrics(&planner));
+        assert!(text.contains("fastsplit_shards 3\n"));
+        assert!(text.contains("fastsplit_plans_total 1\n"));
+        assert!(text.contains("fastsplit_requests_total 8\n"));
+        let quantized = planner.stats().quantized_requests;
+        assert!(quantized > 0, "the nearby rates must collapse");
+        assert!(text.contains(&format!("fastsplit_quantized_requests_total {quantized}\n")));
     }
 }

@@ -524,7 +524,12 @@ impl Worker {
                     deltas += 1;
                 }
                 CoalescedItem::Report { device, link, tick } => {
-                    self.service.report(device, link, tick);
+                    // The coalescer already refused malformed reports, but
+                    // the refusal policy must hold even for links that
+                    // bypass it — route through the typed entry point (the
+                    // service counts any refusal) instead of the panicking
+                    // wrapper.
+                    let _ = self.service.try_report(device, link, tick);
                     reports += 1;
                 }
             }

@@ -778,6 +778,16 @@ pub struct FleetOptions {
     /// the archive is dropped and the deterministic device-only fallback
     /// is served instead. Both are [`DecisionProvenance::Retired`].
     pub retire_ttl: u64,
+    /// σ-quantization resolution of the log-spaced per-tier bandwidth
+    /// grid ([`SigmaQuantizer`]): how many buckets each decade of link
+    /// rate is split into. `0` (the default) disables quantization —
+    /// every distinct link solves exactly, the historical behavior.
+    /// With `b > 0`, each epoch batch snaps every request's link to its
+    /// (tier, bucket)'s canonical representative before cache lookup /
+    /// refresh, so distinct-but-close links share one solve; the served
+    /// cost stays within the analytic per-bucket bound (PERF.md "PR 8",
+    /// pinned by `assert_cut_cost_within`).
+    pub sigma_buckets_per_decade: u32,
 }
 
 impl Default for FleetOptions {
@@ -788,6 +798,7 @@ impl Default for FleetOptions {
             block_reduction: true,
             incremental: true,
             retire_ttl: 64,
+            sigma_buckets_per_decade: 0,
         }
     }
 }
@@ -805,6 +816,111 @@ impl FleetOptions {
         }
     }
 }
+
+/// The log-spaced per-tier bandwidth grid of the million-device scale
+/// path: each link rate is binned into `floor(log10(rate)·b)` for `b`
+/// buckets per decade, and a link's bucket is the pair of its (up, down)
+/// rate buckets. Within one epoch batch, every (tier, bucket) snaps to a
+/// **canonical representative** — the bucket's member link with the
+/// smallest `(up, down)` bit pattern (positive finite f64 bit order is
+/// numeric order, so this is the slowest member, deterministic under any
+/// request order and any tier sharding). Snapping to a batch member
+/// rather than a fixed grid point keeps two contracts exact:
+///
+/// - a *sub-resolution* fleet (no two links of a tier share a bucket)
+///   rewrites nothing, so quantization-on is **bit-identical** to
+///   quantization-off there, and
+/// - re-quantizing an already-snapped batch is the identity, so stacked
+///   entry points (service → joint → fleet) never double-count.
+///
+/// For a fixed cut, Eq. (7) delay is affine in σ = 1/R_up + 1/R_down
+/// (`T(σ) = C + B·σ` with `B` the cut's `bw_scale` mass), so serving a
+/// bucket sibling's cut costs at most `(B_served + B_opt)` times the
+/// bucket's σ-width ([`SigmaQuantizer::sigma_width`]) — the analytic
+/// bound the PR-8 property suite pins via `assert_cut_cost_within`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SigmaQuantizer {
+    buckets_per_decade: u32,
+}
+
+impl SigmaQuantizer {
+    /// A quantizer at `buckets_per_decade` resolution, `None` when 0
+    /// (quantization disabled — the [`FleetOptions`] encoding).
+    pub fn new(buckets_per_decade: u32) -> Option<SigmaQuantizer> {
+        (buckets_per_decade > 0).then_some(SigmaQuantizer { buckets_per_decade })
+    }
+
+    pub fn buckets_per_decade(&self) -> u32 {
+        self.buckets_per_decade
+    }
+
+    /// Grid index of one rate: `floor(log10(rate)·b)`. Monotone in the
+    /// rate; rates on a grid line land deterministically on whichever
+    /// side float `log10` resolves to (the error bound does not depend
+    /// on the tie direction — only on the bucket width).
+    pub fn rate_bucket(&self, rate_bps: f64) -> i64 {
+        (rate_bps.log10() * self.buckets_per_decade as f64).floor() as i64
+    }
+
+    /// A link's (up, down) bucket pair.
+    pub fn bucket_key(&self, link: Link) -> (i64, i64) {
+        (self.rate_bucket(link.up_bps), self.rate_bucket(link.down_bps))
+    }
+
+    /// Analytic σ-width of the bucket holding `link`: rates of bucket
+    /// `i` span `[10^(i/b), 10^((i+1)/b))`, so their reciprocal spans an
+    /// interval of width `10^(-i/b)·(1 − 10^(-1/b))`; σ sums one such
+    /// interval per direction. Any two links sharing the bucket pair
+    /// differ in σ by at most this — the `Δσ` of the per-bucket cost
+    /// bound.
+    pub fn sigma_width(&self, link: Link) -> f64 {
+        let b = self.buckets_per_decade as f64;
+        let (i, j) = self.bucket_key(link);
+        let shrink = 1.0 - 10f64.powf(-1.0 / b);
+        shrink * (10f64.powf(-(i as f64) / b) + 10f64.powf(-(j as f64) / b))
+    }
+}
+
+/// A malformed plan request, rejected by [`FleetPlanner::try_plan`]
+/// before any planner state moves (counters, TTLs and caches are all
+/// untouched by a rejected batch). The panicking [`FleetPlanner::plan`]
+/// wraps this; service-facing callers route through the `try_` form so a
+/// misbehaving producer that bypassed the daemon's ingest validation is
+/// refused instead of crashing the epoch loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RequestError {
+    /// The request names a tier index the spec does not have.
+    UnknownTier { tier: usize },
+    /// The request's link has a non-finite or non-positive rate
+    /// ([`Link::is_valid`]); planning on it would poison the SoA
+    /// capacity refresh with NaN/∞ capacities.
+    InvalidLink {
+        device: usize,
+        up_bps: f64,
+        down_bps: f64,
+    },
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::UnknownTier { tier } => {
+                write!(f, "plan request for unknown tier {tier}")
+            }
+            RequestError::InvalidLink {
+                device,
+                up_bps,
+                down_bps,
+            } => write!(
+                f,
+                "rates must be positive and finite \
+                 (device {device} reported up {up_bps} B/s, down {down_bps} B/s)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
 
 /// Per-decision solver provenance.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -903,6 +1019,15 @@ pub struct FleetStats {
     /// counted here so one [`FleetStats`] carries the whole provenance
     /// story — see `partition::service`).
     pub degraded_decisions: u64,
+    /// Requests whose link was rewritten to a σ-bucket canonical
+    /// representative by the [`SigmaQuantizer`]
+    /// ([`FleetOptions::sigma_buckets_per_decade`] > 0). Each physical
+    /// rewrite is counted exactly once even when the batch flows through
+    /// stacked planners (service → joint → fleet): re-quantizing an
+    /// already-snapped batch is the identity. 0 whenever quantization is
+    /// off **or** the fleet is sub-resolution (no two links of a tier
+    /// share a bucket) — the counter-pinned bit-identity contract.
+    pub quantized_requests: u64,
 }
 
 impl FleetStats {
@@ -1186,6 +1311,7 @@ pub struct FleetPlanner {
     spec_deltas: u64,
     retired_decisions: u64,
     degraded_decisions: u64,
+    quantized_requests: u64,
 }
 
 impl FleetPlanner {
@@ -1287,6 +1413,7 @@ impl FleetPlanner {
             spec_deltas: 0,
             retired_decisions: 0,
             degraded_decisions: 0,
+            quantized_requests: 0,
         }
     }
 
@@ -1294,22 +1421,94 @@ impl FleetPlanner {
     /// (tier, link) pairs are refreshed + solved exactly once; everything
     /// else is served from the per-tier cache (bit-exact, the solve being
     /// deterministic). An empty batch is a no-op epoch.
+    ///
+    /// Panics on a malformed request (the historical contract); callers
+    /// that cannot afford a crashed epoch loop use [`FleetPlanner::try_plan`].
     pub fn plan(&mut self, requests: &[PlanRequest]) -> Vec<PlanDecision> {
+        match self.try_plan(requests) {
+            Ok(decisions) => decisions,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// [`FleetPlanner::plan`] with malformed requests refused instead of
+    /// panicked. Validation runs before any planner state moves: a
+    /// rejected batch leaves every counter, TTL and cache untouched, so a
+    /// producer that bypassed the daemon's ingest checks cannot skew an
+    /// epoch it never got.
+    pub fn try_plan(&mut self, requests: &[PlanRequest]) -> Result<Vec<PlanDecision>, RequestError> {
+        for r in requests {
+            if r.tier >= self.spec.num_tiers() {
+                return Err(RequestError::UnknownTier { tier: r.tier });
+            }
+            if !r.link.is_valid() {
+                return Err(RequestError::InvalidLink {
+                    device: r.device,
+                    up_bps: r.link.up_bps,
+                    down_bps: r.link.down_bps,
+                });
+            }
+        }
         self.plans += 1;
         self.requests += requests.len() as u64;
         self.tick_retired_ttls();
-        for r in requests {
-            assert!(
-                r.tier < self.spec.num_tiers(),
-                "plan request for unknown tier {}",
-                r.tier
-            );
-            assert!(
-                r.link.up_bps > 0.0 && r.link.down_bps > 0.0,
-                "rates must be positive"
-            );
-        }
+        Ok(match self.quantize_requests(requests) {
+            Some(snapped) => self.plan_inner(&snapped),
+            None => self.plan_inner(requests),
+        })
+    }
 
+    /// Snap a validated batch's links to their σ-bucket canonical
+    /// representatives ([`SigmaQuantizer`] docs), `None` when quantization
+    /// is off or nothing collapsed (the caller then plans the original
+    /// batch — preserving bit-identity, and letting stacked planners
+    /// re-quantize without double-counting). Bumps `quantized_requests`
+    /// once per rewritten request.
+    pub(crate) fn quantize_requests(
+        &mut self,
+        requests: &[PlanRequest],
+    ) -> Option<Vec<PlanRequest>> {
+        let q = SigmaQuantizer::new(self.options.sigma_buckets_per_decade)?;
+        // Pass 1: per (tier, bucket), the canonical member — minimum
+        // (up, down) bit pattern among the batch's members. Positive
+        // finite f64 bits order numerically, so this is the slowest
+        // member and is independent of request order.
+        let mut canonical: std::collections::HashMap<(usize, i64, i64), Link> =
+            std::collections::HashMap::new();
+        for r in requests {
+            let (i, j) = q.bucket_key(r.link);
+            canonical
+                .entry((r.tier, i, j))
+                .and_modify(|best| {
+                    let a = (r.link.up_bps.to_bits(), r.link.down_bps.to_bits());
+                    let b = (best.up_bps.to_bits(), best.down_bps.to_bits());
+                    if a < b {
+                        *best = r.link;
+                    }
+                })
+                .or_insert(r.link);
+        }
+        // Pass 2: rewrite non-canonical members. A batch where every link
+        // is already its bucket's canonical member (sub-resolution fleet,
+        // or an already-snapped batch) rewrites nothing and returns None.
+        let mut rewrites = 0u64;
+        let mut snapped = requests.to_vec();
+        for r in &mut snapped {
+            let (i, j) = q.bucket_key(r.link);
+            let rep = canonical[&(r.tier, i, j)];
+            if rep != r.link {
+                r.link = rep;
+                rewrites += 1;
+            }
+        }
+        if rewrites == 0 {
+            return None;
+        }
+        self.quantized_requests += rewrites;
+        Some(snapped)
+    }
+
+    fn plan_inner(&mut self, requests: &[PlanRequest]) -> Vec<PlanDecision> {
         // Single-request fast path: the per-epoch hot path of the one-tier
         // PartitionPlanner wrapper (and the coordinator's one-device
         // epochs). Skips the batch grouping structures so the warm decision
@@ -1634,10 +1833,7 @@ impl FleetPlanner {
     /// incremental per-epoch path.
     pub fn take_solve(&mut self, tier: usize, link: Link) -> Partition {
         assert!(tier < self.spec.num_tiers(), "unknown tier {tier}");
-        assert!(
-            link.up_bps > 0.0 && link.down_bps > 0.0,
-            "rates must be positive"
-        );
+        assert!(link.is_valid(), "rates must be positive and finite");
         self.plans += 1;
         self.requests += 1;
         let (solve_costs, expand) = tier_inputs(&self.reduction, &self.spec, tier);
@@ -1675,10 +1871,7 @@ impl FleetPlanner {
     /// hold an unreduced engine for probing (see `partition::joint`).
     pub(crate) fn priced_solve(&mut self, tier: usize, link: Link, lambda: f64) -> Partition {
         assert!(tier < self.spec.num_tiers(), "unknown tier {tier}");
-        assert!(
-            link.up_bps > 0.0 && link.down_bps > 0.0,
-            "rates must be positive"
-        );
+        assert!(link.is_valid(), "rates must be positive and finite");
         assert!(
             lambda.is_finite() && lambda > 0.0,
             "congestion price must be positive and finite"
@@ -1717,6 +1910,7 @@ impl FleetPlanner {
             spec_deltas: self.spec_deltas,
             retired_decisions: self.retired_decisions,
             degraded_decisions: self.degraded_decisions,
+            quantized_requests: self.quantized_requests,
             ..FleetStats::default()
         };
         for entry in &self.tiers {
@@ -1816,7 +2010,9 @@ mod tests {
     use crate::partition::general::general_partition;
     use crate::partition::PartitionPlanner;
     use crate::profiles::TrainCfg;
-    use crate::util::prop::{assert_cut_cost_equal, fading_walk, random_link};
+    use crate::util::prop::{
+        assert_cut_cost_equal, assert_cut_cost_within, fading_walk, random_link, zoo_matrix,
+    };
     use crate::util::rng::Rng;
 
     fn tier_profiles() -> [DeviceProfile; 4] {
@@ -2687,7 +2883,7 @@ mod tests {
             }])
             .pop()
             .unwrap();
-        assert!(d.delay.is_finite());
+        assert!(d.partition.delay.is_finite());
     }
 
     /// Retired and departed slots are rejected as migration endpoints:
@@ -2751,7 +2947,7 @@ mod tests {
         let a = natural.plan(&req).pop().unwrap();
         let b = forced.plan(&req).pop().unwrap();
         assert_eq!(a.partition, b.partition, "post-TTL fallbacks must agree");
-        assert_eq!(a.delay.to_bits(), b.delay.to_bits());
+        assert_eq!(a.partition.delay.to_bits(), b.partition.delay.to_bits());
 
         // Expiring a live (or out-of-range) tier is a no-op.
         forced.expire_retired(0);
@@ -2765,5 +2961,214 @@ mod tests {
             .pop()
             .unwrap();
         assert!(matches!(d.provenance, DecisionProvenance::Fresh));
+    }
+
+    /// The cut's Eq. (7) bandwidth mass `B`: for a fixed device set,
+    /// delay is affine in σ (`T(σ) = C + B·σ`), so two evaluations at
+    /// distinct σ recover the slope exactly. The quantization error bound
+    /// is `(B_served + B_opt)·Δσ` — see `SigmaQuantizer`.
+    fn bw_mass(costs: &CostGraph, device_set: &[bool]) -> f64 {
+        let (l1, l2) = (Link::symmetric(1e6), Link::symmetric(2e6));
+        let t1 = Problem::new(costs, l1).delay(device_set);
+        let t2 = Problem::new(costs, l2).delay(device_set);
+        (t1 - t2) / (l1.sigma() - l2.sigma())
+    }
+
+    /// Quantizer edge cases: rates exactly on a bucket boundary bucket
+    /// deterministically (whichever side float `log10` resolves to), the
+    /// grid index is monotone in the rate, and any two links sharing a
+    /// bucket pair differ in σ by at most the analytic width.
+    #[test]
+    fn quantizer_boundary_rates_bucket_deterministically() {
+        for b in [1u32, 2, 4, 10] {
+            let q = SigmaQuantizer::new(b).unwrap();
+            assert_eq!(q.buckets_per_decade(), b);
+            // Boundary and near-boundary rates: deterministic (equal on
+            // re-evaluation) and monotone across the sorted list. 1e5 and
+            // 1e6 sit exactly on decade grid lines for every b here.
+            let rates = [1e4, 9.999e4, 1e5, 1.0001e5, 1e6, 5e6, 1e7];
+            for w in rates.windows(2) {
+                assert!(q.rate_bucket(w[0]) <= q.rate_bucket(w[1]), "b={b}: not monotone");
+            }
+            for r in rates {
+                assert_eq!(q.rate_bucket(r), q.rate_bucket(r), "b={b}: not deterministic");
+            }
+        }
+        // Same bucket pair ⇒ σ gap within the analytic width (the Δσ of
+        // the per-bucket cost bound), across random link pairs.
+        let q = SigmaQuantizer::new(3).unwrap();
+        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0x51674);
+        for _ in 0..200 {
+            let (a, b) = (random_link(&mut rng), random_link(&mut rng));
+            if q.bucket_key(a) == q.bucket_key(b) {
+                let width = q.sigma_width(a);
+                assert!(
+                    (a.sigma() - b.sigma()).abs() <= width * (1.0 + 1e-12),
+                    "bucket {:?}: |Δσ| {} exceeds width {width}",
+                    q.bucket_key(a),
+                    (a.sigma() - b.sigma()).abs()
+                );
+            }
+        }
+    }
+
+    /// The counter-pinned sub-resolution contract: when no two links of a
+    /// tier share a bucket (buckets ≥ distinct links), canonical-member
+    /// quantization rewrites nothing, so quantization-on is bit-identical
+    /// to quantization-off — full decisions AND full `FleetStats`, with
+    /// `quantized_requests` pinned at 0.
+    #[test]
+    fn quantized_sub_resolution_fleet_is_bit_identical_to_unquantized() {
+        let spec = spec_for("googlenet", 1);
+        let mut quantized = FleetPlanner::with_options(
+            spec.clone(),
+            FleetOptions {
+                sigma_buckets_per_decade: 1000,
+                ..FleetOptions::default()
+            },
+        );
+        let mut plain = FleetPlanner::new(spec);
+        // Deterministic geometric ladder, ratio 1.1 per rung: far coarser
+        // than the 10^(1/1000) bucket ratio, so every link is alone in
+        // its bucket on any platform's log10.
+        for epoch in 0..3 {
+            let batch: Vec<PlanRequest> = (0..6)
+                .map(|d| PlanRequest {
+                    device: 0,
+                    tier: 0,
+                    link: Link {
+                        up_bps: 2e5 * 1.1f64.powi(d) * (1.0 + epoch as f64),
+                        down_bps: 8e5 * 1.1f64.powi(d) * (1.0 + epoch as f64),
+                    },
+                })
+                .collect();
+            let a = quantized.plan(&batch);
+            let b = plain.plan(&batch);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.partition.device_set, y.partition.device_set);
+                assert_eq!(x.partition.delay.to_bits(), y.partition.delay.to_bits());
+                assert_eq!(x.stats.refreshed, y.stats.refreshed);
+                assert_eq!(x.provenance, y.provenance);
+            }
+        }
+        assert_eq!(quantized.stats(), plain.stats(), "full stats must agree");
+        assert_eq!(quantized.stats().quantized_requests, 0);
+    }
+
+    /// `try_plan` refuses malformed requests with typed errors before any
+    /// planner state moves — the direct-call escape hatch around the
+    /// daemon's ingest validation is closed without crashing callers.
+    #[test]
+    fn try_plan_rejects_invalid_links_with_typed_errors() {
+        let mut fleet = FleetPlanner::new(spec_for("block-residual", 4));
+        let good = PlanRequest {
+            device: 0,
+            tier: 0,
+            link: Link::symmetric(5e5),
+        };
+        let _ = fleet.plan(&[good]);
+        let before = fleet.stats();
+
+        let bad_link = |link| PlanRequest {
+            device: 2,
+            tier: 0,
+            link,
+        };
+        for link in [
+            Link::symmetric(f64::NAN),
+            Link::symmetric(f64::INFINITY),
+            Link {
+                up_bps: 1e6,
+                down_bps: -3.0,
+            },
+            Link::symmetric(0.0),
+        ] {
+            assert!(
+                matches!(
+                    fleet.try_plan(&[good, bad_link(link)]),
+                    Err(RequestError::InvalidLink { device: 2, .. })
+                ),
+                "{link:?} must be refused"
+            );
+        }
+        assert!(matches!(
+            fleet.try_plan(&[PlanRequest { tier: 99, ..good }]),
+            Err(RequestError::UnknownTier { tier: 99 })
+        ));
+        assert_eq!(
+            fleet.stats(),
+            before,
+            "rejected batches must not move counters, TTLs or caches"
+        );
+        let d = fleet.try_plan(&[good]).unwrap().pop().unwrap();
+        assert_eq!(d.provenance, DecisionProvenance::Cached);
+    }
+
+    #[test]
+    #[should_panic(expected = "rates must be positive and finite")]
+    fn plan_panics_on_nan_rates() {
+        let mut fleet = FleetPlanner::new(spec_for("block-residual", 1));
+        let _ = fleet.plan(&[PlanRequest {
+            device: 0,
+            tier: 0,
+            link: Link {
+                up_bps: f64::NAN,
+                down_bps: 1e6,
+            },
+        }]);
+    }
+
+    /// The tentpole property: every quantized decision lands within the
+    /// analytic per-bucket bound of the unquantized optimum. For a fixed
+    /// cut, delay is affine in σ, so serving the bucket representative's
+    /// cut at the true link costs at most `(B_served + B_opt)·Δσ` with Δσ
+    /// bounded by the bucket's σ-width — checked via
+    /// `assert_cut_cost_within` across the zoo matrix, on clusters built
+    /// to collapse (5 links within one bucket ratio ⇒ ≤4 bucket pairs ⇒
+    /// at least one rewrite per cluster, any seed).
+    #[test]
+    fn quantized_decisions_stay_within_the_analytic_bucket_bound_across_zoo() {
+        zoo_matrix("quantized_bucket_bound", |case, rng| {
+            let q = SigmaQuantizer::new(2).unwrap();
+            let mut quantized = FleetPlanner::with_options(
+                FleetSpec::single(case.costs.clone()),
+                FleetOptions {
+                    sigma_buckets_per_decade: q.buckets_per_decade(),
+                    ..FleetOptions::default()
+                },
+            );
+            let mut reference = FleetPlanner::new(FleetSpec::single(case.costs.clone()));
+            for _ in 0..4 {
+                let base = random_link(rng);
+                let batch: Vec<PlanRequest> = (0..5)
+                    .map(|d| {
+                        let f = 1.0 - 0.02 * d as f64;
+                        PlanRequest {
+                            device: d,
+                            tier: 0,
+                            link: Link {
+                                up_bps: base.up_bps * f,
+                                down_bps: base.down_bps * f,
+                            },
+                        }
+                    })
+                    .collect();
+                let served = quantized.plan(&batch);
+                let want = reference.plan(&batch);
+                for (r, (s, w)) in batch.iter().zip(served.iter().zip(&want)) {
+                    let problem = Problem::new(&case.costs, r.link);
+                    let eps = (bw_mass(&case.costs, &s.partition.device_set)
+                        + bw_mass(&case.costs, &w.partition.device_set))
+                        * q.sigma_width(r.link);
+                    assert_cut_cost_within(&problem, &s.partition, &w.partition, eps);
+                }
+            }
+            assert!(
+                quantized.stats().quantized_requests > 0,
+                "{}/{}: the collapse-guaranteed clusters never rewrote a link",
+                case.model,
+                case.tier
+            );
+        });
     }
 }

@@ -120,7 +120,7 @@ impl JointOptions {
 /// per session beyond its dedicated time, a full share (1) at or below it,
 /// nothing for zero-server-work cuts. Non-increasing and continuous in
 /// `level`.
-fn required_shares(terms: &[(f64, f64, usize)], level: f64) -> f64 {
+pub(crate) fn required_shares(terms: &[(f64, f64, usize)], level: f64) -> f64 {
     terms
         .iter()
         .map(|&(a, w, n)| {
@@ -138,7 +138,7 @@ fn required_shares(terms: &[(f64, f64, usize)], level: f64) -> f64 {
 /// Minimal congestion level `T_c` whose share demand fits `capacity`
 /// (0 when dedicated shares already fit). Pure arithmetic bisection,
 /// converged to the ULP.
-fn congestion_level(terms: &[(f64, f64, usize)], capacity: f64) -> f64 {
+pub(crate) fn congestion_level(terms: &[(f64, f64, usize)], capacity: f64) -> f64 {
     if required_shares(terms, 0.0) <= capacity {
         return 0.0;
     }
@@ -248,29 +248,29 @@ pub fn oracle_fleet_makespan(problems: &[Problem<'_>], capacity: f64) -> f64 {
 
 /// Result of one [`min_share_ratio`] evaluation: the minimal share ratio
 /// and the `(A, W)` terms + device set of the cut achieving it.
-struct ProbeResult {
-    ratio: f64,
-    a: f64,
-    w: f64,
+pub(crate) struct ProbeResult {
+    pub(crate) ratio: f64,
+    pub(crate) a: f64,
+    pub(crate) w: f64,
     /// `None` = the λ=1 decision of the epoch's base pass.
-    cut: Option<Vec<bool>>,
+    pub(crate) cut: Option<Vec<bool>>,
 }
 
 /// One distinct (tier, link) of an epoch batch: its member request
 /// indices, the λ=1 (dedicated) optimum's terms, and the latest price
 /// probe's result.
-struct Group {
-    tier: usize,
-    link: Link,
+pub(crate) struct Group {
+    pub(crate) tier: usize,
+    pub(crate) link: Link,
     /// Request indices served by this group, in batch order.
-    members: Vec<usize>,
+    pub(crate) members: Vec<usize>,
     /// `(A, W)` of the dedicated-server (λ=1) optimal cut.
-    base: (f64, f64),
+    pub(crate) base: (f64, f64),
     /// `A` of the all-on-device cut — the zero-share fallback every
     /// target above it can always take.
-    device_only_a: f64,
+    pub(crate) device_only_a: f64,
     /// Latest [`min_share_ratio`] result.
-    probe: ProbeResult,
+    pub(crate) probe: ProbeResult,
 }
 
 /// `h_g(T)`: the minimal server-share ratio `W/(T − A)` over this group's
@@ -279,7 +279,7 @@ struct Group {
 /// module docs). Updates `g.probe` with the achieving cut and returns the
 /// ratio. Deterministic and group-local: the iterate sequence depends only
 /// on the group's own `(link, λ)` probes, never on other groups.
-fn min_share_ratio(
+pub(crate) fn min_share_ratio(
     fleet: &mut FleetPlanner,
     pin_inputs: bool,
     g: &mut Group,
@@ -469,6 +469,13 @@ impl JointPlanner {
             self.last_congestion = None;
             return decisions;
         }
+
+        // σ-quantization runs before any grouping key forms, so the base
+        // pass, the probe groups and the tier caches all see the snapped
+        // links; the re-quantization inside `FleetPlanner::plan` is then
+        // the identity (rewrites count exactly once).
+        let quantized = self.fleet.quantize_requests(requests);
+        let requests: &[PlanRequest] = quantized.as_deref().unwrap_or(requests);
 
         // λ=1 base pass: per-device dedicated optima. Also the epoch's
         // answer whenever the capacity covers a full share per session.
@@ -771,6 +778,17 @@ impl JointPlanner {
     /// planner's behalf (surfaced via [`FleetStats::degraded_decisions`]).
     pub(crate) fn note_degraded(&mut self, n: u64) {
         self.fleet.note_degraded(n);
+    }
+
+    /// Forward of [`FleetPlanner::quantize_requests`] for the service
+    /// layer, which must snap links *before* its budget walk compares
+    /// them against the tier caches (a post-walk snap would misclassify
+    /// bucket siblings as dirty).
+    pub(crate) fn quantize_requests(
+        &mut self,
+        requests: &[PlanRequest],
+    ) -> Option<Vec<PlanRequest>> {
+        self.fleet.quantize_requests(requests)
     }
 
     /// The switches this planner was built with.

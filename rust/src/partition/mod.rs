@@ -34,6 +34,14 @@
 //!   per-device Dinkelbach price probes — each probe a warm incremental
 //!   re-solve. Pinned against a brute-force cut-combination oracle;
 //!   infinite capacity degenerates bit-identically to [`FleetPlanner`].
+//! * [`sharded`] — million-device scale (PR 8): [`ShardedFleetPlanner`]
+//!   partitions the tiers across worker shards (each a complete fleet
+//!   engine owning its SoA slices, warm flows and caches), sweeps one
+//!   plan per shard — serial or rayon behind `parallel` — and mirrors
+//!   [`JointPlanner`]'s makespan bisection for shared-capacity coupling.
+//!   Pinned bit-identical to the flat engine (quantization off, full
+//!   [`FleetStats`] equality) and cost-within-eps under σ-quantization
+//!   ([`fleet::SigmaQuantizer`], `FleetOptions::sigma_buckets_per_decade`).
 //! * [`service`] — the churn-tolerant planning service (PR 6):
 //!   [`PlannerService`] wraps [`JointPlanner`] behind a link-report inbox
 //!   and a simulated-clock epoch loop, patches the live fleet with
@@ -50,6 +58,7 @@ pub mod fleet;
 pub mod joint;
 pub mod planner;
 pub mod service;
+pub mod sharded;
 pub mod blocks;
 pub mod blockwise;
 pub mod baselines;
@@ -57,9 +66,10 @@ pub mod baselines;
 pub use blockwise::blockwise_partition;
 pub use fleet::{
     DecisionProvenance, DecisionStats, DegradedReason, FleetOptions, FleetPlanner, FleetSpec,
-    FleetStats, PlanDecision, PlanRequest, SpecDelta, SpecError,
+    FleetStats, PlanDecision, PlanRequest, RequestError, SigmaQuantizer, SpecDelta, SpecError,
 };
-pub use service::{ClockError, PlannerService, ServiceOptions};
+pub use service::{ClockError, PlannerService, ReportError, ServiceOptions};
+pub use sharded::ShardedFleetPlanner;
 pub use general::general_partition;
 pub use joint::{fleet_makespan_for_cuts, oracle_fleet_makespan, JointOptions, JointPlanner};
 pub use planner::PartitionPlanner;

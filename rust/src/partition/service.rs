@@ -76,6 +76,36 @@ impl std::fmt::Display for ClockError {
 
 impl std::error::Error for ClockError {}
 
+/// A malformed link report, refused by [`PlannerService::try_report`]
+/// with the inbox untouched — the same contract the daemon's `Coalescer`
+/// already gives these inputs (`daemon::ingest::IngestError`), now
+/// uniform across both entry points: a bad report through the direct
+/// service path is counted and dropped, not a crashed epoch loop. The
+/// panicking [`PlannerService::report`] wrapper remains for test callers
+/// that treat a bad report as a bug.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReportError {
+    /// A non-finite or non-positive rate ([`Link::is_valid`]).
+    NonPositiveRate { device: usize },
+    /// The report names a device slot outside the fleet.
+    UnknownDevice { device: usize },
+}
+
+impl std::fmt::Display for ReportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReportError::NonPositiveRate { device } => {
+                write!(f, "rates must be positive and finite (device {device})")
+            }
+            ReportError::UnknownDevice { device } => {
+                write!(f, "report for unknown device slot {device}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReportError {}
+
 /// Construction-time policy of the service layer. The default is the
 /// transparent configuration — no staleness bound, no budget — under
 /// which [`PlannerService::plan_epoch`] is a pass-through batch plan.
@@ -138,6 +168,7 @@ pub struct PlannerService {
     now: u64,
     degraded_stale: u64,
     degraded_budget: u64,
+    refused_reports: u64,
 }
 
 impl PlannerService {
@@ -153,28 +184,53 @@ impl PlannerService {
             now: 0,
             degraded_stale: 0,
             degraded_budget: 0,
+            refused_reports: 0,
         }
     }
 
     /// Record a device's link report at caller tick `tick`. Newer reports
     /// replace older ones; an out-of-order (older-tick) report is dropped
-    /// — the inbox keeps the freshest fact only.
-    pub fn report(&mut self, device: usize, link: Link, tick: u64) {
-        assert!(
-            link.up_bps > 0.0 && link.down_bps > 0.0,
-            "rates must be positive"
-        );
-        assert!(
-            device < self.reports.len(),
-            "report for unknown device slot {device}"
-        );
-        if let Some((_, have)) = self.reports[device] {
-            if tick < have {
-                return;
+    /// — the inbox keeps the freshest fact only. A malformed report (bad
+    /// rates, unknown slot) is refused with a typed [`ReportError`],
+    /// counted in [`PlannerService::refused_reports`], and leaves the
+    /// inbox untouched.
+    ///
+    /// An equal-tick re-delivery may refresh the stored link but does
+    /// **not** clear a forced-stale lease ([`PlannerService::
+    /// expire_report`]): only a strictly newer tick carries the new
+    /// information recovery requires — a replayed report must not
+    /// silently un-degrade a lease-expired device.
+    pub fn try_report(&mut self, device: usize, link: Link, tick: u64) -> Result<(), ReportError> {
+        if !link.is_valid() {
+            self.refused_reports += 1;
+            return Err(ReportError::NonPositiveRate { device });
+        }
+        if device >= self.reports.len() {
+            self.refused_reports += 1;
+            return Err(ReportError::UnknownDevice { device });
+        }
+        match self.reports[device] {
+            Some((_, have)) if tick < have => {} // out-of-order: drop
+            Some((_, have)) => {
+                self.reports[device] = Some((link, tick));
+                if tick > have {
+                    self.forced_stale[device] = false;
+                }
+            }
+            None => {
+                self.reports[device] = Some((link, tick));
+                self.forced_stale[device] = false;
             }
         }
-        self.reports[device] = Some((link, tick));
-        self.forced_stale[device] = false;
+        Ok(())
+    }
+
+    /// Panicking convenience over [`PlannerService::try_report`] for
+    /// callers that treat a malformed report as a bug.
+    pub fn report(&mut self, device: usize, link: Link, tick: u64) {
+        if let Err(e) = self.try_report(device, link, tick) {
+            panic!("{e}");
+        }
     }
 
     /// Force a device's report stale *now*, ahead of the staleness bound:
@@ -282,6 +338,32 @@ impl PlannerService {
                 }
             };
             lanes.push(lane);
+        }
+
+        // σ-quantization precedes the deadline walk: the walk compares
+        // links against the tier caches, so bucket siblings must already
+        // sit on their canonical representative or they would be
+        // misclassified as dirty. The planner's own re-quantization of
+        // the admitted batch below is then the identity (each rewrite
+        // counts once).
+        let snap_reqs: Vec<PlanRequest> = lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(d, lane)| match lane {
+                Lane::Plan { link, .. } => Some(PlanRequest {
+                    device: d,
+                    tier: self.planner.spec().tier_of(d),
+                    link: *link,
+                }),
+                _ => None,
+            })
+            .collect();
+        if let Some(snapped) = self.planner.quantize_requests(&snap_reqs) {
+            for r in &snapped {
+                if let Lane::Plan { link, .. } = &mut lanes[r.device] {
+                    *link = r.link;
+                }
+            }
         }
 
         // Deadline walk: charge one budget unit per dirty (tier, link)
@@ -429,6 +511,13 @@ impl PlannerService {
     /// Decisions degraded for budget exhaustion so far.
     pub fn degraded_budget(&self) -> u64 {
         self.degraded_budget
+    }
+
+    /// Malformed reports refused by [`PlannerService::try_report`] so far
+    /// (surfaced as `fastsplit_report_refusals_total` in the daemon's
+    /// metrics).
+    pub fn refused_reports(&self) -> u64 {
+        self.refused_reports
     }
 
     /// The last planner decision cached for a device, if any.
@@ -945,5 +1034,103 @@ mod tests {
 
         // Out-of-range expiry is a no-op, not a panic.
         service.expire_report(99);
+    }
+
+    /// The NaN-rate round-trip regression: a malformed report through the
+    /// service path is refused with a typed error and counted — matching
+    /// the daemon's `IngestError` contract — and the epoch loop keeps
+    /// planning from the good reports as if the bad ones never arrived.
+    #[test]
+    fn report_refusals_are_typed_and_counted_not_panics() {
+        let spec = spec_for("googlenet", 4);
+        let mut service = PlannerService::new(spec, ServiceOptions::default());
+        let good = Link::symmetric(5e5);
+        for d in 0..4 {
+            service.report(d, good, 0);
+        }
+        assert_eq!(
+            service.try_report(2, Link::symmetric(f64::NAN), 1),
+            Err(ReportError::NonPositiveRate { device: 2 })
+        );
+        assert_eq!(
+            service.try_report(
+                2,
+                Link {
+                    up_bps: 1e6,
+                    down_bps: f64::INFINITY,
+                },
+                1
+            ),
+            Err(ReportError::NonPositiveRate { device: 2 })
+        );
+        assert_eq!(
+            service.try_report(2, Link::symmetric(0.0), 1),
+            Err(ReportError::NonPositiveRate { device: 2 })
+        );
+        assert_eq!(
+            service.try_report(99, good, 1),
+            Err(ReportError::UnknownDevice { device: 99 })
+        );
+        assert_eq!(service.refused_reports(), 4);
+        assert_eq!(
+            ReportError::NonPositiveRate { device: 2 }.to_string(),
+            "rates must be positive and finite (device 2)"
+        );
+        assert_eq!(
+            ReportError::UnknownDevice { device: 99 }.to_string(),
+            "report for unknown device slot 99"
+        );
+
+        // The refused reports left the inbox untouched: the epoch still
+        // plans all four devices from their good tick-0 reports.
+        let decisions = service.plan_epoch(1).unwrap();
+        assert_eq!(decisions.len(), 4);
+        assert!(decisions
+            .iter()
+            .all(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_))));
+    }
+
+    #[test]
+    #[should_panic(expected = "rates must be positive")]
+    fn report_panicking_wrapper_keeps_the_historical_message() {
+        let spec = spec_for("googlenet", 4);
+        let mut service = PlannerService::new(spec, ServiceOptions::default());
+        service.report(0, Link::symmetric(f64::NAN), 0);
+    }
+
+    /// The lease-expiry-then-replay regression: an equal-tick re-delivery
+    /// carries no newer information, so it must not clear the
+    /// forced-stale lease — only a strictly newer report recovers the
+    /// device.
+    #[test]
+    fn equal_tick_replay_does_not_clear_the_lease() {
+        let spec = spec_for("googlenet", 4);
+        let mut service = PlannerService::new(spec, ServiceOptions::default());
+        let link = Link::symmetric(5e5);
+        for d in 0..4 {
+            service.report(d, link, 0);
+        }
+        let e0 = service.plan_epoch(0).unwrap();
+        assert_eq!(e0.len(), 4);
+
+        service.expire_report(2);
+        // Replay the tick-0 report verbatim (e.g. a duplicated delivery):
+        // the lease must hold — the epoch still degrades device 2.
+        service.report(2, link, 0);
+        let e1 = service.plan_epoch(1).unwrap();
+        let leased = e1.iter().find(|d| d.device == 2).unwrap();
+        assert_eq!(
+            leased.provenance,
+            DecisionProvenance::Degraded(DegradedReason::StaleLink),
+            "an equal-tick replay must not silently un-degrade the lease"
+        );
+        assert_eq!(service.degraded_stale(), 1);
+
+        // A strictly newer report clears the lease.
+        service.report(2, link, 2);
+        let e2 = service.plan_epoch(2).unwrap();
+        assert!(e2
+            .iter()
+            .all(|d| !matches!(d.provenance, DecisionProvenance::Degraded(_))));
     }
 }

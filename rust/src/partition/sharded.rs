@@ -1,0 +1,882 @@
+//! Sharded epoch planning for million-device fleets (PR 8).
+//!
+//! A [`super::fleet::FleetPlanner`] already collapses a million devices
+//! to `tiers × distinct links` solve groups, and σ-quantization
+//! ([`super::fleet::SigmaQuantizer`]) collapses the links to buckets —
+//! but one engine still sweeps every tier's solve in a single job list.
+//! [`ShardedFleetPlanner`] partitions the *tiers* across worker shards:
+//! shard `s` of `K` owns every global tier `t` with `t % K == s` as its
+//! local tier `t / K`, and each shard is a complete [`FleetPlanner`]
+//! owning its tiers' SoA slices, warm flows and decision caches. An
+//! epoch routes each request to its tier's shard, runs one `plan` per
+//! shard — serially, or through rayon's `par_iter_mut` behind the
+//! `parallel` cargo feature, the same `TierJob` discipline the fleet
+//! engine uses internally — and fans the per-shard answers back into
+//! request order.
+//!
+//! Two contracts pin the decomposition:
+//!
+//! * **Bit-identity (quantization off).** Tiers are solver-independent
+//!   (each `TierState` owns all its mutable state), and the modulo
+//!   layout keeps every tier's whole history inside one shard, so a
+//!   sharded epoch performs exactly the flat engine's refreshes and
+//!   solves and serves bit-identical decisions — including full
+//!   [`FleetStats`] equality (facade counters report epochs and
+//!   requests; solver counters sum over shards). Churn preserves the
+//!   layout: a new global tier `T` joins shard `T % K` at local index
+//!   `T / K`, which is precisely that shard's next slot.
+//! * **Shared-capacity coupling.** Under a finite server capacity the
+//!   shards cannot price the server independently — the congestion level
+//!   couples every group. The facade therefore mirrors
+//!   [`super::joint::JointPlanner`]'s makespan bisection exactly: the
+//!   λ=1 base pass runs sharded, then the group probes walk the same
+//!   canonical `(tier, link-bits)` order through each group's owning
+//!   shard (each shard holding its own lazily built unreduced λ-probe
+//!   sibling). The probe sequence per tier is identical to the
+//!   unsharded planner's, so the coupled decisions agree with
+//!   [`super::joint::JointPlanner`] as well.
+//!
+//! With quantization **on**, shard-local snapping equals global
+//! snapping — a σ-bucket never spans tiers, and a tier never spans
+//! shards — so the bucket grid (and the `quantized_requests` account)
+//! is deterministic across shard counts, pinned by the tests below.
+
+use super::fleet::{
+    DecisionProvenance, DecisionStats, FleetOptions, FleetPlanner, FleetSpec, FleetStats,
+    PlanDecision, PlanRequest, SpecDelta, SpecError,
+};
+use super::joint::{congestion_level, min_share_ratio, Group, JointOptions, ProbeResult};
+use super::types::{Partition, Problem};
+use crate::profiles::CostGraph;
+
+/// One joint-coupled solve group with its shard routing: `g.tier` holds
+/// the owning shard's **local** tier index (what its probes need);
+/// `global_tier` keeps the facade's canonical ordering and decisions.
+struct SGroup {
+    shard: usize,
+    global_tier: usize,
+    g: Group,
+}
+
+/// The sharded planning facade — see the module docs for the layout and
+/// the pinned contracts. Construction clamps the shard count to the tier
+/// count (an empty shard could never own work).
+pub struct ShardedFleetPlanner {
+    /// The global facade spec: request validation + device routing. Tier
+    /// and device churn is mirrored here and forwarded tier-wise to the
+    /// owning shard (shard specs hold no devices — routing is global).
+    spec: FleetSpec,
+    options: JointOptions,
+    shards: Vec<FleetPlanner>,
+    /// Per-shard unreduced λ-probe siblings, lazily built on the first
+    /// congested epoch (mirrors [`super::joint::JointPlanner`]'s single
+    /// probe engine, shard-wise).
+    probes: Vec<Option<FleetPlanner>>,
+    plans: u64,
+    requests: u64,
+    spec_deltas: u64,
+    price_iterations: u64,
+    joint_resolves: u64,
+    last_makespan: Option<f64>,
+    last_congestion: Option<f64>,
+}
+
+/// One shard's slice of an epoch: its planner, its routed sub-batch, and
+/// the decisions it produced — the unit the sweep runs serially or hands
+/// to rayon (mirrors the fleet engine's `TierJob`).
+struct ShardJob<'a> {
+    planner: &'a mut FleetPlanner,
+    batch: &'a [PlanRequest],
+    out: Vec<PlanDecision>,
+}
+
+impl ShardedFleetPlanner {
+    /// Build for a fleet, a worker shard count (clamped to the tier
+    /// count) and explicit joint options.
+    pub fn new(spec: FleetSpec, num_shards: usize, options: JointOptions) -> ShardedFleetPlanner {
+        assert!(
+            options.server_capacity > 0.0,
+            "server capacity must be positive"
+        );
+        assert!(num_shards >= 1, "at least one worker shard is required");
+        let k = num_shards.min(spec.num_tiers());
+        let shards: Vec<FleetPlanner> = (0..k)
+            .map(|s| {
+                let tiers: Vec<(&'static str, CostGraph)> = (s..spec.num_tiers())
+                    .step_by(k)
+                    .map(|t| (spec.tier_name(t), spec.tier_costs(t).clone()))
+                    .collect();
+                FleetPlanner::with_options(FleetSpec::new(tiers, Vec::new()), options.fleet)
+            })
+            .collect();
+        let probes = (0..k).map(|_| None).collect();
+        ShardedFleetPlanner {
+            spec,
+            options,
+            shards,
+            probes,
+            plans: 0,
+            requests: 0,
+            spec_deltas: 0,
+            price_iterations: 0,
+            joint_resolves: 0,
+            last_makespan: None,
+            last_congestion: None,
+        }
+    }
+
+    /// Worker shards actually in use (post-clamp).
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Serve one epoch: one decision per request, in request order —
+    /// the [`FleetPlanner::plan`] contract, swept shard-parallel. Every
+    /// shard plans every epoch (an empty sub-batch is a no-op plan), so
+    /// retire-TTL clocks advance exactly as on the flat engine.
+    pub fn plan(&mut self, requests: &[PlanRequest]) -> Vec<PlanDecision> {
+        let k = self.shards.len();
+        for r in requests {
+            assert!(
+                r.tier < self.spec.num_tiers(),
+                "plan request for unknown tier {}",
+                r.tier
+            );
+            assert!(r.link.is_valid(), "rates must be positive and finite");
+        }
+        self.plans += 1;
+        self.requests += requests.len() as u64;
+
+        // Route each request to its tier's owning shard, tier index
+        // rewritten local. Relative order within a shard follows request
+        // order, so the fan-in below can pull per-shard answers in order.
+        let mut sub: Vec<Vec<PlanRequest>> = vec![Vec::new(); k];
+        for r in requests {
+            sub[r.tier % k].push(PlanRequest {
+                device: r.device,
+                tier: r.tier / k,
+                link: r.link,
+            });
+        }
+
+        let capacity = self.options.server_capacity;
+        if capacity.is_infinite() {
+            // Dedicated server per device: the sharded sweep alone is the
+            // epoch (each shard quantizes its own sub-batch — shard-local
+            // snapping equals global snapping, see the module docs).
+            let outs = self.sweep(&sub);
+            let decisions = self.fan_in(requests, outs);
+            self.last_makespan = decisions
+                .iter()
+                .map(|d| d.partition.delay)
+                .fold(None, |m: Option<f64>, d| Some(m.map_or(d, |m| m.max(d))));
+            self.last_congestion = None;
+            return decisions;
+        }
+
+        // Finite capacity: σ-quantization must precede the joint grouping
+        // (the keys below must see canonical links), so snap each shard's
+        // sub-batch now; the sweep's inner re-quantization is then the
+        // identity.
+        for (s, batch) in sub.iter_mut().enumerate() {
+            if let Some(snapped) = self.shards[s].quantize_requests(batch) {
+                *batch = snapped;
+            }
+        }
+        // Rebuild the epoch's (possibly snapped) requests in facade
+        // order: the grouping and the decisions must use the links the
+        // shards actually planned.
+        let snapped_requests: Vec<PlanRequest> = {
+            let mut iters: Vec<_> = sub.iter().map(|b| b.iter()).collect();
+            requests
+                .iter()
+                .map(|r| {
+                    let q = iters[r.tier % k].next().expect("routed above");
+                    PlanRequest {
+                        device: r.device,
+                        tier: r.tier,
+                        link: q.link,
+                    }
+                })
+                .collect()
+        };
+        let requests: &[PlanRequest] = &snapped_requests;
+
+        // λ=1 base pass, sharded.
+        let outs = self.sweep(&sub);
+        let base = self.fan_in(requests, outs);
+        if requests.is_empty() {
+            self.last_makespan = None;
+            self.last_congestion = None;
+            return base;
+        }
+
+        // Joint grouping per distinct (tier, link), exactly as
+        // `JointPlanner::plan` — retired tiers never join the coupling.
+        let pin_inputs = self.options.fleet.pin_inputs;
+        let mut groups: Vec<SGroup> = Vec::new();
+        let mut group_of: std::collections::HashMap<(usize, u64, u64), usize> =
+            std::collections::HashMap::new();
+        for (i, r) in requests.iter().enumerate() {
+            if self.spec.tier_retired(r.tier) {
+                continue;
+            }
+            let key = (r.tier, r.link.up_bps.to_bits(), r.link.down_bps.to_bits());
+            let g = *group_of.entry(key).or_insert_with(|| {
+                let costs = self.spec.tier_costs(r.tier);
+                let problem = Problem::with_pin(costs, r.link, pin_inputs);
+                let (a, w) = problem.delay_terms(&base[i].partition.device_set);
+                let all_on_device = vec![true; costs.len()];
+                let device_only_a = problem.delay_terms(&all_on_device).0;
+                groups.push(SGroup {
+                    shard: r.tier % k,
+                    global_tier: r.tier,
+                    g: Group {
+                        tier: r.tier / k,
+                        link: r.link,
+                        members: Vec::new(),
+                        base: (a, w),
+                        device_only_a,
+                        probe: ProbeResult {
+                            ratio: f64::INFINITY,
+                            a: 0.0,
+                            w: 0.0,
+                            cut: None,
+                        },
+                    },
+                });
+                groups.len() - 1
+            });
+            groups[g].g.members.push(i);
+        }
+        // The canonical probe order of the unsharded planner: global
+        // (tier, link-bits). Probes are group-local, so walking the
+        // canonical order through per-shard engines reproduces the
+        // unsharded iterate sequences tier for tier.
+        groups.sort_by_key(|sg| {
+            (
+                sg.global_tier,
+                sg.g.link.up_bps.to_bits(),
+                sg.g.link.down_bps.to_bits(),
+            )
+        });
+
+        // Uncongested epoch: the dedicated decisions stand.
+        let dedicated_shares: f64 = groups
+            .iter()
+            .filter(|sg| sg.g.base.1 > 0.0)
+            .map(|sg| sg.g.members.len() as f64)
+            .sum();
+        if dedicated_shares <= capacity {
+            self.last_makespan = Some(
+                base.iter()
+                    .map(|d| d.partition.delay)
+                    .fold(0.0, f64::max),
+            );
+            self.last_congestion = None;
+            return base;
+        }
+
+        // Congested epoch ahead: each reduced shard gets its unreduced
+        // λ-probe sibling (built once, shard-wise — see `JointPlanner`).
+        for s in 0..self.shards.len() {
+            if self.probes[s].is_none() && self.shards[s].is_reduced() {
+                self.probes[s] = Some(FleetPlanner::with_options(
+                    self.shards[s].spec().clone(),
+                    FleetOptions {
+                        block_reduction: false,
+                        ..self.options.fleet
+                    },
+                ));
+            }
+        }
+
+        // Makespan bisection — brackets and loop verbatim from
+        // `JointPlanner::plan`.
+        let t_lo = groups
+            .iter()
+            .map(|sg| sg.g.base.0 + sg.g.base.1)
+            .fold(0.0, f64::max);
+        let t_hi = groups
+            .iter()
+            .map(|sg| sg.g.device_only_a)
+            .fold(t_lo, f64::max);
+        let mut lo = t_lo;
+        let mut hi = t_hi;
+        let mut probes_at_hi = false;
+        if self.probe_feasible(&mut groups, t_lo) {
+            hi = t_lo;
+            probes_at_hi = true;
+        } else {
+            for _ in 0..120 {
+                let mid = 0.5 * (lo + hi);
+                if mid <= lo || mid >= hi {
+                    break;
+                }
+                if self.probe_feasible(&mut groups, mid) {
+                    hi = mid;
+                    probes_at_hi = true;
+                } else {
+                    lo = mid;
+                    probes_at_hi = false;
+                }
+            }
+        }
+        if !probes_at_hi {
+            let still_feasible = self.probe_feasible(&mut groups, hi);
+            debug_assert!(still_feasible, "bisection kept `hi` feasible throughout");
+            let _ = still_feasible;
+        }
+
+        // Fix cuts, set shares at the minimal congestion level, report
+        // load-dependent delays (the group-local selection trade of
+        // `JointPlanner::plan` applies unchanged).
+        let terms: Vec<(f64, f64, usize)> = groups
+            .iter()
+            .map(|sg| (sg.g.probe.a, sg.g.probe.w, sg.g.members.len()))
+            .collect();
+        let t_c = congestion_level(&terms, capacity);
+        let dedicated = terms.iter().map(|&(a, w, _)| a + w).fold(0.0, f64::max);
+        self.last_makespan = Some(dedicated.max(t_c));
+        self.last_congestion = Some(t_c);
+
+        let mut decisions: Vec<Option<PlanDecision>> = (0..requests.len()).map(|_| None).collect();
+        for sg in &groups {
+            let (a, w) = (sg.g.probe.a, sg.g.probe.w);
+            let device_set = sg
+                .g
+                .probe
+                .cut
+                .clone()
+                .unwrap_or_else(|| base[sg.g.members[0]].partition.device_set.clone());
+            let delay = if w <= 0.0 { a } else { (a + w).max(t_c) };
+            for (j, &i) in sg.g.members.iter().enumerate() {
+                let partition = Partition {
+                    device_set: device_set.clone(),
+                    delay,
+                };
+                decisions[i] = Some(PlanDecision {
+                    device: requests[i].device,
+                    tier: requests[i].tier,
+                    cut_layer: partition.cut_layer(),
+                    partition,
+                    stats: DecisionStats { refreshed: j == 0 },
+                    provenance: if j == 0 {
+                        DecisionProvenance::Fresh
+                    } else {
+                        DecisionProvenance::Cached
+                    },
+                });
+            }
+        }
+        decisions
+            .into_iter()
+            .enumerate()
+            .map(|(i, d)| d.unwrap_or_else(|| base[i].clone()))
+            .collect()
+    }
+
+    /// One epoch sweep: every shard plans its sub-batch — all shards,
+    /// every epoch, empty batches included (retire-TTL parity with the
+    /// flat engine). Serial, or rayon `par_iter_mut` behind the
+    /// `parallel` feature; shards are fully independent, so decisions and
+    /// counters are bit-identical across the two modes.
+    fn sweep(&mut self, sub: &[Vec<PlanRequest>]) -> Vec<Vec<PlanDecision>> {
+        let mut jobs: Vec<ShardJob> = self
+            .shards
+            .iter_mut()
+            .zip(sub)
+            .map(|(planner, batch)| ShardJob {
+                planner,
+                batch,
+                out: Vec::new(),
+            })
+            .collect();
+        let run = |job: &mut ShardJob| {
+            job.out = job.planner.plan(job.batch);
+        };
+        #[cfg(not(feature = "parallel"))]
+        jobs.iter_mut().for_each(run);
+        #[cfg(feature = "parallel")]
+        {
+            use rayon::prelude::*;
+            jobs.par_iter_mut().for_each(run);
+        }
+        jobs.into_iter().map(|j| j.out).collect()
+    }
+
+    /// Fan the per-shard decision streams back into facade request
+    /// order, tier indices rewritten global. Routing preserved relative
+    /// order, so each stream is consumed front to back.
+    fn fan_in(&self, requests: &[PlanRequest], outs: Vec<Vec<PlanDecision>>) -> Vec<PlanDecision> {
+        let k = self.shards.len();
+        let mut iters: Vec<_> = outs.into_iter().map(|o| o.into_iter()).collect();
+        requests
+            .iter()
+            .map(|r| {
+                let mut d = iters[r.tier % k]
+                    .next()
+                    .expect("one decision per routed request");
+                debug_assert_eq!(d.device, r.device);
+                d.tier = r.tier;
+                d
+            })
+            .collect()
+    }
+
+    /// One feasibility probe of the makespan bisection, each group
+    /// routed to its owning shard's probe engine (or the shard itself
+    /// when unreduced) — the sharded mirror of
+    /// `JointPlanner::probe_feasible`.
+    fn probe_feasible(&mut self, groups: &mut [SGroup], t: f64) -> bool {
+        self.price_iterations += 1;
+        let pin_inputs = self.options.fleet.pin_inputs;
+        let capacity = self.options.server_capacity;
+        let ShardedFleetPlanner {
+            shards,
+            probes,
+            joint_resolves,
+            ..
+        } = &mut *self;
+        let mut demand = 0.0;
+        for sg in groups.iter_mut() {
+            let engine = match &mut probes[sg.shard] {
+                Some(p) => p,
+                None => &mut shards[sg.shard],
+            };
+            let ratio = min_share_ratio(engine, pin_inputs, &mut sg.g, t, joint_resolves);
+            demand += sg.g.members.len() as f64 * ratio;
+        }
+        demand <= capacity
+    }
+
+    /// Aggregate counters across the facade and every shard: epoch and
+    /// request counts (and `spec_deltas`) are facade-level — one sharded
+    /// epoch is one plan, exactly as on the flat engine — solver and
+    /// provenance counters sum over shards (plus λ-probe siblings'
+    /// solver traffic), and the DAG-shape fields report the shared model
+    /// template (identical across shards by construction).
+    pub fn stats(&self) -> FleetStats {
+        let t0 = self.shards[0].stats();
+        let mut s = FleetStats {
+            plans: self.plans,
+            requests: self.requests,
+            spec_deltas: self.spec_deltas,
+            full_vertices: t0.full_vertices,
+            full_edges: t0.full_edges,
+            reduced_vertices: t0.reduced_vertices,
+            reduced_edges: t0.reduced_edges,
+            blocks_detected: t0.blocks_detected,
+            blocks_abstracted: t0.blocks_abstracted,
+            ..FleetStats::default()
+        };
+        for shard in &self.shards {
+            let ss = shard.stats();
+            s.refreshes += ss.refreshes;
+            s.flow_solves += ss.flow_solves;
+            s.linear_scans += ss.linear_scans;
+            s.incremental_solves += ss.incremental_solves;
+            s.repair_pushes += ss.repair_pushes;
+            s.augment_rounds += ss.augment_rounds;
+            s.fallback_cold_solves += ss.fallback_cold_solves;
+            s.retired_decisions += ss.retired_decisions;
+            s.degraded_decisions += ss.degraded_decisions;
+            s.quantized_requests += ss.quantized_requests;
+        }
+        for p in self.probes.iter().flatten() {
+            let ps = p.stats();
+            s.refreshes += ps.refreshes;
+            s.flow_solves += ps.flow_solves;
+            s.linear_scans += ps.linear_scans;
+            s.incremental_solves += ps.incremental_solves;
+            s.repair_pushes += ps.repair_pushes;
+            s.augment_rounds += ps.augment_rounds;
+            s.fallback_cold_solves += ps.fallback_cold_solves;
+        }
+        s.price_iterations = self.price_iterations;
+        s.joint_resolves = self.joint_resolves;
+        s
+    }
+
+    /// Apply one churn event: validated against the facade spec, tier
+    /// deltas forwarded to the owning shard (indices rewritten local) and
+    /// its λ-probe sibling, device deltas mirrored on the facade spec
+    /// only (shard specs hold no devices — routing is global). A
+    /// malformed delta is rejected with a typed [`SpecError`] before
+    /// anything moves.
+    pub fn try_apply_delta(&mut self, delta: &SpecDelta) -> Result<(), SpecError> {
+        self.spec.validate(delta)?;
+        let k = self.shards.len();
+        match delta {
+            SpecDelta::AddTier { name, costs } => {
+                // The new global tier T joins shard T % K at local index
+                // T / K — which is exactly that shard's next slot, so the
+                // modulo layout survives churn (see the module docs).
+                let t = self.spec.num_tiers();
+                let fwd = SpecDelta::AddTier {
+                    name,
+                    costs: costs.clone(),
+                };
+                self.shards[t % k]
+                    .try_apply(&fwd)
+                    .expect("validated against the facade spec");
+                if let Some(p) = &mut self.probes[t % k] {
+                    p.try_apply(&fwd).expect("probe sibling shares the shard spec");
+                }
+            }
+            SpecDelta::RetireTier { tier } => {
+                let fwd = SpecDelta::RetireTier { tier: tier / k };
+                self.shards[tier % k]
+                    .try_apply(&fwd)
+                    .expect("validated against the facade spec");
+                if let Some(p) = &mut self.probes[tier % k] {
+                    p.try_apply(&fwd).expect("probe sibling shares the shard spec");
+                }
+            }
+            // Device membership is facade routing only.
+            SpecDelta::AddDevice { .. }
+            | SpecDelta::RemoveDevice { .. }
+            | SpecDelta::MigrateDevice { .. } => {}
+        }
+        self.spec
+            .try_apply(delta)
+            .expect("validated above against the same spec");
+        self.spec_deltas += 1;
+        Ok(())
+    }
+
+    /// Panicking convenience over [`ShardedFleetPlanner::try_apply_delta`]
+    /// for callers that treat a malformed delta as a bug.
+    pub fn apply_delta(&mut self, delta: &SpecDelta) {
+        if let Err(e) = self.try_apply_delta(delta) {
+            panic!("malformed churn event: {e}");
+        }
+    }
+
+    /// Immediately expire a retired tier's archived decision on its
+    /// owning shard (and λ-probe sibling). A no-op on live or
+    /// out-of-range tiers, as on the flat engine.
+    pub fn expire_retired(&mut self, tier: usize) {
+        let k = self.shards.len();
+        if tier >= self.spec.num_tiers() {
+            return;
+        }
+        self.shards[tier % k].expire_retired(tier / k);
+        if let Some(p) = &mut self.probes[tier % k] {
+            p.expire_retired(tier / k);
+        }
+    }
+
+    /// Update the shared server capacity for subsequent epochs (see
+    /// [`super::joint::JointPlanner::set_server_capacity`]).
+    pub fn set_server_capacity(&mut self, server_capacity: f64) {
+        assert!(server_capacity > 0.0, "server capacity must be positive");
+        self.options.server_capacity = server_capacity;
+    }
+
+    /// Fleet makespan of the latest non-empty epoch.
+    pub fn makespan(&self) -> Option<f64> {
+        self.last_makespan
+    }
+
+    /// Congestion level `T_c` of the latest epoch, `None` when every
+    /// session got a dedicated share.
+    pub fn congestion(&self) -> Option<f64> {
+        self.last_congestion
+    }
+
+    /// The switches this planner was built with.
+    pub fn options(&self) -> JointOptions {
+        self.options
+    }
+
+    /// The global fleet this facade plans for.
+    pub fn spec(&self) -> &FleetSpec {
+        &self.spec
+    }
+
+    /// Drop every shard's cached λ=1 decisions (see
+    /// [`FleetPlanner::invalidate`]).
+    pub fn invalidate(&mut self) {
+        for shard in &mut self.shards {
+            shard.invalidate();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::partition::joint::JointPlanner;
+    use crate::partition::types::Link;
+    use crate::profiles::{DeviceProfile, TrainCfg};
+    use crate::util::prop::{assert_cut_cost_within, assert_fleet_cost_equal, random_link};
+    use crate::util::rng::Rng;
+
+    fn spec_for(model: &str, devices: usize) -> FleetSpec {
+        let m = models::by_name(model).unwrap();
+        FleetSpec::from_fleet(&DeviceProfile::fleet_of(devices), |d| {
+            CostGraph::build(&m, d, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+        })
+    }
+
+    fn assert_bit_identical(a: &[PlanDecision], b: &[PlanDecision], context: &str) {
+        assert_eq!(a.len(), b.len(), "{context}: decision counts differ");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.device, y.device, "{context}");
+            assert_eq!(x.tier, y.tier, "{context}");
+            assert_eq!(x.cut_layer, y.cut_layer, "{context}");
+            assert_eq!(x.partition.device_set, y.partition.device_set, "{context}");
+            assert_eq!(
+                x.partition.delay.to_bits(),
+                y.partition.delay.to_bits(),
+                "{context}"
+            );
+            assert_eq!(x.stats.refreshed, y.stats.refreshed, "{context}");
+            assert_eq!(x.provenance, y.provenance, "{context}");
+        }
+    }
+
+    /// Per-epoch random request batch over the active devices, shared by
+    /// both planners under comparison.
+    fn random_batch(spec: &FleetSpec, rng: &mut Rng) -> Vec<PlanRequest> {
+        (0..spec.num_devices())
+            .filter_map(|d| {
+                spec.tier_of_opt(d).map(|tier| PlanRequest {
+                    device: d,
+                    tier,
+                    link: random_link(rng),
+                })
+            })
+            .collect()
+    }
+
+    /// The tentpole acceptance pin: with quantization off, sharded
+    /// planning is bit-identical to the flat engine across shard counts
+    /// — decisions AND the full `FleetStats` struct — through random
+    /// epochs, tier churn and retired-tier serving.
+    #[test]
+    fn sharded_plan_is_bit_identical_to_unsharded_with_full_stats_equality() {
+        let base_seed = crate::util::rng::test_seed();
+        for k in [1usize, 2, 3, 8] {
+            let spec = spec_for("googlenet", 12);
+            let mut flat = FleetPlanner::new(spec.clone());
+            let mut sharded = ShardedFleetPlanner::new(spec, k, JointOptions::default());
+            assert_eq!(sharded.num_shards(), k.min(4), "shards clamp to tiers");
+            let mut rng = Rng::new(base_seed ^ ((k as u64) << 8));
+            for epoch in 0..3 {
+                let reqs = random_batch(flat.spec(), &mut rng);
+                let a = sharded.plan(&reqs);
+                let b = flat.plan(&reqs);
+                assert_bit_identical(&a, &b, &format!("k={k} epoch {epoch}"));
+            }
+
+            // Tier churn: a tier joins mid-run (the modulo layout must
+            // absorb it), a tier retires, and a late request for the
+            // retired tier is served from the archive on both planners.
+            let extra = CostGraph::build(
+                &models::by_name("googlenet").unwrap(),
+                &DeviceProfile::jetson_tx2(),
+                &DeviceProfile::rtx_a6000(),
+                &TrainCfg::default(),
+            );
+            let add = SpecDelta::AddTier {
+                name: "extra-tier",
+                costs: extra,
+            };
+            sharded.apply_delta(&add);
+            flat.apply(&add);
+            let join = SpecDelta::AddDevice {
+                device: 12,
+                tier: 4,
+            };
+            sharded.apply_delta(&join);
+            flat.apply(&join);
+            for epoch in 0..2 {
+                let reqs = random_batch(flat.spec(), &mut rng);
+                let a = sharded.plan(&reqs);
+                let b = flat.plan(&reqs);
+                assert_bit_identical(&a, &b, &format!("k={k} post-churn epoch {epoch}"));
+            }
+            let retire = SpecDelta::RetireTier { tier: 1 };
+            sharded.apply_delta(&retire);
+            flat.apply(&retire);
+            let mut reqs = random_batch(flat.spec(), &mut rng);
+            reqs.push(PlanRequest {
+                device: 1,
+                tier: 1,
+                link: Link::symmetric(6e5),
+            });
+            let a = sharded.plan(&reqs);
+            let b = flat.plan(&reqs);
+            assert_bit_identical(&a, &b, &format!("k={k} retired epoch"));
+            assert_eq!(
+                a.last().unwrap().provenance,
+                DecisionProvenance::Retired,
+                "k={k}: the late request must serve from the archive"
+            );
+
+            assert_eq!(
+                sharded.stats(),
+                flat.stats(),
+                "k={k}: full FleetStats equality"
+            );
+        }
+    }
+
+    /// Shared-capacity coupling: under a finite server capacity the
+    /// sharded facade's makespan bisection must agree with
+    /// [`JointPlanner`] — same makespan, same congestion level, same
+    /// per-decision load-dependent delays — across a capacity ladder
+    /// from heavily congested to nearly dedicated.
+    #[test]
+    fn sharded_joint_capacity_matches_the_joint_planner() {
+        let base_seed = crate::util::rng::test_seed();
+        for capacity in [0.5, 1.0, 2.0, 6.0] {
+            let spec = spec_for("googlenet", 8);
+            let options = JointOptions::with_capacity(capacity);
+            let mut joint = JointPlanner::new(spec.clone(), options);
+            let mut sharded = ShardedFleetPlanner::new(spec, 2, options);
+            let mut rng = Rng::new(base_seed ^ capacity.to_bits());
+            for epoch in 0..3 {
+                let reqs = random_batch(joint.spec(), &mut rng);
+                let a = sharded.plan(&reqs);
+                let b = joint.plan(&reqs);
+                let context = format!("capacity {capacity} epoch {epoch}");
+                assert_eq!(a.len(), b.len(), "{context}");
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.device, y.device, "{context}");
+                    assert_eq!(x.tier, y.tier, "{context}");
+                    let (dx, dy) = (x.partition.delay, y.partition.delay);
+                    assert!(
+                        (dx - dy).abs() <= 1e-9 * (1.0 + dx.abs().max(dy.abs())),
+                        "{context}: delays diverge ({dx} vs {dy})"
+                    );
+                }
+                match (sharded.makespan(), joint.makespan()) {
+                    (Some(ms), Some(mj)) => assert_fleet_cost_equal(ms, mj, &context),
+                    (ms, mj) => panic!("{context}: makespans {ms:?} vs {mj:?}"),
+                }
+                assert_eq!(
+                    sharded.congestion().is_some(),
+                    joint.congestion().is_some(),
+                    "{context}: congestion classification diverged"
+                );
+            }
+        }
+    }
+
+    /// Bucket-grid determinism across shard counts: with quantization on,
+    /// every shard count serves bit-identical decisions and accounts the
+    /// same `quantized_requests` — a σ-bucket never spans tiers and a
+    /// tier never spans shards, so shard-local snapping IS the global
+    /// snap (seeded under `PALLAS_TEST_SEED`).
+    #[test]
+    fn sharded_quantized_grid_is_deterministic_across_shard_counts() {
+        let base_seed = crate::util::rng::test_seed();
+        let options = JointOptions {
+            fleet: FleetOptions {
+                sigma_buckets_per_decade: 4,
+                ..FleetOptions::default()
+            },
+            ..JointOptions::default()
+        };
+        let spec = spec_for("googlenet", 8);
+        let mut planners: Vec<ShardedFleetPlanner> = [1usize, 2, 3]
+            .iter()
+            .map(|&k| ShardedFleetPlanner::new(spec.clone(), k, options))
+            .collect();
+        let mut rng = Rng::new(base_seed ^ 0x58A2D);
+        for epoch in 0..4 {
+            // Clusters of nearby links (factors within one bucket ratio)
+            // so the grid actually collapses members.
+            let base_links: Vec<Link> = (0..spec.num_tiers()).map(|_| random_link(&mut rng)).collect();
+            let reqs: Vec<PlanRequest> = (0..spec.num_devices())
+                .map(|d| {
+                    let tier = spec.tier_of(d);
+                    let f = 1.0 - 0.01 * (d / spec.num_tiers()) as f64;
+                    PlanRequest {
+                        device: d,
+                        tier,
+                        link: Link {
+                            up_bps: base_links[tier].up_bps * f,
+                            down_bps: base_links[tier].down_bps * f,
+                        },
+                    }
+                })
+                .collect();
+            let decisions: Vec<Vec<PlanDecision>> =
+                planners.iter_mut().map(|p| p.plan(&reqs)).collect();
+            for d in &decisions[1..] {
+                assert_bit_identical(d, &decisions[0], &format!("epoch {epoch}"));
+            }
+        }
+        let counts: Vec<u64> = planners.iter().map(|p| p.stats().quantized_requests).collect();
+        assert!(
+            counts.iter().all(|&c| c == counts[0]),
+            "quantized_requests diverged across shard counts: {counts:?}"
+        );
+        assert!(counts[0] > 0, "the clusters must actually collapse");
+    }
+
+    /// Sharded + quantized planning stays within the analytic per-bucket
+    /// bound of the flat unquantized optimum (the tentpole's cost-within-
+    /// eps lane): delay is affine in σ for a fixed cut, so the served
+    /// cost differs from the optimum by at most
+    /// `(B_served + B_opt)·σ-width` (see `SigmaQuantizer`).
+    #[test]
+    fn sharded_quantized_decisions_stay_within_the_bucket_bound() {
+        let base_seed = crate::util::rng::test_seed();
+        let spec = spec_for("googlenet", 10);
+        let buckets = 2u32;
+        let q = crate::partition::fleet::SigmaQuantizer::new(buckets).unwrap();
+        let mut sharded = ShardedFleetPlanner::new(
+            spec.clone(),
+            3,
+            JointOptions {
+                fleet: FleetOptions {
+                    sigma_buckets_per_decade: buckets,
+                    ..FleetOptions::default()
+                },
+                ..JointOptions::default()
+            },
+        );
+        let mut flat = FleetPlanner::new(spec.clone());
+        let bw_mass = |tier: usize, device_set: &[bool]| {
+            let costs = spec.tier_costs(tier);
+            let (l1, l2) = (Link::symmetric(1e6), Link::symmetric(2e6));
+            let t1 = Problem::new(costs, l1).delay(device_set);
+            let t2 = Problem::new(costs, l2).delay(device_set);
+            (t1 - t2) / (l1.sigma() - l2.sigma())
+        };
+        let mut rng = Rng::new(base_seed ^ 0xB0D4D);
+        for _ in 0..4 {
+            let base_links: Vec<Link> = (0..spec.num_tiers()).map(|_| random_link(&mut rng)).collect();
+            let reqs: Vec<PlanRequest> = (0..spec.num_devices())
+                .map(|d| {
+                    let tier = spec.tier_of(d);
+                    let f = 1.0 - 0.02 * (d / spec.num_tiers()) as f64;
+                    PlanRequest {
+                        device: d,
+                        tier,
+                        link: Link {
+                            up_bps: base_links[tier].up_bps * f,
+                            down_bps: base_links[tier].down_bps * f,
+                        },
+                    }
+                })
+                .collect();
+            let served = sharded.plan(&reqs);
+            let want = flat.plan(&reqs);
+            for (r, (s, w)) in reqs.iter().zip(served.iter().zip(&want)) {
+                let problem = Problem::new(spec.tier_costs(r.tier), r.link);
+                let eps = (bw_mass(r.tier, &s.partition.device_set)
+                    + bw_mass(r.tier, &w.partition.device_set))
+                    * q.sigma_width(r.link);
+                assert_cut_cost_within(&problem, &s.partition, &w.partition, eps);
+            }
+        }
+        assert!(sharded.stats().quantized_requests > 0);
+    }
+}

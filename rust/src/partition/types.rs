@@ -30,6 +30,20 @@ impl Link {
     pub fn sigma(&self) -> f64 {
         1.0 / self.up_bps + 1.0 / self.down_bps
     }
+
+    /// Whether both rates are finite and strictly positive — the
+    /// admission predicate every planning entry point (problem
+    /// construction, `FleetPlanner` requests, service reports, daemon
+    /// ingest) shares. `+∞` is rejected alongside NaN and non-positive
+    /// rates: an infinite rate contributes a silent 0 to σ and would
+    /// poison the SoA capacity refresh without ever tripping a
+    /// `rate > 0` check.
+    pub fn is_valid(&self) -> bool {
+        self.up_bps.is_finite()
+            && self.down_bps.is_finite()
+            && self.up_bps > 0.0
+            && self.down_bps > 0.0
+    }
 }
 
 /// A partitioning problem instance: cost graph + link state.
@@ -58,7 +72,7 @@ pub struct Partition {
 
 impl<'a> Problem<'a> {
     pub fn new(costs: &'a CostGraph, link: Link) -> Problem<'a> {
-        assert!(link.up_bps > 0.0 && link.down_bps > 0.0, "rates must be positive");
+        assert!(link.is_valid(), "rates must be positive and finite");
         Problem {
             costs,
             link,
@@ -381,6 +395,34 @@ mod tests {
     fn rejects_zero_rate() {
         let cg = lenet_problem();
         let _ = Problem::new(&cg, Link::symmetric(0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "rates must be positive and finite")]
+    fn rejects_nan_rate() {
+        let cg = lenet_problem();
+        let _ = Problem::new(&cg, Link::symmetric(f64::NAN));
+    }
+
+    /// `Link::is_valid` is the shared admission predicate of every
+    /// planning entry point: finite AND strictly positive on both rates.
+    /// `+∞` in particular must be rejected — it passes a bare `rate > 0`
+    /// check while contributing a silent 0 to σ.
+    #[test]
+    fn link_validity_rejects_non_finite_and_non_positive_rates() {
+        assert!(Link::symmetric(1e6).is_valid());
+        assert!(Link { up_bps: 1e4, down_bps: 1e9 }.is_valid());
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert!(!Link::symmetric(bad).is_valid(), "accepted rate {bad}");
+            assert!(
+                !Link { up_bps: 1e6, down_bps: bad }.is_valid(),
+                "accepted down rate {bad}"
+            );
+            assert!(
+                !Link { up_bps: bad, down_bps: 1e6 }.is_valid(),
+                "accepted up rate {bad}"
+            );
+        }
     }
 
     #[test]

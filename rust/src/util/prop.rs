@@ -157,6 +157,24 @@ pub const CUT_COST_ULPS: f64 = 65536.0;
 /// delay's provenance (reduced vs full evaluation) cannot skew the
 /// comparison.
 pub fn assert_cut_cost_equal(problem: &Problem, a: &Partition, b: &Partition) {
+    assert_cut_cost_within(problem, a, b, 0.0);
+}
+
+/// Generalization of [`assert_cut_cost_equal`] with an explicit additive
+/// slack `eps` (in seconds) on top of the ULP-scale rounding allowance:
+/// both cuts must be feasible and their re-evaluated Eq. (7) delays must
+/// satisfy `|T(a) − T(b)| ≤ eps + tol`. `eps = 0` is exactly the old
+/// ULP-equality harness (and [`assert_cut_cost_equal`] delegates here);
+/// positive `eps` is the σ-quantization harness — a quantized decision is
+/// only cost-equal to the unquantized one up to the analytic per-bucket
+/// bound `(B_a + B_b)·Δσ` (delay is affine in σ for a fixed cut; see
+/// PERF.md "PR 8" for the derivation), so the caller computes that bound
+/// and passes it as `eps`.
+pub fn assert_cut_cost_within(problem: &Problem, a: &Partition, b: &Partition, eps: f64) {
+    assert!(
+        eps >= 0.0 && eps.is_finite(),
+        "cost slack must be finite and non-negative, got {eps}"
+    );
     assert!(
         problem.is_feasible(&a.device_set),
         "first cut is infeasible: {:?}",
@@ -171,8 +189,8 @@ pub fn assert_cut_cost_equal(problem: &Problem, a: &Partition, b: &Partition) {
     let tb = problem.delay(&b.device_set);
     let tol = CUT_COST_ULPS * f64::EPSILON * (1.0 + ta.abs().max(tb.abs()));
     assert!(
-        (ta - tb).abs() <= tol,
-        "cut costs differ: {ta} vs {tb} (|delta| = {:.3e}, tol = {tol:.3e}, \
+        (ta - tb).abs() <= eps + tol,
+        "cut costs differ: {ta} vs {tb} (|delta| = {:.3e}, eps = {eps:.3e}, tol = {tol:.3e}, \
          device layers {} vs {})",
         (ta - tb).abs(),
         a.device_layers(),
@@ -580,6 +598,40 @@ mod tests {
             assert_cut_cost_equal(&p, &all, &one);
         }));
         assert!(gap.is_err(), "distinct cut costs must not compare equal");
+    }
+
+    /// `assert_cut_cost_within` is the ULP harness plus an additive slack:
+    /// eps = 0 matches `assert_cut_cost_equal` exactly, a gap inside eps
+    /// passes, a gap outside it still fails, and negative / non-finite
+    /// slacks are rejected outright.
+    #[test]
+    fn cut_cost_within_honors_the_additive_slack() {
+        let m = models::by_name("lenet5").unwrap();
+        let costs = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        let p = Problem::new(&costs, Link::symmetric(1e6));
+        let all = p.device_only();
+        let mut prefix = vec![false; costs.len()];
+        prefix[0] = true;
+        let one = p.partition(prefix);
+        let gap = (p.delay(&all.device_set) - p.delay(&one.device_set)).abs();
+        assert!(gap > 0.0, "test needs two cuts with distinct costs");
+        // Slack covering the gap passes; half the gap does not.
+        assert_cut_cost_within(&p, &all, &one, gap * 1.01);
+        let tight = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            assert_cut_cost_within(&p, &all, &one, gap * 0.5);
+        }));
+        assert!(tight.is_err(), "half-gap slack must still fail");
+        for bad in [-1.0, f64::NAN, f64::INFINITY] {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                assert_cut_cost_within(&p, &all, &all, bad);
+            }));
+            assert!(r.is_err(), "slack {bad} must be rejected");
+        }
     }
 
     #[test]

@@ -53,6 +53,18 @@ if [[ $fast -eq 0 ]]; then
   PALLAS_TEST_SEED=1 cargo test -q --release daemon
   PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release daemon
 
+  # Scale lane (PR 8): the σ-quantizer suite (bucket-bound property over
+  # the seeded zoo, boundary/sub-resolution edge cases) and the sharded
+  # planner pins (bit-identical to the flat engine with quantization off,
+  # shard-count-independent bucket grids with it on) — both under the
+  # same two fixed seeds and both feature configs (serial here, parallel
+  # below).
+  echo "==> quantizer + sharded suites under two fixed seeds"
+  PALLAS_TEST_SEED=1 cargo test -q --release quantiz
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release quantiz
+  PALLAS_TEST_SEED=1 cargo test -q --release sharded
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release sharded
+
   # Feature matrix: the rayon parallel dirty-tier sweep must compile and
   # stay bit-identical to the serial loop (the determinism test runs under
   # both configurations).
@@ -67,13 +79,19 @@ if [[ $fast -eq 0 ]]; then
   PALLAS_TEST_SEED=1 cargo test -q --release --features parallel daemon
   PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel daemon
 
+  echo "==> quantizer + sharded suites under two fixed seeds (features parallel)"
+  PALLAS_TEST_SEED=1 cargo test -q --release --features parallel quantiz
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel quantiz
+  PALLAS_TEST_SEED=1 cargo test -q --release --features parallel sharded
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel sharded
+
   # Bench smoke: compile + run the bench binaries so they cannot bit-rot.
   # Output files are disabled (-) so committed BENCH_*.json results are
   # only ever replaced by deliberate full runs.
   echo "==> cargo bench --bench replan -- --smoke"
   FASTSPLIT_REPLAN_OUT=- FASTSPLIT_REPLAN4_OUT=- cargo bench --bench replan -- --smoke
   echo "==> cargo bench --bench fleet -- --smoke"
-  FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- cargo bench --bench fleet -- --smoke
+  FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- FASTSPLIT_FLEET_SCALE_OUT=- cargo bench --bench fleet -- --smoke
   echo "==> cargo bench --bench joint -- --smoke"
   FASTSPLIT_JOINT_OUT=- cargo bench --bench joint -- --smoke
   echo "==> cargo bench --bench churn -- --smoke"
@@ -82,10 +100,15 @@ if [[ $fast -eq 0 ]]; then
   FASTSPLIT_DAEMON_OUT=- cargo bench --bench daemon -- --smoke
   echo "==> bench smoke with --features parallel"
   FASTSPLIT_REPLAN_OUT=- FASTSPLIT_REPLAN4_OUT=- cargo bench --bench replan --features parallel -- --smoke
-  FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- cargo bench --bench fleet --features parallel -- --smoke
+  FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- FASTSPLIT_FLEET_SCALE_OUT=- cargo bench --bench fleet --features parallel -- --smoke
   FASTSPLIT_JOINT_OUT=- cargo bench --bench joint --features parallel -- --smoke
   FASTSPLIT_CHURN_OUT=- cargo bench --bench churn --features parallel -- --smoke
   FASTSPLIT_DAEMON_OUT=- cargo bench --bench daemon --features parallel -- --smoke
 fi
+
+# Committed bench artifacts must stay parseable and carry the `measured`
+# flag (placeholders are fine; silent corruption is not).
+echo "==> bench JSON artifacts"
+python3 scripts/check_bench_json.py
 
 echo "OK"

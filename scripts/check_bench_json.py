@@ -1,0 +1,45 @@
+#!/usr/bin/env python3
+"""Sanity-check the committed bench artifacts.
+
+Every BENCH_PR*.json at the repo root must parse as JSON and carry a
+boolean `measured` flag (False marks a placeholder awaiting a toolchain
+run — fine; a file that does not parse, or silently dropped the flag, is
+not). Run from anywhere; CI runs it after the bench smokes.
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def main() -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_PR*.json")))
+    if not paths:
+        print("check_bench_json: no BENCH_PR*.json files found", file=sys.stderr)
+        return 1
+    failures = 0
+    for path in paths:
+        name = os.path.basename(path)
+        try:
+            with open(path, encoding="utf-8") as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"check_bench_json: {name}: does not parse: {e}", file=sys.stderr)
+            failures += 1
+            continue
+        if not isinstance(doc, dict) or not isinstance(doc.get("measured"), bool):
+            print(
+                f"check_bench_json: {name}: missing boolean 'measured' flag",
+                file=sys.stderr,
+            )
+            failures += 1
+            continue
+        state = "measured" if doc["measured"] else "placeholder"
+        print(f"check_bench_json: {name}: ok ({state})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
