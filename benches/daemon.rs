@@ -79,7 +79,7 @@ fn main() {
             for i in 0..INGEST_BATCH {
                 let d = i % DEVICES;
                 rates[d] = (rates[d] * rng.range(0.9, 1.1)).clamp(1e4, 1e9);
-                sender.send(DaemonEvent::Report {
+                let _ = sender.send(DaemonEvent::Report {
                     device: d,
                     link: Link {
                         up_bps: rates[d],
@@ -147,7 +147,7 @@ fn main() {
                 for d in 0..DEVICES {
                     if active[d] {
                         if rng.chance(p) && active.iter().filter(|&&a| a).count() > 1 {
-                            sender.send(DaemonEvent::Delta(SpecDelta::RemoveDevice {
+                            let _ = sender.send(DaemonEvent::Delta(SpecDelta::RemoveDevice {
                                 device: d,
                             }));
                             active[d] = false;
@@ -155,7 +155,7 @@ fn main() {
                         }
                     } else if rng.chance(0.5) {
                         let tier = rng.index(4);
-                        sender.send(DaemonEvent::Delta(SpecDelta::AddDevice {
+                        let _ = sender.send(DaemonEvent::Delta(SpecDelta::AddDevice {
                             device: d,
                             tier,
                         }));
@@ -170,7 +170,7 @@ fn main() {
                     }
                     rates[d] = (rates[d] * rng.range(0.9, 1.1)).clamp(1e4, 1e9);
                     if !bootstrapped[d] || !rng.chance(p) {
-                        sender.send(DaemonEvent::Report {
+                        let _ = sender.send(DaemonEvent::Report {
                             device: d,
                             link: Link {
                                 up_bps: rates[d],
@@ -223,11 +223,165 @@ fn main() {
             daemon.shutdown();
         }
     }
+
+    // PR 9: journal overhead + crash-recovery latency. The overhead pair
+    // runs an identical reports-only tick loop with durability off and
+    // on (default snapshot cadence, so rotation cost is amortized in);
+    // the recovery case replays a 32-tick journaled run left dirty by a
+    // simulated crash.
+    let mut rows9: Vec<Json> = Vec::new();
+    for model in models {
+        for journal in [false, true] {
+            let dir = std::env::temp_dir().join(format!(
+                "fastsplit-bench-journal-{}-{model}-{}",
+                std::process::id(),
+                if journal { "on" } else { "off" },
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let clock = SimClock::new(0);
+            let daemon = PlannerDaemon::spawn(
+                spec(model),
+                DaemonConfig {
+                    replan_every: 1,
+                    lease_ttl: Some(4),
+                    journal_dir: journal.then(|| dir.clone()),
+                    ..DaemonConfig::default()
+                },
+                Arc::new(clock.clone()),
+            );
+            let sender = daemon.sender();
+            let mut rng = Rng::new(0xDAE7 ^ 9);
+            let mut rates: Vec<f64> = (0..DEVICES).map(|_| rng.range(1e5, 1e6)).collect();
+            let mut tick: u64 = 0;
+            let label = if journal { "on" } else { "off" };
+            let before = b.results().len();
+            b.bench(&format!("daemon/journal-{label}/{model}"), || {
+                tick += 1;
+                clock.set(tick);
+                for d in 0..DEVICES {
+                    rates[d] = (rates[d] * rng.range(0.9, 1.1)).clamp(1e4, 1e9);
+                    let _ = sender.send(DaemonEvent::Report {
+                        device: d,
+                        link: Link {
+                            up_bps: rates[d],
+                            down_bps: rates[d] * 2.0,
+                        },
+                        tick,
+                    });
+                }
+                daemon.pump()
+            });
+            if b.results().len() > before {
+                let mean = b.results()[before].summary.mean;
+                let ticks_per_sec = 1.0 / mean.max(1e-12);
+                println!("daemon/journal-{label}/{model}: {ticks_per_sec:.0} ticks/s");
+                rows9.push(Json::obj(vec![
+                    ("case", Json::str("tick")),
+                    ("model", Json::str(*model)),
+                    ("journal", Json::Bool(journal)),
+                    ("devices", Json::num(DEVICES as f64)),
+                    ("mean_tick_s", Json::num(mean)),
+                    ("ticks_per_sec", Json::num(ticks_per_sec)),
+                ]));
+            }
+            daemon.shutdown();
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    for model in models {
+        const RECOVERY_TICKS: u64 = 32;
+        let dir = std::env::temp_dir().join(format!(
+            "fastsplit-bench-recover-{}-{model}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let clock = SimClock::new(0);
+        let daemon = PlannerDaemon::spawn(
+            spec(model),
+            DaemonConfig {
+                replan_every: 1,
+                lease_ttl: Some(4),
+                journal_dir: Some(dir.clone()),
+                snapshot_every: u64::MAX, // the whole run replays from one file
+                ..DaemonConfig::default()
+            },
+            Arc::new(clock.clone()),
+        );
+        let sender = daemon.sender();
+        let mut rng = Rng::new(0xDAE7 ^ 10);
+        let mut rates: Vec<f64> = (0..DEVICES).map(|_| rng.range(1e5, 1e6)).collect();
+        for tick in 1..=RECOVERY_TICKS {
+            clock.set(tick);
+            for d in 0..DEVICES {
+                rates[d] = (rates[d] * rng.range(0.9, 1.1)).clamp(1e4, 1e9);
+                let _ = sender.send(DaemonEvent::Report {
+                    device: d,
+                    link: Link {
+                        up_bps: rates[d],
+                        down_bps: rates[d] * 2.0,
+                    },
+                    tick,
+                });
+            }
+            daemon.pump();
+        }
+        daemon.abandon(); // a crash: no drain frame, recovery replays everything
+        let mut replayed: u64 = 0;
+        let before = b.results().len();
+        b.bench(&format!("daemon/recover/{model}"), || {
+            let (handle, report) =
+                PlannerDaemon::recover(&dir, Arc::new(SimClock::new(RECOVERY_TICKS)))
+                    .expect("the journal recovers");
+            replayed = report.replayed_frames;
+            // abandon() writes nothing back, keeping the journal
+            // byte-stable across iterations.
+            handle.abandon();
+            replayed
+        });
+        if b.results().len() > before {
+            let mean = b.results()[before].summary.mean;
+            println!(
+                "daemon/recover/{model}: {} per recovery ({replayed} frames replayed)",
+                fastsplit::util::fmt_secs(mean),
+            );
+            rows9.push(Json::obj(vec![
+                ("case", Json::str("recover")),
+                ("model", Json::str(*model)),
+                ("devices", Json::num(DEVICES as f64)),
+                ("ticks", Json::num(RECOVERY_TICKS as f64)),
+                ("replayed_frames", Json::num(replayed as f64)),
+                ("mean_recover_s", Json::num(mean)),
+            ]));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
     b.finish();
 
     if smoke {
-        println!("smoke mode: skipping BENCH_PR7.json");
+        println!("smoke mode: skipping BENCH_PR7.json / BENCH_PR9.json");
         return;
+    }
+    let out9 =
+        std::env::var("FASTSPLIT_DAEMON_PR9_OUT").unwrap_or_else(|_| "BENCH_PR9.json".into());
+    if out9 != "-" && !rows9.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("daemon-journal")),
+            ("measured", Json::Bool(true)),
+            (
+                "note",
+                Json::str(
+                    "PR 9 durability costs over an 8-device fleet: tick = reports-only daemon \
+                     ticks/sec with the write-ahead journal off vs on (default snapshot \
+                     cadence, rotation amortized in); recover = full crash recovery (read + \
+                     snapshot restore + 32-tick tail replay) from a dirty journal",
+                ),
+            ),
+            ("results", Json::Arr(rows9)),
+        ]);
+        match std::fs::write(&out9, doc.pretty() + "\n") {
+            Ok(()) => println!("wrote {out9}"),
+            Err(e) => eprintln!("could not write {out9}: {e}"),
+        }
     }
     let out = std::env::var("FASTSPLIT_DAEMON_OUT").unwrap_or_else(|_| "BENCH_PR7.json".into());
     if out != "-" && !rows.is_empty() {

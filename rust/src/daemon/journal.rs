@@ -1,0 +1,936 @@
+//! The daemon's write-ahead event journal (PR 9).
+//!
+//! Durability is strictly opt-in: with `DaemonConfig::journal_dir` set,
+//! the worker records every accepted *and* rejected [`DaemonEvent`],
+//! every timer-wheel advance, every explicit plan request and the final
+//! drain as length-prefixed, CRC-32-checksummed frames — each written
+//! *before* the coalescer or the wheel applies it. Every journal file
+//! opens with a version-and-fingerprint header and a full
+//! [`DaemonSnapshot`] frame, so recovery is always `snapshot + tail
+//! replay` and never needs out-of-band configuration.
+//!
+//! File format (`wal-{seq}.log`, all integers little-endian):
+//!
+//! ```text
+//! header : magic u32 ("FSJL") | version u32 | fleet fingerprint u64 | seq u64
+//! frame  : payload len u32 | crc32(payload) u32 | payload
+//! payload: kind u8 (0 snapshot, 1 event, 2 advance, 3 plan-now, 4 drain) | body
+//! ```
+//!
+//! Recovery policy, pinned by the tests below and documented in
+//! RESILIENCE.md ("Durability contracts"):
+//!
+//! * **Torn tails truncate.** The first bad frame (short, oversized,
+//!   CRC mismatch, undecodable, or a mid-file snapshot) ends the replay;
+//!   it is counted, the file is truncated back to the last good frame,
+//!   and the daemon resumes appending there. Never a panic.
+//! * **Foreign journals refuse typed.** A cross-version header or (under
+//!   [`super::PlannerDaemon::recover_expecting`]) a fleet fingerprint
+//!   mismatch is a typed [`JournalError`], not a fallback — replaying a
+//!   different model's events would corrupt state silently.
+//! * **Older files are fallbacks for corruption only.** A newest file
+//!   with an unreadable header or snapshot frame falls back to the next
+//!   rotation; typed version/fingerprint refusals do not.
+//!
+//! Durability bound: frames are `write_all` + `flush`ed (OS page cache),
+//! not fsynced — the fault model is process crash, not power loss.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::ingest::DaemonEvent;
+use super::snapshot::{self, crc32, DaemonSnapshot, Dec, DecodeError, Enc};
+use super::DrainOutcome;
+
+/// `b"FSJL"` as a little-endian u32: the journal file magic.
+pub(crate) const MAGIC: u32 = 0x4C4A_5346;
+/// Journal format version; recovery refuses any other.
+pub(crate) const VERSION: u32 = 1;
+/// Header length: magic + version + fingerprint + seq.
+pub(crate) const HEADER_LEN: usize = 24;
+/// Upper bound on a single frame's payload — a corrupt length field can
+/// never drive a huge allocation past this.
+const MAX_FRAME_LEN: usize = 16 << 20;
+
+/// Why a journal directory could not be recovered from. Every refusal is
+/// typed; recovery never panics on foreign or corrupt input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JournalError {
+    /// The directory holds no `wal-*.log` files (or does not exist).
+    NoJournal,
+    /// The filesystem failed underneath the reader.
+    Io(String),
+    /// The newest candidate file does not start with the journal magic.
+    BadMagic(u32),
+    /// The journal was written by a different format version.
+    Version {
+        /// The version the header carries.
+        found: u32,
+    },
+    /// The journal belongs to a different model fleet (fingerprint
+    /// mismatch under [`super::PlannerDaemon::recover_expecting`]).
+    ForeignModel {
+        /// The fingerprint the caller expected.
+        expected: u64,
+        /// The fingerprint the journal header carries.
+        found: u64,
+    },
+    /// No candidate file yields a decodable snapshot frame.
+    CorruptSnapshot,
+}
+
+impl std::fmt::Display for JournalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JournalError::NoJournal => write!(f, "no journal files in the directory"),
+            JournalError::Io(e) => write!(f, "journal I/O error: {e}"),
+            JournalError::BadMagic(m) => {
+                write!(f, "not a fastsplit journal (magic 0x{m:08X})")
+            }
+            JournalError::Version { found } => {
+                write!(f, "journal format version {found} is not {VERSION}")
+            }
+            JournalError::ForeignModel { expected, found } => write!(
+                f,
+                "journal belongs to a different model fleet \
+                 (fingerprint 0x{found:016X}, expected 0x{expected:016X})"
+            ),
+            JournalError::CorruptSnapshot => {
+                write!(f, "no usable snapshot frame in any journal file")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JournalError {}
+
+/// What a recovery did, alongside the recovered `DaemonHandle`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Torn-tail truncations (0 when the file ended on a frame boundary).
+    pub torn_frames: u64,
+    /// Tail frames replayed after the snapshot.
+    pub replayed_frames: u64,
+    /// Journaled events re-ingested during the replay.
+    pub replayed_events: u64,
+    /// The timer-wheel tick the snapshot was taken at.
+    pub snapshot_tick: u64,
+    /// How the journaled run ended: `Some(Clean)` after a graceful
+    /// [`super::DaemonHandle::shutdown`], `Some(BestEffort)` after a
+    /// dropped handle, `None` when the journal just stops — a crash.
+    pub shutdown: Option<DrainOutcome>,
+    /// Newer journal files skipped for corruption before one recovered.
+    pub files_skipped: u64,
+}
+
+/// One decoded journal frame.
+pub(crate) enum Frame {
+    /// A full worker snapshot — always and only a file's first frame.
+    Snapshot(DaemonSnapshot),
+    /// One ingested event and the clock reading it was ingested at (the
+    /// reading also arms the report lease, so replay must reuse it).
+    Event { now: u64, event: DaemonEvent },
+    /// One timer-wheel advance of a pump iteration (including the final
+    /// empty advance — it moves the wheel clock, which later inserts
+    /// hash against).
+    Advance { to: u64 },
+    /// An explicit off-schedule plan request at clock reading `now`.
+    PlanNow { now: u64 },
+    /// The final drain: clock reading and how the run ended.
+    Drain { now: u64, outcome: DrainOutcome },
+}
+
+impl Frame {
+    pub(crate) fn decode(bytes: &[u8]) -> Result<Frame, DecodeError> {
+        let mut d = Dec::new(bytes);
+        let frame = match d.u8()? {
+            0 => {
+                // The snapshot codec consumes (and end-checks) the rest.
+                return Ok(Frame::Snapshot(DaemonSnapshot::decode(&bytes[1..])?));
+            }
+            1 => Frame::Event {
+                now: d.u64()?,
+                event: snapshot::dec_event(&mut d)?,
+            },
+            2 => Frame::Advance { to: d.u64()? },
+            3 => Frame::PlanNow { now: d.u64()? },
+            4 => Frame::Drain {
+                now: d.u64()?,
+                outcome: match d.u8()? {
+                    0 => DrainOutcome::Clean,
+                    1 => DrainOutcome::BestEffort,
+                    _ => return Err(DecodeError("bad DrainOutcome tag")),
+                },
+            },
+            _ => return Err(DecodeError("bad frame kind tag")),
+        };
+        d.done()?;
+        Ok(frame)
+    }
+}
+
+pub(crate) fn snapshot_payload(s: &DaemonSnapshot) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u8(0);
+    e.buf.extend_from_slice(&s.encode());
+    e.buf
+}
+
+pub(crate) fn event_payload(now: u64, event: &DaemonEvent) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u8(1);
+    e.u64(now);
+    snapshot::enc_event(&mut e, event);
+    e.buf
+}
+
+pub(crate) fn advance_payload(to: u64) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u8(2);
+    e.u64(to);
+    e.buf
+}
+
+pub(crate) fn plan_now_payload(now: u64) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u8(3);
+    e.u64(now);
+    e.buf
+}
+
+pub(crate) fn drain_payload(now: u64, outcome: DrainOutcome) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u8(4);
+    e.u64(now);
+    e.u8(match outcome {
+        DrainOutcome::Clean => 0,
+        DrainOutcome::BestEffort => 1,
+    });
+    e.buf
+}
+
+fn header_bytes(fingerprint: u64, seq: u64) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    h[4..8].copy_from_slice(&VERSION.to_le_bytes());
+    h[8..16].copy_from_slice(&fingerprint.to_le_bytes());
+    h[16..24].copy_from_slice(&seq.to_le_bytes());
+    h
+}
+
+/// The append side of one journal file. Frames hit the OS on every
+/// append (`write_all` + `flush`); the caller owns the byte/frame
+/// accounting and the degrade-on-error policy.
+pub(crate) struct JournalWriter {
+    file: File,
+}
+
+impl JournalWriter {
+    /// Create `wal-{seq}.log` atomically (written as `.tmp`, renamed once
+    /// the header and snapshot frame are down) and return the writer plus
+    /// the bytes written. A file that exists always starts with a
+    /// complete snapshot.
+    pub(crate) fn create(
+        dir: &Path,
+        seq: u64,
+        fingerprint: u64,
+        snapshot: &DaemonSnapshot,
+    ) -> std::io::Result<(JournalWriter, u64)> {
+        fs::create_dir_all(dir)?;
+        let tmp = dir.join(format!("wal-{seq}.log.tmp"));
+        let path = dir.join(format!("wal-{seq}.log"));
+        let mut file = File::create(&tmp)?;
+        file.write_all(&header_bytes(fingerprint, seq))?;
+        let mut writer = JournalWriter { file };
+        let frame_bytes = writer.append(&snapshot_payload(snapshot))?;
+        fs::rename(&tmp, &path)?;
+        Ok((writer, HEADER_LEN as u64 + frame_bytes))
+    }
+
+    /// Re-open a recovered file for appending: truncate the torn tail
+    /// back to `valid_len` and seek to the new end.
+    pub(crate) fn resume(path: &Path, valid_len: u64) -> std::io::Result<JournalWriter> {
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        file.set_len(valid_len)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok(JournalWriter { file })
+    }
+
+    /// Append one CRC-framed record; returns the bytes written.
+    pub(crate) fn append(&mut self, payload: &[u8]) -> std::io::Result<u64> {
+        let mut record = Vec::with_capacity(payload.len() + 8);
+        record.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        record.extend_from_slice(&crc32(payload).to_le_bytes());
+        record.extend_from_slice(payload);
+        self.file.write_all(&record)?;
+        self.file.flush()?;
+        Ok(record.len() as u64)
+    }
+}
+
+/// One successfully read journal file, ready to replay.
+pub(crate) struct RecoveredJournal {
+    pub(crate) path: PathBuf,
+    pub(crate) seq: u64,
+    pub(crate) fingerprint: u64,
+    pub(crate) snapshot: DaemonSnapshot,
+    /// Frames after the snapshot, in journal order.
+    pub(crate) tail: Vec<Frame>,
+    pub(crate) torn_frames: u64,
+    /// Byte offset of the last good frame's end — the truncation point.
+    pub(crate) valid_len: u64,
+    pub(crate) files_skipped: u64,
+}
+
+/// Every `wal-{seq}.log` in `dir`, newest seq first. A missing directory
+/// is an empty listing (the caller maps that to [`JournalError::NoJournal`]).
+fn list_wal_files(dir: &Path) -> Result<Vec<(u64, PathBuf)>, JournalError> {
+    let entries = match fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(JournalError::Io(e.to_string())),
+    };
+    let mut out = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| JournalError::Io(e.to_string()))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let seq = name
+            .strip_prefix("wal-")
+            .and_then(|rest| rest.strip_suffix(".log"))
+            .and_then(|s| s.parse::<u64>().ok());
+        if let Some(seq) = seq {
+            out.push((seq, entry.path()));
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    Ok(out)
+}
+
+/// Delete every journal file older than `keep_seq` (rotation cleanup;
+/// best-effort, a leftover file is skipped at the next recovery anyway).
+pub(crate) fn prune_below(dir: &Path, keep_seq: u64) {
+    if let Ok(files) = list_wal_files(dir) {
+        for (seq, path) in files {
+            if seq < keep_seq {
+                let _ = fs::remove_file(path);
+            }
+        }
+    }
+}
+
+/// Walk the frames of one file. Returns the decoded frames, the byte
+/// offset the walk stopped at (the truncation point for a torn tail) and
+/// the torn count (1 when trailing bytes had to be dropped, else 0).
+fn parse_frames(bytes: &[u8]) -> (Vec<Frame>, u64, u64) {
+    let mut pos = HEADER_LEN.min(bytes.len());
+    let mut frames: Vec<Frame> = Vec::new();
+    let mut torn = 0u64;
+    loop {
+        let remaining = bytes.len() - pos;
+        if remaining == 0 {
+            break;
+        }
+        if remaining < 8 {
+            torn = 1;
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if len > MAX_FRAME_LEN || len > remaining - 8 {
+            torn = 1;
+            break;
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            torn = 1;
+            break;
+        }
+        match Frame::decode(payload) {
+            // A snapshot is only legal as a file's first frame; a
+            // mid-file one means torn rotation state — truncate there.
+            Ok(Frame::Snapshot(s)) if !frames.is_empty() => {
+                drop(s);
+                torn = 1;
+                break;
+            }
+            Ok(frame) => {
+                frames.push(frame);
+                pos += 8 + len;
+            }
+            Err(_) => {
+                torn = 1;
+                break;
+            }
+        }
+    }
+    (frames, pos as u64, torn)
+}
+
+fn read_one(path: &Path, seq: u64, expected: Option<u64>) -> Result<RecoveredJournal, JournalError> {
+    let bytes = fs::read(path).map_err(|e| JournalError::Io(e.to_string()))?;
+    if bytes.len() < 8 {
+        return Err(JournalError::BadMagic(0));
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(JournalError::BadMagic(magic));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(JournalError::Version { found: version });
+    }
+    if bytes.len() < HEADER_LEN {
+        return Err(JournalError::CorruptSnapshot);
+    }
+    let fingerprint = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    if let Some(expected) = expected {
+        if expected != fingerprint {
+            return Err(JournalError::ForeignModel {
+                expected,
+                found: fingerprint,
+            });
+        }
+    }
+    let (frames, valid_len, torn_frames) = parse_frames(&bytes);
+    let mut frames = frames.into_iter();
+    let snapshot = match frames.next() {
+        Some(Frame::Snapshot(s)) => s,
+        _ => return Err(JournalError::CorruptSnapshot),
+    };
+    Ok(RecoveredJournal {
+        path: path.to_path_buf(),
+        seq,
+        fingerprint,
+        snapshot,
+        tail: frames.collect(),
+        torn_frames,
+        valid_len,
+        files_skipped: 0,
+    })
+}
+
+/// Read the newest recoverable journal in `dir`. Corrupt newer files
+/// fall back to older rotations (counted in `files_skipped`); typed
+/// version/fingerprint refusals abort the whole recovery instead.
+pub(crate) fn read_journal(
+    dir: &Path,
+    expected: Option<u64>,
+) -> Result<RecoveredJournal, JournalError> {
+    let candidates = list_wal_files(dir)?;
+    if candidates.is_empty() {
+        return Err(JournalError::NoJournal);
+    }
+    let mut first_error: Option<JournalError> = None;
+    let mut skipped = 0u64;
+    for (seq, path) in candidates {
+        match read_one(&path, seq, expected) {
+            Ok(mut recovered) => {
+                recovered.files_skipped = skipped;
+                return Ok(recovered);
+            }
+            Err(e @ (JournalError::Version { .. } | JournalError::ForeignModel { .. })) => {
+                return Err(e)
+            }
+            Err(e) => {
+                if first_error.is_none() {
+                    first_error = Some(e);
+                }
+                skipped += 1;
+            }
+        }
+    }
+    Err(first_error.unwrap_or(JournalError::NoJournal))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::daemon::{
+        DaemonConfig, DaemonHandle, DrainReport, EpochOutcome, PlannerDaemon, SimClock,
+    };
+    use crate::models;
+    use crate::partition::fleet::{FleetOptions, FleetSpec, PlanDecision, SpecDelta};
+    use crate::partition::joint::JointOptions;
+    use crate::partition::service::ServiceOptions;
+    use crate::partition::types::Link;
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+    use crate::util::prop::{churn_script, ChurnTick, CrashScript};
+    use crate::util::rng::Rng;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::SeqCst);
+        let dir = std::env::temp_dir().join(format!(
+            "fastsplit-journal-{tag}-{}-{n}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).expect("create the test journal dir");
+        dir
+    }
+
+    fn spec_for(model: &str, devices: usize) -> FleetSpec {
+        let m = models::by_name(model).unwrap();
+        FleetSpec::from_fleet(&DeviceProfile::fleet_of(devices), |d| {
+            CostGraph::build(&m, d, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+        })
+    }
+
+    /// The crash-harness daemon config: bit-identical planning, leases on
+    /// the wheel, and a snapshot cadence too large to rotate — every
+    /// crash run stays in `wal-0.log` so truncation points are the whole
+    /// story.
+    fn config_for(journal_dir: Option<PathBuf>) -> DaemonConfig {
+        DaemonConfig {
+            replan_every: 2,
+            lease_ttl: Some(3),
+            service: ServiceOptions {
+                joint: JointOptions {
+                    fleet: FleetOptions::bit_identical(),
+                    ..JointOptions::default()
+                },
+                ..ServiceOptions::default()
+            },
+            journal_dir,
+            snapshot_every: u64::MAX,
+            ..DaemonConfig::default()
+        }
+    }
+
+    /// One tick's events under the canonical order `CrashScript` counts
+    /// in: churn deltas first, then reports.
+    fn tick_events(step: &ChurnTick, tick: u64) -> Vec<DaemonEvent> {
+        step.events
+            .iter()
+            .map(|ev| DaemonEvent::Delta(ev.to_delta()))
+            .chain(step.reports.iter().map(|&(device, link)| DaemonEvent::Report {
+                device,
+                link,
+                tick,
+            }))
+            .collect()
+    }
+
+    /// Drive `script` through a daemon from the position a crashed run
+    /// stopped at (`consumed` = events already journaled; 0 = a fresh
+    /// run). Ticks before the resume position are re-pumped without
+    /// sending: the event count cannot say how far the crashed run's
+    /// *pumping* got, and a pump over already-covered ground fires
+    /// nothing (due entries fire exactly once).
+    fn drive(
+        daemon: &DaemonHandle,
+        clock: &SimClock,
+        script: &CrashScript,
+        consumed: u64,
+    ) -> Vec<EpochOutcome> {
+        let (start_tick, skip_within) = script.resume_position(consumed);
+        let mut epochs = Vec::new();
+        for tick in 0..start_tick {
+            clock.set(tick as u64);
+            epochs.extend(daemon.pump().epochs);
+        }
+        for (tick, step) in script.script.ticks.iter().enumerate().skip(start_tick) {
+            clock.set(tick as u64);
+            let skip = if tick == start_tick { skip_within } else { 0 };
+            for event in tick_events(step, tick as u64).into_iter().skip(skip) {
+                daemon.send(event).expect("the daemon accepts the event");
+            }
+            epochs.extend(daemon.pump().epochs);
+        }
+        clock.set(script.script.ticks.len() as u64);
+        epochs.extend(daemon.pump().epochs);
+        epochs
+    }
+
+    fn assert_decisions_bit_identical(a: &[PlanDecision], b: &[PlanDecision], context: &str) {
+        assert_eq!(a.len(), b.len(), "{context}: decision counts differ");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.device, y.device, "{context}");
+            assert_eq!(x.tier, y.tier, "{context}");
+            assert_eq!(x.cut_layer, y.cut_layer, "{context}");
+            assert_eq!(x.partition.device_set, y.partition.device_set, "{context}");
+            assert_eq!(
+                x.partition.delay.to_bits(),
+                y.partition.delay.to_bits(),
+                "{context}"
+            );
+        }
+    }
+
+    /// The scrape minus the journal/backpressure families — those count
+    /// I/O the crashed run did twice (pre-crash + post-recovery), so the
+    /// bit-identity pin covers everything else.
+    fn stable_scrape(metrics: &str) -> String {
+        metrics
+            .lines()
+            .filter(|line| {
+                !line.contains("fastsplit_journal_") && !line.contains("fastsplit_ingest_shed")
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    fn assert_drains_bit_identical(a: &DrainReport, b: &DrainReport, context: &str) {
+        assert_decisions_bit_identical(&a.final_decisions, &b.final_decisions, context);
+        assert_eq!(a.stats, b.stats, "{context}: FleetStats diverged");
+        assert_eq!(a.counters, b.counters, "{context}: daemon counters diverged");
+        assert_eq!(
+            stable_scrape(&a.metrics),
+            stable_scrape(&b.metrics),
+            "{context}: scrape diverged"
+        );
+    }
+
+    /// Byte offsets where each frame of a well-formed journal ends —
+    /// the crash points of the headline pin.
+    fn frame_boundaries(bytes: &[u8]) -> Vec<usize> {
+        let mut pos = HEADER_LEN;
+        let mut out = Vec::new();
+        while pos < bytes.len() {
+            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            pos += 8 + len;
+            assert!(pos <= bytes.len(), "the baseline journal must be whole");
+            out.push(pos);
+        }
+        out
+    }
+
+    /// **The headline pin (acceptance criterion).** A seeded churn script
+    /// runs once uninterrupted through a journaled daemon. Then, for
+    /// *every* frame boundary of the journal it wrote, a fresh daemon is
+    /// recovered from the journal truncated at that boundary — the state
+    /// a crash at that instant leaves on disk — and the script is
+    /// resumed. Every crash point must reproduce the uninterrupted run
+    /// bit-identically: the remaining epochs' decisions, the final
+    /// `FleetStats`, the daemon counters and the Prometheus scrape
+    /// (modulo the journal's own I/O counters).
+    #[test]
+    fn crash_at_every_frame_boundary_recovers_bit_identically() {
+        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0x0009_C0FF_EE00);
+        let spec = spec_for("googlenet", 4);
+        let script = CrashScript::new(churn_script(&mut rng, spec.num_tiers(), 4, 6, 0.35, 0.3));
+
+        let base_dir = temp_dir("crash-base");
+        let clock = SimClock::new(0);
+        let daemon = PlannerDaemon::spawn(
+            spec.clone(),
+            config_for(Some(base_dir.clone())),
+            Arc::new(clock.clone()),
+        );
+        let base_epochs = drive(&daemon, &clock, &script, 0);
+        let base_report = daemon.shutdown();
+        let bytes = fs::read(base_dir.join("wal-0.log")).expect("the journal exists");
+        let boundaries = frame_boundaries(&bytes);
+        assert!(
+            boundaries.len() as u64 > script.total_events(),
+            "every event must have its own frame"
+        );
+
+        for (k, &cut) in boundaries.iter().enumerate() {
+            let dir = temp_dir(&format!("crash-{k}"));
+            fs::write(dir.join("wal-0.log"), &bytes[..cut]).unwrap();
+            let clock = SimClock::new(0);
+            let (daemon, recovery) = PlannerDaemon::recover(&dir, Arc::new(clock.clone()))
+                .unwrap_or_else(|e| panic!("crash point {k}: recovery refused: {e}"));
+            assert_eq!(recovery.torn_frames, 0, "crash point {k}: clean boundary");
+            let epochs = drive(&daemon, &clock, &script, recovery.replayed_events);
+            assert!(
+                epochs.len() <= base_epochs.len(),
+                "crash point {k}: more epochs than the uninterrupted run"
+            );
+            let suffix = &base_epochs[base_epochs.len() - epochs.len()..];
+            for (got, want) in epochs.iter().zip(suffix) {
+                assert_eq!(got.tick, want.tick, "crash point {k}: epoch ticks diverged");
+                assert_decisions_bit_identical(
+                    &got.decisions,
+                    &want.decisions,
+                    &format!("crash point {k} epoch {}", want.tick),
+                );
+            }
+            let report = daemon.shutdown();
+            assert_drains_bit_identical(&report, &base_report, &format!("crash point {k}"));
+            let _ = fs::remove_dir_all(&dir);
+        }
+        let _ = fs::remove_dir_all(&base_dir);
+    }
+
+    /// Durability is observation-free: the same script through a
+    /// journal-on and a journal-off daemon yields bit-identical epochs,
+    /// `FleetStats`, counters and scrape — the journal-off path is
+    /// exactly the PR 8 daemon.
+    #[test]
+    fn journal_off_and_on_runs_are_bit_identical() {
+        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0x0FF0);
+        let spec = spec_for("block-residual", 4);
+        let script = CrashScript::new(churn_script(&mut rng, spec.num_tiers(), 4, 6, 0.35, 0.3));
+        let run = |journal_dir: Option<PathBuf>| {
+            let clock = SimClock::new(0);
+            let daemon = PlannerDaemon::spawn(
+                spec.clone(),
+                config_for(journal_dir),
+                Arc::new(clock.clone()),
+            );
+            let epochs = drive(&daemon, &clock, &script, 0);
+            (epochs, daemon.shutdown())
+        };
+        let dir = temp_dir("on-off");
+        let (on_epochs, on_report) = run(Some(dir.clone()));
+        let (off_epochs, off_report) = run(None);
+        assert_eq!(on_epochs.len(), off_epochs.len(), "epoch schedules diverged");
+        for (a, b) in on_epochs.iter().zip(&off_epochs) {
+            assert_eq!(a.tick, b.tick);
+            assert_decisions_bit_identical(&a.decisions, &b.decisions, "journal on/off");
+        }
+        assert_drains_bit_identical(&on_report, &off_report, "journal on/off");
+        // The journal families render on both sides — zeros when off.
+        assert!(off_report
+            .metrics
+            .contains("fastsplit_journal_frames_total 0\n"));
+        assert!(on_report
+            .metrics
+            .contains("fastsplit_journal_snapshots_total 1\n"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// The corruption fuzz lane: seeded bit flips and truncations of a
+    /// valid journal either recover a strict prefix (functional daemon,
+    /// recovery counted) or refuse with a typed error — never a panic.
+    #[test]
+    fn corrupt_journals_recover_a_prefix_or_refuse_typed_never_panic() {
+        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0x0BAD_F00D);
+        let spec = spec_for("googlenet", 4);
+        let script = CrashScript::new(churn_script(&mut rng, spec.num_tiers(), 4, 4, 0.35, 0.3));
+        let base_dir = temp_dir("fuzz-base");
+        let clock = SimClock::new(0);
+        let daemon = PlannerDaemon::spawn(
+            spec.clone(),
+            config_for(Some(base_dir.clone())),
+            Arc::new(clock.clone()),
+        );
+        drive(&daemon, &clock, &script, 0);
+        daemon.shutdown();
+        let bytes = fs::read(base_dir.join("wal-0.log")).unwrap();
+        let total_frames = frame_boundaries(&bytes).len() as u64;
+
+        for trial in 0..96 {
+            let mut mutated = bytes.clone();
+            if rng.chance(0.5) {
+                let at = rng.index(mutated.len());
+                mutated[at] ^= 1 << rng.index(8);
+            } else {
+                let cut = rng.index(mutated.len() + 1);
+                mutated.truncate(cut);
+            }
+            let dir = temp_dir(&format!("fuzz-{trial}"));
+            fs::write(dir.join("wal-0.log"), &mutated).unwrap();
+            match PlannerDaemon::recover(&dir, Arc::new(SimClock::new(0))) {
+                Ok((daemon, recovery)) => {
+                    assert!(
+                        recovery.replayed_frames < total_frames,
+                        "trial {trial}: replayed past the intact journal"
+                    );
+                    let scrape = daemon.metrics();
+                    assert!(
+                        scrape.contains("fastsplit_journal_recoveries_total 1\n"),
+                        "trial {trial}: recovery must be counted"
+                    );
+                    daemon.shutdown();
+                }
+                Err(e) => {
+                    // A typed refusal; rendering it must not panic either.
+                    let _ = e.to_string();
+                }
+            }
+            let _ = fs::remove_dir_all(&dir);
+        }
+        let _ = fs::remove_dir_all(&base_dir);
+    }
+
+    /// Foreign and cross-version journals refuse typed: wrong magic,
+    /// wrong version, wrong fleet fingerprint, and the empty/missing
+    /// directory each map to their own `JournalError` — and the matching
+    /// fingerprint recovers.
+    #[test]
+    fn recovery_refuses_foreign_version_and_garbage_journals_typed() {
+        let empty = temp_dir("refusal-empty");
+        assert_eq!(
+            PlannerDaemon::recover(&empty, Arc::new(SimClock::new(0))).err(),
+            Some(JournalError::NoJournal).map(|e| e),
+            "an empty directory has no journal"
+        );
+        assert!(matches!(
+            PlannerDaemon::recover(empty.join("missing"), Arc::new(SimClock::new(0))).err(),
+            Some(JournalError::NoJournal)
+        ));
+        fs::write(empty.join("wal-0.log"), b"not a journal at all").unwrap();
+        assert!(matches!(
+            PlannerDaemon::recover(&empty, Arc::new(SimClock::new(0))).err(),
+            Some(JournalError::BadMagic(_))
+        ));
+
+        // A real googlenet journal.
+        let dir = temp_dir("refusal-real");
+        let spec = spec_for("googlenet", 3);
+        {
+            let clock = SimClock::new(0);
+            let daemon = PlannerDaemon::spawn(
+                spec.clone(),
+                config_for(Some(dir.clone())),
+                Arc::new(clock.clone()),
+            );
+            for d in 0..3 {
+                daemon
+                    .send(DaemonEvent::Report {
+                        device: d,
+                        link: Link::symmetric(5e5),
+                        tick: 0,
+                    })
+                    .unwrap();
+            }
+            daemon.plan_now();
+            daemon.shutdown();
+        }
+
+        // Cross-version: patch the header's version field to 2.
+        let bytes = fs::read(dir.join("wal-0.log")).unwrap();
+        let versioned = temp_dir("refusal-version");
+        let mut patched = bytes.clone();
+        patched[4..8].copy_from_slice(&2u32.to_le_bytes());
+        fs::write(versioned.join("wal-0.log"), &patched).unwrap();
+        assert_eq!(
+            PlannerDaemon::recover(&versioned, Arc::new(SimClock::new(0))).err(),
+            Some(JournalError::Version { found: 2 })
+        );
+
+        // Foreign model: expect a block-residual fleet over the
+        // googlenet journal.
+        let foreign = spec_for("block-residual", 3).fingerprint();
+        let err = PlannerDaemon::recover_expecting(&dir, foreign, Arc::new(SimClock::new(0)))
+            .err()
+            .expect("a foreign journal must refuse");
+        match err {
+            JournalError::ForeignModel { expected, found } => {
+                assert_eq!(expected, foreign);
+                assert_eq!(found, spec.fingerprint());
+            }
+            e => panic!("wrong refusal: {e}"),
+        }
+
+        // The matching fingerprint recovers cleanly.
+        let (daemon, recovery) =
+            PlannerDaemon::recover_expecting(&dir, spec.fingerprint(), Arc::new(SimClock::new(1)))
+                .expect("the matching fingerprint recovers");
+        assert_eq!(recovery.shutdown, Some(crate::daemon::DrainOutcome::Clean));
+        assert_eq!(recovery.files_skipped, 0);
+        daemon.shutdown();
+        let _ = fs::remove_dir_all(&empty);
+        let _ = fs::remove_dir_all(&dir);
+        let _ = fs::remove_dir_all(&versioned);
+    }
+
+    /// The drain-outcome satellite: recovery distinguishes a graceful
+    /// shutdown (`Some(Clean)`), a dropped handle (`Some(BestEffort)`)
+    /// and a crash (`None` — no drain frame), and counts dirty
+    /// recoveries in the scrape.
+    #[test]
+    fn recovery_distinguishes_clean_best_effort_and_dirty_shutdowns() {
+        use crate::daemon::DrainOutcome;
+        let spec = spec_for("googlenet", 3);
+        let cases: [(u8, Option<DrainOutcome>); 3] = [
+            (0, Some(DrainOutcome::Clean)),
+            (1, Some(DrainOutcome::BestEffort)),
+            (2, None),
+        ];
+        for (exit, want) in cases {
+            let dir = temp_dir(&format!("exit-{exit}"));
+            {
+                let clock = SimClock::new(0);
+                let daemon = PlannerDaemon::spawn(
+                    spec.clone(),
+                    config_for(Some(dir.clone())),
+                    Arc::new(clock.clone()),
+                );
+                for d in 0..3 {
+                    daemon
+                        .send(DaemonEvent::Report {
+                            device: d,
+                            link: Link::symmetric(5e5),
+                            tick: 0,
+                        })
+                        .unwrap();
+                }
+                daemon.plan_now();
+                if exit == 0 {
+                    daemon.shutdown();
+                } else if exit == 1 {
+                    drop(daemon);
+                } else {
+                    // The simulated crash: close the channel without any
+                    // drain — the journal just stops.
+                    daemon.abandon();
+                }
+            }
+            let (daemon, recovery) = PlannerDaemon::recover(&dir, Arc::new(SimClock::new(1)))
+                .unwrap_or_else(|e| panic!("exit mode {exit}: {e}"));
+            assert_eq!(recovery.shutdown, want, "exit mode {exit}");
+            let scrape = daemon.metrics();
+            let dirty = u64::from(want.is_none());
+            assert!(
+                scrape.contains(&format!("fastsplit_journal_dirty_recoveries_total {dirty}\n")),
+                "exit mode {exit}: dirty accounting"
+            );
+            assert!(scrape.contains("fastsplit_journal_recoveries_total 1\n"));
+            // The pre-crash state survived: all three devices still plan.
+            assert_eq!(
+                daemon.plan_now().decisions.len(),
+                3,
+                "exit mode {exit}: recovered state plans"
+            );
+            daemon.shutdown();
+            let _ = fs::remove_dir_all(&dir);
+        }
+    }
+
+    /// Rotation keeps recovery cheap: with a small `snapshot_every`, the
+    /// journal rotates to a fresh snapshot file, old files are pruned,
+    /// and recovery from the newest rotation still lands on the same
+    /// state as the running daemon reported.
+    #[test]
+    fn snapshot_rotation_prunes_old_files_and_still_recovers() {
+        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0x0707);
+        let spec = spec_for("googlenet", 4);
+        let script = CrashScript::new(churn_script(&mut rng, spec.num_tiers(), 4, 8, 0.35, 0.3));
+        let dir = temp_dir("rotate");
+        let clock = SimClock::new(0);
+        let daemon = PlannerDaemon::spawn(
+            spec.clone(),
+            DaemonConfig {
+                snapshot_every: 2,
+                ..config_for(Some(dir.clone()))
+            },
+            Arc::new(clock.clone()),
+        );
+        drive(&daemon, &clock, &script, 0);
+        let base_report = daemon.shutdown();
+        let files = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok()?.file_name().into_string().ok())
+            .filter(|n| n.starts_with("wal-") && n.ends_with(".log"))
+            .collect::<Vec<_>>();
+        assert_eq!(files.len(), 1, "rotation prunes old files: {files:?}");
+        assert_ne!(files[0], "wal-0.log", "the journal must have rotated");
+
+        let (daemon, recovery) = PlannerDaemon::recover(&dir, Arc::new(SimClock::new(
+            script.script.ticks.len() as u64,
+        )))
+        .expect("the rotated journal recovers");
+        assert_eq!(recovery.shutdown, Some(crate::daemon::DrainOutcome::Clean));
+        let report = daemon.shutdown();
+        assert_drains_bit_identical(&report, &base_report, "rotated recovery");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -6,12 +6,14 @@
 //! for, with std::thread + mpsc channels only (no async runtime —
 //! consistent with the vendored rayon-shim approach):
 //!
-//! * [`ingest`] — concurrent producers send [`DaemonEvent`]s down an
-//!   mpsc channel; a [`Coalescer`] folds them between plan ticks into
-//!   the smallest batch that replays bit-identically to the raw stream
-//!   (add+remove cancels, migrate chains collapse, reports are
-//!   last-writer-wins), validating at the door so a misbehaving producer
-//!   is counted and refused instead of crashing the loop.
+//! * [`ingest`] — concurrent producers send [`DaemonEvent`]s down a
+//!   *bounded* mpsc channel (typed [`SendError::Backpressure`] when
+//!   full — shed, counted, never blocking the producer); a [`Coalescer`]
+//!   folds them between plan ticks into the smallest batch that replays
+//!   bit-identically to the raw stream (add+remove cancels, migrate
+//!   chains collapse, reports are last-writer-wins), validating at the
+//!   door so a misbehaving producer is counted and refused instead of
+//!   crashing the loop.
 //! * [`timeq`] — a hashed [`TimerWheel`] (the kumomta `crates/timeq`
 //!   shape) schedules re-plan ticks, per-device report leases (expiry ⇒
 //!   the device plans as `Degraded(StaleLink)` *before* the staleness
@@ -26,19 +28,31 @@
 //! * [`metrics`] — the scrape surface: [`DaemonHandle::metrics`]
 //!   renders `FleetStats` + service + daemon counters as Prometheus
 //!   text, byte-stable under the golden test.
+//! * [`journal`] — opt-in crash safety (PR 9): with
+//!   [`DaemonConfig::journal_dir`] set, every event, wheel advance, plan
+//!   request and the final drain is written ahead as a CRC-framed record
+//!   behind a full state snapshot, so [`PlannerDaemon::recover`]
+//!   restores the daemon bit-identically from `snapshot + tail replay`.
+//!   Torn tails truncate (counted, typed, never a panic); foreign or
+//!   cross-version journals refuse with a [`JournalError`].
 //!
-//! Contracts are documented in RESILIENCE.md ("Daemon contracts"); the
-//! headline pin below replays seeded `ChurnScript`s through the daemon
-//! and a raw uncoalesced `PlannerService` side by side and demands
-//! bit-identical epochs with measurably fewer `spec_deltas`.
+//! Contracts are documented in RESILIENCE.md ("Daemon contracts" and
+//! "Durability contracts"); the headline pins replay seeded
+//! `ChurnScript`s through the daemon demanding bit-identical epochs —
+//! against a raw uncoalesced `PlannerService`, and (in [`journal`])
+//! against crash-and-recover runs cut at every frame boundary.
 
 pub mod clock;
 pub mod ingest;
+pub mod journal;
 pub mod lifecycle;
 pub mod metrics;
+pub(crate) mod snapshot;
 pub mod timeq;
 
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 
@@ -47,14 +61,18 @@ use crate::partition::fleet::{
 };
 use crate::partition::service::{PlannerService, ServiceOptions};
 
+use journal::{Frame, JournalWriter, RecoveredJournal};
+use snapshot::DaemonSnapshot;
+
 pub use clock::{Clock, SimClock};
 pub use ingest::{CoalescedItem, Coalescer, DaemonEvent, IngestError};
+pub use journal::{JournalError, RecoveryReport};
 pub use lifecycle::{ActivityHandle, ActivityTracker};
 pub use metrics::{fleet_metrics, render_prometheus, service_metrics, Metric, MetricKind};
 pub use timeq::{TimerId, TimerWheel};
 
 /// Construction-time policy of the daemon.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct DaemonConfig {
     /// Schedule a re-plan every this many clock ticks (>= 1).
     pub replan_every: u64,
@@ -67,6 +85,15 @@ pub struct DaemonConfig {
     pub wheel_slots: usize,
     /// Policy of the wrapped [`PlannerService`].
     pub service: ServiceOptions,
+    /// Write-ahead journal directory. `None` (default) runs the daemon
+    /// exactly as PR 7/8 did — durability is strictly opt-in.
+    pub journal_dir: Option<PathBuf>,
+    /// Rotate the journal onto a fresh snapshot file after this many
+    /// planned epochs, bounding recovery replay time.
+    pub snapshot_every: u64,
+    /// Bound of the ingest channel; a full queue sheds with
+    /// [`SendError::Backpressure`] instead of blocking producers.
+    pub ingest_capacity: usize,
 }
 
 impl Default for DaemonConfig {
@@ -76,13 +103,16 @@ impl Default for DaemonConfig {
             lease_ttl: None,
             wheel_slots: 256,
             service: ServiceOptions::default(),
+            journal_dir: None,
+            snapshot_every: 32,
+            ingest_capacity: 1024,
         }
     }
 }
 
 /// What a wheel entry means when it fires.
 #[derive(Clone, Copy, Debug)]
-enum TimerItem {
+pub(crate) enum TimerItem {
     /// The scheduled re-plan for tick `at` (reschedules itself).
     Replan { at: u64 },
     /// Device `device`'s report lease ran out; stale unless a newer
@@ -92,6 +122,39 @@ enum TimerItem {
     /// epochs — see `FleetPlanner::expire_retired`).
     RetireExpiry { tier: usize },
 }
+
+/// How a drained shutdown ended — recorded as the journal's final frame
+/// so recovery can tell a graceful stop from a crash.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainOutcome {
+    /// A graceful [`DaemonHandle::shutdown`]: intake idled before the
+    /// drain, so every started send is in the final state.
+    Clean,
+    /// The handle was dropped: the drain flushed whatever had already
+    /// arrived, with no idle wait.
+    BestEffort,
+}
+
+/// Why an [`EventSender::send`] was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendError {
+    /// The bounded ingest channel is full; the event was shed and
+    /// counted in `fastsplit_ingest_shed_total`.
+    Backpressure,
+    /// The daemon has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for SendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SendError::Backpressure => write!(f, "the ingest channel is full (event shed)"),
+            SendError::Closed => write!(f, "the daemon has shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SendError {}
 
 /// Daemon-level counters, alongside the planner's [`FleetStats`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -189,6 +252,26 @@ impl DaemonCounters {
     }
 }
 
+/// Durability counters of the write-ahead journal.
+#[derive(Clone, Copy, Debug, Default)]
+struct JournalStats {
+    /// Frames appended (snapshots included).
+    frames: u64,
+    /// Bytes appended (headers + frames).
+    bytes: u64,
+    /// Snapshot frames written (creations + rotations).
+    snapshots: u64,
+    /// Torn-tail truncations observed at recovery.
+    torn: u64,
+    /// Times this state was recovered from a journal.
+    recoveries: u64,
+    /// Recoveries whose journal had no drain frame (a crash).
+    dirty_recoveries: u64,
+    /// I/O failures; each one degrades journaling off rather than
+    /// crashing the planner.
+    io_errors: u64,
+}
+
 /// One planned (or clock-degraded) epoch the daemon produced.
 #[derive(Clone, Debug)]
 pub struct EpochOutcome {
@@ -248,7 +331,7 @@ enum Msg {
     Metrics(Sender<String>),
     Stats(Sender<FleetStats>),
     Counters(Sender<DaemonCounters>),
-    Shutdown(Sender<DrainReport>),
+    Shutdown(Sender<DrainReport>, DrainOutcome),
 }
 
 /// A cloneable producer endpoint. Each send holds an activity guard for
@@ -256,15 +339,26 @@ enum Msg {
 /// every started send is in the queue before the drain begins.
 #[derive(Clone)]
 pub struct EventSender {
-    tx: Sender<Msg>,
+    tx: SyncSender<Msg>,
     tracker: ActivityTracker,
+    shed: Arc<AtomicU64>,
 }
 
 impl EventSender {
-    /// Enqueue one event. Returns false once the daemon has shut down.
-    pub fn send(&self, event: DaemonEvent) -> bool {
+    /// Enqueue one event without blocking: a full channel sheds the
+    /// event with [`SendError::Backpressure`] (counted in
+    /// `fastsplit_ingest_shed_total`); a shut-down daemon returns
+    /// [`SendError::Closed`].
+    pub fn send(&self, event: DaemonEvent) -> Result<(), SendError> {
         let _guard = self.tracker.activity();
-        self.tx.send(Msg::Event(event)).is_ok()
+        match self.tx.try_send(Msg::Event(event)) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(SendError::Backpressure)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SendError::Closed),
+        }
     }
 }
 
@@ -275,17 +369,23 @@ pub struct PlannerDaemon;
 impl PlannerDaemon {
     /// Spawn the daemon over a fresh service for `spec`. The first
     /// re-plan is scheduled `replan_every` ticks after the clock's
-    /// current reading.
+    /// current reading. With [`DaemonConfig::journal_dir`] set, the
+    /// journal opens (snapshot first) before the worker thread starts —
+    /// a journal I/O failure degrades to non-durable operation, counted
+    /// in `fastsplit_journal_io_errors_total`, never a panic.
     pub fn spawn(spec: FleetSpec, config: DaemonConfig, clock: Arc<dyn Clock>) -> DaemonHandle {
         assert!(config.replan_every >= 1, "replan_every must be positive");
-        let (tx, rx) = mpsc::channel();
+        assert!(config.ingest_capacity >= 1, "ingest_capacity must be positive");
+        let (tx, rx) = mpsc::sync_channel(config.ingest_capacity);
         let tracker = ActivityTracker::new();
+        let shed = Arc::new(AtomicU64::new(0));
         let start = clock.now();
         let mut wheel = TimerWheel::new(start, config.wheel_slots);
         let first = start + config.replan_every;
         wheel.insert(first, TimerItem::Replan { at: first });
         let coalescer = Coalescer::new(&spec);
-        let worker = Worker {
+        let fingerprint = spec.fingerprint();
+        let mut worker = Worker {
             service: PlannerService::new(spec, config.service),
             coalescer,
             wheel,
@@ -293,8 +393,18 @@ impl PlannerDaemon {
             config,
             counters: DaemonCounters::default(),
             lease_seq: Vec::new(),
+            journal: None,
+            journal_seq: 0,
+            fingerprint,
+            plans_since_snapshot: 0,
+            planned_this_batch: false,
+            journal_stats: JournalStats::default(),
+            shed: Arc::clone(&shed),
             rx,
         };
+        if worker.config.journal_dir.is_some() {
+            worker.open_journal(0);
+        }
         let thread = thread::Builder::new()
             .name("fastsplit-planner".into())
             .spawn(move || worker.run())
@@ -303,17 +413,160 @@ impl PlannerDaemon {
             tx,
             tracker,
             thread: Some(thread),
+            shed,
         }
+    }
+
+    /// Recover a daemon from the newest recoverable journal in `dir`:
+    /// restore the snapshot, replay the tail (events re-ingest through
+    /// the coalescer under their journaled clock readings; wheel
+    /// advances re-fire their timers), truncate any torn tail, and
+    /// resume journaling in place. The clock is not consulted during
+    /// replay — every replayed step uses the tick the journal recorded.
+    pub fn recover(
+        dir: impl AsRef<Path>,
+        clock: Arc<dyn Clock>,
+    ) -> Result<(DaemonHandle, RecoveryReport), JournalError> {
+        Self::recover_inner(dir.as_ref(), None, clock)
+    }
+
+    /// [`PlannerDaemon::recover`], refusing journals whose fleet
+    /// fingerprint differs from `fingerprint`
+    /// ([`JournalError::ForeignModel`]) — replaying a different model's
+    /// events would corrupt state silently.
+    pub fn recover_expecting(
+        dir: impl AsRef<Path>,
+        fingerprint: u64,
+        clock: Arc<dyn Clock>,
+    ) -> Result<(DaemonHandle, RecoveryReport), JournalError> {
+        Self::recover_inner(dir.as_ref(), Some(fingerprint), clock)
+    }
+
+    fn recover_inner(
+        dir: &Path,
+        expected: Option<u64>,
+        clock: Arc<dyn Clock>,
+    ) -> Result<(DaemonHandle, RecoveryReport), JournalError> {
+        let RecoveredJournal {
+            path,
+            seq,
+            fingerprint,
+            snapshot,
+            tail,
+            torn_frames,
+            valid_len,
+            files_skipped,
+        } = journal::read_journal(dir, expected)?;
+
+        let snapshot_tick = snapshot.wheel_now;
+        let options = snapshot.service.options;
+        let config = DaemonConfig {
+            replan_every: snapshot.replan_every,
+            lease_ttl: snapshot.lease_ttl,
+            wheel_slots: (snapshot.wheel_slots as usize).max(1),
+            service: options,
+            journal_dir: Some(dir.to_path_buf()),
+            snapshot_every: snapshot.snapshot_every,
+            ingest_capacity: (snapshot.ingest_capacity as usize).max(1),
+        };
+        // Re-inserting the entries in their sorted (deadline, seq) order
+        // renumbers the seqs but preserves every firing tie-break.
+        let mut wheel = TimerWheel::new(snapshot.wheel_now, config.wheel_slots);
+        for &(deadline, item) in &snapshot.wheel_entries {
+            wheel.insert(deadline, item);
+        }
+        let service = PlannerService::from_image(snapshot.service);
+        let coalescer = Coalescer::new(service.spec());
+        let (tx, rx) = mpsc::sync_channel(config.ingest_capacity);
+        let tracker = ActivityTracker::new();
+        let shed = Arc::new(AtomicU64::new(0));
+        let dirty = !tail.iter().any(|f| matches!(f, Frame::Drain { .. }));
+        let mut worker = Worker {
+            service,
+            coalescer,
+            wheel,
+            clock,
+            config,
+            counters: snapshot.counters,
+            lease_seq: snapshot.lease_seq,
+            // Journaling stays off during the replay: replayed steps are
+            // already on disk.
+            journal: None,
+            journal_seq: seq,
+            fingerprint,
+            plans_since_snapshot: 0,
+            planned_this_batch: false,
+            journal_stats: JournalStats {
+                torn: torn_frames,
+                recoveries: 1,
+                dirty_recoveries: u64::from(dirty),
+                ..JournalStats::default()
+            },
+            shed: Arc::clone(&shed),
+            rx,
+        };
+
+        let mut report = RecoveryReport {
+            torn_frames,
+            replayed_frames: 0,
+            replayed_events: 0,
+            snapshot_tick,
+            shutdown: None,
+            files_skipped,
+        };
+        for frame in tail {
+            report.replayed_frames += 1;
+            match frame {
+                Frame::Event { now, event } => {
+                    report.replayed_events += 1;
+                    worker.ingest_at(now, event);
+                }
+                Frame::Advance { to } => worker.replay_advance(to),
+                Frame::PlanNow { now } => {
+                    let base = now.max(worker.wheel.now());
+                    let _ = worker.plan_at(now, base);
+                }
+                Frame::Drain { now, outcome } => {
+                    let base = worker.wheel.now().max(now);
+                    worker.flush_into_service(base);
+                    report.shutdown = Some(outcome);
+                }
+                // The parser refuses mid-file snapshots; nothing to do.
+                Frame::Snapshot(_) => {}
+            }
+        }
+        // Replayed plans must not trigger a rotation while the replay's
+        // unflushed events still sit in the coalescer.
+        worker.planned_this_batch = false;
+        match JournalWriter::resume(&path, valid_len) {
+            Ok(writer) => worker.journal = Some(writer),
+            Err(_) => worker.journal_stats.io_errors += 1,
+        }
+
+        let thread = thread::Builder::new()
+            .name("fastsplit-planner".into())
+            .spawn(move || worker.run())
+            .expect("spawn the planner daemon thread");
+        Ok((
+            DaemonHandle {
+                tx,
+                tracker,
+                thread: Some(thread),
+                shed,
+            },
+            report,
+        ))
     }
 }
 
 /// Control plane of a running daemon. Dropping the handle shuts the
-/// worker down (best effort); [`DaemonHandle::shutdown`] is the graceful
-/// path that returns the drained state.
+/// worker down (a best-effort drain); [`DaemonHandle::shutdown`] is the
+/// graceful path that returns the drained state.
 pub struct DaemonHandle {
-    tx: Sender<Msg>,
+    tx: SyncSender<Msg>,
     tracker: ActivityTracker,
     thread: Option<JoinHandle<()>>,
+    shed: Arc<AtomicU64>,
 }
 
 impl DaemonHandle {
@@ -322,12 +575,18 @@ impl DaemonHandle {
         EventSender {
             tx: self.tx.clone(),
             tracker: self.tracker.clone(),
+            shed: Arc::clone(&self.shed),
         }
     }
 
     /// Enqueue one event from the control plane.
-    pub fn send(&self, event: DaemonEvent) -> bool {
+    pub fn send(&self, event: DaemonEvent) -> Result<(), SendError> {
         self.sender().send(event)
+    }
+
+    /// Events shed at the bounded ingest channel so far.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
     }
 
     fn request<T>(&self, wrap: impl FnOnce(Sender<T>) -> Msg) -> T {
@@ -367,14 +626,27 @@ impl DaemonHandle {
 
     /// Graceful drain: wait for in-flight sends, stop intake, flush the
     /// coalesced backlog into the service (no planning), and hand back
-    /// the final state. The worker thread is joined before returning.
+    /// the final state. The worker thread is joined before returning;
+    /// the journal's final frame records [`DrainOutcome::Clean`].
     pub fn shutdown(mut self) -> DrainReport {
         self.tracker.wait_idle();
-        let report = self.request(Msg::Shutdown);
+        let report = self.request(|reply| Msg::Shutdown(reply, DrainOutcome::Clean));
         if let Some(thread) = self.thread.take() {
             thread.join().expect("the daemon thread exits cleanly");
         }
         report
+    }
+
+    /// Simulate a crash (the fault-injection hook): close the channel
+    /// without any drain and join the worker. No drain frame reaches the
+    /// journal, so a subsequent [`PlannerDaemon::recover`] reports
+    /// `shutdown: None` — a dirty shutdown.
+    pub fn abandon(mut self) {
+        let thread = self.thread.take();
+        drop(self);
+        if let Some(thread) = thread {
+            let _ = thread.join();
+        }
     }
 }
 
@@ -382,7 +654,9 @@ impl Drop for DaemonHandle {
     fn drop(&mut self) {
         if let Some(thread) = self.thread.take() {
             let (reply, _rx) = mpsc::channel();
-            let _ = self.tx.send(Msg::Shutdown(reply));
+            let _ = self
+                .tx
+                .send(Msg::Shutdown(reply, DrainOutcome::BestEffort));
             let _ = thread.join();
         }
     }
@@ -401,6 +675,21 @@ struct Worker {
     /// expiry if its seq is still the device's newest (renewal-beats-
     /// expiry without wheel cancellation).
     lease_seq: Vec<u64>,
+    /// The write-ahead journal, when durability is on. Every I/O error
+    /// degrades this to `None` (counted) instead of crashing.
+    journal: Option<JournalWriter>,
+    /// Seq of the journal file currently appended to.
+    journal_seq: u64,
+    /// The fleet's shape fingerprint, stamped into journal headers.
+    fingerprint: u64,
+    /// Planned epochs since the last snapshot frame (rotation cadence).
+    plans_since_snapshot: u64,
+    /// True while the message batch being processed has planned (and
+    /// therefore flushed) — the only moment a rotation snapshot cannot
+    /// miss coalesced-but-unflushed events.
+    planned_this_batch: bool,
+    journal_stats: JournalStats,
+    shed: Arc<AtomicU64>,
     rx: Receiver<Msg>,
 }
 
@@ -412,10 +701,16 @@ impl Worker {
                 Msg::Pump(reply) => {
                     let report = self.pump();
                     let _ = reply.send(report);
+                    self.maybe_rotate();
                 }
                 Msg::PlanNow(reply) => {
-                    let outcome = self.plan_at(self.clock.now());
+                    let now = self.clock.now();
+                    if self.journal.is_some() {
+                        self.journal_frame(journal::plan_now_payload(now));
+                    }
+                    let outcome = self.plan_at(now, now.max(self.wheel.now()));
                     let _ = reply.send(outcome);
+                    self.maybe_rotate();
                 }
                 Msg::Metrics(reply) => {
                     let _ = reply.send(self.render());
@@ -426,16 +721,48 @@ impl Worker {
                 Msg::Counters(reply) => {
                     let _ = reply.send(self.counters);
                 }
-                Msg::Shutdown(reply) => {
-                    let report = self.drain();
+                Msg::Shutdown(reply, outcome) => {
+                    let report = self.drain(outcome);
                     let _ = reply.send(report);
                     return;
+                }
+            }
+        }
+        // The channel closed without a shutdown message: a simulated (or
+        // real) crash. No drain, no drain frame — recovery will see a
+        // dirty journal.
+    }
+
+    /// Append one frame; an I/O failure degrades journaling off
+    /// (counted) rather than crashing the planner.
+    fn journal_frame(&mut self, payload: Vec<u8>) {
+        if let Some(writer) = self.journal.as_mut() {
+            match writer.append(&payload) {
+                Ok(n) => {
+                    self.journal_stats.frames += 1;
+                    self.journal_stats.bytes += n;
+                }
+                Err(_) => {
+                    self.journal_stats.io_errors += 1;
+                    self.journal = None;
                 }
             }
         }
     }
 
     fn ingest(&mut self, event: DaemonEvent) {
+        // One clock read per event: the journal must record exactly the
+        // reading the lease arm uses, or replay would re-arm differently.
+        let now = self.clock.now();
+        if self.journal.is_some() {
+            self.journal_frame(journal::event_payload(now, &event));
+        }
+        self.ingest_at(now, event);
+    }
+
+    /// The ingest body under an explicit clock reading — shared by live
+    /// ingestion and journal replay.
+    fn ingest_at(&mut self, now: u64, event: DaemonEvent) {
         self.counters.events_ingested += 1;
         let report_device = match &event {
             DaemonEvent::Report { device, .. } => Some(*device),
@@ -451,8 +778,7 @@ impl Worker {
                         }
                         self.lease_seq[device] += 1;
                         let seq = self.lease_seq[device];
-                        self.wheel
-                            .insert(self.clock.now() + ttl, TimerItem::Lease { device, seq });
+                        self.wheel.insert(now + ttl, TimerItem::Lease { device, seq });
                     }
                 }
                 None => self.counters.deltas_ingested += 1,
@@ -468,54 +794,75 @@ impl Worker {
         let mut report = PumpReport::default();
         loop {
             let now = self.clock.now().max(self.wheel.now());
+            // Every advance is journaled, the final empty one included:
+            // it moves the wheel clock, which later inserts hash against.
+            if self.journal.is_some() {
+                self.journal_frame(journal::advance_payload(now));
+            }
             let fired = self.wheel.advance(now);
             if fired.is_empty() {
                 break;
             }
-            for (_, item) in fired {
-                self.counters.timer_fires += 1;
-                report.timer_fires += 1;
-                match item {
-                    TimerItem::Replan { at } => {
-                        // Clamp a late fire forward to the service clock
-                        // so a jumped schedule cannot look non-monotone.
-                        let tick = at.max(self.service.now());
-                        let outcome = self.plan_at(tick);
-                        self.counters.replan_ticks += 1;
-                        report.epochs.push(outcome);
-                        let next = at + self.config.replan_every;
-                        self.wheel.insert(next, TimerItem::Replan { at: next });
-                    }
-                    TimerItem::Lease { device, seq } => {
-                        let renewed = self.lease_seq.get(device).copied().unwrap_or(0) != seq;
-                        let active = self.service.spec().tier_of_opt(device).is_some();
-                        if !renewed && active {
-                            self.service.expire_report(device);
-                            self.counters.lease_expiries += 1;
-                            report.lease_expiries += 1;
-                        }
-                    }
-                    TimerItem::RetireExpiry { tier } => {
-                        self.service.expire_retired(tier);
-                        self.counters.retire_expiries += 1;
-                        report.retire_expiries += 1;
-                    }
-                }
-            }
+            self.process_fired(now, fired, &mut report);
         }
         report
     }
 
+    /// Re-run one journaled wheel advance during recovery replay.
+    fn replay_advance(&mut self, to: u64) {
+        let to = to.max(self.wheel.now());
+        let fired = self.wheel.advance(to);
+        if !fired.is_empty() {
+            let mut report = PumpReport::default();
+            self.process_fired(to, fired, &mut report);
+        }
+    }
+
+    /// Process one batch of fired wheel entries at wheel time `now`.
+    fn process_fired(&mut self, now: u64, fired: Vec<(u64, TimerItem)>, report: &mut PumpReport) {
+        for (_, item) in fired {
+            self.counters.timer_fires += 1;
+            report.timer_fires += 1;
+            match item {
+                TimerItem::Replan { at } => {
+                    // Clamp a late fire forward to the service clock
+                    // so a jumped schedule cannot look non-monotone.
+                    let tick = at.max(self.service.now());
+                    let outcome = self.plan_at(tick, now);
+                    self.counters.replan_ticks += 1;
+                    report.epochs.push(outcome);
+                    let next = at + self.config.replan_every;
+                    self.wheel.insert(next, TimerItem::Replan { at: next });
+                }
+                TimerItem::Lease { device, seq } => {
+                    let renewed = self.lease_seq.get(device).copied().unwrap_or(0) != seq;
+                    let active = self.service.spec().tier_of_opt(device).is_some();
+                    if !renewed && active {
+                        self.service.expire_report(device);
+                        self.counters.lease_expiries += 1;
+                        report.lease_expiries += 1;
+                    }
+                }
+                TimerItem::RetireExpiry { tier } => {
+                    self.service.expire_retired(tier);
+                    self.counters.retire_expiries += 1;
+                    report.retire_expiries += 1;
+                }
+            }
+        }
+    }
+
     /// Flush the coalesced backlog into the service, scheduling the
-    /// retire-TTL expiry for every retirement that goes through.
-    fn flush_into_service(&mut self) -> (u64, u64) {
+    /// retire-TTL expiry for every retirement that goes through. `base`
+    /// is the wall tick retirements age from — always derived from
+    /// journaled readings so replay arms the same deadlines.
+    fn flush_into_service(&mut self, base: u64) -> (u64, u64) {
         let items = self.coalescer.flush();
         let (mut deltas, mut reports) = (0u64, 0u64);
         for item in items {
             match item {
                 CoalescedItem::Delta(delta) => {
                     if let SpecDelta::RetireTier { tier } = &delta {
-                        let base = self.wheel.now().max(self.clock.now());
                         let ttl = self.service.options().joint.fleet.retire_ttl;
                         self.wheel
                             .insert(base + ttl, TimerItem::RetireExpiry { tier: *tier });
@@ -539,11 +886,14 @@ impl Worker {
         (deltas, reports)
     }
 
-    /// Flush, then plan one epoch at `tick`. A rejected (non-monotone)
-    /// tick serves the whole epoch from last-good decisions marked
-    /// `Degraded(StaleLink)` — the daemon never panics on a bad clock.
-    fn plan_at(&mut self, tick: u64) -> EpochOutcome {
-        self.flush_into_service();
+    /// Flush (retirements aging from `base`), then plan one epoch at
+    /// `tick`. A rejected (non-monotone) tick serves the whole epoch
+    /// from last-good decisions marked `Degraded(StaleLink)` — the
+    /// daemon never panics on a bad clock.
+    fn plan_at(&mut self, tick: u64, base: u64) -> EpochOutcome {
+        self.flush_into_service(base);
+        self.plans_since_snapshot += 1;
+        self.planned_this_batch = true;
         match self.service.plan_epoch(tick) {
             Ok(decisions) => EpochOutcome {
                 tick,
@@ -584,17 +934,130 @@ impl Worker {
         out
     }
 
+    /// The full worker state as a snapshot — only meaningful at a
+    /// coalescer-empty point (every caller rotates right after a plan's
+    /// flush, or before any event arrived).
+    fn take_snapshot(&self) -> DaemonSnapshot {
+        DaemonSnapshot {
+            replan_every: self.config.replan_every,
+            lease_ttl: self.config.lease_ttl,
+            wheel_slots: self.config.wheel_slots as u64,
+            snapshot_every: self.config.snapshot_every,
+            ingest_capacity: self.config.ingest_capacity as u64,
+            service: self.service.export_image(),
+            counters: self.counters,
+            lease_seq: self.lease_seq.clone(),
+            wheel_now: self.wheel.now(),
+            wheel_entries: self.wheel.entries(),
+        }
+    }
+
+    /// Open (or rotate onto) journal file `seq`: snapshot first, then
+    /// prune older rotations. Failure degrades journaling off.
+    fn open_journal(&mut self, seq: u64) {
+        let Some(dir) = self.config.journal_dir.clone() else {
+            return;
+        };
+        let snapshot = self.take_snapshot();
+        match JournalWriter::create(&dir, seq, self.fingerprint, &snapshot) {
+            Ok((writer, bytes)) => {
+                self.journal = Some(writer);
+                self.journal_seq = seq;
+                self.journal_stats.frames += 1;
+                self.journal_stats.bytes += bytes;
+                self.journal_stats.snapshots += 1;
+                self.plans_since_snapshot = 0;
+                journal::prune_below(&dir, seq);
+            }
+            Err(_) => {
+                self.journal_stats.io_errors += 1;
+                self.journal = None;
+            }
+        }
+    }
+
+    /// Rotate after a batch that planned, once enough epochs accumulated
+    /// since the last snapshot. The planned-in-this-batch gate is the
+    /// safety argument: a plan flushes the coalescer and no event can
+    /// arrive mid-batch (the worker processes one message at a time), so
+    /// the rotation snapshot never strands coalesced-but-unflushed
+    /// events in a pruned file.
+    fn maybe_rotate(&mut self) {
+        let planned = std::mem::take(&mut self.planned_this_batch);
+        if planned
+            && self.journal.is_some()
+            && self.plans_since_snapshot >= self.config.snapshot_every
+        {
+            self.open_journal(self.journal_seq + 1);
+        }
+    }
+
+    /// The journal + backpressure counter family. Rendered on every
+    /// scrape — zeros when durability is off — so dashboards need no
+    /// conditional families.
+    fn journal_metrics(&self) -> Vec<Metric> {
+        let counter = |name, help, value| Metric {
+            name,
+            help,
+            kind: MetricKind::Counter,
+            value,
+        };
+        vec![
+            counter(
+                "fastsplit_ingest_shed_total",
+                "Events shed at the bounded ingest channel",
+                self.shed.load(Ordering::Relaxed),
+            ),
+            counter(
+                "fastsplit_journal_frames_total",
+                "Frames appended to the write-ahead journal",
+                self.journal_stats.frames,
+            ),
+            counter(
+                "fastsplit_journal_bytes_total",
+                "Bytes appended to the write-ahead journal",
+                self.journal_stats.bytes,
+            ),
+            counter(
+                "fastsplit_journal_snapshots_total",
+                "Snapshot frames written (creations + rotations)",
+                self.journal_stats.snapshots,
+            ),
+            counter(
+                "fastsplit_journal_torn_frames_total",
+                "Torn journal tails truncated at recovery",
+                self.journal_stats.torn,
+            ),
+            counter(
+                "fastsplit_journal_recoveries_total",
+                "Times this daemon state was recovered from a journal",
+                self.journal_stats.recoveries,
+            ),
+            counter(
+                "fastsplit_journal_dirty_recoveries_total",
+                "Recoveries from a journal without a drain frame",
+                self.journal_stats.dirty_recoveries,
+            ),
+            counter(
+                "fastsplit_journal_io_errors_total",
+                "Journal I/O failures (journaling degraded off)",
+                self.journal_stats.io_errors,
+            ),
+        ]
+    }
+
     fn render(&self) -> String {
         let mut all = service_metrics(&self.service);
         all.extend(self.counters.metrics());
+        all.extend(self.journal_metrics());
         render_prometheus(&all)
     }
 
     /// The drain: ingest whatever is already in the channel (shutdown
-    /// waited for in-flight sends first, so this is everything), flush
-    /// it into the service *without planning*, and snapshot the final
-    /// state. No solver work happens past this point.
-    fn drain(&mut self) -> DrainReport {
+    /// waited for in-flight sends first, so this is everything), record
+    /// the drain frame, flush into the service *without planning*, and
+    /// snapshot the final state. No solver work happens past this point.
+    fn drain(&mut self, outcome: DrainOutcome) -> DrainReport {
         while let Ok(msg) = self.rx.try_recv() {
             if let Msg::Event(event) = msg {
                 self.ingest(event);
@@ -602,7 +1065,11 @@ impl Worker {
             // Other requests at drain time are dropped; their reply
             // channels hang up and the caller sees the shutdown.
         }
-        let (flushed_deltas, flushed_reports) = self.flush_into_service();
+        let now = self.clock.now();
+        if self.journal.is_some() {
+            self.journal_frame(journal::drain_payload(now, outcome));
+        }
+        let (flushed_deltas, flushed_reports) = self.flush_into_service(self.wheel.now().max(now));
         DrainReport {
             flushed_deltas,
             flushed_reports,
@@ -698,22 +1165,24 @@ mod tests {
                     SpecDelta::AddDevice { device: 6, tier: 0 },
                     SpecDelta::RemoveDevice { device: 6 },
                 ] {
-                    assert!(sender.send(DaemonEvent::Delta(delta.clone())));
+                    assert!(sender.send(DaemonEvent::Delta(delta.clone())).is_ok());
                     reference.apply_delta(&delta);
                     raw_events += 1;
                 }
                 for ev in &step.events {
                     let delta = ev.to_delta();
-                    assert!(sender.send(DaemonEvent::Delta(delta.clone())));
+                    assert!(sender.send(DaemonEvent::Delta(delta.clone())).is_ok());
                     reference.apply_delta(&delta);
                     raw_events += 1;
                 }
                 for &(d, link) in &step.reports {
-                    assert!(sender.send(DaemonEvent::Report {
-                        device: d,
-                        link,
-                        tick,
-                    }));
+                    assert!(sender
+                        .send(DaemonEvent::Report {
+                            device: d,
+                            link,
+                            tick,
+                        })
+                        .is_ok());
                     reference.report(d, link, tick);
                 }
                 let pump = daemon.pump();
@@ -775,11 +1244,13 @@ mod tests {
         );
         let link = Link::symmetric(5e5);
         for d in 0..4 {
-            assert!(daemon.send(DaemonEvent::Report {
-                device: d,
-                link,
-                tick: 0,
-            }));
+            assert!(daemon
+                .send(DaemonEvent::Report {
+                    device: d,
+                    link,
+                    tick: 0,
+                })
+                .is_ok());
         }
         let epoch = daemon.plan_now();
         assert_eq!(epoch.decisions.len(), 4);
@@ -796,13 +1267,15 @@ mod tests {
             SpecDelta::AddDevice { device: 9, tier: 0 },
             SpecDelta::RemoveDevice { device: 9 },
         ] {
-            assert!(sender.send(DaemonEvent::Delta(delta)));
+            assert!(sender.send(DaemonEvent::Delta(delta)).is_ok());
         }
-        assert!(sender.send(DaemonEvent::Report {
-            device: 0,
-            link: Link::symmetric(6e5),
-            tick: 1,
-        }));
+        assert!(sender
+            .send(DaemonEvent::Report {
+                device: 0,
+                link: Link::symmetric(6e5),
+                tick: 1,
+            })
+            .is_ok());
 
         let report = daemon.shutdown();
         assert_eq!(
@@ -828,9 +1301,10 @@ mod tests {
         assert_eq!(report.counters.coalesced_deltas, 2);
 
         // Intake is closed: a pre-obtained sender sees the shutdown.
-        assert!(!sender.send(DaemonEvent::Delta(SpecDelta::RemoveDevice {
-            device: 0
-        })));
+        assert_eq!(
+            sender.send(DaemonEvent::Delta(SpecDelta::RemoveDevice { device: 0 })),
+            Err(SendError::Closed)
+        );
     }
 
     /// Lease-vs-staleness precedence: with an infinite staleness bound,
@@ -850,11 +1324,13 @@ mod tests {
         );
         let link = Link::symmetric(5e5);
         for d in 0..4 {
-            assert!(daemon.send(DaemonEvent::Report {
-                device: d,
-                link,
-                tick: 0,
-            }));
+            assert!(daemon
+                .send(DaemonEvent::Report {
+                    device: d,
+                    link,
+                    tick: 0,
+                })
+                .is_ok());
         }
         let mut degraded_by_tick: Vec<(u64, Vec<usize>)> = Vec::new();
         for tick in 1..=4u64 {
@@ -865,11 +1341,13 @@ mod tests {
                 if d == 2 && (tick == 1 || tick == 2) {
                     continue;
                 }
-                assert!(daemon.send(DaemonEvent::Report {
-                    device: d,
-                    link,
-                    tick,
-                }));
+                assert!(daemon
+                    .send(DaemonEvent::Report {
+                        device: d,
+                        link,
+                        tick,
+                    })
+                    .is_ok());
             }
             let pump = daemon.pump();
             for epoch in pump.epochs {
@@ -913,11 +1391,13 @@ mod tests {
         );
         let link = Link::symmetric(5e5);
         for d in 0..4 {
-            assert!(daemon.send(DaemonEvent::Report {
-                device: d,
-                link,
-                tick: 5,
-            }));
+            assert!(daemon
+                .send(DaemonEvent::Report {
+                    device: d,
+                    link,
+                    tick: 5,
+                })
+                .is_ok());
         }
         let fresh = daemon.plan_now();
         assert!(!fresh.clock_degraded);
@@ -935,11 +1415,13 @@ mod tests {
 
         clock.set(6);
         for d in 0..4 {
-            assert!(daemon.send(DaemonEvent::Report {
-                device: d,
-                link: Link::symmetric(6e5),
-                tick: 6,
-            }));
+            assert!(daemon
+                .send(DaemonEvent::Report {
+                    device: d,
+                    link: Link::symmetric(6e5),
+                    tick: 6,
+                })
+                .is_ok());
         }
         let recovered = daemon.plan_now();
         assert!(!recovered.clock_degraded);
@@ -966,14 +1448,18 @@ mod tests {
         );
         let link = Link::symmetric(5e5);
         for d in 0..4 {
-            assert!(daemon.send(DaemonEvent::Report {
-                device: d,
-                link,
-                tick: 0,
-            }));
+            assert!(daemon
+                .send(DaemonEvent::Report {
+                    device: d,
+                    link,
+                    tick: 0,
+                })
+                .is_ok());
         }
         assert_eq!(daemon.plan_now().decisions.len(), 4);
-        assert!(daemon.send(DaemonEvent::Delta(SpecDelta::RetireTier { tier: 3 })));
+        assert!(daemon
+            .send(DaemonEvent::Delta(SpecDelta::RetireTier { tier: 3 }))
+            .is_ok());
         let flushed = daemon.plan_now();
         assert_eq!(flushed.decisions.len(), 3, "tier 3's device detached");
 
@@ -984,6 +1470,50 @@ mod tests {
         let pump = daemon.pump();
         assert_eq!(pump.retire_expiries, 1, "the expiry fires on time");
         assert_eq!(daemon.counters().retire_expiries, 1);
+        daemon.shutdown();
+    }
+
+    /// The bounded ingest channel sheds instead of blocking: a full
+    /// queue returns `SendError::Backpressure` (counted), a closed one
+    /// `SendError::Closed` (not counted as a shed).
+    #[test]
+    fn ingest_backpressure_sheds_typed_and_counts() {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let shed = Arc::new(AtomicU64::new(0));
+        let sender = EventSender {
+            tx,
+            tracker: ActivityTracker::new(),
+            shed: Arc::clone(&shed),
+        };
+        let event = || DaemonEvent::Delta(SpecDelta::RemoveDevice { device: 0 });
+        assert_eq!(sender.send(event()), Ok(()));
+        assert_eq!(sender.send(event()), Err(SendError::Backpressure));
+        assert_eq!(sender.send(event()), Err(SendError::Backpressure));
+        assert_eq!(shed.load(Ordering::Relaxed), 2, "every shed is counted");
+        drop(rx);
+        assert_eq!(sender.send(event()), Err(SendError::Closed));
+        assert_eq!(
+            shed.load(Ordering::Relaxed),
+            2,
+            "a closed channel is not a shed"
+        );
+    }
+
+    /// The journal + shed families render (as zeros) even with
+    /// durability off, so dashboards need no conditional scrape.
+    #[test]
+    fn journal_and_shed_metrics_render_zero_when_durability_is_off() {
+        let daemon = PlannerDaemon::spawn(
+            spec_for("googlenet", 2),
+            DaemonConfig::default(),
+            Arc::new(SimClock::new(0)),
+        );
+        let scrape = daemon.metrics();
+        assert!(scrape.contains("fastsplit_ingest_shed_total 0\n"));
+        assert!(scrape.contains("fastsplit_journal_frames_total 0\n"));
+        assert!(scrape.contains("fastsplit_journal_recoveries_total 0\n"));
+        assert!(scrape.contains("fastsplit_journal_io_errors_total 0\n"));
+        assert_eq!(daemon.shed(), 0);
         daemon.shutdown();
     }
 }

@@ -1,0 +1,1091 @@
+//! The daemon's crash-snapshot byte codec (PR 9).
+//!
+//! A hand-rolled little-endian codec — no serde, no derive macros —
+//! turning a [`DaemonSnapshot`] (the full crash-surviving state of a
+//! `Worker`: service image, daemon counters, lease sequences, timer-wheel
+//! entries, and the daemon config itself) into bytes and back. The
+//! journal layer (`daemon::journal`) wraps these payloads in CRC-framed
+//! records; this module knows nothing about files.
+//!
+//! Design rules, all in service of the crash-recovery pin:
+//!
+//! * **Self-contained.** The snapshot carries every construction
+//!   parameter (service options nested inside the image, daemon config
+//!   fields alongside), so recovery needs nothing but the journal
+//!   directory — no config has to survive the crash out-of-band.
+//! * **Total decoding.** Every decode path returns a typed
+//!   [`DecodeError`]; corrupt input can never panic or over-allocate
+//!   (every length is bounds-checked against the remaining input before
+//!   any allocation).
+//! * **Deterministic encoding.** Field order is fixed, integers are
+//!   little-endian, floats travel as IEEE-754 bits — encoding the same
+//!   state twice yields identical bytes, which is what lets the recovery
+//!   tests compare snapshots byte-for-byte.
+
+use crate::graph::Dag;
+use crate::partition::fleet::{
+    DecisionProvenance, DecisionStats, DegradedReason, FleetImage, FleetOptions, PlanDecision,
+    SpecDelta, TierImage,
+};
+use crate::partition::joint::{JointImage, JointOptions};
+use crate::partition::service::{ServiceImage, ServiceOptions};
+use crate::partition::types::{Link, Partition};
+use crate::profiles::CostGraph;
+
+use super::ingest::DaemonEvent;
+use super::{DaemonCounters, TimerItem};
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) lookup table,
+/// built at compile time.
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 of `bytes` — the journal's frame checksum.
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// A typed decode failure: what the cursor refused and why. Corrupt
+/// journal payloads surface as these (the journal layer then treats the
+/// frame as torn).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct DecodeError(pub(crate) &'static str);
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "snapshot decode error: {}", self.0)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Byte encoder: append-only little-endian buffer.
+pub(crate) struct Enc {
+    pub(crate) buf: Vec<u8>,
+}
+
+impl Enc {
+    pub(crate) fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    pub(crate) fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub(crate) fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub(crate) fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub(crate) fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    pub(crate) fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Byte decoder: a bounds-checked cursor over an input slice. Every
+/// failure is a typed [`DecodeError`]; nothing panics on corrupt input.
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.buf.len() - self.pos < n {
+            return Err(DecodeError("unexpected end of input"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32, DecodeError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64, DecodeError> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub(crate) fn usize(&mut self) -> Result<usize, DecodeError> {
+        usize::try_from(self.u64()?).map_err(|_| DecodeError("value overflows usize"))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub(crate) fn bool(&mut self) -> Result<bool, DecodeError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(DecodeError("boolean byte is neither 0 nor 1")),
+        }
+    }
+
+    /// A collection length, sanity-bounded by the bytes still unread
+    /// (every element encodes to at least one byte), so a corrupt length
+    /// can never drive a huge allocation.
+    pub(crate) fn len(&mut self) -> Result<usize, DecodeError> {
+        let n = self.usize()?;
+        if n > self.buf.len() - self.pos {
+            return Err(DecodeError("collection length exceeds remaining input"));
+        }
+        Ok(n)
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String, DecodeError> {
+        let n = self.len()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| DecodeError("string is not UTF-8"))
+    }
+
+    /// Assert the whole input was consumed — trailing bytes mean a
+    /// corrupt or foreign payload.
+    pub(crate) fn done(&self) -> Result<(), DecodeError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(DecodeError("trailing bytes after payload"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Leaf codecs
+// ---------------------------------------------------------------------
+
+fn enc_link(e: &mut Enc, l: &Link) {
+    e.f64(l.up_bps);
+    e.f64(l.down_bps);
+}
+
+fn dec_link(d: &mut Dec) -> Result<Link, DecodeError> {
+    Ok(Link {
+        up_bps: d.f64()?,
+        down_bps: d.f64()?,
+    })
+}
+
+fn enc_bools(e: &mut Enc, v: &[bool]) {
+    e.usize(v.len());
+    for &b in v {
+        e.bool(b);
+    }
+}
+
+fn dec_bools(d: &mut Dec) -> Result<Vec<bool>, DecodeError> {
+    let n = d.len()?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(d.bool()?);
+    }
+    Ok(out)
+}
+
+fn enc_f64s(e: &mut Enc, v: &[f64]) {
+    e.usize(v.len());
+    for &x in v {
+        e.f64(x);
+    }
+}
+
+fn dec_f64s(d: &mut Dec) -> Result<Vec<f64>, DecodeError> {
+    let n = d.len()?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(d.f64()?);
+    }
+    Ok(out)
+}
+
+fn enc_partition(e: &mut Enc, p: &Partition) {
+    enc_bools(e, &p.device_set);
+    e.f64(p.delay);
+}
+
+fn dec_partition(d: &mut Dec) -> Result<Partition, DecodeError> {
+    Ok(Partition {
+        device_set: dec_bools(d)?,
+        delay: d.f64()?,
+    })
+}
+
+fn enc_cached(e: &mut Enc, cached: &Option<(Link, Partition)>) {
+    match cached {
+        None => e.u8(0),
+        Some((link, partition)) => {
+            e.u8(1);
+            enc_link(e, link);
+            enc_partition(e, partition);
+        }
+    }
+}
+
+fn dec_cached(d: &mut Dec) -> Result<Option<(Link, Partition)>, DecodeError> {
+    match d.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some((dec_link(d)?, dec_partition(d)?))),
+        _ => Err(DecodeError("bad Option tag for a cached decision")),
+    }
+}
+
+fn enc_provenance(e: &mut Enc, p: DecisionProvenance) {
+    e.u8(match p {
+        DecisionProvenance::Fresh => 0,
+        DecisionProvenance::Cached => 1,
+        DecisionProvenance::Degraded(DegradedReason::StaleLink) => 2,
+        DecisionProvenance::Degraded(DegradedReason::BudgetExceeded) => 3,
+        DecisionProvenance::Retired => 4,
+    });
+}
+
+fn dec_provenance(d: &mut Dec) -> Result<DecisionProvenance, DecodeError> {
+    Ok(match d.u8()? {
+        0 => DecisionProvenance::Fresh,
+        1 => DecisionProvenance::Cached,
+        2 => DecisionProvenance::Degraded(DegradedReason::StaleLink),
+        3 => DecisionProvenance::Degraded(DegradedReason::BudgetExceeded),
+        4 => DecisionProvenance::Retired,
+        _ => return Err(DecodeError("bad DecisionProvenance tag")),
+    })
+}
+
+fn enc_decision(e: &mut Enc, dec: &PlanDecision) {
+    e.usize(dec.device);
+    e.usize(dec.tier);
+    enc_partition(e, &dec.partition);
+    match dec.cut_layer {
+        None => e.u8(0),
+        Some(l) => {
+            e.u8(1);
+            e.usize(l);
+        }
+    }
+    e.bool(dec.stats.refreshed);
+    enc_provenance(e, dec.provenance);
+}
+
+fn dec_decision(d: &mut Dec) -> Result<PlanDecision, DecodeError> {
+    Ok(PlanDecision {
+        device: d.usize()?,
+        tier: d.usize()?,
+        partition: dec_partition(d)?,
+        cut_layer: match d.u8()? {
+            0 => None,
+            1 => Some(d.usize()?),
+            _ => return Err(DecodeError("bad Option tag for cut_layer")),
+        },
+        stats: DecisionStats {
+            refreshed: d.bool()?,
+        },
+        provenance: dec_provenance(d)?,
+    })
+}
+
+fn enc_dag(e: &mut Enc, dag: &Dag) {
+    e.usize(dag.len());
+    for v in 0..dag.len() {
+        e.str(dag.label(v));
+    }
+    e.usize(dag.edges().len());
+    for edge in dag.edges() {
+        e.usize(edge.from);
+        e.usize(edge.to);
+        e.f64(edge.weight);
+    }
+}
+
+fn dec_dag(d: &mut Dec) -> Result<Dag, DecodeError> {
+    let n = d.len()?;
+    let mut dag = Dag::new();
+    for _ in 0..n {
+        let label = d.str()?;
+        dag.add_node(label);
+    }
+    let m = d.len()?;
+    for _ in 0..m {
+        let from = d.usize()?;
+        let to = d.usize()?;
+        let weight = d.f64()?;
+        // `Dag::add_edge` asserts these; a corrupt payload must decode to
+        // a typed error, not a panic.
+        if from >= n || to >= n || from == to {
+            return Err(DecodeError("malformed DAG edge"));
+        }
+        dag.add_edge(from, to, weight);
+    }
+    Ok(dag)
+}
+
+fn enc_costs(e: &mut Enc, c: &CostGraph) {
+    enc_dag(e, &c.dag);
+    enc_f64s(e, &c.xi_d);
+    enc_f64s(e, &c.xi_s);
+    enc_f64s(e, &c.act_bytes);
+    enc_f64s(e, &c.param_bytes);
+    e.f64(c.n_loc);
+}
+
+fn dec_costs(d: &mut Dec) -> Result<CostGraph, DecodeError> {
+    Ok(CostGraph {
+        dag: dec_dag(d)?,
+        xi_d: dec_f64s(d)?,
+        xi_s: dec_f64s(d)?,
+        act_bytes: dec_f64s(d)?,
+        param_bytes: dec_f64s(d)?,
+        n_loc: d.f64()?,
+    })
+}
+
+pub(crate) fn enc_delta(e: &mut Enc, delta: &SpecDelta) {
+    match delta {
+        SpecDelta::AddTier { name, costs } => {
+            e.u8(0);
+            e.str(name);
+            enc_costs(e, costs);
+        }
+        SpecDelta::RetireTier { tier } => {
+            e.u8(1);
+            e.usize(*tier);
+        }
+        SpecDelta::AddDevice { device, tier } => {
+            e.u8(2);
+            e.usize(*device);
+            e.usize(*tier);
+        }
+        SpecDelta::RemoveDevice { device } => {
+            e.u8(3);
+            e.usize(*device);
+        }
+        SpecDelta::MigrateDevice { device, tier } => {
+            e.u8(4);
+            e.usize(*device);
+            e.usize(*tier);
+        }
+    }
+}
+
+pub(crate) fn dec_delta(d: &mut Dec) -> Result<SpecDelta, DecodeError> {
+    Ok(match d.u8()? {
+        0 => {
+            let name = d.str()?;
+            let costs = dec_costs(d)?;
+            // Tier names are `&'static str` by the spec's contract; a
+            // journaled AddTier re-leaks its name once per replay —
+            // bounded by the journal length, same as `from_image`.
+            SpecDelta::AddTier {
+                name: Box::leak(name.into_boxed_str()),
+                costs,
+            }
+        }
+        1 => SpecDelta::RetireTier { tier: d.usize()? },
+        2 => SpecDelta::AddDevice {
+            device: d.usize()?,
+            tier: d.usize()?,
+        },
+        3 => SpecDelta::RemoveDevice { device: d.usize()? },
+        4 => SpecDelta::MigrateDevice {
+            device: d.usize()?,
+            tier: d.usize()?,
+        },
+        _ => return Err(DecodeError("bad SpecDelta tag")),
+    })
+}
+
+pub(crate) fn enc_event(e: &mut Enc, event: &DaemonEvent) {
+    match event {
+        DaemonEvent::Delta(delta) => {
+            e.u8(0);
+            enc_delta(e, delta);
+        }
+        DaemonEvent::Report { device, link, tick } => {
+            e.u8(1);
+            e.usize(*device);
+            enc_link(e, link);
+            e.u64(*tick);
+        }
+    }
+}
+
+pub(crate) fn dec_event(d: &mut Dec) -> Result<DaemonEvent, DecodeError> {
+    Ok(match d.u8()? {
+        0 => DaemonEvent::Delta(dec_delta(d)?),
+        1 => DaemonEvent::Report {
+            device: d.usize()?,
+            link: dec_link(d)?,
+            tick: d.u64()?,
+        },
+        _ => return Err(DecodeError("bad DaemonEvent tag")),
+    })
+}
+
+fn enc_timer_item(e: &mut Enc, item: &TimerItem) {
+    match item {
+        TimerItem::Replan { at } => {
+            e.u8(0);
+            e.u64(*at);
+        }
+        TimerItem::Lease { device, seq } => {
+            e.u8(1);
+            e.usize(*device);
+            e.u64(*seq);
+        }
+        TimerItem::RetireExpiry { tier } => {
+            e.u8(2);
+            e.usize(*tier);
+        }
+    }
+}
+
+fn dec_timer_item(d: &mut Dec) -> Result<TimerItem, DecodeError> {
+    Ok(match d.u8()? {
+        0 => TimerItem::Replan { at: d.u64()? },
+        1 => TimerItem::Lease {
+            device: d.usize()?,
+            seq: d.u64()?,
+        },
+        2 => TimerItem::RetireExpiry { tier: d.usize()? },
+        _ => return Err(DecodeError("bad TimerItem tag")),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Options codecs
+// ---------------------------------------------------------------------
+
+fn enc_fleet_options(e: &mut Enc, o: &FleetOptions) {
+    e.bool(o.pin_inputs);
+    e.bool(o.closure_edges);
+    e.bool(o.block_reduction);
+    e.bool(o.incremental);
+    e.u64(o.retire_ttl);
+    e.u32(o.sigma_buckets_per_decade);
+}
+
+fn dec_fleet_options(d: &mut Dec) -> Result<FleetOptions, DecodeError> {
+    Ok(FleetOptions {
+        pin_inputs: d.bool()?,
+        closure_edges: d.bool()?,
+        block_reduction: d.bool()?,
+        incremental: d.bool()?,
+        retire_ttl: d.u64()?,
+        sigma_buckets_per_decade: d.u32()?,
+    })
+}
+
+fn enc_joint_options(e: &mut Enc, o: &JointOptions) {
+    e.f64(o.server_capacity);
+    enc_fleet_options(e, &o.fleet);
+}
+
+fn dec_joint_options(d: &mut Dec) -> Result<JointOptions, DecodeError> {
+    let server_capacity = d.f64()?;
+    if !(server_capacity > 0.0) {
+        return Err(DecodeError("server capacity must be positive"));
+    }
+    Ok(JointOptions {
+        server_capacity,
+        fleet: dec_fleet_options(d)?,
+    })
+}
+
+fn enc_service_options(e: &mut Enc, o: &ServiceOptions) {
+    e.u64(o.staleness_bound);
+    e.u64(o.solve_budget);
+    enc_joint_options(e, &o.joint);
+}
+
+fn dec_service_options(d: &mut Dec) -> Result<ServiceOptions, DecodeError> {
+    Ok(ServiceOptions {
+        staleness_bound: d.u64()?,
+        solve_budget: d.u64()?,
+        joint: dec_joint_options(d)?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Image codecs
+// ---------------------------------------------------------------------
+
+fn enc_tier_image(e: &mut Enc, t: &TierImage) {
+    match t {
+        TierImage::Active { solved, counters } => {
+            e.u8(0);
+            enc_cached(e, solved);
+            for &c in counters {
+                e.u64(c);
+            }
+        }
+        TierImage::Retired {
+            last,
+            ttl,
+            counters,
+        } => {
+            e.u8(1);
+            enc_cached(e, last);
+            e.u64(*ttl);
+            for &c in counters {
+                e.u64(c);
+            }
+        }
+    }
+}
+
+fn dec_counters7(d: &mut Dec) -> Result<[u64; 7], DecodeError> {
+    let mut counters = [0u64; 7];
+    for c in &mut counters {
+        *c = d.u64()?;
+    }
+    Ok(counters)
+}
+
+fn dec_tier_image(d: &mut Dec) -> Result<TierImage, DecodeError> {
+    Ok(match d.u8()? {
+        0 => TierImage::Active {
+            solved: dec_cached(d)?,
+            counters: dec_counters7(d)?,
+        },
+        1 => TierImage::Retired {
+            last: dec_cached(d)?,
+            ttl: d.u64()?,
+            counters: dec_counters7(d)?,
+        },
+        _ => return Err(DecodeError("bad TierImage tag")),
+    })
+}
+
+fn enc_fleet_image(e: &mut Enc, f: &FleetImage) {
+    e.usize(f.tier_names.len());
+    for name in &f.tier_names {
+        e.str(name);
+    }
+    e.usize(f.tier_costs.len());
+    for costs in &f.tier_costs {
+        enc_costs(e, costs);
+    }
+    enc_bools(e, &f.retired);
+    e.usize(f.tier_of_device.len());
+    for t in &f.tier_of_device {
+        match t {
+            None => e.u8(0),
+            Some(tier) => {
+                e.u8(1);
+                e.usize(*tier);
+            }
+        }
+    }
+    e.usize(f.tiers.len());
+    for t in &f.tiers {
+        enc_tier_image(e, t);
+    }
+    e.u64(f.plans);
+    e.u64(f.requests);
+    e.u64(f.spec_deltas);
+    e.u64(f.retired_decisions);
+    e.u64(f.degraded_decisions);
+    e.u64(f.quantized_requests);
+}
+
+fn dec_fleet_image(d: &mut Dec) -> Result<FleetImage, DecodeError> {
+    let n_names = d.len()?;
+    let mut tier_names = Vec::with_capacity(n_names);
+    for _ in 0..n_names {
+        tier_names.push(d.str()?);
+    }
+    let n_costs = d.len()?;
+    let mut tier_costs = Vec::with_capacity(n_costs);
+    for _ in 0..n_costs {
+        tier_costs.push(dec_costs(d)?);
+    }
+    let retired = dec_bools(d)?;
+    let n_devices = d.len()?;
+    let mut tier_of_device = Vec::with_capacity(n_devices);
+    for _ in 0..n_devices {
+        tier_of_device.push(match d.u8()? {
+            0 => None,
+            1 => Some(d.usize()?),
+            _ => return Err(DecodeError("bad Option tag for a device mapping")),
+        });
+    }
+    let n_tiers = d.len()?;
+    let mut tiers = Vec::with_capacity(n_tiers);
+    for _ in 0..n_tiers {
+        tiers.push(dec_tier_image(d)?);
+    }
+    let img = FleetImage {
+        tier_names,
+        tier_costs,
+        retired,
+        tier_of_device,
+        tiers,
+        plans: d.u64()?,
+        requests: d.u64()?,
+        spec_deltas: d.u64()?,
+        retired_decisions: d.u64()?,
+        degraded_decisions: d.u64()?,
+        quantized_requests: d.u64()?,
+    };
+    // Cross-field invariants `FleetSpec::from_parts` / `from_image` would
+    // assert — refused here as typed errors so corrupt input cannot
+    // panic the recovery path.
+    if img.tier_names.len() != img.tier_costs.len()
+        || img.tier_names.len() != img.retired.len()
+        || img.tier_names.len() != img.tiers.len()
+        || img.tier_names.is_empty()
+    {
+        return Err(DecodeError("fleet image tier tables disagree"));
+    }
+    if !img
+        .tier_of_device
+        .iter()
+        .flatten()
+        .all(|&t| t < img.tier_names.len() && !img.retired[t])
+    {
+        return Err(DecodeError("device mapped to unknown or retired tier"));
+    }
+    Ok(img)
+}
+
+fn enc_joint_image(e: &mut Enc, j: &JointImage) {
+    enc_joint_options(e, &j.options);
+    enc_fleet_image(e, &j.fleet);
+    match &j.probe {
+        None => e.u8(0),
+        Some(p) => {
+            e.u8(1);
+            enc_fleet_image(e, p);
+        }
+    }
+    e.u64(j.price_iterations);
+    e.u64(j.joint_resolves);
+    match j.last_makespan {
+        None => e.u8(0),
+        Some(m) => {
+            e.u8(1);
+            e.f64(m);
+        }
+    }
+    match j.last_congestion {
+        None => e.u8(0),
+        Some(c) => {
+            e.u8(1);
+            e.f64(c);
+        }
+    }
+}
+
+fn dec_joint_image(d: &mut Dec) -> Result<JointImage, DecodeError> {
+    Ok(JointImage {
+        options: dec_joint_options(d)?,
+        fleet: dec_fleet_image(d)?,
+        probe: match d.u8()? {
+            0 => None,
+            1 => Some(dec_fleet_image(d)?),
+            _ => return Err(DecodeError("bad Option tag for the probe image")),
+        },
+        price_iterations: d.u64()?,
+        joint_resolves: d.u64()?,
+        last_makespan: match d.u8()? {
+            0 => None,
+            1 => Some(d.f64()?),
+            _ => return Err(DecodeError("bad Option tag for last_makespan")),
+        },
+        last_congestion: match d.u8()? {
+            0 => None,
+            1 => Some(d.f64()?),
+            _ => return Err(DecodeError("bad Option tag for last_congestion")),
+        },
+    })
+}
+
+fn enc_service_image(e: &mut Enc, s: &ServiceImage) {
+    enc_service_options(e, &s.options);
+    enc_joint_image(e, &s.joint);
+    e.usize(s.reports.len());
+    for r in &s.reports {
+        match r {
+            None => e.u8(0),
+            Some((link, tick)) => {
+                e.u8(1);
+                enc_link(e, link);
+                e.u64(*tick);
+            }
+        }
+    }
+    e.usize(s.last_good.len());
+    for g in &s.last_good {
+        match g {
+            None => e.u8(0),
+            Some(decision) => {
+                e.u8(1);
+                enc_decision(e, decision);
+            }
+        }
+    }
+    enc_bools(e, &s.forced_stale);
+    e.u64(s.now);
+    e.u64(s.degraded_stale);
+    e.u64(s.degraded_budget);
+    e.u64(s.refused_reports);
+}
+
+fn dec_service_image(d: &mut Dec) -> Result<ServiceImage, DecodeError> {
+    let options = dec_service_options(d)?;
+    let joint = dec_joint_image(d)?;
+    let n_reports = d.len()?;
+    let mut reports = Vec::with_capacity(n_reports);
+    for _ in 0..n_reports {
+        reports.push(match d.u8()? {
+            0 => None,
+            1 => Some((dec_link(d)?, d.u64()?)),
+            _ => return Err(DecodeError("bad Option tag for a report slot")),
+        });
+    }
+    let n_good = d.len()?;
+    let mut last_good = Vec::with_capacity(n_good);
+    for _ in 0..n_good {
+        last_good.push(match d.u8()? {
+            0 => None,
+            1 => Some(dec_decision(d)?),
+            _ => return Err(DecodeError("bad Option tag for a last-good slot")),
+        });
+    }
+    let img = ServiceImage {
+        options,
+        joint,
+        reports,
+        last_good,
+        forced_stale: dec_bools(d)?,
+        now: d.u64()?,
+        degraded_stale: d.u64()?,
+        degraded_budget: d.u64()?,
+        refused_reports: d.u64()?,
+    };
+    if img.reports.len() != img.last_good.len() || img.reports.len() != img.forced_stale.len() {
+        return Err(DecodeError("service image per-device tables disagree"));
+    }
+    Ok(img)
+}
+
+fn enc_daemon_counters(e: &mut Enc, c: &DaemonCounters) {
+    e.u64(c.events_ingested);
+    e.u64(c.deltas_ingested);
+    e.u64(c.reports_ingested);
+    e.u64(c.rejected_events);
+    e.u64(c.coalesced_deltas);
+    e.u64(c.coalesced_reports);
+    e.u64(c.timer_fires);
+    e.u64(c.replan_ticks);
+    e.u64(c.lease_expiries);
+    e.u64(c.retire_expiries);
+    e.u64(c.clock_errors);
+}
+
+fn dec_daemon_counters(d: &mut Dec) -> Result<DaemonCounters, DecodeError> {
+    Ok(DaemonCounters {
+        events_ingested: d.u64()?,
+        deltas_ingested: d.u64()?,
+        reports_ingested: d.u64()?,
+        rejected_events: d.u64()?,
+        coalesced_deltas: d.u64()?,
+        coalesced_reports: d.u64()?,
+        timer_fires: d.u64()?,
+        replan_ticks: d.u64()?,
+        lease_expiries: d.u64()?,
+        retire_expiries: d.u64()?,
+        clock_errors: d.u64()?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// The snapshot
+// ---------------------------------------------------------------------
+
+/// The full crash-surviving state of a daemon worker at a quiescent
+/// point (coalescer empty, no fired batch in flight): the daemon config,
+/// the service image (which nests its own options, planner images and
+/// per-device tables), the daemon counters, the per-device lease
+/// sequences, and the timer wheel's clock + pending entries in canonical
+/// `(deadline, insertion seq)` order (`TimerWheel::entries`).
+pub(crate) struct DaemonSnapshot {
+    pub(crate) replan_every: u64,
+    pub(crate) lease_ttl: Option<u64>,
+    pub(crate) wheel_slots: u64,
+    pub(crate) snapshot_every: u64,
+    pub(crate) ingest_capacity: u64,
+    pub(crate) service: ServiceImage,
+    pub(crate) counters: DaemonCounters,
+    pub(crate) lease_seq: Vec<u64>,
+    pub(crate) wheel_now: u64,
+    pub(crate) wheel_entries: Vec<(u64, TimerItem)>,
+}
+
+impl DaemonSnapshot {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.replan_every);
+        match self.lease_ttl {
+            None => e.u8(0),
+            Some(ttl) => {
+                e.u8(1);
+                e.u64(ttl);
+            }
+        }
+        e.u64(self.wheel_slots);
+        e.u64(self.snapshot_every);
+        e.u64(self.ingest_capacity);
+        enc_service_image(&mut e, &self.service);
+        enc_daemon_counters(&mut e, &self.counters);
+        e.usize(self.lease_seq.len());
+        for &s in &self.lease_seq {
+            e.u64(s);
+        }
+        e.u64(self.wheel_now);
+        e.usize(self.wheel_entries.len());
+        for (deadline, item) in &self.wheel_entries {
+            e.u64(*deadline);
+            enc_timer_item(&mut e, item);
+        }
+        e.buf
+    }
+
+    pub(crate) fn decode(bytes: &[u8]) -> Result<DaemonSnapshot, DecodeError> {
+        let mut d = Dec::new(bytes);
+        let replan_every = d.u64()?;
+        if replan_every == 0 {
+            return Err(DecodeError("replan_every must be positive"));
+        }
+        let lease_ttl = match d.u8()? {
+            0 => None,
+            1 => Some(d.u64()?),
+            _ => return Err(DecodeError("bad Option tag for lease_ttl")),
+        };
+        let wheel_slots = d.u64()?;
+        if wheel_slots == 0 {
+            return Err(DecodeError("the timer wheel needs at least one slot"));
+        }
+        let snapshot_every = d.u64()?;
+        let ingest_capacity = d.u64()?;
+        let service = dec_service_image(&mut d)?;
+        let counters = dec_daemon_counters(&mut d)?;
+        let n_leases = d.len()?;
+        let mut lease_seq = Vec::with_capacity(n_leases);
+        for _ in 0..n_leases {
+            lease_seq.push(d.u64()?);
+        }
+        let wheel_now = d.u64()?;
+        let n_entries = d.len()?;
+        let mut wheel_entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let deadline = d.u64()?;
+            let item = dec_timer_item(&mut d)?;
+            wheel_entries.push((deadline, item));
+        }
+        d.done()?;
+        Ok(DaemonSnapshot {
+            replan_every,
+            lease_ttl,
+            wheel_slots,
+            snapshot_every,
+            ingest_capacity,
+            service,
+            counters,
+            lease_seq,
+            wheel_now,
+            wheel_entries,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::partition::service::PlannerService;
+    use crate::partition::fleet::FleetSpec;
+    use crate::profiles::{DeviceProfile, TrainCfg};
+
+    fn sample_service() -> PlannerService {
+        let m = models::by_name("googlenet").unwrap();
+        let spec = FleetSpec::from_fleet(&DeviceProfile::fleet_of(3), |d| {
+            CostGraph::build(&m, d, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+        });
+        let mut service = PlannerService::new(spec, ServiceOptions::default());
+        for d in 0..3 {
+            service.report(d, Link::symmetric(4e5 + d as f64 * 1e5), 0);
+        }
+        service.plan_epoch(0).unwrap();
+        service.apply_delta(&SpecDelta::RemoveDevice { device: 2 });
+        service
+    }
+
+    fn sample_snapshot() -> DaemonSnapshot {
+        DaemonSnapshot {
+            replan_every: 3,
+            lease_ttl: Some(7),
+            wheel_slots: 256,
+            snapshot_every: 32,
+            ingest_capacity: 1024,
+            service: sample_service().export_image(),
+            counters: DaemonCounters {
+                events_ingested: 12,
+                deltas_ingested: 2,
+                reports_ingested: 9,
+                rejected_events: 1,
+                coalesced_deltas: 2,
+                coalesced_reports: 8,
+                timer_fires: 5,
+                replan_ticks: 4,
+                lease_expiries: 1,
+                retire_expiries: 0,
+                clock_errors: 0,
+            },
+            lease_seq: vec![3, 1, 0, 2],
+            wheel_now: 11,
+            wheel_entries: vec![
+                (12, TimerItem::Replan { at: 12 }),
+                (13, TimerItem::Lease { device: 1, seq: 1 }),
+                (75, TimerItem::RetireExpiry { tier: 2 }),
+            ],
+        }
+    }
+
+    /// CRC-32 (IEEE) against the classic check vector.
+    #[test]
+    fn crc32_matches_the_reference_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    /// Encode → decode → re-encode is the identity on bytes: the codec
+    /// round-trips a real post-epoch service image (cached decisions,
+    /// churned spec, counters) exactly.
+    #[test]
+    fn snapshot_roundtrip_is_byte_identical() {
+        let snapshot = sample_snapshot();
+        let bytes = snapshot.encode();
+        let decoded = DaemonSnapshot::decode(&bytes).expect("valid bytes decode");
+        assert_eq!(bytes, decoded.encode(), "re-encoding must reproduce bytes");
+    }
+
+    /// Every truncation of a valid payload decodes to a typed error —
+    /// never a panic, never a bogus success.
+    #[test]
+    fn truncated_snapshots_fail_typed() {
+        let bytes = sample_snapshot().encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                DaemonSnapshot::decode(&bytes[..cut]).is_err(),
+                "a {cut}-byte prefix of {} must not decode",
+                bytes.len()
+            );
+        }
+    }
+
+    /// Events and deltas round-trip through the frame-payload codec.
+    #[test]
+    fn event_roundtrip_covers_every_variant() {
+        let m = models::by_name("googlenet").unwrap();
+        let costs = CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        );
+        let events = [
+            DaemonEvent::Delta(SpecDelta::AddTier {
+                name: "tier-x",
+                costs,
+            }),
+            DaemonEvent::Delta(SpecDelta::RetireTier { tier: 1 }),
+            DaemonEvent::Delta(SpecDelta::AddDevice { device: 5, tier: 0 }),
+            DaemonEvent::Delta(SpecDelta::RemoveDevice { device: 5 }),
+            DaemonEvent::Delta(SpecDelta::MigrateDevice { device: 2, tier: 1 }),
+            DaemonEvent::Report {
+                device: 3,
+                link: Link {
+                    up_bps: 1.5e5,
+                    down_bps: 2.5e5,
+                },
+                tick: 42,
+            },
+        ];
+        for event in &events {
+            let mut e = Enc::new();
+            enc_event(&mut e, event);
+            let mut d = Dec::new(&e.buf);
+            let back = dec_event(&mut d).expect("valid event decodes");
+            d.done().expect("event payload fully consumed");
+            let mut e2 = Enc::new();
+            enc_event(&mut e2, &back);
+            assert_eq!(e.buf, e2.buf, "event re-encoding must reproduce bytes");
+        }
+    }
+
+    /// Unknown tags are refused with typed errors.
+    #[test]
+    fn bad_tags_are_refused() {
+        let mut d = Dec::new(&[9]);
+        assert!(dec_event(&mut d).is_err());
+        let mut d = Dec::new(&[7]);
+        assert!(dec_timer_item(&mut d).is_err());
+        let mut d = Dec::new(&[5]);
+        assert!(dec_provenance(&mut d).is_err());
+        // A boolean byte that is neither 0 nor 1 is corrupt, not truthy.
+        let mut d = Dec::new(&[2]);
+        assert!(d.bool().is_err());
+    }
+}

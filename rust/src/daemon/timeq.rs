@@ -137,6 +137,25 @@ impl<T> TimerWheel<T> {
     pub fn now(&self) -> u64 {
         self.now
     }
+
+    /// Every pending entry as `(deadline, item)`, sorted by
+    /// `(deadline, insertion seq)` — the same order [`TimerWheel::advance`]
+    /// would fire them in. Re-inserting the list in this order into a
+    /// fresh wheel at the same `now` reproduces the firing schedule
+    /// exactly (new seqs are assigned ascending, so ties keep their
+    /// relative order). This is the daemon snapshot's view of the wheel.
+    pub(crate) fn entries(&self) -> Vec<(u64, T)>
+    where
+        T: Clone,
+    {
+        let mut all: Vec<(u64, u64, T)> = self
+            .slots
+            .iter()
+            .flat_map(|bucket| bucket.iter().map(|e| (e.deadline, e.seq, e.item.clone())))
+            .collect();
+        all.sort_by_key(|&(deadline, seq, _)| (deadline, seq));
+        all.into_iter().map(|(d, _, item)| (d, item)).collect()
+    }
 }
 
 #[cfg(test)]

@@ -742,6 +742,71 @@ impl FleetSpec {
             panic!("malformed churn event: {e}");
         }
     }
+
+    /// A stable 64-bit fingerprint of the *model/server shape* this fleet
+    /// plans for: an FNV-1a fold over exactly the fields
+    /// `assert_shared_shape` proves identical across every tier — layer
+    /// count, DAG topology (edge endpoints), activation/parameter bytes,
+    /// server compute costs, and N_loc. Fleet membership (device slots,
+    /// tier count, retirement flags) and per-tier ξ_D deliberately do
+    /// **not** enter the hash: churn events recorded in a journal tail —
+    /// including `AddTier` — must not invalidate the journal header's
+    /// fingerprint, while a journal recorded against a different model or
+    /// server must be refused at recovery (`daemon::journal`'s
+    /// `ForeignModel` contract).
+    pub fn fingerprint(&self) -> u64 {
+        fn fold(h: &mut u64, v: u64) {
+            for byte in v.to_le_bytes() {
+                *h ^= byte as u64;
+                *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        let c = &self.tiers[0].1;
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+        fold(&mut h, c.len() as u64);
+        fold(&mut h, c.dag.num_edges() as u64);
+        for e in c.dag.edges() {
+            fold(&mut h, e.from as u64);
+            fold(&mut h, e.to as u64);
+        }
+        for &a in &c.act_bytes {
+            fold(&mut h, a.to_bits());
+        }
+        for &k in &c.param_bytes {
+            fold(&mut h, k.to_bits());
+        }
+        for &s in &c.xi_s {
+            fold(&mut h, s.to_bits());
+        }
+        fold(&mut h, c.n_loc.to_bits());
+        h
+    }
+
+    /// Rebuild a spec from recovered parts — the `daemon::snapshot`
+    /// decoder's constructor. Unlike [`FleetSpec::new`] this can express
+    /// retired tiers and departed device slots (states only reachable
+    /// through churn); the membership invariants are asserted the same
+    /// way.
+    pub(crate) fn from_parts(
+        tiers: Vec<(&'static str, CostGraph)>,
+        retired: Vec<bool>,
+        tier_of_device: Vec<Option<usize>>,
+    ) -> FleetSpec {
+        assert!(!tiers.is_empty(), "a fleet needs at least one tier");
+        assert_eq!(tiers.len(), retired.len(), "one retire flag per tier");
+        assert!(
+            tier_of_device
+                .iter()
+                .flatten()
+                .all(|&t| t < tiers.len() && !retired[t]),
+            "device mapped to unknown or retired tier"
+        );
+        FleetSpec {
+            tiers,
+            retired,
+            tier_of_device,
+        }
+    }
 }
 
 /// One device's planning request for the current epoch.
@@ -1972,6 +2037,173 @@ impl FleetPlanner {
     pub(crate) fn is_reduced(&self) -> bool {
         self.reduction.is_some()
     }
+
+    /// Export the crash-surviving state of this planner (see
+    /// [`FleetImage`]); the byte codec lives in `daemon::snapshot`.
+    pub(crate) fn export_image(&self) -> FleetImage {
+        let tiers = self
+            .tiers
+            .iter()
+            .map(|entry| match entry {
+                TierEntry::Active(t) => TierImage::Active {
+                    solved: t.solved.clone(),
+                    counters: [
+                        t.refreshes,
+                        t.flow_solves,
+                        t.linear_scans,
+                        t.incremental_solves,
+                        t.repair_pushes,
+                        t.augment_rounds,
+                        t.fallback_cold_solves,
+                    ],
+                },
+                TierEntry::Retired(t) => TierImage::Retired {
+                    last: t.last.clone(),
+                    ttl: t.ttl,
+                    counters: [
+                        t.refreshes,
+                        t.flow_solves,
+                        t.linear_scans,
+                        t.incremental_solves,
+                        t.repair_pushes,
+                        t.augment_rounds,
+                        t.fallback_cold_solves,
+                    ],
+                },
+            })
+            .collect();
+        FleetImage {
+            tier_names: self.spec.tiers.iter().map(|(n, _)| n.to_string()).collect(),
+            tier_costs: self.spec.tiers.iter().map(|(_, c)| c.clone()).collect(),
+            retired: self.spec.retired.clone(),
+            tier_of_device: self.spec.tier_of_device.clone(),
+            tiers,
+            plans: self.plans,
+            requests: self.requests,
+            spec_deltas: self.spec_deltas,
+            retired_decisions: self.retired_decisions,
+            degraded_decisions: self.degraded_decisions,
+            quantized_requests: self.quantized_requests,
+        }
+    }
+
+    /// Rebuild a planner from a recovered image: reconstruct the spec
+    /// (tier names live for the process lifetime — one bounded
+    /// `Box::leak` per recovery, mirroring the `&'static str` tier-name
+    /// contract), run the normal construction — reduction, shapes and
+    /// prototype networks are deterministic functions of spec + options —
+    /// then patch in the archived decisions, retirements and counters.
+    /// Flow state restarts cold (`has_flow` false): under the engine
+    /// configuration the recovery contract pins
+    /// ([`FleetOptions::bit_identical`], incremental reuse off) that is
+    /// not observable in any decision or counter.
+    pub(crate) fn from_image(img: FleetImage, options: FleetOptions) -> FleetPlanner {
+        let FleetImage {
+            tier_names,
+            tier_costs,
+            retired,
+            tier_of_device,
+            tiers: tier_images,
+            plans,
+            requests,
+            spec_deltas,
+            retired_decisions,
+            degraded_decisions,
+            quantized_requests,
+        } = img;
+        let tiers: Vec<(&'static str, CostGraph)> = tier_names
+            .into_iter()
+            .zip(tier_costs)
+            .map(|(name, costs)| {
+                let name: &'static str = Box::leak(name.into_boxed_str());
+                (name, costs)
+            })
+            .collect();
+        let spec = FleetSpec::from_parts(tiers, retired, tier_of_device);
+        let mut planner = FleetPlanner::with_options(spec, options);
+        assert_eq!(
+            planner.tiers.len(),
+            tier_images.len(),
+            "image tier count matches its own spec"
+        );
+        for (entry, image) in planner.tiers.iter_mut().zip(tier_images) {
+            match image {
+                TierImage::Active { solved, counters } => {
+                    let t = entry
+                        .active_mut()
+                        .expect("spec marked this tier live, so construction built it Active");
+                    t.solved = solved;
+                    t.refreshes = counters[0];
+                    t.flow_solves = counters[1];
+                    t.linear_scans = counters[2];
+                    t.incremental_solves = counters[3];
+                    t.repair_pushes = counters[4];
+                    t.augment_rounds = counters[5];
+                    t.fallback_cold_solves = counters[6];
+                }
+                TierImage::Retired { last, ttl, counters } => {
+                    *entry = TierEntry::Retired(RetiredTier {
+                        last,
+                        ttl,
+                        refreshes: counters[0],
+                        flow_solves: counters[1],
+                        linear_scans: counters[2],
+                        incremental_solves: counters[3],
+                        repair_pushes: counters[4],
+                        augment_rounds: counters[5],
+                        fallback_cold_solves: counters[6],
+                    });
+                }
+            }
+        }
+        planner.plans = plans;
+        planner.requests = requests;
+        planner.spec_deltas = spec_deltas;
+        planner.retired_decisions = retired_decisions;
+        planner.degraded_decisions = degraded_decisions;
+        planner.quantized_requests = quantized_requests;
+        planner
+    }
+}
+
+/// Plain-data image of one tier slot of a [`FleetPlanner`]: the part of a
+/// tier that must survive a crash — the cached λ=1 decision (or the
+/// retired archive and its TTL) plus the tier's lifetime counters, in
+/// [`FleetStats`] field order (refreshes, flow_solves, linear_scans,
+/// incremental_solves, repair_pushes, augment_rounds,
+/// fallback_cold_solves). Flow networks, scratch buffers and SoA vectors
+/// are deliberately absent: they are deterministic functions of the spec
+/// and options and are rebuilt cold by [`FleetPlanner::from_image`].
+pub(crate) enum TierImage {
+    Active {
+        solved: Option<(Link, Partition)>,
+        counters: [u64; 7],
+    },
+    Retired {
+        last: Option<(Link, Partition)>,
+        ttl: u64,
+        counters: [u64; 7],
+    },
+}
+
+/// Plain-data image of a whole [`FleetPlanner`] for the daemon's crash
+/// snapshots: the spec's parts, every tier's [`TierImage`], and the
+/// engine-global counters — everything [`FleetPlanner::from_image`] needs
+/// to rebuild a planner whose observable behavior (decisions,
+/// [`FleetStats`], metrics) continues bit-identically. The byte codec
+/// lives in `daemon::snapshot`.
+pub(crate) struct FleetImage {
+    pub(crate) tier_names: Vec<String>,
+    pub(crate) tier_costs: Vec<CostGraph>,
+    pub(crate) retired: Vec<bool>,
+    pub(crate) tier_of_device: Vec<Option<usize>>,
+    pub(crate) tiers: Vec<TierImage>,
+    pub(crate) plans: u64,
+    pub(crate) requests: u64,
+    pub(crate) spec_deltas: u64,
+    pub(crate) retired_decisions: u64,
+    pub(crate) degraded_decisions: u64,
+    pub(crate) quantized_requests: u64,
 }
 
 /// The SoA layout shares `base[]`/`bw_scale[]` across tiers, which is only

@@ -77,8 +77,8 @@
 //! counters included — which is the pinned ∞-capacity contract.
 
 use super::fleet::{
-    DecisionProvenance, DecisionStats, FleetOptions, FleetPlanner, FleetSpec, FleetStats,
-    PlanDecision, PlanRequest, SpecDelta, SpecError,
+    DecisionProvenance, DecisionStats, FleetImage, FleetOptions, FleetPlanner, FleetSpec,
+    FleetStats, PlanDecision, PlanRequest, SpecDelta, SpecError,
 };
 use super::types::{Link, Partition, Problem};
 use crate::graph::enumerate_lower_sets;
@@ -806,6 +806,66 @@ impl JointPlanner {
     pub fn invalidate(&mut self) {
         self.fleet.invalidate();
     }
+
+    /// Export the crash-surviving state of this planner (see
+    /// [`JointImage`]); the byte codec lives in `daemon::snapshot`.
+    pub(crate) fn export_image(&self) -> JointImage {
+        JointImage {
+            options: self.options,
+            fleet: self.fleet.export_image(),
+            probe: self.probe.as_ref().map(|p| p.export_image()),
+            price_iterations: self.price_iterations,
+            joint_resolves: self.joint_resolves,
+            last_makespan: self.last_makespan,
+            last_congestion: self.last_congestion,
+        }
+    }
+
+    /// Rebuild a planner from a recovered image. The λ-probe sibling is
+    /// rebuilt exactly when the image carried one, with the same derived
+    /// options the lazy build uses (`block_reduction: false` over the main
+    /// engine's switches), so its folded counters — and the question of
+    /// whether a future congested epoch triggers the lazy build — continue
+    /// bit-identically across the crash.
+    pub(crate) fn from_image(img: JointImage) -> JointPlanner {
+        let options = img.options;
+        assert!(
+            options.server_capacity > 0.0,
+            "server capacity must be positive"
+        );
+        JointPlanner {
+            fleet: FleetPlanner::from_image(img.fleet, options.fleet),
+            probe: img.probe.map(|p| {
+                FleetPlanner::from_image(
+                    p,
+                    FleetOptions {
+                        block_reduction: false,
+                        ..options.fleet
+                    },
+                )
+            }),
+            options,
+            price_iterations: img.price_iterations,
+            joint_resolves: img.joint_resolves,
+            last_makespan: img.last_makespan,
+            last_congestion: img.last_congestion,
+        }
+    }
+}
+
+/// Plain-data image of a [`JointPlanner`] for the daemon's crash
+/// snapshots: both engines' [`FleetImage`]s (the probe's only when the
+/// lazy build has happened), the joint-level counters, and the last
+/// epoch's observables. Options ride along so recovery is self-contained.
+/// The byte codec lives in `daemon::snapshot`.
+pub(crate) struct JointImage {
+    pub(crate) options: JointOptions,
+    pub(crate) fleet: FleetImage,
+    pub(crate) probe: Option<FleetImage>,
+    pub(crate) price_iterations: u64,
+    pub(crate) joint_resolves: u64,
+    pub(crate) last_makespan: Option<f64>,
+    pub(crate) last_congestion: Option<f64>,
 }
 
 #[cfg(test)]

@@ -524,6 +524,61 @@ impl PlannerService {
     pub fn last_good(&self, device: usize) -> Option<&PlanDecision> {
         self.last_good.get(device).and_then(|d| d.as_ref())
     }
+
+    /// Export the crash-surviving state of this service (see
+    /// [`ServiceImage`]); the byte codec lives in `daemon::snapshot`.
+    pub(crate) fn export_image(&self) -> ServiceImage {
+        ServiceImage {
+            options: self.options,
+            joint: self.planner.export_image(),
+            reports: self.reports.clone(),
+            last_good: self.last_good.clone(),
+            forced_stale: self.forced_stale.clone(),
+            now: self.now,
+            degraded_stale: self.degraded_stale,
+            degraded_budget: self.degraded_budget,
+            refused_reports: self.refused_reports,
+        }
+    }
+
+    /// Rebuild a service from a recovered image. The policy comes out of
+    /// the image itself (recovery is self-contained — no caller-side
+    /// config has to survive the crash), the planner is rebuilt through
+    /// [`JointPlanner::from_image`], and the inbox / last-good / lease
+    /// state continues verbatim.
+    pub(crate) fn from_image(img: ServiceImage) -> PlannerService {
+        let n = img.reports.len();
+        assert_eq!(n, img.last_good.len(), "one last-good slot per device");
+        assert_eq!(n, img.forced_stale.len(), "one lease flag per device");
+        PlannerService {
+            planner: JointPlanner::from_image(img.joint),
+            options: img.options,
+            reports: img.reports,
+            last_good: img.last_good,
+            forced_stale: img.forced_stale,
+            now: img.now,
+            degraded_stale: img.degraded_stale,
+            degraded_budget: img.degraded_budget,
+            refused_reports: img.refused_reports,
+        }
+    }
+}
+
+/// Plain-data image of a [`PlannerService`] for the daemon's crash
+/// snapshots: the policy, the wrapped [`JointPlanner`]'s image, and every
+/// per-device table (report inbox, last-good decisions, forced-stale
+/// lease flags) plus the service clock and degradation counters. The byte
+/// codec lives in `daemon::snapshot`.
+pub(crate) struct ServiceImage {
+    pub(crate) options: ServiceOptions,
+    pub(crate) joint: super::joint::JointImage,
+    pub(crate) reports: Vec<Option<(Link, u64)>>,
+    pub(crate) last_good: Vec<Option<PlanDecision>>,
+    pub(crate) forced_stale: Vec<bool>,
+    pub(crate) now: u64,
+    pub(crate) degraded_stale: u64,
+    pub(crate) degraded_budget: u64,
+    pub(crate) refused_reports: u64,
 }
 
 #[cfg(test)]

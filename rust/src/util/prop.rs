@@ -413,6 +413,56 @@ pub fn churn_script(
     ChurnScript { ticks: out }
 }
 
+/// PR 9's crash-injection view of a [`ChurnScript`]: the same seeded
+/// scenario plus the resume arithmetic the recovery harness needs. The
+/// daemon journals every ingested event, so "how far did the crashed run
+/// get" is an event count; [`CrashScript::resume_position`] maps that
+/// count back to the first undelivered event under the canonical
+/// delivery order (each tick's churn deltas first, then its reports).
+#[derive(Clone, Debug)]
+pub struct CrashScript {
+    pub script: ChurnScript,
+}
+
+impl CrashScript {
+    pub fn new(script: ChurnScript) -> CrashScript {
+        CrashScript { script }
+    }
+
+    /// Events delivered per tick under the canonical order (all churn
+    /// deltas, then all reports).
+    pub fn events_per_tick(&self) -> Vec<usize> {
+        self.script
+            .ticks
+            .iter()
+            .map(|t| t.events.len() + t.reports.len())
+            .collect()
+    }
+
+    /// Total events the full script delivers.
+    pub fn total_events(&self) -> u64 {
+        self.events_per_tick().iter().map(|&n| n as u64).sum()
+    }
+
+    /// Where a run that consumed `consumed` events stopped: the
+    /// `(tick, within-tick index)` of the first undelivered event.
+    /// Zero-event ticks are skipped (there is nothing to deliver in
+    /// them); consuming the whole script yields `(ticks.len(), 0)`.
+    /// Callers resuming a crashed run must still re-pump the ticks
+    /// before the returned position — the event count alone cannot say
+    /// how far the crashed run's *pumping* got, only its delivery.
+    pub fn resume_position(&self, consumed: u64) -> (usize, usize) {
+        let mut remaining = consumed;
+        for (tick, &n) in self.events_per_tick().iter().enumerate() {
+            if remaining < n as u64 {
+                return (tick, remaining as usize);
+            }
+            remaining -= n as u64;
+        }
+        (self.script.ticks.len(), 0)
+    }
+}
+
 /// Assert the stale-σ envelope of a degraded decision (the PR-6 cost
 /// contract; derivation in PERF.md "PR 6"): for a fixed cut `x`, Eq. (7)
 /// delay is affine in σ = 1/R_up + 1/R_down — `T(x, σ) = C(x) + B(x)·σ`
@@ -680,6 +730,29 @@ mod tests {
                     assert_eq!(link, step.true_links[d], "reports are truthful");
                 }
             }
+        });
+    }
+
+    /// Every prefix length of the event stream maps to the position of
+    /// the first undelivered event, and the full stream maps past the
+    /// last tick — the arithmetic the PR 9 crash-recovery harness
+    /// resumes runs with.
+    #[test]
+    fn crash_script_resume_positions_partition_the_event_stream() {
+        for_all("crash-script-resume", 8, |rng| {
+            let script = CrashScript::new(churn_script(rng, 3, 5, 8, 0.5, 0.4));
+            let per_tick = script.events_per_tick();
+            assert_eq!(per_tick.len(), 8);
+            let mut consumed = 0u64;
+            for (tick, &n) in per_tick.iter().enumerate() {
+                for within in 0..n {
+                    assert_eq!(script.resume_position(consumed), (tick, within));
+                    consumed += 1;
+                }
+            }
+            assert_eq!(consumed, script.total_events());
+            assert_eq!(script.resume_position(consumed), (8, 0));
+            assert_eq!(script.resume_position(consumed + 5), (8, 0));
         });
     }
 

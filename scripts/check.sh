@@ -53,6 +53,27 @@ if [[ $fast -eq 0 ]]; then
   PALLAS_TEST_SEED=1 cargo test -q --release daemon
   PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release daemon
 
+  # Durability lane (PR 9): the write-ahead-journal suite — a seeded
+  # crash harness kills the daemon at every frame boundary of a churn
+  # script and demands bit-identical recovery from disk; corruption fuzz
+  # (bit-flips / truncations) must recover a prefix or refuse typed,
+  # never panic; cross-version and foreign-model journals are refused
+  # typed. Both seeds, both feature configs (serial here, parallel
+  # below). Contracts: RESILIENCE.md "Durability contracts".
+  echo "==> journal crash-recovery suite under two fixed seeds"
+  PALLAS_TEST_SEED=1 cargo test -q --release journal
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release journal
+
+  # End-to-end recovery through the CLI: simulate with a journal
+  # directory, crash the daemon mirror, recover from disk, and verify
+  # the recovered scrape — the command exits non-zero on divergence.
+  echo "==> fastsplit simulate --journal-dir (crash/recover demo)"
+  journal_dir="$(mktemp -d)"
+  cargo run --release -q -- simulate --model googlenet --method proposed \
+    --band mmwave --condition normal --epochs 6 --devices 8 \
+    --journal-dir "$journal_dir"
+  rm -rf "$journal_dir"
+
   # Scale lane (PR 8): the σ-quantizer suite (bucket-bound property over
   # the seeded zoo, boundary/sub-resolution edge cases) and the sharded
   # planner pins (bit-identical to the flat engine with quantization off,
@@ -78,6 +99,10 @@ if [[ $fast -eq 0 ]]; then
   echo "==> daemon suite under two fixed seeds (features parallel)"
   PALLAS_TEST_SEED=1 cargo test -q --release --features parallel daemon
   PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel daemon
+
+  echo "==> journal crash-recovery suite under two fixed seeds (features parallel)"
+  PALLAS_TEST_SEED=1 cargo test -q --release --features parallel journal
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel journal
 
   echo "==> quantizer + sharded suites under two fixed seeds (features parallel)"
   PALLAS_TEST_SEED=1 cargo test -q --release --features parallel quantiz
