@@ -1,0 +1,242 @@
+//! Benchmark: PR-10 topology planners — K-segment splits over relay paths
+//! (`PathPlanner::plan` at 2/3/4 hops) and device→server assignment over
+//! multi-server fleets (`MultiServerPlanner::plan` at 2/4 servers), each
+//! timed as the per-epoch decision under σ-drifting links.
+//!
+//! ```sh
+//! cargo bench --bench multihop [-- filter] [--quick] [--smoke]
+//! ```
+//!
+//! Correctness gates before timing (both seeded from PALLAS_TEST_SEED and
+//! echoing base + derived seed on failure, the harness's replay-parity
+//! contract): (1) on an enumerable chain model the K-segment plan matches
+//! the brute-force nested-tuple oracle at 2 and 3 hops; (2) on a 3-device
+//! fleet with two servers the assignment makespan matches the brute-force
+//! assignment oracle. A full run writes `BENCH_PR10.json` (override with
+//! `FASTSPLIT_MULTIHOP_OUT`, disable with `FASTSPLIT_MULTIHOP_OUT=-`);
+//! `--smoke` is the CI fast mode: tiny windows, no JSON.
+
+use fastsplit::partition::{
+    oracle_multi_server_makespan, oracle_path_delay, FleetSpec, Link, MultiServerPlanner,
+    PathPlanner, PathSpec, PlanRequest, Problem,
+};
+use fastsplit::profiles::{CostGraph, DeviceProfile, TrainCfg};
+use fastsplit::util::bench::{BenchConfig, Bencher};
+use fastsplit::util::json::Json;
+use fastsplit::util::prop::{assert_fleet_cost_equal, fading_walk};
+use fastsplit::util::rng::Rng;
+use std::time::Duration;
+
+const MODEL: &str = "googlenet";
+
+fn costs_for(model: &str, device: &DeviceProfile) -> CostGraph {
+    let m = fastsplit::models::by_name(model).unwrap();
+    CostGraph::build(
+        &m,
+        device,
+        &DeviceProfile::rtx_a6000(),
+        &TrainCfg::default(),
+    )
+}
+
+fn spec_for(model: &str, devices: usize) -> FleetSpec {
+    let fleet = DeviceProfile::fleet_of(devices);
+    FleetSpec::from_fleet(&fleet, |d| costs_for(model, d))
+}
+
+fn random_link(rng: &mut Rng) -> Link {
+    Link {
+        up_bps: rng.range(1e5, 1e7),
+        down_bps: rng.range(1e5, 1e7),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = if smoke {
+        Bencher::with_config(BenchConfig {
+            measure_time: Duration::from_millis(40),
+            warmup_time: Duration::from_millis(10),
+            max_samples: 200,
+        })
+    } else {
+        Bencher::from_env()
+    };
+
+    let base_seed = fastsplit::util::rng::test_seed();
+
+    // Gate 1: nested-tuple oracle pin for the path planner on a chain
+    // model (small lower-set lattice, so the odometer is cheap).
+    {
+        let gate_seed = base_seed ^ 0x70_A7;
+        let mut rng = Rng::new(gate_seed);
+        let costs = costs_for("lenet5", &DeviceProfile::jetson_tx2());
+        for hops in [2usize, 3] {
+            let mut planner = PathPlanner::new(PathSpec::relayed(&costs, hops - 1));
+            for draw in 0..2 {
+                let links: Vec<Link> = (0..hops).map(|_| random_link(&mut rng)).collect();
+                let plan = planner.plan(&links);
+                let oracle = oracle_path_delay(planner.spec(), &links);
+                assert_fleet_cost_equal(
+                    plan.delay,
+                    oracle,
+                    &format!(
+                        "bench gate {hops}-hop draw {draw} (gate seed {gate_seed}, \
+                         base seed {base_seed}; replay with PALLAS_TEST_SEED={base_seed})"
+                    ),
+                );
+            }
+        }
+    }
+
+    // Gate 2: assignment-oracle pin for the multi-server planner on a
+    // 3-device fleet with two unequal servers (8 assignments).
+    {
+        let gate_seed = base_seed ^ 0xA5_16;
+        let mut rng = Rng::new(gate_seed);
+        let spec = spec_for("block-residual", 3);
+        let capacities = vec![0.6, 1.5];
+        let mut planner = MultiServerPlanner::with_capacities(spec.clone(), capacities.clone());
+        let links: Vec<Link> = (0..3).map(|_| random_link(&mut rng)).collect();
+        let requests: Vec<PlanRequest> = (0..3)
+            .map(|d| PlanRequest {
+                device: d,
+                tier: spec.tier_of(d),
+                link: links[d],
+            })
+            .collect();
+        let _ = planner.plan(&requests);
+        let problems: Vec<Problem> = (0..3)
+            .map(|d| Problem::new(spec.tier_costs(spec.tier_of(d)), links[d]))
+            .collect();
+        let oracle = oracle_multi_server_makespan(&problems, &capacities);
+        assert_fleet_cost_equal(
+            planner.makespan().unwrap(),
+            oracle,
+            &format!(
+                "bench gate 2-server assignment (gate seed {gate_seed}, \
+                 base seed {base_seed}; replay with PALLAS_TEST_SEED={base_seed})"
+            ),
+        );
+    }
+
+    let mut rows: Vec<Json> = Vec::new();
+
+    // Sweep 1: per-epoch K-segment decisions at growing path lengths,
+    // every hop's link σ-drifting per epoch.
+    for hops in [2usize, 3, 4] {
+        let costs = costs_for(MODEL, &DeviceProfile::jetson_tx2());
+        let mut planner = PathPlanner::new(PathSpec::relayed(&costs, hops - 1));
+        let mut rng = Rng::new(0x70_90 ^ hops as u64);
+        let mut links: Vec<Link> = (0..hops)
+            .map(|_| Link::symmetric(4e5 * hops as f64))
+            .collect();
+        let before = b.results().len();
+        b.bench(&format!("multihop/{MODEL}/{hops}hop/epoch"), || {
+            for l in links.iter_mut() {
+                *l = fading_walk(&mut rng, *l, 1, 0.95, 1.05)[0];
+            }
+            planner.plan(&links)
+        });
+        let mean = (b.results().len() > before).then(|| b.results()[before].summary.mean);
+        let s = planner.stats();
+        assert!(
+            planner.solves() > 0 && s.flow_solves + s.linear_scans > 0,
+            "{hops}-hop sweep never solved a stage"
+        );
+        if let Some(mean) = mean {
+            println!(
+                "multihop/{hops}hop: {mean:.3e}s/epoch, {} plans, {} dp transitions",
+                planner.solves(),
+                s.dp_transitions,
+            );
+            rows.push(Json::obj(vec![
+                ("sweep", Json::str("multihop")),
+                ("hops", Json::num(hops as f64)),
+                ("epoch_mean_s", Json::num(mean)),
+                ("plans", Json::num(planner.solves() as f64)),
+                ("dp_transitions", Json::num(s.dp_transitions as f64)),
+            ]));
+        }
+    }
+
+    // Sweep 2: per-epoch assignment decisions at growing server counts
+    // over a 6-device fleet (2 servers enumerable, 4 servers local
+    // search), per-tier links σ-drifting per epoch.
+    for servers in [2usize, 4] {
+        let devices = 6;
+        let mut planner =
+            MultiServerPlanner::with_capacities(spec_for(MODEL, devices), vec![0.5; servers]);
+        let num_tiers = planner.spec().num_tiers();
+        let mut rng = Rng::new(0xA5_90 ^ servers as u64);
+        let mut tier_links: Vec<Link> = (0..num_tiers)
+            .map(|t| Link::symmetric(3e5 * (1.0 + t as f64)))
+            .collect();
+        let before = b.results().len();
+        b.bench(&format!("assign/{MODEL}/{devices}dev/{servers}srv/epoch"), || {
+            for l in tier_links.iter_mut() {
+                *l = fading_walk(&mut rng, *l, 1, 0.95, 1.05)[0];
+            }
+            let reqs = planner.spec().requests(|t| tier_links[t]);
+            planner.plan(&reqs)
+        });
+        let mean = (b.results().len() > before).then(|| b.results()[before].summary.mean);
+        let s = planner.stats();
+        assert!(
+            s.inner_makespan_solves > 0,
+            "{servers}-server sweep never scored an assignment"
+        );
+        if let Some(mean) = mean {
+            let plans = s.plans.max(1);
+            println!(
+                "assign/{servers}srv: {mean:.3e}s/epoch, {:.1} inner solves/epoch, \
+                 {} assignment moves, makespan {:.3}s",
+                s.inner_makespan_solves as f64 / plans as f64,
+                s.assignment_moves,
+                planner.makespan().unwrap_or(0.0),
+            );
+            rows.push(Json::obj(vec![
+                ("sweep", Json::str("assign")),
+                ("devices", Json::num(devices as f64)),
+                ("servers", Json::num(servers as f64)),
+                ("epoch_mean_s", Json::num(mean)),
+                (
+                    "inner_makespan_solves_per_epoch",
+                    Json::num(s.inner_makespan_solves as f64 / plans as f64),
+                ),
+                ("assignment_moves", Json::num(s.assignment_moves as f64)),
+                ("last_makespan_s", Json::num(planner.makespan().unwrap_or(0.0))),
+            ]));
+        }
+    }
+    b.finish();
+
+    if smoke {
+        println!("smoke mode: skipping BENCH_PR10.json");
+        return;
+    }
+    let out =
+        std::env::var("FASTSPLIT_MULTIHOP_OUT").unwrap_or_else(|_| "BENCH_PR10.json".into());
+    if out != "-" && !rows.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("multihop")),
+            ("measured", Json::Bool(true)),
+            (
+                "note",
+                Json::str(
+                    "PR-10 topology planners: PathPlanner K-segment epoch decisions over \
+                     2/3/4-hop relay ladders and MultiServerPlanner device→server assignment \
+                     epochs over 2/4-server 6-device googlenet fleets, both under σ-drifting \
+                     links; path plans oracle-gated against the nested-tuple odometer and \
+                     assignment makespans against the brute-force assignment oracle before \
+                     timing, with base + derived seeds echoed on failure",
+                ),
+            ),
+            ("results", Json::Arr(rows)),
+        ]);
+        match std::fs::write(&out, doc.pretty() + "\n") {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
+    }
+}

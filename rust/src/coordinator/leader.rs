@@ -5,8 +5,8 @@
 use super::costmodel::{partition_to_cut, stage_cost_graph};
 use crate::net::{EdgeNetwork, NetConfig};
 use crate::partition::{
-    DecisionProvenance, FleetSpec, FleetStats, JointOptions, PlannerService, Problem,
-    ServiceOptions,
+    DecisionProvenance, FleetSpec, FleetStats, JointOptions, MultiServerPlanner, PlanRequest,
+    PlannerService, Problem, ServiceOptions,
 };
 use crate::profiles::{DeviceProfile, TrainCfg};
 use crate::runtime::data::Synthetic;
@@ -29,6 +29,13 @@ pub struct CoordinatorConfig {
     /// the planner bit-identical to the dedicated fleet engine; a finite
     /// value makes every epoch decision congestion-aware.
     pub server_capacity: f64,
+    /// Per-server capacity vector (`partition::assign`). With more than
+    /// one entry, epoch decisions route through [`MultiServerPlanner`] —
+    /// each device assigned to one server, each server priced as its own
+    /// shared-capacity [`crate::partition::JointPlanner`]. Empty or
+    /// single-entry (the default) keeps the legacy `server_capacity`
+    /// service path.
+    pub server_capacities: Vec<f64>,
 }
 
 impl Default for CoordinatorConfig {
@@ -48,6 +55,7 @@ impl Default for CoordinatorConfig {
             epochs: 10,
             seed: 7,
             server_capacity: f64::INFINITY,
+            server_capacities: Vec::new(),
         }
     }
 }
@@ -109,6 +117,10 @@ pub struct Coordinator {
     /// missing would be served its last-good decision marked `Degraded`
     /// instead of crashing the loop.
     service: PlannerService,
+    /// The device→server assignment planner behind a multi-entry
+    /// `server_capacities` vector (`partition::assign`); `None` on the
+    /// legacy single-server path.
+    multi: Option<MultiServerPlanner>,
     data: Synthetic,
     eval_batch: crate::runtime::data::Batch,
     sim_time: f64,
@@ -126,6 +138,9 @@ impl Coordinator {
         let spec = FleetSpec::from_fleet(&fleet, |d| {
             stage_cost_graph(trainer.manifest(), d, &server, &cfg.train)
         });
+        let multi = (cfg.server_capacities.len() > 1).then(|| {
+            MultiServerPlanner::with_capacities(spec.clone(), cfg.server_capacities.clone())
+        });
         let service = PlannerService::new(
             spec,
             ServiceOptions {
@@ -141,6 +156,7 @@ impl Coordinator {
             net,
             fleet,
             service,
+            multi,
             data,
             eval_batch,
             sim_time: 0.0,
@@ -161,8 +177,12 @@ impl Coordinator {
     /// (refresh/solve counts, reduced-vs-full solve DAG sizes — the stage
     /// graph is a chain, so here `reduced == full` and every decision is an
     /// O(L) scan — plus the shared-capacity price-loop counters; mirrors
-    /// [`crate::sim::Trainer::planner_stats`]).
+    /// [`crate::sim::Trainer::planner_stats`]). On the multi-server path
+    /// this is the assignment planner's folded per-server counters.
     pub fn planner_stats(&self) -> FleetStats {
+        if let Some(m) = &self.multi {
+            return m.stats();
+        }
         self.service.stats()
     }
 
@@ -191,28 +211,52 @@ impl Coordinator {
         let device = self.net.select_device(self.sim_time);
         let tier = self.service.spec().tier_of(device);
         let tier_name = self.service.spec().tier_name(tier);
-        let mut link = None;
-        for d in 0..self.service.spec().num_devices() {
+        let num_devices = self.service.spec().num_devices();
+        let mut links = Vec::with_capacity(num_devices);
+        for d in 0..num_devices {
             let l = self.net.sample_link(d, self.sim_time).to_link();
-            if d == device {
-                link = Some(l);
+            links.push(l);
+            if self.multi.is_none() {
+                self.service.report(d, l, epoch as u64);
             }
-            self.service.report(d, l, epoch as u64);
         }
-        let link = link.expect("selected device is in the fleet");
+        let link = links[device];
+        // On the multi-server path the epoch batch goes to the assignment
+        // planner directly, so the requests are built here (channel
+        // bookkeeping) instead of reported to the service inbox.
+        let multi_requests: Option<Vec<PlanRequest>> = self.multi.is_some().then(|| {
+            (0..num_devices)
+                .map(|d| PlanRequest {
+                    device: d,
+                    tier: self.service.spec().tier_of(d),
+                    link: links[d],
+                })
+                .collect()
+        });
 
-        // 2. Decide the partition through the service's epoch loop. The
-        // timed region is exactly the per-epoch decision work (capacity
-        // refresh + warm solve per dirty tier, plus the price loop when
-        // congested) — the paper's Table I decision metric.
+        // 2. Decide the partition through the service's epoch loop — or,
+        // with a multi-entry capacity vector, through the device→server
+        // assignment planner. The timed region is exactly the per-epoch
+        // decision work (capacity refresh + warm solve per dirty tier,
+        // plus the price loop when congested; plus the assignment search
+        // on the multi-server path) — the paper's Table I decision metric.
         let t0 = Instant::now();
-        let decision = self
-            .service
-            .plan_epoch(epoch as u64)
-            .expect("the coordinator's epoch clock is monotone")
-            .into_iter()
-            .find(|d| d.device == device)
-            .expect("one decision per device");
+        let decision = if let Some(requests) = &multi_requests {
+            self.multi
+                .as_mut()
+                .expect("requests only built on the multi-server path")
+                .plan(requests)
+                .into_iter()
+                .find(|d| d.device == device)
+                .expect("one decision per device")
+        } else {
+            self.service
+                .plan_epoch(epoch as u64)
+                .expect("the coordinator's epoch clock is monotone")
+                .into_iter()
+                .find(|d| d.device == device)
+                .expect("one decision per device")
+        };
         let decision_time = t0.elapsed().as_secs_f64();
         let decision_refreshed = decision.stats.refreshed;
         let provenance = decision.provenance;

@@ -278,6 +278,13 @@ mod tests {
             retired_decisions: 19,
             degraded_decisions: 20,
             quantized_requests: 21,
+            // PR 10 topology counters: deliberately absent from the
+            // scrape (the golden string below is unchanged), so the
+            // literal pins that growing `FleetStats` did not disturb the
+            // byte-stable format.
+            dp_transitions: 22,
+            assignment_moves: 23,
+            inner_makespan_solves: 24,
         };
         let golden = concat!(
             "# HELP fastsplit_plans_total Batched plan calls served\n",

@@ -18,11 +18,13 @@ pub mod fig14;
 pub mod fig15;
 pub mod fig16;
 pub mod ablations;
+pub mod topology;
 
-/// All experiment ids in paper order.
+/// All experiment ids in paper order (the `topo*` ids are the PR-10
+/// multi-hop / multi-server sweeps beyond the paper).
 pub const ALL_IDS: &[&str] = &[
     "fig7a", "fig7b", "fig8", "fig9a", "fig9b", "tab1", "fig11", "fig12", "fig13", "tab2",
-    "fig14", "fig15", "fig16", "ablA", "ablB",
+    "fig14", "fig15", "fig16", "ablA", "ablB", "topoA", "topoB",
 ];
 
 /// Run one experiment by id, returning its printable report.
@@ -43,6 +45,8 @@ pub fn run(id: &str, quick: bool) -> Option<String> {
         "fig16" => fig16::run(),
         "ablA" => ablations::run_closure(if quick { 100 } else { 1000 }),
         "ablB" => ablations::run_solvers(),
+        "topoA" => topology::run_paths(if quick { 5 } else { 40 }),
+        "topoB" => topology::run_servers(if quick { 3 } else { 20 }),
         _ => return None,
     };
     Some(out)

@@ -1,0 +1,141 @@
+//! Topology sweeps beyond the paper (PR 10): multi-hop relay paths and
+//! multi-server fleets.
+//!
+//! * **topoA** — path-length sweep: the `proposed-multihop` simulator
+//!   method over relay ladders of 1..4 hops (`partition::multihop`).
+//!   One hop is the paper's single device→server split; longer paths
+//!   report the K-segment planner's DP/pooling work alongside the
+//!   epoch delays.
+//! * **topoB** — server-count sweep: the `proposed-multiserver` method
+//!   over capacity vectors of 1/2/4 servers at equal total capacity
+//!   (`partition::assign`), reporting the assignment search's move and
+//!   inner-makespan counters.
+
+use crate::net::NetConfig;
+use crate::sim::{SimConfig, Trainer};
+use crate::util::fmt_secs;
+use crate::util::table::Table;
+
+const MODEL: &str = "googlenet";
+
+/// A 6-device fleet keeps the assignment search enumerable (2 servers →
+/// 64 assignments, within the exhaustive cap) and the sweeps snappy.
+fn base_cfg(method: &str) -> SimConfig {
+    SimConfig {
+        model: MODEL.into(),
+        net: NetConfig {
+            num_devices: 6,
+            ..NetConfig::default()
+        },
+        method: method.into(),
+        seed: 17,
+        ..SimConfig::default()
+    }
+}
+
+/// topoA: relay-path length sweep for the multi-hop planner.
+pub fn run_paths(epochs: usize) -> String {
+    let mut t = Table::new(&[
+        "hops",
+        "mean epoch delay",
+        "mean decision",
+        "dp transitions",
+        "plans",
+    ]);
+    for hops in 1..=4usize {
+        let mut cfg = base_cfg("proposed-multihop");
+        cfg.path_hops = hops;
+        let mut trainer = Trainer::new(cfg);
+        let r = trainer.run_epochs(epochs);
+        let s = trainer.planner_stats();
+        t.row(&[
+            hops.to_string(),
+            fmt_secs(r.mean_epoch_delay),
+            fmt_secs(r.mean_decision_time),
+            s.dp_transitions.to_string(),
+            s.plans.to_string(),
+        ]);
+    }
+    format!(
+        "Topology A: K-segment splits over relay paths ({MODEL}, {epochs} epochs; \
+         1 hop = the paper's single split)\n{}",
+        t.render()
+    )
+}
+
+/// topoB: server-count sweep at equal total capacity for the
+/// device→server assignment planner.
+pub fn run_servers(epochs: usize) -> String {
+    let total = 0.8;
+    let mut t = Table::new(&[
+        "servers",
+        "capacity each",
+        "mean epoch delay",
+        "mean decision",
+        "assignment moves",
+        "inner solves",
+    ]);
+    for servers in [1usize, 2, 4] {
+        let each = total / servers as f64;
+        let mut cfg = base_cfg("proposed-multiserver");
+        cfg.server_capacities = vec![each; servers];
+        let mut trainer = Trainer::new(cfg);
+        let r = trainer.run_epochs(epochs);
+        let s = trainer.planner_stats();
+        t.row(&[
+            servers.to_string(),
+            format!("{each:.2}"),
+            fmt_secs(r.mean_epoch_delay),
+            fmt_secs(r.mean_decision_time),
+            s.assignment_moves.to_string(),
+            s.inner_makespan_solves.to_string(),
+        ]);
+    }
+    format!(
+        "Topology B: device→server assignment at equal total capacity \
+         ({MODEL}, {epochs} epochs, total capacity {total})\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn path_sweep_renders_all_hop_counts() {
+        let out = super::run_paths(3);
+        assert!(out.contains("hops"), "{out}");
+        // One row per hop count, 1..=4.
+        for hops in 1..=4 {
+            assert!(
+                out.lines().any(|l| l.trim().starts_with(&hops.to_string())),
+                "missing row for {hops} hops:\n{out}"
+            );
+        }
+    }
+
+    #[test]
+    fn server_sweep_renders_and_counts_inner_solves() {
+        let out = super::run_servers(2);
+        assert!(out.contains("servers"), "{out}");
+        // One row per server count; the 1-server row is the verbatim
+        // JointPlanner delegation (no assignment search, counter 0),
+        // every multi-server row must have scored candidates.
+        for servers in [1usize, 2, 4] {
+            let row = out
+                .lines()
+                .find(|l| l.starts_with(&servers.to_string()))
+                .unwrap_or_else(|| panic!("missing row for {servers} servers:\n{out}"));
+            let inner: u64 = row
+                .split_whitespace()
+                .last()
+                .unwrap()
+                .parse()
+                .unwrap_or_else(|_| panic!("bad inner-solves cell: {row}"));
+            if servers == 1 {
+                assert_eq!(inner, 0, "1 server must delegate, not search: {row}");
+            } else {
+                assert!(inner > 0, "no inner makespan solves: {row}");
+            }
+        }
+    }
+}

@@ -64,6 +64,64 @@ pub fn count_lower_sets(g: &Dag) -> u64 {
     count
 }
 
+/// Materialize every lower set of `g`, but give up (returning `None`) as
+/// soon as more than `cap` exist. [`count_lower_sets`] is O(#lower sets),
+/// which is exponential on branchy DAGs — a caller that only wants the
+/// sets *when they are few* (the multi-hop DP's exact path) must be able
+/// to probe without paying the full enumeration on a model where the
+/// count explodes. Enumeration order matches [`enumerate_lower_sets`].
+pub fn enumerate_lower_sets_capped(g: &Dag, cap: usize) -> Option<Vec<Vec<bool>>> {
+    let order = g.topo_order().expect("lower sets require an acyclic graph");
+    let n = g.len();
+    let mut in_set = vec![false; n];
+    let mut missing: Vec<usize> = (0..n).map(|v| g.in_degree(v)).collect();
+    let mut out: Vec<Vec<bool>> = Vec::new();
+
+    // Same DFS as `enumerate_lower_sets`, with a boolean "keep going"
+    // return threaded through so the recursion can abort the moment the
+    // cap is exceeded instead of finishing an exponential walk.
+    fn rec(
+        g: &Dag,
+        order: &[NodeId],
+        i: usize,
+        in_set: &mut Vec<bool>,
+        missing: &mut Vec<usize>,
+        cap: usize,
+        out: &mut Vec<Vec<bool>>,
+    ) -> bool {
+        if i == order.len() {
+            if out.len() >= cap {
+                return false;
+            }
+            out.push(in_set.clone());
+            return true;
+        }
+        let v = order[i];
+        if !rec(g, order, i + 1, in_set, missing, cap, out) {
+            return false;
+        }
+        let mut alive = true;
+        if missing[v] == 0 {
+            in_set[v] = true;
+            for &e in g.out_edges(v) {
+                missing[g.edge(e).to] -= 1;
+            }
+            alive = rec(g, order, i + 1, in_set, missing, cap, out);
+            for &e in g.out_edges(v) {
+                missing[g.edge(e).to] += 1;
+            }
+            in_set[v] = false;
+        }
+        alive
+    }
+
+    if rec(g, &order, 0, &mut in_set, &mut missing, cap, &mut out) {
+        Some(out)
+    } else {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +168,29 @@ mod tests {
         g.add_edge(1, 3, 1.0);
         g.add_edge(2, 3, 1.0);
         assert_eq!(count_lower_sets(&g), 6);
+    }
+
+    #[test]
+    fn capped_enumeration_matches_the_uncapped_walk_or_refuses() {
+        for_all("lower-set-cap", 24, |rng| {
+            let n = 2 + rng.index(8);
+            let edges = random_layer_dag(rng, n, 0.25);
+            let mut g = Dag::new();
+            for i in 0..n {
+                g.add_node(format!("v{i}"));
+            }
+            for (u, v) in edges {
+                g.add_edge(u, v, 1.0);
+            }
+            let count = count_lower_sets(&g) as usize;
+            let mut full = Vec::new();
+            enumerate_lower_sets(&g, |m| full.push(m.to_vec()));
+            // Cap at or above the count: identical sets, identical order.
+            assert_eq!(enumerate_lower_sets_capped(&g, count), Some(full));
+            // Cap below the count: refused, never silently truncated.
+            assert_eq!(enumerate_lower_sets_capped(&g, count - 1), None);
+            assert_eq!(enumerate_lower_sets_capped(&g, 0), None);
+        });
     }
 
     #[test]

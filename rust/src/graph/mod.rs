@@ -9,4 +9,4 @@ pub mod dag;
 pub mod lower_sets;
 
 pub use dag::{Dag, EdgeId, NodeId};
-pub use lower_sets::{count_lower_sets, enumerate_lower_sets};
+pub use lower_sets::{count_lower_sets, enumerate_lower_sets, enumerate_lower_sets_capped};

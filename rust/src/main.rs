@@ -28,9 +28,11 @@ USAGE:
                       --device jetson-tx2 [--n-loc 10] [--batch 32]
   fastsplit simulate --model googlenet --method proposed --band mmwave \\
                       --condition normal [--epochs 50] [--devices 20] [--rayleigh] [--seed 7] \\
+                      [--server-capacity 0.4] [--path-hops 3] [--server-capacities 0.4,0.4] \\
                       [--metrics] [--journal-dir DIR]
-  fastsplit experiment --id fig7a|fig7b|fig8|fig9a|fig9b|tab1|fig11|fig12|fig13|tab2|fig14|fig15|fig16|ablA|ablB|all [--quick]
-  fastsplit train [--epochs 10] [--n-loc 4] [--lr 0.05] [--artifacts artifacts] [--devices 4]
+  fastsplit experiment --id fig7a|fig7b|fig8|fig9a|fig9b|tab1|fig11|fig12|fig13|tab2|fig14|fig15|fig16|ablA|ablB|topoA|topoB|all [--quick]
+  fastsplit train [--epochs 10] [--n-loc 4] [--lr 0.05] [--artifacts artifacts] [--devices 4] \\
+                      [--server-capacities 0.4,0.4]
 ";
 
 fn main() {
@@ -141,6 +143,22 @@ fn cmd_partition(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated `--server-capacities` list (e.g. `0.4,0.4`)
+/// into the per-server capacity vector of `partition::assign`.
+fn parse_capacities(arg: Option<&str>) -> anyhow::Result<Vec<f64>> {
+    match arg {
+        None => Ok(Vec::new()),
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("bad --server-capacities entry '{x}': {e}"))
+            })
+            .collect(),
+    }
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let band = Band::by_name(args.get_or("band", "mmwave"))
         .ok_or_else(|| anyhow::anyhow!("unknown band"))?;
@@ -161,6 +179,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         },
         method: args.get_or("method", "proposed").to_string(),
         seed: args.get_u64("seed", 7),
+        server_capacity: args.get_f64("server-capacity", f64::INFINITY),
+        path_hops: args.get_usize("path-hops", 1),
+        server_capacities: parse_capacities(args.get("server-capacities"))?,
         ..SimConfig::default()
     };
     let epochs = args.get_usize("epochs", 50);
@@ -324,6 +345,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         epochs: args.get_usize("epochs", 10),
         seed: args.get_u64("seed", 7),
         server_capacity: args.get_f64("server-capacity", f64::INFINITY),
+        server_capacities: parse_capacities(args.get("server-capacities"))?,
     };
     let mut coord = Coordinator::new(cfg.clone())?;
     println!(

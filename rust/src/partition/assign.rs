@@ -1,0 +1,750 @@
+//! Device→server assignment for multi-server fleets (PR 10): a
+//! per-server capacity **vector** instead of `JointOptions`' one scalar.
+//!
+//! *Edge-device collaborative split learning with multiple helpers*
+//! (arxiv 2403.15815 in PAPERS.md) generalizes the shared-server setting:
+//! the fleet fronts S servers, server s offering `capacity[s]` concurrent
+//! full-throughput device-equivalents, and the operator must decide
+//! **which device trains against which server** before the per-server
+//! split/share problem (PR 5's [`JointPlanner`]) even starts. The
+//! objective stays the fleet makespan: the max over servers of that
+//! server's jointly-priced epoch makespan.
+//!
+//! [`MultiServerPlanner`] wraps one warm [`JointPlanner`] per server —
+//! each riding the PR-4 incremental flow reuse across epochs and
+//! candidate evaluations — and searches the assignment space:
+//!
+//! - **S = 1** delegates to the inner planner verbatim: decisions,
+//!   makespan and counters bit-identical, the assignment counters pinned
+//!   at zero (the degenerate contract, mirroring the ∞-capacity and K=1
+//!   pins).
+//! - **Exhaustive** when `S^D` is at most
+//!   [`MultiServerOptions::exhaustive_assignments`]: odometer over every
+//!   assignment, each scored by the inner planners, with a global
+//!   early-exit once a candidate meets the dedicated lower bound (no
+//!   assignment beats the slowest device's dedicated optimum).
+//! - **Greedy + local search** otherwise: seed by longest-processing-time
+//!   over capacity-weighted dedicated delays (or by the previous epoch's
+//!   persisted assignment — churn-friendly warm starts), then sweep
+//!   single-device moves and pairwise swaps, accepting strict
+//!   improvements until a round changes nothing.
+//!
+//! Search effort lands in the shared [`FleetStats`]:
+//! `assignment_moves` (accepted moves/swaps, plus best-candidate
+//! adoptions beyond the first on the exhaustive path) and
+//! `inner_makespan_solves` (per-server epoch plans used for scoring).
+//! [`oracle_multi_server_makespan`] is the brute force the harness pins
+//! the planner against: every assignment × PR 5's
+//! [`oracle_fleet_makespan`] per server.
+
+use std::collections::BTreeMap;
+
+use super::fleet::{FleetOptions, FleetPlanner, FleetSpec, FleetStats, PlanDecision, PlanRequest};
+use super::joint::{oracle_fleet_makespan, JointOptions, JointPlanner};
+use super::multihop::fold_counters;
+use super::types::Problem;
+
+/// Assignment-tuple budget of [`oracle_multi_server_makespan`] (each tuple
+/// costs a full per-server cut-combination sweep — oracle fleets must stay
+/// at 2–3 devices over small models).
+const ORACLE_ASSIGNMENT_CAP: u64 = 1_000_000;
+
+/// Construction switches of [`MultiServerPlanner`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MultiServerOptions {
+    /// Per-server capacity in concurrent full-throughput
+    /// device-equivalents (the multi-server generalization of
+    /// [`JointOptions::server_capacity`]). One entry per server; every
+    /// entry must be positive (`f64::INFINITY` = a dedicated server per
+    /// assigned device).
+    pub server_capacities: Vec<f64>,
+    /// Switches of every wrapped per-server engine.
+    pub fleet: FleetOptions,
+    /// Exhaustive-search bound: enumerate all `S^D` assignments when the
+    /// count is at most this, else fall back to greedy + local search.
+    pub exhaustive_assignments: u64,
+    /// Local-search sweeps (each = one move pass + one swap pass) before
+    /// settling; the search also stops early once a sweep changes
+    /// nothing.
+    pub search_rounds: usize,
+}
+
+impl MultiServerOptions {
+    /// The common construction: capacities plus default engine switches.
+    pub fn with_capacities(server_capacities: Vec<f64>) -> MultiServerOptions {
+        MultiServerOptions {
+            server_capacities,
+            fleet: FleetOptions::default(),
+            exhaustive_assignments: 512,
+            search_rounds: 3,
+        }
+    }
+}
+
+/// The device→server assignment planner (module docs).
+pub struct MultiServerPlanner {
+    servers: Vec<JointPlanner>,
+    options: MultiServerOptions,
+    /// Last materialized assignment, device id → server index. Persists
+    /// across epochs and seeds the next epoch's local search.
+    assignment: BTreeMap<usize, usize>,
+    /// Dedicated-delay probe serving the greedy LPT seed and the
+    /// exhaustive path's lower bound (lazily built — the 1-server path
+    /// never touches it).
+    probe: Option<FleetPlanner>,
+    spec: FleetSpec,
+    last_makespan: Option<f64>,
+    assignment_moves: u64,
+    inner_makespan_solves: u64,
+}
+
+impl MultiServerPlanner {
+    /// Build with default options for the given capacities.
+    pub fn with_capacities(spec: FleetSpec, capacities: Vec<f64>) -> MultiServerPlanner {
+        MultiServerPlanner::new(spec, MultiServerOptions::with_capacities(capacities))
+    }
+
+    pub fn new(spec: FleetSpec, options: MultiServerOptions) -> MultiServerPlanner {
+        assert!(
+            !options.server_capacities.is_empty(),
+            "at least one server is required"
+        );
+        for (s, &c) in options.server_capacities.iter().enumerate() {
+            assert!(c > 0.0, "server {s} capacity must be positive, got {c}");
+        }
+        let servers = options
+            .server_capacities
+            .iter()
+            .map(|&c| {
+                JointPlanner::new(
+                    spec.clone(),
+                    JointOptions {
+                        server_capacity: c,
+                        fleet: options.fleet,
+                    },
+                )
+            })
+            .collect();
+        MultiServerPlanner {
+            servers,
+            options,
+            assignment: BTreeMap::new(),
+            probe: None,
+            spec,
+            last_makespan: None,
+            assignment_moves: 0,
+            inner_makespan_solves: 0,
+        }
+    }
+
+    /// Plan one epoch: choose a device→server assignment, solve every
+    /// server's joint split/share problem, and return one decision per
+    /// request in request order.
+    pub fn plan(&mut self, requests: &[PlanRequest]) -> Vec<PlanDecision> {
+        if self.servers.len() == 1 {
+            // Degenerate contract: one server IS the joint planner —
+            // decisions, makespan and counters verbatim, assignment
+            // counters untouched at zero.
+            let decisions = self.servers[0].plan(requests);
+            self.last_makespan = self.servers[0].makespan();
+            for r in requests {
+                self.assignment.insert(r.device, 0);
+            }
+            return decisions;
+        }
+        if requests.is_empty() {
+            self.last_makespan = None;
+            return Vec::new();
+        }
+        let d = requests.len() as u32;
+        let combos = (self.servers.len() as u64).saturating_pow(d);
+        let assign = if combos <= self.options.exhaustive_assignments {
+            self.search_exhaustive(requests)
+        } else {
+            self.search_local(requests)
+        };
+        self.materialize(requests, &assign)
+    }
+
+    /// Makespan of the latest epoch (`None` before the first, or after an
+    /// empty one).
+    pub fn makespan(&self) -> Option<f64> {
+        self.last_makespan
+    }
+
+    /// The latest materialized assignment, device id → server index.
+    pub fn assignment(&self) -> &BTreeMap<usize, usize> {
+        &self.assignment
+    }
+
+    /// Override the persisted assignment that seeds the next epoch's
+    /// local search (the warm-start hook: operators re-seating a fleet,
+    /// tests pinning the search's starting point). Entries for unknown
+    /// devices are ignored at seeding time; server indices must be in
+    /// range.
+    pub fn seed_assignment(&mut self, assignment: BTreeMap<usize, usize>) {
+        for (&device, &server) in &assignment {
+            assert!(
+                server < self.servers.len(),
+                "device {device} seeded to unknown server {server}"
+            );
+        }
+        self.assignment = assignment;
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// The fleet spec every server serves.
+    pub fn spec(&self) -> &FleetSpec {
+        &self.spec
+    }
+
+    pub fn options(&self) -> &MultiServerOptions {
+        &self.options
+    }
+
+    /// Aggregate counters: every server engine's additive [`FleetStats`]
+    /// counters folded together (plus the seeding probe's, when built),
+    /// DAG-shape fields from server 0, plus this planner's
+    /// `assignment_moves` / `inner_makespan_solves`. With one server this
+    /// is the inner planner's stats verbatim.
+    pub fn stats(&self) -> FleetStats {
+        let mut s = self.servers[0].stats();
+        if self.servers.len() == 1 {
+            return s;
+        }
+        for srv in &self.servers[1..] {
+            fold_counters(&mut s, &srv.stats());
+        }
+        if let Some(p) = &self.probe {
+            fold_counters(&mut s, &p.stats());
+        }
+        s.assignment_moves = self.assignment_moves;
+        s.inner_makespan_solves = self.inner_makespan_solves;
+        s
+    }
+
+    /// Score one assignment: plan every non-empty server group and take
+    /// the worst per-server makespan (empty servers contribute nothing).
+    fn evaluate(&mut self, requests: &[PlanRequest], assign: &[usize]) -> f64 {
+        let mut makespan = 0.0f64;
+        for s in 0..self.servers.len() {
+            let group: Vec<PlanRequest> = requests
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| assign[i] == s)
+                .map(|(_, &r)| r)
+                .collect();
+            if group.is_empty() {
+                continue;
+            }
+            self.servers[s].plan(&group);
+            self.inner_makespan_solves += 1;
+            let m = self.servers[s]
+                .makespan()
+                .expect("a non-empty epoch has a makespan");
+            makespan = makespan.max(m);
+        }
+        makespan
+    }
+
+    /// Odometer over every assignment, keeping the best. Early-exits once
+    /// a candidate meets the dedicated lower bound (the slowest device's
+    /// dedicated optimum — unbeatable on any server).
+    fn search_exhaustive(&mut self, requests: &[PlanRequest]) -> Vec<usize> {
+        let s_count = self.servers.len();
+        let lower_bound = requests
+            .iter()
+            .map(|r| self.dedicated_delay(r))
+            .fold(0.0f64, f64::max);
+        let mut assign = vec![0usize; requests.len()];
+        let mut best = self.evaluate(requests, &assign);
+        let mut best_assign = assign.clone();
+        loop {
+            if best <= lower_bound {
+                break;
+            }
+            let mut pos = 0;
+            while pos < requests.len() {
+                assign[pos] += 1;
+                if assign[pos] < s_count {
+                    break;
+                }
+                assign[pos] = 0;
+                pos += 1;
+            }
+            if pos == requests.len() {
+                break;
+            }
+            let makespan = self.evaluate(requests, &assign);
+            if makespan < best {
+                best = makespan;
+                best_assign.copy_from_slice(&assign);
+                self.assignment_moves += 1;
+            }
+        }
+        best_assign
+    }
+
+    /// Greedy seed + move/swap local search (module docs). Seeds from the
+    /// persisted assignment when it covers every request, else by LPT
+    /// over capacity-weighted dedicated delays.
+    fn search_local(&mut self, requests: &[PlanRequest]) -> Vec<usize> {
+        let s_count = self.servers.len();
+        let warm: Option<Vec<usize>> = requests
+            .iter()
+            .map(|r| self.assignment.get(&r.device).copied().filter(|&s| s < s_count))
+            .collect();
+        let mut assign = match warm {
+            Some(a) => a,
+            None => self.seed_lpt(requests),
+        };
+        let mut best = self.evaluate(requests, &assign);
+        for _ in 0..self.options.search_rounds {
+            let mut improved = false;
+            // Move sweep: one device to another server.
+            for i in 0..requests.len() {
+                let home = assign[i];
+                for s in 0..s_count {
+                    if s == home {
+                        continue;
+                    }
+                    assign[i] = s;
+                    let m = self.evaluate(requests, &assign);
+                    if m < best {
+                        best = m;
+                        self.assignment_moves += 1;
+                        improved = true;
+                    } else {
+                        assign[i] = home;
+                    }
+                    if assign[i] == s {
+                        break; // accepted; re-derive the home server
+                    }
+                }
+            }
+            // Swap sweep: exchange two devices' servers (kept quadratic —
+            // skipped for very large epochs).
+            if requests.len() <= 32 {
+                for i in 0..requests.len() {
+                    for j in i + 1..requests.len() {
+                        if assign[i] == assign[j] {
+                            continue;
+                        }
+                        assign.swap(i, j);
+                        let m = self.evaluate(requests, &assign);
+                        if m < best {
+                            best = m;
+                            self.assignment_moves += 1;
+                            improved = true;
+                        } else {
+                            assign.swap(i, j);
+                        }
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        assign
+    }
+
+    /// LPT seed: devices by descending dedicated delay, each placed on
+    /// the server with the least capacity-weighted seeded load.
+    fn seed_lpt(&mut self, requests: &[PlanRequest]) -> Vec<usize> {
+        let delays: Vec<f64> = requests.iter().map(|r| self.dedicated_delay(r)).collect();
+        let mut order: Vec<usize> = (0..requests.len()).collect();
+        order.sort_by(|&a, &b| delays[b].partial_cmp(&delays[a]).unwrap());
+        let mut load = vec![0.0f64; self.servers.len()];
+        let mut assign = vec![0usize; requests.len()];
+        for &i in &order {
+            let mut best = 0;
+            for s in 1..self.servers.len() {
+                let weigh = |s: usize| load[s] / self.options.server_capacities[s].min(1e18);
+                if weigh(s) < weigh(best) {
+                    best = s;
+                }
+            }
+            assign[i] = best;
+            load[best] += delays[i];
+        }
+        assign
+    }
+
+    /// A device's dedicated-server optimal delay (the per-request lower
+    /// bound), served by the lazily built probe engine.
+    fn dedicated_delay(&mut self, request: &PlanRequest) -> f64 {
+        let probe = self.probe.get_or_insert_with(|| {
+            FleetPlanner::with_options(self.spec.clone(), self.options.fleet)
+        });
+        probe.take_solve(request.tier, request.link).delay
+    }
+
+    /// Re-plan the chosen assignment so every server's state and the
+    /// returned decisions are consistent, persist it, and record the
+    /// epoch makespan.
+    fn materialize(
+        &mut self,
+        requests: &[PlanRequest],
+        assign: &[usize],
+    ) -> Vec<PlanDecision> {
+        let mut decisions: Vec<Option<PlanDecision>> = vec![None; requests.len()];
+        let mut makespan = 0.0f64;
+        for s in 0..self.servers.len() {
+            let members: Vec<usize> = (0..requests.len()).filter(|&i| assign[i] == s).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let group: Vec<PlanRequest> = members.iter().map(|&i| requests[i]).collect();
+            let planned = self.servers[s].plan(&group);
+            self.inner_makespan_solves += 1;
+            makespan = makespan.max(
+                self.servers[s]
+                    .makespan()
+                    .expect("a non-empty epoch has a makespan"),
+            );
+            for (slot, &i) in members.iter().enumerate() {
+                decisions[i] = Some(planned[slot].clone());
+            }
+        }
+        for (i, r) in requests.iter().enumerate() {
+            self.assignment.insert(r.device, assign[i]);
+        }
+        self.last_makespan = Some(makespan);
+        decisions
+            .into_iter()
+            .map(|d| d.expect("every request is assigned to exactly one server"))
+            .collect()
+    }
+}
+
+/// Brute-force optimum of the multi-server fleet: enumerate **every**
+/// device→server assignment by odometer and score each with PR 5's
+/// [`oracle_fleet_makespan`] per non-empty server (empty servers
+/// contribute nothing). Deliberately independent of the planner's search
+/// and of its inner [`JointPlanner`]s — the harness pins one against the
+/// other. Prunes nothing but the global dedicated bound (no assignment
+/// beats the slowest device's dedicated optimum, itself computed by
+/// enumerating that device's feasible cuts).
+pub fn oracle_multi_server_makespan(problems: &[Problem<'_>], capacities: &[f64]) -> f64 {
+    assert!(!problems.is_empty(), "oracle needs at least one device");
+    assert!(!capacities.is_empty(), "oracle needs at least one server");
+    for &c in capacities {
+        assert!(c > 0.0, "server capacities must be positive");
+    }
+    let s_count = capacities.len();
+    let combos = (s_count as u64).saturating_pow(problems.len() as u32);
+    assert!(
+        combos <= ORACLE_ASSIGNMENT_CAP,
+        "oracle limited to {ORACLE_ASSIGNMENT_CAP} assignments, got {combos}"
+    );
+    // The dedicated lower bound: each device's best feasible cut on a
+    // server of its own (∞ capacity ≡ dedicated).
+    let lower_bound = problems
+        .iter()
+        .map(|p| oracle_fleet_makespan(std::slice::from_ref(p), f64::INFINITY))
+        .fold(0.0f64, f64::max);
+    let mut assign = vec![0usize; problems.len()];
+    let mut best = f64::INFINITY;
+    loop {
+        let mut makespan = 0.0f64;
+        for s in 0..s_count {
+            let group: Vec<Problem<'_>> = problems
+                .iter()
+                .enumerate()
+                .filter(|&(d, _)| assign[d] == s)
+                .map(|(_, p)| p.clone())
+                .collect();
+            if group.is_empty() {
+                continue;
+            }
+            makespan = makespan.max(oracle_fleet_makespan(&group, capacities[s]));
+            if makespan >= best {
+                break; // this assignment already lost
+            }
+        }
+        if makespan < best {
+            best = makespan;
+        }
+        if best <= lower_bound {
+            return best;
+        }
+        let mut d = 0;
+        loop {
+            if d == problems.len() {
+                return best;
+            }
+            assign[d] += 1;
+            if assign[d] < s_count {
+                break;
+            }
+            assign[d] = 0;
+            d += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::partition::types::Link;
+    use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
+    use crate::util::prop::{assert_fleet_cost_equal, random_link, seeded_case, CUT_COST_ULPS};
+    use crate::util::rng::Rng;
+
+    fn costs_for(model: &str, device: &DeviceProfile) -> CostGraph {
+        let m = models::by_name(model).unwrap();
+        CostGraph::build(&m, device, &DeviceProfile::rtx_a6000(), &TrainCfg::default())
+    }
+
+    fn spec_for(model: &'static str, devices: usize) -> FleetSpec {
+        let tiers = [DeviceProfile::jetson_tx2(), DeviceProfile::jetson_orin_nano()];
+        let fleet: Vec<DeviceProfile> = (0..devices).map(|d| tiers[d % 2].clone()).collect();
+        FleetSpec::from_fleet(&fleet, |d| costs_for(model, d))
+    }
+
+    fn epoch_requests(spec: &FleetSpec, rng: &mut Rng) -> Vec<PlanRequest> {
+        (0..spec.num_devices())
+            .map(|device| PlanRequest {
+                device,
+                tier: spec.tier_of(device),
+                link: random_link(rng),
+            })
+            .collect()
+    }
+
+    /// The degenerate pin: with one server the multi-server planner IS
+    /// the joint planner across the whole capacity ladder — decisions,
+    /// makespan and stats bit-identical, assignment counters at zero.
+    #[test]
+    fn one_server_planner_is_bit_identical_to_joint_planner() {
+        seeded_case("one-server-bit-identity", 0xA551, |rng| {
+            for capacity in [0.6, 1.2, 2.5, f64::INFINITY] {
+                let spec = spec_for("lenet5", 3);
+                let mut multi = MultiServerPlanner::with_capacities(spec.clone(), vec![capacity]);
+                let mut joint = JointPlanner::with_capacity(spec, capacity);
+                for _ in 0..4 {
+                    let requests = epoch_requests(multi.spec(), rng);
+                    let got = multi.plan(&requests);
+                    let want = joint.plan(&requests);
+                    assert_eq!(got.len(), want.len());
+                    for (g, w) in got.iter().zip(&want) {
+                        assert_eq!(g.device, w.device);
+                        assert_eq!(g.tier, w.tier);
+                        assert_eq!(g.partition.device_set, w.partition.device_set);
+                        assert_eq!(g.partition.delay.to_bits(), w.partition.delay.to_bits());
+                        assert_eq!(g.cut_layer, w.cut_layer);
+                    }
+                    assert_eq!(
+                        multi.makespan().map(f64::to_bits),
+                        joint.makespan().map(f64::to_bits)
+                    );
+                }
+                let stats = multi.stats();
+                assert_eq!(stats, joint.stats());
+                assert_eq!(stats.assignment_moves, 0);
+                assert_eq!(stats.inner_makespan_solves, 0);
+                assert!(multi.assignment().values().all(|&s| s == 0));
+            }
+        });
+    }
+
+    /// The oracle pin: on 2–3-device / 2-server fleets the exhaustive
+    /// planner matches the brute-force assignment × cut-combination
+    /// optimum.
+    #[test]
+    fn planner_matches_the_assignment_oracle_on_small_fleets() {
+        seeded_case("multi-server-oracle", 0x5EED5, |rng| {
+            for devices in [2usize, 3] {
+                let spec = spec_for("lenet5", devices);
+                let capacities = vec![rng.range(0.5, 1.0), rng.range(1.0, 2.0)];
+                let mut planner =
+                    MultiServerPlanner::with_capacities(spec.clone(), capacities.clone());
+                for epoch in 0..3 {
+                    let requests = epoch_requests(&spec, rng);
+                    let decisions = planner.plan(&requests);
+                    assert_eq!(decisions.len(), requests.len());
+                    for (d, r) in decisions.iter().zip(&requests) {
+                        assert_eq!(d.device, r.device);
+                        assert_eq!(d.tier, r.tier);
+                    }
+                    let tier_costs: Vec<&CostGraph> = requests
+                        .iter()
+                        .map(|r| spec.tier_costs(r.tier))
+                        .collect();
+                    let problems: Vec<Problem<'_>> = requests
+                        .iter()
+                        .zip(&tier_costs)
+                        .map(|(r, c)| Problem::new(c, r.link))
+                        .collect();
+                    let oracle = oracle_multi_server_makespan(&problems, &capacities);
+                    assert_fleet_cost_equal(
+                        planner.makespan().unwrap(),
+                        oracle,
+                        &format!("{devices} devices epoch {epoch}"),
+                    );
+                }
+                assert!(planner.stats().inner_makespan_solves > 0);
+            }
+        });
+    }
+
+    /// Adding a server never raises the (exhaustively optimal) fleet
+    /// makespan — any old assignment is still available.
+    #[test]
+    fn adding_a_server_never_raises_the_makespan() {
+        seeded_case("server-monotonicity", 0xADD5, |rng| {
+            let spec = spec_for("lenet5", 3);
+            let requests = epoch_requests(&spec, rng);
+            let base_cap = rng.range(0.4, 0.9);
+            let mut ladder: Vec<f64> = vec![base_cap];
+            let mut prev = f64::INFINITY;
+            for extra in 0..3 {
+                let mut planner =
+                    MultiServerPlanner::with_capacities(spec.clone(), ladder.clone());
+                planner.plan(&requests);
+                let makespan = planner.makespan().unwrap();
+                let tol = CUT_COST_ULPS * f64::EPSILON * (1.0 + makespan.abs());
+                assert!(
+                    makespan <= prev + tol,
+                    "server {} raised the makespan: {prev} -> {makespan}",
+                    ladder.len()
+                );
+                prev = makespan;
+                ladder.push(rng.range(0.4, 0.9) + extra as f64 * 0.1);
+            }
+        });
+    }
+
+    /// The greedy + local-search path stays sane: never below the
+    /// exhaustive optimum (minus tolerance), consistent decisions, a
+    /// persisted in-range assignment, and scoring counters that fire.
+    #[test]
+    fn local_search_stays_sane_against_the_exhaustive_optimum() {
+        seeded_case("local-search-sanity", 0x10CA1, |rng| {
+            let spec = spec_for("lenet5", 4);
+            let capacities = vec![rng.range(0.5, 1.0), rng.range(1.0, 2.0)];
+            let requests = epoch_requests(&spec, rng);
+
+            let mut exact = MultiServerPlanner::with_capacities(spec.clone(), capacities.clone());
+            exact.plan(&requests);
+            let optimum = exact.makespan().unwrap();
+
+            let mut greedy = MultiServerPlanner::new(
+                spec.clone(),
+                MultiServerOptions {
+                    exhaustive_assignments: 1, // force the local-search path
+                    ..MultiServerOptions::with_capacities(capacities)
+                },
+            );
+            let decisions = greedy.plan(&requests);
+            let makespan = greedy.makespan().unwrap();
+            let tol = CUT_COST_ULPS * f64::EPSILON * (1.0 + makespan.abs().max(optimum.abs()));
+            assert!(
+                makespan + tol >= optimum,
+                "local search can be suboptimal but never beats brute force: \
+                 {makespan} vs {optimum}"
+            );
+            assert!(makespan.is_finite());
+            assert_eq!(decisions.len(), requests.len());
+            for r in &requests {
+                let s = greedy.assignment()[&r.device];
+                assert!(s < greedy.num_servers());
+            }
+            let stats = greedy.stats();
+            assert!(stats.inner_makespan_solves > 0);
+            assert!(stats.flow_solves + stats.linear_scans > 0);
+        });
+    }
+
+    /// An adversarial warm seed (everything on one congested server) must
+    /// be repaired by the move sweep: accepted moves are counted and the
+    /// result improves on the seed's makespan. Links are fixed and fast
+    /// so the per-device optimum genuinely offloads to the server (W > 0)
+    /// and piling four sessions onto one unit-capacity server congests it
+    /// — the improving move provably exists.
+    #[test]
+    fn local_search_repairs_an_adversarial_seed_and_counts_moves() {
+        let spec = spec_for("lenet5", 4);
+        let capacities = vec![1.0, 1.0];
+        let requests: Vec<PlanRequest> = (0..spec.num_devices())
+            .map(|device| PlanRequest {
+                device,
+                tier: spec.tier_of(device),
+                link: Link::symmetric(2e8 + device as f64 * 1e7),
+            })
+            .collect();
+
+        let mut seeded = MultiServerPlanner::new(
+            spec.clone(),
+            MultiServerOptions {
+                exhaustive_assignments: 1, // force the local-search path
+                ..MultiServerOptions::with_capacities(capacities.clone())
+            },
+        );
+        seeded.seed_assignment(requests.iter().map(|r| (r.device, 0)).collect());
+        seeded.plan(&requests);
+        let repaired = seeded.makespan().unwrap();
+        assert!(
+            seeded.stats().assignment_moves > 0,
+            "an all-on-one-server seed over equal servers must admit an improving move"
+        );
+        // The repaired makespan must strictly improve on the seed's.
+        let mut pinned = MultiServerPlanner::new(
+            spec,
+            MultiServerOptions {
+                exhaustive_assignments: 1,
+                search_rounds: 0, // evaluate the seed, search nothing
+                ..MultiServerOptions::with_capacities(capacities)
+            },
+        );
+        pinned.seed_assignment(requests.iter().map(|r| (r.device, 0)).collect());
+        pinned.plan(&requests);
+        let seed_makespan = pinned.makespan().unwrap();
+        assert!(
+            repaired < seed_makespan,
+            "local search must improve on the congested seed: {repaired} vs {seed_makespan}"
+        );
+    }
+
+    /// The exhaustive path on an engineered two-capacity fleet: the
+    /// odometer's first candidate (everything on the starved server) must
+    /// be replaced — `assignment_moves` fires — and the optimum matches
+    /// the oracle.
+    #[test]
+    fn exhaustive_search_counts_adoptions_and_prefers_the_big_server() {
+        seeded_case("exhaustive-adoptions", 0xB16, |rng| {
+            let spec = spec_for("lenet5", 2);
+            let capacities = vec![1e-3, 1e9]; // starved vs effectively dedicated
+            let mut planner = MultiServerPlanner::with_capacities(spec.clone(), capacities.clone());
+            let requests = epoch_requests(&spec, rng);
+            planner.plan(&requests);
+            let stats = planner.stats();
+            assert!(
+                stats.assignment_moves > 0,
+                "the all-on-starved-server start must be beaten"
+            );
+            assert!(
+                planner.assignment().values().all(|&s| s == 1),
+                "every device belongs on the big server: {:?}",
+                planner.assignment()
+            );
+            let tier_costs: Vec<&CostGraph> =
+                requests.iter().map(|r| spec.tier_costs(r.tier)).collect();
+            let problems: Vec<Problem<'_>> = requests
+                .iter()
+                .zip(&tier_costs)
+                .map(|(r, c)| Problem::new(c, r.link))
+                .collect();
+            assert_fleet_cost_equal(
+                planner.makespan().unwrap(),
+                oracle_multi_server_makespan(&problems, &capacities),
+                "engineered two-capacity fleet",
+            );
+        });
+    }
+}

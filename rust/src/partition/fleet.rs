@@ -1093,6 +1093,25 @@ pub struct FleetStats {
     /// off **or** the fleet is sub-resolution (no two links of a tier
     /// share a bucket) — the counter-pinned bit-identity contract.
     pub quantized_requests: u64,
+    /// Dynamic-programming transitions evaluated by the multi-hop
+    /// [`super::multihop::PathPlanner`] (one per `(stage, cut, feasible
+    /// predecessor)` triple in the exact nested lower-set DP). 0 on the
+    /// K=1 degenerate path, on the separable fast path (per-hop optima
+    /// already nested), and for every planner that never ran the DP —
+    /// part of the K=1 ≡ [`super::planner::PartitionPlanner`]
+    /// bit-identity contract.
+    pub dp_transitions: u64,
+    /// Accepted device→server reassignments (moves and swaps) of the
+    /// [`super::assign::MultiServerPlanner`] local search, plus
+    /// assignments adopted by its exhaustive small-instance path beyond
+    /// the initial seed. 0 for a single-server planner — part of the
+    /// 1-server ≡ [`super::joint::JointPlanner`] bit-identity contract.
+    pub assignment_moves: u64,
+    /// Per-server [`super::joint::JointPlanner`] makespan evaluations the
+    /// assignment search triggered (each also contributes its own inner
+    /// counters — `plans`, `price_iterations`, … — to the folded stats).
+    /// 0 for a single-server planner, which delegates verbatim.
+    pub inner_makespan_solves: u64,
 }
 
 impl FleetStats {

@@ -878,9 +878,8 @@ mod tests {
     use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
     use crate::util::prop::{
         assert_cut_cost_equal, assert_fleet_cost_equal, for_all, joint_fading_walk,
-        random_layer_dag, random_link, zoo_matrix,
+        random_layer_dag, random_link, seeded_case, zoo_matrix,
     };
-    use crate::util::rng::Rng;
 
     fn costs_for(model: &str, device: &DeviceProfile) -> CostGraph {
         let m = models::by_name(model).unwrap();
@@ -1144,70 +1143,75 @@ mod tests {
     /// every flow solve after each tier's first is incremental.
     #[test]
     fn joint_walk_warm_cold_equivalence() {
-        let num_devices = 4;
-        let mut warm = JointPlanner::with_capacity(spec_for("googlenet", num_devices), 1.2);
-        let num_tiers = warm.spec().num_tiers();
-        assert_eq!(num_tiers, 4);
-        let mut rng = Rng::new(crate::util::rng::test_seed() ^ 0x101A7);
-        let start = Link {
-            up_bps: 3e5,
-            down_bps: 9e5,
-        };
-        let walk = joint_fading_walk(&mut rng, start, 1.2, 16, 0.88, 1.13);
-        let mut congested_steps = 0;
-        for (step, &(link, capacity)) in walk.iter().enumerate() {
-            let reqs: Vec<PlanRequest> = (0..num_devices)
-                .map(|d| {
-                    let t = warm.spec().tier_of(d);
-                    PlanRequest {
-                        device: d,
-                        tier: t,
-                        link: Link {
-                            up_bps: link.up_bps * (1.0 + 0.4 * t as f64),
-                            down_bps: link.down_bps * (1.0 + 0.25 * t as f64),
-                        },
-                    }
-                })
-                .collect();
-            warm.set_server_capacity(capacity);
-            let warm_decisions = warm.plan(&reqs);
-            let warm_makespan = warm.makespan().unwrap();
+        // seeded_case (not a raw seed XOR) so a failure echoes both the
+        // base seed and the derived case seed for replay (PR 10's
+        // seed-echo parity fix).
+        seeded_case("joint-walk-warm-cold", 0x101A7, |rng| {
+            let num_devices = 4;
+            let mut warm = JointPlanner::with_capacity(spec_for("googlenet", num_devices), 1.2);
+            let num_tiers = warm.spec().num_tiers();
+            assert_eq!(num_tiers, 4);
+            let start = Link {
+                up_bps: 3e5,
+                down_bps: 9e5,
+            };
+            let walk = joint_fading_walk(rng, start, 1.2, 16, 0.88, 1.13);
+            let mut congested_steps = 0;
+            for (step, &(link, capacity)) in walk.iter().enumerate() {
+                let reqs: Vec<PlanRequest> = (0..num_devices)
+                    .map(|d| {
+                        let t = warm.spec().tier_of(d);
+                        PlanRequest {
+                            device: d,
+                            tier: t,
+                            link: Link {
+                                up_bps: link.up_bps * (1.0 + 0.4 * t as f64),
+                                down_bps: link.down_bps * (1.0 + 0.25 * t as f64),
+                            },
+                        }
+                    })
+                    .collect();
+                warm.set_server_capacity(capacity);
+                let warm_decisions = warm.plan(&reqs);
+                let warm_makespan = warm.makespan().unwrap();
 
-            let mut cold = JointPlanner::with_capacity(spec_for("googlenet", num_devices), capacity);
-            let _ = cold.plan(&reqs);
-            assert_fleet_cost_equal(
-                warm_makespan,
-                cold.makespan().unwrap(),
-                &format!("walk step {step} capacity {capacity}"),
-            );
-            for (r, d) in reqs.iter().zip(&warm_decisions) {
-                let problem = Problem::new(warm.spec().tier_costs(r.tier), r.link);
-                assert!(problem.is_feasible(&d.partition.device_set), "step {step}");
-                assert!(
-                    d.partition.delay <= warm_makespan * (1.0 + 1e-9),
-                    "step {step}: device delay above the fleet makespan"
+                let mut cold =
+                    JointPlanner::with_capacity(spec_for("googlenet", num_devices), capacity);
+                let _ = cold.plan(&reqs);
+                assert_fleet_cost_equal(
+                    warm_makespan,
+                    cold.makespan().unwrap(),
+                    &format!("walk step {step} capacity {capacity}"),
                 );
+                for (r, d) in reqs.iter().zip(&warm_decisions) {
+                    let problem = Problem::new(warm.spec().tier_costs(r.tier), r.link);
+                    assert!(problem.is_feasible(&d.partition.device_set), "step {step}");
+                    assert!(
+                        d.partition.delay <= warm_makespan * (1.0 + 1e-9),
+                        "step {step}: device delay above the fleet makespan"
+                    );
+                }
+                if warm.congestion().is_some() {
+                    congested_steps += 1;
+                }
             }
-            if warm.congestion().is_some() {
-                congested_steps += 1;
-            }
-        }
-        let s = warm.stats();
-        assert!(congested_steps > 0, "walk never congested the server");
-        assert!(s.price_iterations > 0, "no makespan bisection ran");
-        assert!(s.joint_resolves > 0, "no price probe ran");
-        // Cold solves are exactly the per-(engine, tier) firsts: the λ=1
-        // engine's four tiers plus at most four firsts of the lazily built
-        // unreduced λ-probe engine. Everything else — later epochs' λ=1
-        // solves and every probe — must reuse the previous flow.
-        let cold = s.flow_solves - s.incremental_solves;
-        assert!(
-            cold > num_tiers as u64 && cold <= 2 * num_tiers as u64,
-            "expected one cold solve per (engine, tier) first, got {cold} \
-             cold of {} total",
-            s.flow_solves
-        );
-        assert!(s.repair_pushes > 0, "capacity-shrinking probes must repair");
+            let s = warm.stats();
+            assert!(congested_steps > 0, "walk never congested the server");
+            assert!(s.price_iterations > 0, "no makespan bisection ran");
+            assert!(s.joint_resolves > 0, "no price probe ran");
+            // Cold solves are exactly the per-(engine, tier) firsts: the λ=1
+            // engine's four tiers plus at most four firsts of the lazily built
+            // unreduced λ-probe engine. Everything else — later epochs' λ=1
+            // solves and every probe — must reuse the previous flow.
+            let cold = s.flow_solves - s.incremental_solves;
+            assert!(
+                cold > num_tiers as u64 && cold <= 2 * num_tiers as u64,
+                "expected one cold solve per (engine, tier) first, got {cold} \
+                 cold of {} total",
+                s.flow_solves
+            );
+            assert!(s.repair_pushes > 0, "capacity-shrinking probes must repair");
+        });
     }
 
     /// Monotonicity across the capacity ladder, zoo models: shrinking the

@@ -48,6 +48,19 @@
 //!   [`SpecDelta`] churn events, and degrades to last-good decisions
 //!   (marked via [`DecisionProvenance`]) on stale reports or solve-budget
 //!   overruns — never emitting an infeasible decision (RESILIENCE.md).
+//! * [`multihop`] — K-segment splitting over a relay path (PR 10):
+//!   [`PathPlanner`] decomposes the multi-hop delay into K single-split
+//!   stage problems (stage separability) solved by warm per-hop fleet
+//!   engines, with an exact nested-lower-set DP when the lattice is
+//!   enumerable and a link-pooling fallback otherwise; K = 1 degenerates
+//!   bit-identically to [`PartitionPlanner`]. Pinned against a
+//!   brute-force nested-tuple oracle ([`oracle_path_delay`]).
+//! * [`assign`] — device→server assignment for multi-server fleets
+//!   (PR 10): [`MultiServerPlanner`] searches assignments over a
+//!   per-server capacity vector (exhaustive odometer or greedy + local
+//!   search), scoring each with warm per-server [`JointPlanner`]s; one
+//!   server degenerates bit-identically to [`JointPlanner`]. Pinned
+//!   against [`oracle_multi_server_makespan`].
 //! * [`baselines`] — brute force (lower-set enumeration), regression [21],
 //!   OSS [17], device-only, central.
 
@@ -61,6 +74,8 @@ pub mod service;
 pub mod sharded;
 pub mod blocks;
 pub mod blockwise;
+pub mod multihop;
+pub mod assign;
 pub mod baselines;
 
 pub use blockwise::blockwise_partition;
@@ -70,8 +85,10 @@ pub use fleet::{
 };
 pub use service::{ClockError, PlannerService, ReportError, ServiceOptions};
 pub use sharded::ShardedFleetPlanner;
+pub use assign::{oracle_multi_server_makespan, MultiServerOptions, MultiServerPlanner};
 pub use general::general_partition;
 pub use joint::{fleet_makespan_for_cuts, oracle_fleet_makespan, JointOptions, JointPlanner};
+pub use multihop::{oracle_path_delay, PathOptions, PathPlan, PathPlanner, PathSpec};
 pub use planner::PartitionPlanner;
 pub use types::{Link, Partition, Problem};
 

@@ -1,0 +1,1034 @@
+//! Multi-hop model splitting over a relay path (PR 10): K nested cuts
+//! instead of one.
+//!
+//! *Pipelining Split Learning in Multi-hop Edge Networks* (arxiv
+//! 2505.04368) generalizes the paper's device→server split to a **path**
+//! of H = K+1 hosts — the device, K−1 relay hosts, and the final server —
+//! joined by K links. A placement assigns every layer a host, monotone
+//! along the layer DAG, which is exactly K *nested* lower-set cuts
+//! `L_1 ⊆ L_2 ⊆ … ⊆ L_K` (cut k = the layers on hosts `< k`, i.e. the
+//! "device side" of hop k). The training delay generalizes Eq. (7): each
+//! layer pays its host's compute rate, each hop k carries cut k's smashed
+//! activations up / gradients down `N_loc` times plus the parameters of
+//! every layer below the hop once up and once down.
+//!
+//! The engine rides on a **stage separability** identity: with stage k's
+//! single-split cost graph `G_k` (ξ_D = host k−1's compute vector, ξ_S =
+//! host k's, everything else shared) and `T_k` its ordinary Eq. (7)
+//! delay under hop k's link,
+//!
+//! ```text
+//! T(L_1..L_K) = Σ_k T_k(L_k) − N_loc · Σ_v Σ_{0<h<K} ξ_h[v]
+//! ```
+//!
+//! — the path delay is a sum of K *independent* single-split problems
+//! minus a constant (each relay host's full-model compute is counted once
+//! extra by the telescoping sum; [`PathSpec::offset`]). Minimizing the
+//! path delay is therefore minimizing Σ_k T_k(L_k) **subject to
+//! nesting**, and dropping the nesting constraint yields a lower bound
+//! solved by K warm-started min cuts ([`super::fleet::FleetPlanner`] per
+//! hop). [`PathPlanner::plan`] runs a strategy ladder on top of that:
+//!
+//! 1. **K = 1** delegates to a single-tier engine with the exact
+//!    [`super::planner::PartitionPlanner`] construction — bit-identical
+//!    decisions, solves and flow shape (the degenerate pin).
+//! 2. **Separable fast path**: solve each stage unconstrained; if the K
+//!    optima happen to nest, they achieve the relaxation bound — the plan
+//!    is certified optimal without any joint search.
+//! 3. **Exact DP** over the enumerated lower-set lattice (when it has at
+//!    most [`PathOptions::exact_cuts`] sets): `dp[k][c] = T_k(c) +
+//!    min_{c' ⊆ c} dp[k−1][c']` — the best prefix delay ending segment k
+//!    at cut c, each transition a subset test on bitmask words, counted
+//!    in [`super::fleet::FleetStats::dp_transitions`]. Optimal because
+//!    feasible placements are exactly the nested chains of the lattice.
+//! 4. **Pooling fallback** for unenumerable lattices: merge the first
+//!    adjacent stage pair whose unconstrained optima violate nesting —
+//!    contracting the relay host between them out of the path, the two
+//!    hop links composing serially ([`super::types::Link::serial`];
+//!    σ adds) — and re-solve, until the surviving segments nest (at worst
+//!    the whole path collapses to one device→server split). The result
+//!    is feasible by construction and carries
+//!    [`PathPlan::certified`] = true only when its cost meets the
+//!    separable lower bound.
+//!
+//! [`oracle_path_delay`] is the independent brute force the harness pins
+//! the planner against: enumerate *every* nested K-tuple of lower-set
+//! cuts by odometer and take the best Σ_k T_k − offset.
+
+use std::collections::BTreeMap;
+
+use super::fleet::{FleetOptions, FleetPlanner, FleetSpec, FleetStats};
+use super::types::{Link, Problem};
+use crate::graph::enumerate_lower_sets_capped;
+use crate::profiles::CostGraph;
+use crate::util::prop::CUT_COST_ULPS;
+
+/// Raw lower-set cap of [`oracle_path_delay`]'s enumeration (the planner's
+/// DP bound is the independent [`PathOptions::exact_cuts`]).
+const ORACLE_CUT_CAP: usize = 4096;
+
+/// Nested-tuple budget of the brute-force oracle (mirrors the 5M
+/// cut-combination guard of `partition::joint`'s fleet oracle).
+const ORACLE_COMBO_CAP: u64 = 5_000_000;
+
+/// A relay path: per-host compute vectors over one shared model, plus the
+/// derived per-hop single-split stage graphs.
+#[derive(Clone)]
+pub struct PathSpec {
+    /// `host_xi[h][v]`: layer v's compute time on host h (host 0 = the
+    /// device, the last host = the final server).
+    host_xi: Vec<Vec<f64>>,
+    /// Stage k's cost graph: ξ_D = `host_xi[k]`, ξ_S = `host_xi[k+1]`,
+    /// DAG / activation bytes / parameter bytes / N_loc shared with the
+    /// template. Stage 0 of a two-host path is the template itself.
+    stages: Vec<CostGraph>,
+    /// The relay double-count constant `N_loc · Σ_v Σ_{0<h<K} ξ_h[v]`:
+    /// `Σ_k T_k(L_k) = T(L_1..L_K) + offset` (module docs). 0.0 for a
+    /// two-host path.
+    offset: f64,
+}
+
+impl PathSpec {
+    /// Build a path from a template cost graph (supplying the DAG, byte
+    /// profiles and `N_loc`) and one compute vector per host. At least
+    /// two hosts; every vector must cover every layer with finite,
+    /// non-negative times.
+    pub fn new(template: &CostGraph, host_xi: Vec<Vec<f64>>) -> PathSpec {
+        assert!(host_xi.len() >= 2, "a path needs at least two hosts");
+        for (h, xi) in host_xi.iter().enumerate() {
+            assert_eq!(
+                xi.len(),
+                template.len(),
+                "host {h} compute vector must cover every layer"
+            );
+            for (v, &x) in xi.iter().enumerate() {
+                assert!(
+                    x.is_finite() && x >= 0.0,
+                    "host {h} layer {v} compute {x} must be finite and non-negative"
+                );
+            }
+        }
+        let stages: Vec<CostGraph> = (0..host_xi.len() - 1)
+            .map(|k| {
+                let mut c = template.clone();
+                c.xi_d = host_xi[k].clone();
+                c.xi_s = host_xi[k + 1].clone();
+                c
+            })
+            .collect();
+        let mut inner = 0.0;
+        for xi in &host_xi[1..host_xi.len() - 1] {
+            for &x in xi {
+                inner += x;
+            }
+        }
+        let offset = template.n_loc * inner;
+        PathSpec {
+            host_xi,
+            stages,
+            offset,
+        }
+    }
+
+    /// The K = 1 degenerate path: device and server straight from the
+    /// cost graph. `stage_costs(0)` is then `costs` verbatim and
+    /// [`PathSpec::offset`] is exactly 0.0, so path evaluation reproduces
+    /// [`Problem::delay`] bit-for-bit.
+    pub fn single(costs: &CostGraph) -> PathSpec {
+        PathSpec::new(costs, vec![costs.xi_d.clone(), costs.xi_s.clone()])
+    }
+
+    /// A synthetic relay ladder: `relays` intermediate hosts whose
+    /// per-layer compute interpolates geometrically between the device's
+    /// ξ_D and the server's ξ_S (relay h of a (relays+2)-host path runs
+    /// layer v in `ξ_D[v]^(1−t) · ξ_S[v]^t` with `t = h/(relays+1)`). The
+    /// endpoints are the original vectors verbatim, so `relayed(c, 0)`
+    /// is exactly [`PathSpec::single`]`(c)`.
+    pub fn relayed(costs: &CostGraph, relays: usize) -> PathSpec {
+        let hosts = relays + 2;
+        let mut host_xi = Vec::with_capacity(hosts);
+        host_xi.push(costs.xi_d.clone());
+        for h in 1..hosts - 1 {
+            let t = h as f64 / (hosts - 1) as f64;
+            host_xi.push(
+                (0..costs.len())
+                    .map(|v| costs.xi_d[v].powf(1.0 - t) * costs.xi_s[v].powf(t))
+                    .collect(),
+            );
+        }
+        host_xi.push(costs.xi_s.clone());
+        PathSpec::new(costs, host_xi)
+    }
+
+    /// Number of hops (= segments = cuts) K; hosts() − 1.
+    pub fn hops(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Number of hosts H = K + 1.
+    pub fn hosts(&self) -> usize {
+        self.host_xi.len()
+    }
+
+    /// Number of model layers.
+    pub fn len(&self) -> usize {
+        self.stages[0].len()
+    }
+
+    /// True iff the model has no layers (never for profiled models).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hop k's single-split stage cost graph (module docs).
+    pub fn stage_costs(&self, k: usize) -> &CostGraph {
+        &self.stages[k]
+    }
+
+    /// Host h's per-layer compute vector.
+    pub fn host_xi(&self, h: usize) -> &[f64] {
+        &self.host_xi[h]
+    }
+
+    /// The relay double-count constant (module docs).
+    pub fn offset(&self) -> f64 {
+        self.offset
+    }
+
+    /// The pooled stage graph spanning hops `a..=b`: the single-split
+    /// problem that remains when relay hosts `a+1..=b` are contracted out
+    /// of the path (ξ_D = host a, ξ_S = host b+1); its link is the serial
+    /// composition of the hops' links ([`Link::serial`]).
+    fn pooled_costs(&self, a: usize, b: usize) -> CostGraph {
+        let mut c = self.stages[a].clone();
+        c.xi_s = self.host_xi[b + 1].clone();
+        c
+    }
+
+    /// Host of every layer under nested per-hop cuts: the first hop whose
+    /// device side contains the layer (the last host if none does).
+    pub fn host_of(&self, cuts: &[Vec<bool>]) -> Vec<usize> {
+        assert_eq!(cuts.len(), self.hops());
+        let k = self.hops();
+        (0..self.len())
+            .map(|v| (0..k).find(|&j| cuts[j][v]).unwrap_or(k))
+            .collect()
+    }
+
+    /// Canonical path delay of nested per-hop cuts: `Σ_k T_k(L_k) −
+    /// offset`, each stage evaluated through [`Problem::delay`] (the
+    /// association the planner and the oracle share). Asserts nesting and
+    /// per-stage feasibility (lower sets, pinned sources).
+    pub fn delay_of_cuts(&self, cuts: &[Vec<bool>], links: &[Link]) -> f64 {
+        let k = self.hops();
+        assert_eq!(cuts.len(), k, "one cut per hop");
+        assert_eq!(links.len(), k, "one link per hop");
+        for j in 0..k - 1 {
+            assert!(
+                subset(&cuts[j], &cuts[j + 1]),
+                "cuts must nest: hop {j} ⊄ hop {}",
+                j + 1
+            );
+        }
+        let mut sum = 0.0;
+        for j in 0..k {
+            let problem = Problem::new(self.stage_costs(j), links[j]);
+            assert!(
+                problem.is_feasible(&cuts[j]),
+                "hop {j} cut is not a pinned lower set"
+            );
+            sum += problem.delay(&cuts[j]);
+        }
+        sum - self.offset
+    }
+
+    /// Direct semantic evaluation of a host assignment — compute at each
+    /// layer's host, per-hop boundary activations `N_loc` times up and
+    /// down, per-hop downstream parameters once each way. The ground
+    /// truth [`PathSpec::delay_of_cuts`] is pinned against (they agree
+    /// within the usual ULP tolerance; the associations differ).
+    pub fn delay_of_hosts(&self, host_of: &[usize], links: &[Link]) -> f64 {
+        let n = self.len();
+        let k = self.hops();
+        assert_eq!(host_of.len(), n);
+        assert_eq!(links.len(), k);
+        let c = &self.stages[0];
+        for e in c.dag.edges() {
+            assert!(
+                host_of[e.from] <= host_of[e.to],
+                "host assignment must be monotone along edge {} -> {}",
+                e.from,
+                e.to
+            );
+        }
+        for v in 0..n {
+            assert!(host_of[v] <= k, "layer {v} on unknown host {}", host_of[v]);
+            assert!(
+                c.dag.in_degree(v) > 0 || host_of[v] == 0,
+                "pinned source layer {v} must run on the device"
+            );
+        }
+        let mut compute = 0.0;
+        for v in 0..n {
+            compute += self.host_xi[host_of[v]][v];
+        }
+        let mut transit = 0.0;
+        for (j, link) in links.iter().enumerate() {
+            let mut boundary_bytes = 0.0;
+            let mut below_param_bytes = 0.0;
+            for v in 0..n {
+                if host_of[v] > j {
+                    continue;
+                }
+                below_param_bytes += c.param_bytes[v];
+                let crosses = c
+                    .dag
+                    .out_edges(v)
+                    .iter()
+                    .any(|&e| host_of[c.dag.edge(e).to] > j);
+                if crosses {
+                    boundary_bytes += c.act_bytes[v];
+                }
+            }
+            transit += c.n_loc * (boundary_bytes / link.up_bps + boundary_bytes / link.down_bps)
+                + below_param_bytes / link.up_bps
+                + below_param_bytes / link.down_bps;
+        }
+        c.n_loc * compute + transit
+    }
+}
+
+/// Construction switches of [`PathPlanner`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PathOptions {
+    /// Exact-DP bound: the nested-cut DP runs whenever the model's raw
+    /// lower-set lattice has at most this many sets (probed with
+    /// [`enumerate_lower_sets_capped`], so an exploding lattice costs
+    /// O(bound), not O(lattice)). Chains always qualify (n+1 prefixes);
+    /// branchy zoo models fall through to the pooling ladder. 0 disables
+    /// the DP outright (the pooling-path tests use it).
+    pub exact_cuts: usize,
+}
+
+impl Default for PathOptions {
+    fn default() -> Self {
+        PathOptions { exact_cuts: 512 }
+    }
+}
+
+/// One multi-hop plan: K nested cuts, the induced per-layer hosts, the
+/// canonical path delay, and whether it carries an optimality certificate.
+#[derive(Clone, Debug)]
+pub struct PathPlan {
+    /// `cuts[j][v]`: layer v is below hop j (on hosts ≤ j). Nested.
+    pub cuts: Vec<Vec<bool>>,
+    /// Host of every layer (`host_of[v] ∈ 0..=K`).
+    pub host_of: Vec<usize>,
+    /// Canonical path delay (`Σ_k T_k − offset`; see
+    /// [`PathSpec::delay_of_cuts`]).
+    pub delay: f64,
+    /// True when the plan is provably optimal: the K = 1 exact solve, the
+    /// separable fast path (per-hop optima nested — the relaxation bound
+    /// is met), or the exact nested-cut DP. False only when the pooling
+    /// fallback finished above the separable lower bound.
+    pub certified: bool,
+}
+
+/// The K-segment path planner (module docs for the strategy ladder).
+pub struct PathPlanner {
+    spec: PathSpec,
+    engine: Engine,
+    solves: u64,
+}
+
+enum Engine {
+    /// K = 1: the exact [`super::planner::PartitionPlanner`] construction
+    /// (one-tier fleet engine, reduction and incremental re-solves off).
+    Single(FleetPlanner),
+    Multi(MultiEngine),
+}
+
+struct MultiEngine {
+    /// One warm single-tier engine per hop (stages differ in ξ_S, and
+    /// fleet tiers share one server vector — so one engine per stage).
+    /// Reduction stays off (Theorem 2's argument assumes the server side
+    /// never computes slower than the device side, which a relay ladder
+    /// can invert); incremental re-solves stay on (the PR-4 warm path —
+    /// σ-only epochs reuse each stage's previous flow).
+    stages: Vec<FleetPlanner>,
+    /// Lazily built engines for pooled hop spans `a..=b` (pooling path).
+    pooled: BTreeMap<(usize, usize), FleetPlanner>,
+    /// The enumerated pin-feasible lower-set lattice (sets + bitmask
+    /// words), when within [`PathOptions::exact_cuts`].
+    cuts: Option<(Vec<Vec<bool>>, Vec<Vec<u64>>)>,
+    dp_transitions: u64,
+}
+
+impl PathPlanner {
+    /// Build with default options.
+    pub fn new(spec: PathSpec) -> PathPlanner {
+        PathPlanner::with_options(spec, PathOptions::default())
+    }
+
+    pub fn with_options(spec: PathSpec, options: PathOptions) -> PathPlanner {
+        let engine = if spec.hops() == 1 {
+            // The PartitionPlanner construction, verbatim (its degenerate
+            // bit-identity contract).
+            Engine::Single(FleetPlanner::with_options(
+                FleetSpec::single(spec.stage_costs(0).clone()),
+                FleetOptions {
+                    pin_inputs: true,
+                    closure_edges: true,
+                    ..FleetOptions::bit_identical()
+                },
+            ))
+        } else {
+            let stages = (0..spec.hops())
+                .map(|k| {
+                    FleetPlanner::with_options(
+                        FleetSpec::single(spec.stage_costs(k).clone()),
+                        FleetOptions {
+                            block_reduction: false,
+                            ..FleetOptions::default()
+                        },
+                    )
+                })
+                .collect();
+            Engine::Multi(MultiEngine {
+                stages,
+                pooled: BTreeMap::new(),
+                cuts: feasible_cuts(spec.stage_costs(0), options.exact_cuts),
+                dp_transitions: 0,
+            })
+        };
+        PathPlanner {
+            spec,
+            engine,
+            solves: 0,
+        }
+    }
+
+    /// Plan the K-segment split for the current per-hop links (one link
+    /// per hop, device side first).
+    pub fn plan(&mut self, links: &[Link]) -> PathPlan {
+        assert_eq!(links.len(), self.spec.hops(), "one link per hop");
+        for l in links {
+            assert!(l.is_valid(), "rates must be positive and finite");
+        }
+        self.solves += 1;
+        match &mut self.engine {
+            Engine::Single(fleet) => {
+                let part = fleet.take_solve(0, links[0]);
+                let host_of = part.device_set.iter().map(|&d| usize::from(!d)).collect();
+                PathPlan {
+                    host_of,
+                    cuts: vec![part.device_set],
+                    delay: part.delay,
+                    certified: true,
+                }
+            }
+            Engine::Multi(m) => m.plan(&self.spec, links),
+        }
+    }
+
+    /// The path this planner serves.
+    pub fn spec(&self) -> &PathSpec {
+        &self.spec
+    }
+
+    /// Number of [`PathPlanner::plan`] calls served.
+    pub fn solves(&self) -> u64 {
+        self.solves
+    }
+
+    /// (vertices, edges) of hop 0's flow-network shape; `None` on the
+    /// linear fast path (matches `PartitionPlanner::flow_size` at K = 1).
+    pub fn flow_size(&self) -> Option<(usize, usize)> {
+        match &self.engine {
+            Engine::Single(f) => f.flow_size(),
+            Engine::Multi(m) => m.stages[0].flow_size(),
+        }
+    }
+
+    /// Aggregate counters: every stage (and pooled) engine's additive
+    /// [`FleetStats`] counters folded together, DAG-shape fields from hop
+    /// 0's engine, plus this planner's `dp_transitions`. At K = 1 this is
+    /// the inner engine's stats verbatim (all three topology counters 0 —
+    /// the degenerate pin).
+    pub fn stats(&self) -> FleetStats {
+        match &self.engine {
+            Engine::Single(f) => f.stats(),
+            Engine::Multi(m) => {
+                let mut s = m.stages[0].stats();
+                for e in m.stages.iter().skip(1).chain(m.pooled.values()) {
+                    fold_counters(&mut s, &e.stats());
+                }
+                s.dp_transitions = m.dp_transitions;
+                s
+            }
+        }
+    }
+}
+
+impl MultiEngine {
+    fn plan(&mut self, spec: &PathSpec, links: &[Link]) -> PathPlan {
+        let k = spec.hops();
+        // Separable relaxation: each stage solved unconstrained by its
+        // warm engine. The sum (minus the offset) lower-bounds every
+        // nested plan.
+        let parts: Vec<_> = (0..k)
+            .map(|i| self.stages[i].take_solve(0, links[i]))
+            .collect();
+        let mut sum = 0.0;
+        for p in &parts {
+            sum += p.delay;
+        }
+        let bound = sum - spec.offset();
+        if (0..k - 1).all(|i| subset(&parts[i].device_set, &parts[i + 1].device_set)) {
+            let cuts: Vec<Vec<bool>> = parts.into_iter().map(|p| p.device_set).collect();
+            return PathPlan {
+                host_of: spec.host_of(&cuts),
+                cuts,
+                delay: bound,
+                certified: true,
+            };
+        }
+        if self.cuts.is_some() {
+            self.plan_dp(spec, links)
+        } else {
+            self.plan_pooled(spec, links, bound)
+        }
+    }
+
+    /// Exact DP over the enumerated lattice (module docs, strategy 3).
+    fn plan_dp(&mut self, spec: &PathSpec, links: &[Link]) -> PathPlan {
+        let (cut_sets, masks) = self.cuts.as_ref().expect("dp requires the lattice");
+        let k = spec.hops();
+        let c = cut_sets.len();
+        // Per-stage cost tables through the shared Problem::delay
+        // association.
+        let f: Vec<Vec<f64>> = (0..k)
+            .map(|i| {
+                let problem = Problem::new(spec.stage_costs(i), links[i]);
+                cut_sets.iter().map(|s| problem.delay(s)).collect()
+            })
+            .collect();
+        let mut dp = f[0].clone();
+        let mut parents: Vec<Vec<usize>> = Vec::with_capacity(k - 1);
+        for stage in 1..k {
+            let mut next = vec![f64::INFINITY; c];
+            let mut parent = vec![usize::MAX; c];
+            for j in 0..c {
+                let mut best = f64::INFINITY;
+                let mut arg = usize::MAX;
+                for p in 0..c {
+                    if !mask_subset(&masks[p], &masks[j]) {
+                        continue;
+                    }
+                    self.dp_transitions += 1;
+                    if dp[p] < best {
+                        best = dp[p];
+                        arg = p;
+                    }
+                }
+                // Every cut is a subset of itself, so a predecessor
+                // always exists.
+                next[j] = best + f[stage][j];
+                parent[j] = arg;
+            }
+            parents.push(parent);
+            dp = next;
+        }
+        let mut best = 0;
+        for j in 1..c {
+            if dp[j] < dp[best] {
+                best = j;
+            }
+        }
+        let mut idx = vec![0usize; k];
+        idx[k - 1] = best;
+        for stage in (1..k).rev() {
+            idx[stage - 1] = parents[stage - 1][idx[stage]];
+        }
+        let cuts: Vec<Vec<bool>> = idx.iter().map(|&i| cut_sets[i].clone()).collect();
+        let mut sum = 0.0;
+        for (stage, &i) in idx.iter().enumerate() {
+            sum += f[stage][i];
+        }
+        PathPlan {
+            host_of: spec.host_of(&cuts),
+            cuts,
+            delay: sum - spec.offset(),
+            certified: true,
+        }
+    }
+
+    /// Pooling fallback (module docs, strategy 4): repeatedly contract
+    /// the first nesting violation's relay host until the surviving
+    /// segment optima nest. Terminates in at most K−1 merges.
+    fn plan_pooled(&mut self, spec: &PathSpec, links: &[Link], bound: f64) -> PathPlan {
+        let k = spec.hops();
+        let mut segs: Vec<(usize, usize)> = (0..k).map(|i| (i, i)).collect();
+        loop {
+            let mut seg_cuts = Vec::with_capacity(segs.len());
+            for &(a, b) in &segs {
+                let link = links[a..=b].iter().copied().reduce(Link::serial).unwrap();
+                seg_cuts.push(self.segment_engine(spec, a, b).take_solve(0, link));
+            }
+            let violation = (0..segs.len().saturating_sub(1))
+                .find(|&i| !subset(&seg_cuts[i].device_set, &seg_cuts[i + 1].device_set));
+            match violation {
+                Some(i) => {
+                    let merged = (segs[i].0, segs[i + 1].1);
+                    segs.splice(i..=i + 1, [merged]);
+                }
+                None => {
+                    let mut cuts = Vec::with_capacity(k);
+                    for (s, &(a, b)) in segs.iter().enumerate() {
+                        for _ in a..=b {
+                            cuts.push(seg_cuts[s].device_set.clone());
+                        }
+                    }
+                    let delay = spec.delay_of_cuts(&cuts, links);
+                    let tol = CUT_COST_ULPS * f64::EPSILON * (1.0 + delay.abs().max(bound.abs()));
+                    return PathPlan {
+                        host_of: spec.host_of(&cuts),
+                        certified: delay <= bound + tol,
+                        cuts,
+                        delay,
+                    };
+                }
+            }
+        }
+    }
+
+    /// The warm engine for hop span `a..=b`: a per-hop stage engine for a
+    /// singleton span, else a lazily built (and cached — pooling patterns
+    /// recur across epochs) engine on the contracted stage graph.
+    fn segment_engine(&mut self, spec: &PathSpec, a: usize, b: usize) -> &mut FleetPlanner {
+        if a == b {
+            return &mut self.stages[a];
+        }
+        self.pooled.entry((a, b)).or_insert_with(|| {
+            FleetPlanner::with_options(
+                FleetSpec::single(spec.pooled_costs(a, b)),
+                FleetOptions {
+                    block_reduction: false,
+                    ..FleetOptions::default()
+                },
+            )
+        })
+    }
+}
+
+/// Brute-force optimum of the K-segment split: enumerate every nested
+/// K-tuple of pin-feasible lower-set cuts by odometer and return the best
+/// canonical path delay. Deliberately independent of the planner's DP
+/// recurrence (the harness pins one against the other). Panics when the
+/// lattice exceeds [`ORACLE_CUT_CAP`] sets or the tuple space exceeds
+/// [`ORACLE_COMBO_CAP`] — oracle instances must stay small.
+pub fn oracle_path_delay(spec: &PathSpec, links: &[Link]) -> f64 {
+    let k = spec.hops();
+    assert_eq!(links.len(), k, "one link per hop");
+    let (cut_sets, masks) = feasible_cuts(spec.stage_costs(0), ORACLE_CUT_CAP)
+        .expect("oracle requires an enumerable lower-set lattice");
+    let c = cut_sets.len();
+    let combos = (c as u64).saturating_pow(k as u32);
+    assert!(
+        combos <= ORACLE_COMBO_CAP,
+        "oracle limited to {ORACLE_COMBO_CAP} cut combinations, got {combos}"
+    );
+    let f: Vec<Vec<f64>> = (0..k)
+        .map(|i| {
+            let problem = Problem::new(spec.stage_costs(i), links[i]);
+            cut_sets.iter().map(|s| problem.delay(s)).collect()
+        })
+        .collect();
+    let mut idx = vec![0usize; k];
+    let mut best = f64::INFINITY;
+    loop {
+        let nested = (0..k - 1).all(|j| mask_subset(&masks[idx[j]], &masks[idx[j + 1]]));
+        if nested {
+            let mut sum = 0.0;
+            for (stage, &i) in idx.iter().enumerate() {
+                sum += f[stage][i];
+            }
+            let delay = sum - spec.offset();
+            if delay < best {
+                best = delay;
+            }
+        }
+        // Odometer over the full tuple space.
+        let mut pos = 0;
+        while pos < k {
+            idx[pos] += 1;
+            if idx[pos] < c {
+                break;
+            }
+            idx[pos] = 0;
+            pos += 1;
+        }
+        if pos == k {
+            break;
+        }
+    }
+    assert!(best.is_finite(), "no feasible nested tuple (empty lattice?)");
+    best
+}
+
+/// The pin-feasible lower-set lattice of a stage graph (every lower set
+/// containing all pinned source layers), as membership masks plus packed
+/// bitmask words — `None` when the raw lattice exceeds `cap`.
+fn feasible_cuts(costs: &CostGraph, cap: usize) -> Option<(Vec<Vec<bool>>, Vec<Vec<u64>>)> {
+    let raw = enumerate_lower_sets_capped(&costs.dag, cap)?;
+    let sets: Vec<Vec<bool>> = raw
+        .into_iter()
+        .filter(|s| (0..costs.len()).all(|v| costs.dag.in_degree(v) > 0 || s[v]))
+        .collect();
+    let masks = sets.iter().map(|s| to_mask(s)).collect();
+    Some((sets, masks))
+}
+
+fn to_mask(set: &[bool]) -> Vec<u64> {
+    let mut words = vec![0u64; set.len().div_ceil(64)];
+    for (v, &m) in set.iter().enumerate() {
+        if m {
+            words[v / 64] |= 1u64 << (v % 64);
+        }
+    }
+    words
+}
+
+fn mask_subset(a: &[u64], b: &[u64]) -> bool {
+    a.iter().zip(b).all(|(&x, &y)| x & !y == 0)
+}
+
+fn subset(a: &[bool], b: &[bool]) -> bool {
+    a.iter().zip(b).all(|(&x, &y)| !x || y)
+}
+
+/// Fold `other`'s additive counters into `acc`, leaving `acc`'s DAG-shape
+/// fields (vertex/edge/block counts) untouched — the aggregation
+/// [`PathPlanner::stats`] and `partition::assign` share.
+pub(crate) fn fold_counters(acc: &mut FleetStats, other: &FleetStats) {
+    acc.plans += other.plans;
+    acc.requests += other.requests;
+    acc.refreshes += other.refreshes;
+    acc.flow_solves += other.flow_solves;
+    acc.linear_scans += other.linear_scans;
+    acc.incremental_solves += other.incremental_solves;
+    acc.repair_pushes += other.repair_pushes;
+    acc.augment_rounds += other.augment_rounds;
+    acc.price_iterations += other.price_iterations;
+    acc.joint_resolves += other.joint_resolves;
+    acc.fallback_cold_solves += other.fallback_cold_solves;
+    acc.spec_deltas += other.spec_deltas;
+    acc.retired_decisions += other.retired_decisions;
+    acc.degraded_decisions += other.degraded_decisions;
+    acc.quantized_requests += other.quantized_requests;
+    acc.dp_transitions += other.dp_transitions;
+    acc.assignment_moves += other.assignment_moves;
+    acc.inner_makespan_solves += other.inner_makespan_solves;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Dag;
+    use crate::models;
+    use crate::partition::planner::PartitionPlanner;
+    use crate::profiles::{DeviceProfile, TrainCfg};
+    use crate::util::prop::{
+        assert_fleet_cost_equal, for_all, random_layer_dag, random_link, random_path, zoo_matrix,
+        CUT_COST_ULPS,
+    };
+    use crate::util::rng::Rng;
+
+    fn cg(model: &str) -> CostGraph {
+        let m = models::by_name(model).unwrap();
+        CostGraph::build(
+            &m,
+            &DeviceProfile::jetson_tx2(),
+            &DeviceProfile::rtx_a6000(),
+            &TrainCfg::default(),
+        )
+    }
+
+    /// A random synthetic cost graph over a random layer DAG — small
+    /// enough that the DP path stays exact.
+    fn random_costs(rng: &mut Rng, n: usize) -> CostGraph {
+        let mut dag = Dag::new();
+        for i in 0..n {
+            dag.add_node(format!("v{i}"));
+        }
+        for (u, v) in random_layer_dag(rng, n, 0.2) {
+            dag.add_edge(u, v, 1.0);
+        }
+        CostGraph {
+            dag,
+            xi_d: (0..n).map(|_| rng.range(1e-3, 1e-1)).collect(),
+            xi_s: (0..n).map(|_| rng.range(1e-5, 1e-3)).collect(),
+            act_bytes: (0..n).map(|_| rng.range(1e3, 1e6)).collect(),
+            param_bytes: (0..n).map(|_| rng.range(1e3, 1e6)).collect(),
+            n_loc: 4.0,
+        }
+    }
+
+    /// A random ladder over `costs` with `hosts` hosts: endpoints from
+    /// the graph, relays drawn between the two regimes.
+    fn random_ladder(rng: &mut Rng, costs: &CostGraph, hosts: usize) -> PathSpec {
+        let n = costs.len();
+        let mut host_xi = vec![costs.xi_d.clone()];
+        for _ in 1..hosts - 1 {
+            host_xi.push((0..n).map(|_| rng.range(1e-5, 1e-1)).collect());
+        }
+        host_xi.push(costs.xi_s.clone());
+        PathSpec::new(costs, host_xi)
+    }
+
+    /// The two path-delay formulations — canonical stage sum minus offset
+    /// vs direct host-assignment semantics — agree on random nested cuts.
+    #[test]
+    fn stage_delay_sum_matches_direct_host_evaluation() {
+        for_all("path-delay-formulations", 32, |rng| {
+            let costs = random_costs(rng, 2 + rng.index(6));
+            let hosts = 3 + rng.index(2);
+            let spec = random_ladder(rng, &costs, hosts);
+            let k = spec.hops();
+            let links = random_path(rng, k);
+            // Random monotone host assignment with pinned sources.
+            let n = costs.len();
+            let order = costs.dag.topo_order().unwrap();
+            let mut host_of = vec![0usize; n];
+            for &v in &order {
+                let floor = costs
+                    .dag
+                    .parents(v)
+                    .into_iter()
+                    .map(|p| host_of[p])
+                    .max()
+                    .unwrap_or(0);
+                host_of[v] = if costs.dag.in_degree(v) == 0 {
+                    0
+                } else {
+                    floor + rng.index(k + 1 - floor)
+                };
+            }
+            let cuts: Vec<Vec<bool>> = (0..k)
+                .map(|j| (0..n).map(|v| host_of[v] <= j).collect())
+                .collect();
+            let canonical = spec.delay_of_cuts(&cuts, &links);
+            let direct = spec.delay_of_hosts(&host_of, &links);
+            assert_fleet_cost_equal(canonical, direct, "path delay formulations");
+            assert_eq!(spec.host_of(&cuts), host_of);
+        });
+    }
+
+    /// A two-host path is the single-split problem verbatim: zero offset,
+    /// stage 0 the original graph, bit-identical delay.
+    #[test]
+    fn two_host_path_reproduces_the_single_split_bitwise() {
+        let costs = cg("lenet5");
+        let spec = PathSpec::single(&costs);
+        assert_eq!(spec.hops(), 1);
+        assert_eq!(spec.offset(), 0.0);
+        let link = Link::symmetric(2e6);
+        let problem = Problem::new(&costs, link);
+        let mut prefix = vec![false; costs.len()];
+        prefix[0] = true;
+        for cut in [vec![true; costs.len()], prefix] {
+            let path = spec.delay_of_cuts(std::slice::from_ref(&cut), &[link]);
+            assert_eq!(path.to_bits(), problem.delay(&cut).to_bits());
+        }
+    }
+
+    /// The degenerate pin: at K = 1 the path planner IS the partition
+    /// planner — decisions, solve count and flow shape bit-identical, the
+    /// topology counters pinned at zero.
+    #[test]
+    fn k1_planner_is_bit_identical_to_partition_planner() {
+        zoo_matrix("multihop-k1-degenerate", |case, rng| {
+            let mut path = PathPlanner::new(PathSpec::single(&case.costs));
+            let mut flat = PartitionPlanner::new(&case.costs);
+            assert_eq!(path.flow_size(), flat.flow_size());
+            for _ in 0..13 {
+                let link = random_link(rng);
+                let plan = path.plan(&[link]);
+                let want = flat.partition(link);
+                assert_eq!(plan.cuts.len(), 1);
+                assert_eq!(plan.cuts[0], want.device_set);
+                assert_eq!(plan.delay.to_bits(), want.delay.to_bits());
+                assert!(plan.certified);
+                for (v, &h) in plan.host_of.iter().enumerate() {
+                    assert_eq!(h == 0, want.device_set[v]);
+                }
+            }
+            assert_eq!(path.solves(), flat.solves());
+            assert_eq!(path.flow_size(), flat.flow_size());
+            let stats = path.stats();
+            assert_eq!(stats.dp_transitions, 0);
+            assert_eq!(stats.assignment_moves, 0);
+            assert_eq!(stats.inner_makespan_solves, 0);
+        });
+    }
+
+    /// The oracle pin: on every zoo cell whose lower-set lattice is
+    /// enumerable, 2- and 3-hop plans are certified and match the
+    /// brute-force nested-tuple optimum.
+    #[test]
+    fn planner_matches_oracle_on_enumerable_zoo_paths() {
+        zoo_matrix("multihop-oracle-equivalence", |case, rng| {
+            let lattice = enumerate_lower_sets_capped(&case.costs.dag, 512);
+            let Some(lattice) = lattice else {
+                return; // branchy model: the DP bound (and the oracle) pass
+            };
+            for hops in [2usize, 3] {
+                if (lattice.len() as u64).saturating_pow(hops as u32) > 2_000_000 {
+                    continue;
+                }
+                let spec = PathSpec::relayed(&case.costs, hops - 1);
+                let mut planner = PathPlanner::new(spec.clone());
+                for draw in 0..3 {
+                    let links = random_path(rng, hops);
+                    let plan = planner.plan(&links);
+                    assert!(
+                        plan.certified,
+                        "{}/{} draw {draw}: enumerable lattice must certify",
+                        case.model, case.tier
+                    );
+                    let oracle = oracle_path_delay(&spec, &links);
+                    assert_fleet_cost_equal(
+                        plan.delay,
+                        oracle,
+                        &format!("{}/{} hops {hops} draw {draw}", case.model, case.tier),
+                    );
+                    // The reported delay is the canonical evaluation of
+                    // the reported cuts.
+                    assert_fleet_cost_equal(
+                        plan.delay,
+                        spec.delay_of_cuts(&plan.cuts, &links),
+                        "reported delay vs reported cuts",
+                    );
+                }
+            }
+        });
+    }
+
+    /// An anti-nested ladder (fast device, terrible relay, fast server)
+    /// must leave the separable fast path, run the DP, bypass the relay
+    /// entirely, and still match the oracle.
+    #[test]
+    fn dp_path_fires_on_non_nested_ladders_and_skips_the_bad_relay() {
+        let costs = cg("lenet5");
+        let n = costs.len();
+        let huge = vec![1.0; n]; // a relay ~10^4x slower than either end
+        let spec = PathSpec::new(&costs, vec![costs.xi_d.clone(), huge, costs.xi_s.clone()]);
+        let mut planner = PathPlanner::new(spec.clone());
+        let links = [Link::symmetric(5e6), Link::symmetric(4e6)];
+        let plan = planner.plan(&links);
+        assert!(plan.certified);
+        let stats = planner.stats();
+        assert!(
+            stats.dp_transitions > 0,
+            "anti-nested stage optima must force the DP"
+        );
+        assert!(
+            plan.host_of.iter().all(|&h| h != 1),
+            "no layer may run on the pathological relay: {:?}",
+            plan.host_of
+        );
+        assert_fleet_cost_equal(
+            plan.delay,
+            oracle_path_delay(&spec, &links),
+            "anti-nested ladder",
+        );
+    }
+
+    /// Widening any hop's rates never raises a certified path makespan,
+    /// and warm re-plans on the same planner stay certified.
+    #[test]
+    fn hop_widening_never_raises_the_path_makespan() {
+        for_all("multihop-monotonicity", 24, |rng| {
+            let costs = random_costs(rng, 2 + rng.index(5));
+            let spec = random_ladder(rng, &costs, 3);
+            let mut planner = PathPlanner::new(spec);
+            let links = random_path(rng, 2);
+            let base = planner.plan(&links);
+            assert!(base.certified, "small lattices must certify");
+            for widen in 0..2 {
+                let mut wider = links.clone();
+                wider[widen].up_bps = (wider[widen].up_bps * 4.0).min(1e9);
+                wider[widen].down_bps = (wider[widen].down_bps * 4.0).min(1e9);
+                let plan = planner.plan(&wider);
+                assert!(plan.certified);
+                let tol =
+                    CUT_COST_ULPS * f64::EPSILON * (1.0 + base.delay.abs().max(plan.delay.abs()));
+                assert!(
+                    plan.delay <= base.delay + tol,
+                    "widening hop {widen} raised the makespan: {} -> {}",
+                    base.delay,
+                    plan.delay
+                );
+            }
+        });
+    }
+
+    /// With the DP disabled the pooling ladder must still return a
+    /// feasible nested plan, never beat the brute-force optimum, and
+    /// collapse anti-nested paths to fewer distinct cuts.
+    #[test]
+    fn pooling_fallback_is_feasible_and_never_beats_the_oracle() {
+        let costs = cg("lenet5");
+        let n = costs.len();
+        let huge = vec![1.0; n];
+        let spec = PathSpec::new(&costs, vec![costs.xi_d.clone(), huge, costs.xi_s.clone()]);
+        let mut planner = PathPlanner::with_options(spec.clone(), PathOptions { exact_cuts: 0 });
+        let links = [Link::symmetric(5e6), Link::symmetric(4e6)];
+        let plan = planner.plan(&links);
+        // Feasibility: delay_of_cuts re-asserts nesting + lower sets.
+        let reported = spec.delay_of_cuts(&plan.cuts, &links);
+        assert_eq!(reported.to_bits(), plan.delay.to_bits());
+        assert_eq!(
+            plan.cuts[0], plan.cuts[1],
+            "pooling an anti-nested 2-hop path must merge its segments"
+        );
+        let oracle = oracle_path_delay(&spec, &links);
+        let tol = CUT_COST_ULPS * f64::EPSILON * (1.0 + oracle.abs().max(plan.delay.abs()));
+        assert!(
+            plan.delay + tol >= oracle,
+            "pooling may be suboptimal but never better than brute force: {} vs {oracle}",
+            plan.delay
+        );
+        assert_eq!(planner.stats().dp_transitions, 0);
+    }
+
+    /// The interpolated relay ladder keeps the endpoints verbatim (so
+    /// `relayed(c, 0) == single(c)`) and every relay between the two
+    /// regimes.
+    #[test]
+    fn relayed_ladder_interpolates_between_exact_endpoints() {
+        let costs = cg("googlenet");
+        let spec = PathSpec::relayed(&costs, 2);
+        assert_eq!(spec.hosts(), 4);
+        assert_eq!(spec.host_xi(0), &costs.xi_d[..]);
+        assert_eq!(spec.host_xi(3), &costs.xi_s[..]);
+        for h in 1..3 {
+            for v in 0..costs.len() {
+                let (lo, hi) = if costs.xi_d[v] <= costs.xi_s[v] {
+                    (costs.xi_d[v], costs.xi_s[v])
+                } else {
+                    (costs.xi_s[v], costs.xi_d[v])
+                };
+                let x = spec.host_xi(h)[v];
+                assert!(
+                    (lo..=hi).contains(&x),
+                    "relay {h} layer {v}: {x} outside [{lo}, {hi}]"
+                );
+            }
+        }
+        let degenerate = PathSpec::relayed(&costs, 0);
+        assert_eq!(degenerate.hops(), 1);
+        assert_eq!(degenerate.host_xi(0), &costs.xi_d[..]);
+        assert_eq!(degenerate.host_xi(1), &costs.xi_s[..]);
+    }
+}

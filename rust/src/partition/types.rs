@@ -44,6 +44,21 @@ impl Link {
             && self.up_bps > 0.0
             && self.down_bps > 0.0
     }
+
+    /// Serial composition of two store-and-forward hops: a byte crossing
+    /// both links pays both transit times, so the composite rate is the
+    /// harmonic combination `1/R = 1/R_a + 1/R_b` per direction —
+    /// equivalently `σ_serial = σ_a + σ_b`. This is how the multi-hop
+    /// planner (`partition::multihop`) contracts a relay host out of a
+    /// path: the two links around it become one pooled link, and every
+    /// σ-affine capacity stays σ-affine. Composing two valid links always
+    /// yields a valid link (finite, positive rates).
+    pub fn serial(a: Link, b: Link) -> Link {
+        Link {
+            up_bps: 1.0 / (1.0 / a.up_bps + 1.0 / b.up_bps),
+            down_bps: 1.0 / (1.0 / a.down_bps + 1.0 / b.down_bps),
+        }
+    }
 }
 
 /// A partitioning problem instance: cost graph + link state.
@@ -486,5 +501,27 @@ mod tests {
         };
         assert!(d.boundary_edges(&dag).is_empty());
         assert!(d.boundary_layers(&dag).is_empty());
+    }
+
+    #[test]
+    fn serial_links_add_sigmas_and_stay_valid() {
+        let a = Link {
+            up_bps: 2.0e6,
+            down_bps: 8.0e6,
+        };
+        let b = Link {
+            up_bps: 6.0e6,
+            down_bps: 8.0e6,
+        };
+        let s = Link::serial(a, b);
+        assert!(s.is_valid());
+        // Per-direction harmonic rates: 1/(1/2 + 1/6) = 1.5, 8 || 8 = 4.
+        assert!((s.up_bps - 1.5e6).abs() < 1e-3);
+        assert!((s.down_bps - 4.0e6).abs() < 1e-3);
+        // σ is additive under serial composition — the invariant the
+        // multi-hop pooling path relies on.
+        assert!((s.sigma() - (a.sigma() + b.sigma())).abs() < 1e-18);
+        // Composition is symmetric.
+        assert_eq!(Link::serial(a, b), Link::serial(b, a));
     }
 }

@@ -8,8 +8,8 @@ use crate::models;
 use crate::net::{EdgeNetwork, NetConfig};
 use crate::partition::baselines::{evaluate_static, oss_partition};
 use crate::partition::{
-    DecisionProvenance, FleetSpec, FleetStats, JointOptions, Link, PlanRequest, PlannerService,
-    Problem, ServiceOptions, SpecDelta,
+    DecisionProvenance, FleetSpec, FleetStats, JointOptions, Link, MultiServerPlanner,
+    PathPlanner, PathSpec, PlanRequest, PlannerService, Problem, ServiceOptions, SpecDelta,
 };
 use crate::profiles::{CostGraph, DeviceProfile, TrainCfg};
 use crate::util::rng::Rng;
@@ -52,7 +52,8 @@ pub struct SimConfig {
     pub model: String,
     pub net: NetConfig,
     pub train: TrainCfg,
-    /// One of `proposed`, `proposed-joint`, `general`, `oss`, `regression`,
+    /// One of `proposed`, `proposed-joint`, `proposed-multihop`,
+    /// `proposed-multiserver`, `general`, `oss`, `regression`,
     /// `device-only`, `central`.
     pub method: String,
     pub seed: u64,
@@ -60,6 +61,15 @@ pub struct SimConfig {
     /// device-equivalents — only the `proposed-joint` method reads it
     /// (∞, the default, degenerates to the dedicated `proposed` engine).
     pub server_capacity: f64,
+    /// Relay-path length for the `proposed-multihop` method: the epoch's
+    /// split is a K-segment cut over a path of this many hops
+    /// (`partition::multihop`). 1, the default, degenerates to the
+    /// single device→server split.
+    pub path_hops: usize,
+    /// Per-server capacity vector for the `proposed-multiserver` method
+    /// (`partition::assign`). Empty, the default, falls back to one
+    /// server of `server_capacity`.
+    pub server_capacities: Vec<f64>,
     /// Fault injection for [`Trainer::run_churn_epochs`] (disabled by
     /// default; the classic scenarios ignore it).
     pub churn: ChurnCfg,
@@ -74,6 +84,8 @@ impl Default for SimConfig {
             method: "proposed".into(),
             seed: 7,
             server_capacity: f64::INFINITY,
+            path_hops: 1,
+            server_capacities: Vec::new(),
             churn: ChurnCfg::default(),
         }
     }
@@ -156,6 +168,13 @@ pub struct Trainer {
     /// `cfg.server_capacity` — and the recorded delay is the selected
     /// device's load-dependent delay.
     service: PlannerService,
+    /// Per-tier K-segment path planners behind "proposed-multihop"
+    /// (`partition::multihop`): each tier's cost graph lifted onto a
+    /// `cfg.path_hops`-hop relay ladder. Empty for every other method.
+    paths: Vec<PathPlanner>,
+    /// The device→server assignment planner behind "proposed-multiserver"
+    /// (`partition::assign`); `None` for every other method.
+    multi: Option<MultiServerPlanner>,
     /// Stable per-slot incarnation ids (see [`DeviceId`]); re-joins mint
     /// fresh ids from `next_device_id`.
     device_ids: Vec<DeviceId>,
@@ -188,6 +207,32 @@ impl Trainer {
             f64::INFINITY
         };
         let num_devices = spec.num_devices();
+        // The PR-10 topology planners ride next to the service stack:
+        // per-tier relay-path planners for "proposed-multihop" (the
+        // sampled end-to-end link split across `path_hops` hops), and the
+        // assignment planner for "proposed-multiserver" (per-server
+        // capacity vector; empty falls back to one `server_capacity`
+        // server, which delegates to the joint engine bit-identically).
+        let paths: Vec<PathPlanner> = if cfg.method == "proposed-multihop" {
+            (0..spec.num_tiers())
+                .map(|t| {
+                    PathPlanner::new(PathSpec::relayed(
+                        spec.tier_costs(t),
+                        cfg.path_hops.max(1) - 1,
+                    ))
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let multi = (cfg.method == "proposed-multiserver").then(|| {
+            let capacities = if cfg.server_capacities.is_empty() {
+                vec![cfg.server_capacity]
+            } else {
+                cfg.server_capacities.clone()
+            };
+            MultiServerPlanner::with_capacities(spec.clone(), capacities)
+        });
         let service = PlannerService::new(
             spec,
             ServiceOptions {
@@ -202,6 +247,8 @@ impl Trainer {
             net,
             fleet,
             service,
+            paths,
+            multi,
             device_ids: (0..num_devices as u64).map(DeviceId).collect(),
             next_device_id: num_devices as u64,
             oss_fixed: None,
@@ -221,6 +268,94 @@ impl Trainer {
         let tier = self.service.spec().tier_of(device);
         let link = self.net.sample_link(device, self.sim_time).to_link();
         let tier_name = self.service.spec().tier_name(tier);
+
+        // Multi-hop epochs: the sampled link is the end-to-end path
+        // budget; each hop carries `hops`× its rates so the serial (σ-
+        // additive) composition reproduces it, and hops = 1 hands the
+        // sampled link to the planner verbatim (the degenerate pin).
+        if self.cfg.method == "proposed-multihop" {
+            let hops = self.cfg.path_hops.max(1);
+            let hop_links: Vec<Link> = (0..hops)
+                .map(|_| Link {
+                    up_bps: link.up_bps * hops as f64,
+                    down_bps: link.down_bps * hops as f64,
+                })
+                .collect();
+            let t0 = Instant::now();
+            let plan = self.paths[tier].plan(&hop_links);
+            let decision_time = t0.elapsed().as_secs_f64();
+            let partition = crate::partition::Partition {
+                device_set: plan.cuts[0].clone(),
+                delay: plan.delay,
+            };
+            let problem = Problem::new(self.service.spec().tier_costs(tier), link);
+            // The dedicated single-split decomposition of the device-side
+            // cut; on a genuine relay path its components sum to that
+            // cut's two-host delay, not to the K-segment `delay` above
+            // (same caveat as the joint method's congested epochs).
+            let breakdown = DelayBreakdown::of(&problem, &partition.device_set);
+            let record = EpochRecord {
+                epoch,
+                device,
+                device_id: self.device_ids[device],
+                device_tier: tier_name,
+                link,
+                delay: partition.delay,
+                decision_time,
+                decision_refreshed: true,
+                provenance: DecisionProvenance::Fresh,
+                device_layers: partition.device_layers(),
+                breakdown,
+            };
+            self.sim_time += partition.delay + decision_time;
+            return record;
+        }
+
+        // Multi-server epochs mirror the joint method's fleet-wide batch,
+        // with the assignment planner choosing each device's server.
+        if self.cfg.method == "proposed-multiserver" {
+            let requests: Vec<PlanRequest> = (0..self.service.spec().num_devices())
+                .map(|d| {
+                    let l = if d == device {
+                        link
+                    } else {
+                        self.net.sample_link(d, self.sim_time).to_link()
+                    };
+                    PlanRequest {
+                        device: d,
+                        tier: self.service.spec().tier_of(d),
+                        link: l,
+                    }
+                })
+                .collect();
+            let t0 = Instant::now();
+            let decision = self
+                .multi
+                .as_mut()
+                .expect("built for proposed-multiserver in Trainer::new")
+                .plan(&requests)
+                .into_iter()
+                .find(|d| d.device == device)
+                .expect("one decision per device");
+            let decision_time = t0.elapsed().as_secs_f64();
+            let problem = Problem::new(self.service.spec().tier_costs(tier), link);
+            let breakdown = DelayBreakdown::of(&problem, &decision.partition.device_set);
+            let record = EpochRecord {
+                epoch,
+                device,
+                device_id: self.device_ids[device],
+                device_tier: tier_name,
+                link,
+                delay: decision.partition.delay,
+                decision_time,
+                decision_refreshed: decision.stats.refreshed,
+                provenance: decision.provenance,
+                device_layers: decision.partition.device_layers(),
+                breakdown,
+            };
+            self.sim_time += decision.partition.delay + decision_time;
+            return record;
+        }
 
         // Joint epochs cover the whole fleet, so every device's current
         // link is sampled up front — channel simulation, not decision
@@ -451,8 +586,22 @@ impl Trainer {
     /// prove block-structured models decide epochs on the Theorem 2
     /// reduced DAG (the Table I decision-time metric measures
     /// blockwise-scale solves, not full-DAG ones — see the regression test
-    /// below).
+    /// below). The PR-10 topology methods route to their own planners:
+    /// "proposed-multihop" folds the per-tier path planners' counters
+    /// (additive fields summed, shape fields from tier 0),
+    /// "proposed-multiserver" reports the assignment planner's folded
+    /// per-server counters.
     pub fn planner_stats(&self) -> FleetStats {
+        if !self.paths.is_empty() {
+            let mut acc = self.paths[0].stats();
+            for p in &self.paths[1..] {
+                crate::partition::multihop::fold_counters(&mut acc, &p.stats());
+            }
+            return acc;
+        }
+        if let Some(m) = &self.multi {
+            return m.stats();
+        }
         self.service.stats()
     }
 
@@ -612,6 +761,72 @@ mod tests {
         let s = t.planner_stats();
         assert_eq!(s.price_iterations, 0);
         assert_eq!(s.joint_resolves, 0);
+    }
+
+    /// The "proposed-multihop" method row: a 3-hop relay ladder plans a
+    /// K-segment cut per epoch through the per-tier path planners (whose
+    /// folded counters are the reported stats), and one hop degenerates
+    /// to the single device→server split — epoch 0, before the simulated
+    /// clocks can diverge, must agree with "proposed" on cost.
+    #[test]
+    fn proposed_multihop_runs_relay_ladders_and_degenerates_at_one_hop() {
+        let mut cfg = quick_cfg("proposed-multihop");
+        cfg.path_hops = 3;
+        let mut t = Trainer::new(cfg);
+        let r = t.run_epochs(6);
+        assert_eq!(r.records.len(), 6);
+        assert!(r
+            .records
+            .iter()
+            .all(|x| x.delay.is_finite() && x.delay > 0.0));
+        let s = t.planner_stats();
+        assert!(s.plans > 0, "path planners never planned");
+        assert!(
+            s.flow_solves + s.linear_scans > 0,
+            "path planners never solved a stage"
+        );
+
+        // One hop: the first epoch samples the same link as a fresh
+        // "proposed" run (both clocks start at 0), so the single-split
+        // delays must be cost-equal, and the degenerate path never
+        // fires the nested-cut DP.
+        let mut cfg = quick_cfg("proposed-multihop");
+        cfg.path_hops = 1;
+        let mut hop1 = Trainer::new(cfg);
+        let a = hop1.run_epoch(0);
+        assert_eq!(hop1.planner_stats().dp_transitions, 0);
+        let mut base = Trainer::new(quick_cfg("proposed"));
+        let b = base.run_epoch(0);
+        assert_eq!(a.device, b.device, "epoch-0 scheduling must agree");
+        assert_eq!(a.link.up_bps.to_bits(), b.link.up_bps.to_bits());
+        crate::util::prop::assert_fleet_cost_equal(
+            a.delay,
+            b.delay,
+            "1-hop multihop epoch 0 vs proposed epoch 0",
+        );
+    }
+
+    /// The "proposed-multiserver" method row: a two-server capacity
+    /// vector plans the whole fleet through the assignment planner each
+    /// epoch; its folded per-server counters are the reported stats and
+    /// every scored candidate assignment moves `inner_makespan_solves`.
+    #[test]
+    fn proposed_multiserver_assigns_devices_across_the_capacity_vector() {
+        let mut cfg = quick_cfg("proposed-multiserver");
+        cfg.server_capacities = vec![0.3, 0.4];
+        let mut t = Trainer::new(cfg);
+        let r = t.run_epochs(4);
+        assert_eq!(r.records.len(), 4);
+        assert!(r
+            .records
+            .iter()
+            .all(|x| x.delay.is_finite() && x.delay > 0.0));
+        let s = t.planner_stats();
+        assert!(s.plans > 0, "assignment planner never planned");
+        assert!(
+            s.inner_makespan_solves > 0,
+            "assignment search never scored a candidate"
+        );
     }
 
     #[test]

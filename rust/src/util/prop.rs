@@ -295,6 +295,42 @@ pub fn zoo_matrix<F: FnMut(&ZooCase, &mut Rng)>(name: &str, mut prop: F) {
     }
 }
 
+/// Run a **single** seeded case with replay-parity failure reporting —
+/// the one-case sibling of [`for_all`]/[`zoo_matrix`] for oracle gates and
+/// walk tests that draw randomness once instead of iterating a case
+/// matrix. The case RNG is seeded with `test_seed() ^ salt` (`salt`
+/// decorrelates different gates under the same base seed), so
+/// `PALLAS_TEST_SEED` reseeds the gate along with every other suite; on
+/// failure the message carries the base seed *and* the derived case seed
+/// plus the replay recipe. Before PR 10 several oracle gates seeded
+/// `Rng::new` directly and asserted bare, so a fuzz failure under a CI
+/// seed printed neither — unreplayable by construction (the ISSUE-10
+/// bugfix).
+pub fn seeded_case<F: FnOnce(&mut Rng)>(name: &str, salt: u64, f: F) {
+    let base = crate::util::rng::test_seed();
+    let seed = base ^ salt;
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut rng = Rng::new(seed);
+        f(&mut rng);
+    }));
+    if let Err(payload) = result {
+        let msg = panic_message(payload.as_ref());
+        panic!(
+            "seeded case '{name}' failed (case seed {seed}, base seed {base}):\n{msg}\n\
+             replay with PALLAS_TEST_SEED={base}"
+        );
+    }
+}
+
+/// A random relay path of `hops` independent links, each drawn from the
+/// suites' 1e4..1e9 B/s regime — the multi-hop sibling of
+/// [`random_link`]. Hop `k` connects path host `k` to host `k+1` (host 0
+/// is the device, the last host the final server), so a K-segment
+/// multi-hop problem draws `hops = K` links.
+pub fn random_path(rng: &mut Rng, hops: usize) -> Vec<Link> {
+    (0..hops).map(|_| random_link(rng)).collect()
+}
+
 /// One churn fault a [`ChurnScript`] injects into a planning epoch — the
 /// device-membership subset of [`SpecDelta`] (tier add/retire are
 /// rarer operator actions, covered by direct unit tests instead of the
@@ -627,6 +663,59 @@ mod tests {
     #[should_panic(expected = "matrix property 'zoo-fails'")]
     fn zoo_matrix_reports_cell_and_seed() {
         zoo_matrix("zoo-fails", |_case, _rng| panic!("boom"));
+    }
+
+    #[test]
+    fn seeded_case_is_deterministic_and_salt_decorrelated() {
+        let mut first = Vec::new();
+        seeded_case("draws", 0x5EED, |rng| {
+            first = vec![rng.f64(), rng.f64(), rng.f64()];
+        });
+        let mut again = Vec::new();
+        seeded_case("draws", 0x5EED, |rng| {
+            again = vec![rng.f64(), rng.f64(), rng.f64()];
+        });
+        assert_eq!(first, again, "same salt must replay the same stream");
+        let mut other = Vec::new();
+        seeded_case("draws", 0x5EED + 1, |rng| {
+            other = vec![rng.f64(), rng.f64(), rng.f64()];
+        });
+        assert_ne!(first, other, "different salts must decorrelate");
+    }
+
+    #[test]
+    fn seeded_case_failure_echoes_both_seeds() {
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            seeded_case("gate-fails", 0xBAD, |_rng| panic!("boom"));
+        }))
+        .expect_err("the case must fail");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("string panic payload");
+        let base = crate::util::rng::test_seed();
+        let seed = base ^ 0xBAD;
+        assert!(msg.contains("seeded case 'gate-fails' failed"), "{msg}");
+        assert!(msg.contains(&format!("case seed {seed}")), "{msg}");
+        assert!(msg.contains(&format!("base seed {base}")), "{msg}");
+        assert!(msg.contains(&format!("PALLAS_TEST_SEED={base}")), "{msg}");
+    }
+
+    #[test]
+    fn random_path_draws_hops_independent_valid_links() {
+        for_all("random-path", 8, |rng| {
+            let path = random_path(rng, 4);
+            assert_eq!(path.len(), 4);
+            for l in &path {
+                assert!(l.is_valid());
+                assert!(l.up_bps >= 1e4 && l.up_bps < 1e9);
+                assert!(l.down_bps >= 1e4 && l.down_bps < 1e9);
+            }
+            assert!(
+                path.windows(2).all(|w| w[0] != w[1]),
+                "consecutive hops must differ"
+            );
+        });
     }
 
     #[test]

@@ -86,6 +86,18 @@ if [[ $fast -eq 0 ]]; then
   PALLAS_TEST_SEED=1 cargo test -q --release sharded
   PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release sharded
 
+  # Topology lane (PR 10): the multi-hop K-segment suite (stage
+  # separability, nested-cut DP, pooling fallback, K=1 bit-identity,
+  # nested-tuple oracle) and the device→server assignment suite
+  # (1-server bit-identity, assignment oracle, capacity/server
+  # monotonicity, local-search repair) — under the same two fixed seeds
+  # and both feature configs (serial here, parallel below).
+  echo "==> multihop + assign suites under two fixed seeds"
+  PALLAS_TEST_SEED=1 cargo test -q --release multihop
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release multihop
+  PALLAS_TEST_SEED=1 cargo test -q --release assign
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release assign
+
   # Feature matrix: the rayon parallel dirty-tier sweep must compile and
   # stay bit-identical to the serial loop (the determinism test runs under
   # both configurations).
@@ -110,6 +122,12 @@ if [[ $fast -eq 0 ]]; then
   PALLAS_TEST_SEED=1 cargo test -q --release --features parallel sharded
   PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel sharded
 
+  echo "==> multihop + assign suites under two fixed seeds (features parallel)"
+  PALLAS_TEST_SEED=1 cargo test -q --release --features parallel multihop
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel multihop
+  PALLAS_TEST_SEED=1 cargo test -q --release --features parallel assign
+  PALLAS_TEST_SEED=0xC0FFEE cargo test -q --release --features parallel assign
+
   # Bench smoke: compile + run the bench binaries so they cannot bit-rot.
   # Output files are disabled (-) so committed BENCH_*.json results are
   # only ever replaced by deliberate full runs.
@@ -123,12 +141,15 @@ if [[ $fast -eq 0 ]]; then
   FASTSPLIT_CHURN_OUT=- cargo bench --bench churn -- --smoke
   echo "==> cargo bench --bench daemon -- --smoke"
   FASTSPLIT_DAEMON_OUT=- cargo bench --bench daemon -- --smoke
+  echo "==> cargo bench --bench multihop -- --smoke"
+  FASTSPLIT_MULTIHOP_OUT=- cargo bench --bench multihop -- --smoke
   echo "==> bench smoke with --features parallel"
   FASTSPLIT_REPLAN_OUT=- FASTSPLIT_REPLAN4_OUT=- cargo bench --bench replan --features parallel -- --smoke
   FASTSPLIT_FLEET_OUT=- FASTSPLIT_FLEET_BLOCK_OUT=- FASTSPLIT_FLEET_SCALE_OUT=- cargo bench --bench fleet --features parallel -- --smoke
   FASTSPLIT_JOINT_OUT=- cargo bench --bench joint --features parallel -- --smoke
   FASTSPLIT_CHURN_OUT=- cargo bench --bench churn --features parallel -- --smoke
   FASTSPLIT_DAEMON_OUT=- cargo bench --bench daemon --features parallel -- --smoke
+  FASTSPLIT_MULTIHOP_OUT=- cargo bench --bench multihop --features parallel -- --smoke
 fi
 
 # Committed bench artifacts must stay parseable and carry the `measured`
